@@ -1,0 +1,62 @@
+//! Fig. 4: training-stage combinations — DOPPLER-SYS trained with
+//! III-only, I+III, II+III, and I+II+III on LLAMA-LAYER; real-engine
+//! execution time over episodes.
+//!
+//! Paper shape: real-only converges slowly and unstably; adding
+//! imitation (I) and simulation (II) pretraining converges faster and
+//! lower. Curves are written to runs/fig4_<combo>.csv.
+
+use doppler::bench_util::{banner, bench_episodes};
+use doppler::engine::EngineConfig;
+use doppler::eval::restrict;
+use doppler::graph::workloads::{by_name, Scale};
+use doppler::policy::{Method, PolicyNets};
+use doppler::sim::topology::DeviceTopology;
+use doppler::train::{write_history_csv, Stages, TrainConfig, Trainer};
+
+fn main() {
+    banner("Fig. 4 — stage-combination training curves", "Fig. 4, §6.2 Q3");
+    let nets = PolicyNets::load_default().expect("artifacts required");
+    let workload = std::env::var("DOPPLER_FIG4_WORKLOAD").unwrap_or_else(|_| "llama-layer".into());
+    let g = by_name(&workload, Scale::Full);
+    let topo = DeviceTopology::p100x4();
+    let b = bench_episodes();
+
+    // the Fig. 4 combos; stage III gets the full budget in "III" and the
+    // paper's share otherwise
+    let combos: [(&str, Stages); 4] = [
+        ("III", Stages { imitation: 0, sim_rl: 0, real_rl: b }),
+        ("I+III", Stages { imitation: b / 4, sim_rl: 0, real_rl: b * 3 / 4 }),
+        ("II+III", Stages { imitation: 0, sim_rl: b / 2, real_rl: b / 2 }),
+        ("I+II+III", Stages { imitation: b / 4, sim_rl: b / 2, real_rl: b / 4 }),
+    ];
+
+    println!("workload={} episodes={} (curves in runs/fig4_*.csv)", g.name, b);
+    let engine_cfg = EngineConfig::new(restrict(&topo, 4));
+    for (label, stages) in combos {
+        let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+        cfg.scale_to_budget(b);
+        cfg.seed = 4;
+        let trainer = Trainer::new(&nets, &g, topo.clone(), cfg).unwrap();
+        let t0 = std::time::Instant::now();
+        let result = trainer.run(stages, &engine_cfg).unwrap();
+        let path = format!("runs/fig4_{}.csv", label.replace('+', "_"));
+        std::fs::create_dir_all("runs").ok();
+        write_history_csv(std::path::Path::new(&path), &result.history).unwrap();
+        // summarize: best real-engine time over the stage-III tail
+        let tail: Vec<f64> = result
+            .history
+            .iter()
+            .filter(|r| r.stage == 3)
+            .map(|r| r.exec_time * 1e3)
+            .collect();
+        let tail_best = tail.iter().copied().fold(f64::INFINITY, f64::min);
+        println!(
+            "{label:<9} best-observed {:.1} ms | stage-III best {:.1} ms | [{:.0}s] -> {path}",
+            result.best_time * 1e3,
+            tail_best,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!("paper: I+II+III converges fastest and lowest; III alone unstable");
+}

@@ -1,0 +1,104 @@
+//! Tables 10 & 11 (Appendix J): hardware transfer — a policy trained on
+//! the 4-device box deployed on the 8-device two-group box, zero-shot vs
+//! fine-tuned, with the transfer-locality breakdown (cross-group /
+//! same-group / same-device) and execution times.
+//!
+//! Paper shape: fine-tuning shifts traffic from cross-group links to
+//! same-device locality (82.7% -> 94.7% same-GPU) and beats both the
+//! from-scratch 8-GPU policy and ENUMOPT.
+
+use doppler::bench_util::{banner, bench_episodes};
+use doppler::engine::EngineConfig;
+use doppler::eval::restrict;
+use doppler::eval::tables::{cell, Table};
+use doppler::eval::{run_method, EvalCtx, MethodId};
+use doppler::graph::workloads::{by_name, Scale};
+use doppler::policy::{Method, PolicyNets};
+use doppler::sim::topology::DeviceTopology;
+use doppler::sim::trace::transfer_locality;
+use doppler::train::{Stages, TrainConfig, Trainer};
+
+fn main() {
+    banner("Tables 10/11 — hardware transfer 4 -> 8 devices", "Appendix J");
+    let nets = PolicyNets::load_default().expect("artifacts required");
+    let b = bench_episodes();
+    let p4 = DeviceTopology::p100x4();
+    let v8 = DeviceTopology::v100x8();
+
+    let mut t10 = Table::new(
+        "Table 10: FFNN transfer locality on 8 devices",
+        &["SETTING", "ACROSS GROUPS", "SAME GROUP", "SAME DEVICE"],
+    );
+    let mut t11 = Table::new(
+        "Table 11: execution time (ms) after hardware transfer",
+        &["GRAPH", "ZERO-SHOT", "FINE-TUNED", "FROM-SCRATCH", "CRIT. PATH", "ENUMOPT."],
+    );
+
+    for name in ["chainmm", "ffnn"] {
+        let g = by_name(name, Scale::Full);
+        // 1. pretrain on 4 devices
+        let mut cfg = TrainConfig::new(Method::Doppler, p4.clone(), 4);
+        cfg.scale_to_budget(b);
+        cfg.seed = 10;
+        let e4 = EngineConfig::new(p4.clone());
+        let pre = Trainer::new(&nets, &g, p4.clone(), cfg)
+            .unwrap()
+            .run(Stages { imitation: b / 4, sim_rl: b * 3 / 4, real_rl: 0 }, &e4)
+            .unwrap();
+
+        // 2. zero-shot greedy rollout on 8 devices
+        let mut cfg8 = TrainConfig::new(Method::Doppler, v8.clone(), 8);
+        cfg8.scale_to_budget(b);
+        cfg8.seed = 11;
+        let e8 = EngineConfig::new(v8.clone());
+        let mut tr8 = Trainer::new(&nets, &g, v8.clone(), cfg8.clone())
+            .unwrap()
+            .with_params(pre.params.clone());
+        let zero = tr8.greedy_assignment().unwrap();
+
+        // 3. fine-tune (the paper's 2k episodes ~ half our budget)
+        tr8.stage2_sim(b / 3).unwrap();
+        tr8.stage3_real(b / 6, &e8).unwrap();
+        let tuned = tr8.greedy_assignment().unwrap();
+
+        let mut ctx8 = EvalCtx::new(Some(&nets), v8.clone(), 8);
+        ctx8.episodes = b;
+        let s_zero = ctx8.evaluate(&g, &zero);
+        let s_tuned = ctx8.evaluate(&g, &tuned);
+
+        // reference columns
+        let scratch = run_method(MethodId::DopplerSys, &g, &ctx8).unwrap();
+        let cp = run_method(MethodId::CriticalPath, &g, &ctx8).unwrap();
+        let eo = run_method(MethodId::EnumOpt, &g, &ctx8).unwrap();
+
+        if name == "ffnn" {
+            for (label, a) in [("ZERO-SHOT", &zero), ("FINE-TUNED", &tuned)] {
+                let (cross, same_g, same_d) = transfer_locality(&g, a, &v8);
+                let total = (cross + same_g + same_d).max(1);
+                t10.row(vec![
+                    label.into(),
+                    format!("{} ({:.1}%)", cross, cross as f64 / total as f64 * 100.0),
+                    format!("{} ({:.1}%)", same_g, same_g as f64 / total as f64 * 100.0),
+                    format!("{} ({:.1}%)", same_d, same_d as f64 / total as f64 * 100.0),
+                ]);
+            }
+        }
+        eprintln!(
+            "[{name}] zero {} | tuned {} | scratch {} | cp {} | enum {}",
+            cell(&s_zero), cell(&s_tuned), cell(&scratch.summary), cell(&cp.summary), cell(&eo.summary)
+        );
+        t11.row(vec![
+            name.to_uppercase(),
+            cell(&s_zero),
+            cell(&s_tuned),
+            cell(&scratch.summary),
+            cell(&cp.summary),
+            cell(&eo.summary),
+        ]);
+        let _ = restrict(&v8, 8);
+    }
+    t10.emit(Some(std::path::Path::new("runs/table10.csv")));
+    t11.emit(Some(std::path::Path::new("runs/table11.csv")));
+    println!("paper T10: zero 10.6/6.7/82.7% -> tuned 3.4/1.9/94.7%");
+    println!("paper T11: chainmm 59.2->26.0 (scratch 32.1); ffnn 23.1->14.4 (scratch 16.2)");
+}

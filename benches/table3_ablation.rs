@@ -1,0 +1,38 @@
+//! Table 3: dual-policy ablation — DOPPLER-SYS vs DOPPLER-SEL (learned
+//! selection, critical-path placement) vs DOPPLER-PLC (critical-path
+//! selection, learned placement).
+//!
+//! Paper shape: the combined dual policy wins on complex models
+//! (llama-block/layer, ffnn); DOPPLER-PLC can edge out SYS slightly on
+//! CHAINMM.
+
+use doppler::bench_util::{banner, bench_episodes, bench_workloads};
+use doppler::eval::tables::{cell, Table};
+use doppler::eval::{run_method, EvalCtx, MethodId};
+use doppler::graph::workloads::{by_name, Scale};
+use doppler::policy::PolicyNets;
+use doppler::sim::topology::DeviceTopology;
+
+fn main() {
+    banner("Table 3 — SEL/PLC ablation", "Table 3, §6.2 Q2");
+    let nets = PolicyNets::load_default().expect("artifacts required");
+    let mut table = Table::new(
+        "Table 3: ablation, real engine time (ms), 4 devices",
+        &["MODEL", "SYS", "SEL", "PLC"],
+    );
+    for name in bench_workloads() {
+        let g = by_name(&name, Scale::Full);
+        let mut ctx = EvalCtx::new(Some(&nets), DeviceTopology::p100x4(), 4);
+        ctx.episodes = bench_episodes();
+        let mut cells = vec![name.to_uppercase()];
+        for id in [MethodId::DopplerSys, MethodId::DopplerSel, MethodId::DopplerPlc] {
+            let r = run_method(id, &g, &ctx).expect("method failed");
+            eprintln!("[{}] {} = {}", name, id.name(), cell(&r.summary));
+            cells.push(cell(&r.summary));
+        }
+        table.row(cells);
+    }
+    table.emit(Some(std::path::Path::new("runs/table3.csv")));
+    println!("paper Table 3 (ms): chainmm 123/127/122; ffnn 47/59/63;");
+    println!("  llama-block 160/176/173; llama-layer 151/162/160");
+}

@@ -1,0 +1,75 @@
+//! Table 4: transfer learning across graphs — train on FFNN / CHAINMM,
+//! deploy on LLAMA-BLOCK / LLAMA-LAYER zero-shot and with few-shot
+//! fine-tuning (paper: 2k/4k shots vs 8k full training; here the shots
+//! scale with the bench budget: half / full).
+//!
+//! Paper shape: zero-shot is poor, few-shot recovers most of the full
+//! training quality (4k-shot ≈ DOPPLER-SYS).
+
+use doppler::bench_util::{banner, bench_episodes};
+use doppler::engine::EngineConfig;
+use doppler::eval::tables::{cell, Table};
+use doppler::eval::{restrict, run_method, EvalCtx, MethodId};
+use doppler::graph::workloads::{by_name, Scale};
+use doppler::policy::{Method, PolicyNets};
+use doppler::sim::topology::DeviceTopology;
+use doppler::train::{Stages, TrainConfig, Trainer};
+
+fn main() {
+    banner("Table 4 — few-shot transfer across graphs", "Table 4, §6.2 Q5");
+    let nets = PolicyNets::load_default().expect("artifacts required");
+    let b = bench_episodes();
+    let topo = DeviceTopology::p100x4();
+
+    let mut table = Table::new(
+        "Table 4: transfer to LLAMA graphs (ms), 4 devices",
+        &["TRAIN", "TARGET", "ZERO-SHOT", "HALF-SHOT", "FULL-SHOT", "FULL-TRAIN"],
+    );
+
+    for (src_name, dst_name) in [
+        ("ffnn", "llama-block"),
+        ("chainmm", "llama-block"),
+        ("ffnn", "llama-layer"),
+        ("chainmm", "llama-layer"),
+    ] {
+        // 1. pretrain on the source graph (stages I+II)
+        let src = by_name(src_name, Scale::Full);
+        let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+        cfg.scale_to_budget(b);
+        let engine_cfg = EngineConfig::new(restrict(&topo, 4));
+        let pre = Trainer::new(&nets, &src, topo.clone(), cfg.clone())
+            .unwrap()
+            .run(Stages { imitation: b / 4, sim_rl: b * 3 / 4, real_rl: 0 }, &engine_cfg)
+            .unwrap();
+
+        // 2. evaluate on the target graph at increasing shot budgets
+        let dst = by_name(dst_name, Scale::Full);
+        let mut ctx = EvalCtx::new(Some(&nets), topo.clone(), 4);
+        ctx.episodes = b;
+        ctx.eval_reps = 10;
+        let mut cells = vec![src_name.to_uppercase(), dst_name.to_uppercase()];
+        for shots in [0usize, b / 2, b] {
+            let mut tcfg = cfg.clone();
+            tcfg.scale_to_budget(shots.max(1));
+            let mut tr = Trainer::new(&nets, &dst, topo.clone(), tcfg)
+                .unwrap()
+                .with_params(pre.params.clone());
+            let a = if shots == 0 {
+                tr.greedy_assignment().unwrap()
+            } else {
+                tr.stage2_sim(shots * 2 / 3).unwrap();
+                tr.stage3_real(shots / 3, &engine_cfg).unwrap();
+                tr.greedy_assignment().unwrap()
+            };
+            let s = ctx.evaluate(&dst, &a);
+            eprintln!("[{src_name}->{dst_name}] {shots}-shot = {}", cell(&s));
+            cells.push(cell(&s));
+        }
+        // full target training for reference
+        let full = run_method(MethodId::DopplerSys, &dst, &ctx).unwrap();
+        cells.push(cell(&full.summary));
+        table.row(cells);
+    }
+    table.emit(Some(std::path::Path::new("runs/table4.csv")));
+    println!("paper: zero-shot 251/242/206/338 -> 4k-shot 159/174/156/156 vs full 160/151");
+}

@@ -1,0 +1,34 @@
+//! Table 5 (Appendix G.2): seed stability — five DOPPLER-SYS training
+//! runs on CHAINMM differing only in the random seed; each best
+//! assignment evaluated 10x on the engine.
+//!
+//! Paper: 119.6–123.9 ms across seeds, i.e. consistent results.
+
+use doppler::bench_util::{banner, bench_episodes};
+use doppler::eval::tables::{cell, Table};
+use doppler::eval::{run_method, EvalCtx, MethodId};
+use doppler::graph::workloads::{by_name, Scale};
+use doppler::policy::PolicyNets;
+use doppler::sim::topology::DeviceTopology;
+
+fn main() {
+    banner("Table 5 — seed stability", "Appendix G.2");
+    let nets = PolicyNets::load_default().expect("artifacts required");
+    let g = by_name("chainmm", Scale::Full);
+    let mut table = Table::new(
+        "Table 5: DOPPLER-SYS across seeds (CHAINMM, ms)",
+        &["RUN1", "RUN2", "RUN3", "RUN4", "RUN5"],
+    );
+    let mut cells = Vec::new();
+    for seed in 0..5u64 {
+        let mut ctx = EvalCtx::new(Some(&nets), DeviceTopology::p100x4(), 4);
+        ctx.episodes = bench_episodes();
+        ctx.seed = seed * 31 + 7;
+        let r = run_method(MethodId::DopplerSys, &g, &ctx).unwrap();
+        eprintln!("seed {} -> {}", ctx.seed, cell(&r.summary));
+        cells.push(cell(&r.summary));
+    }
+    table.row(cells);
+    table.emit(Some(std::path::Path::new("runs/table5.csv")));
+    println!("paper: 123.2 / 119.6 / 122.7 / 123.9 / 121.7 (tight spread)");
+}

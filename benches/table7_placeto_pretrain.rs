@@ -1,0 +1,58 @@
+//! Table 7 (Appendix G.4): does pretraining rescue PLACETO? —
+//! PLACETO-pretrain (imitation + sim RL) vs PLACETO (sim RL only) vs
+//! DOPPLER-SIM vs DOPPLER-SYS on FFNN.
+//!
+//! Paper shape: pretraining helps PLACETO (126 -> 99 ms) but it still
+//! loses to DOPPLER's dual-policy design (50/47 ms).
+
+use doppler::bench_util::{banner, bench_episodes};
+use doppler::engine::EngineConfig;
+use doppler::eval::restrict;
+use doppler::eval::tables::{cell, Table};
+use doppler::eval::{run_method, EvalCtx, MethodId};
+use doppler::graph::workloads::{by_name, Scale};
+use doppler::policy::{Method, PolicyNets};
+use doppler::sim::topology::DeviceTopology;
+use doppler::train::{Stages, TrainConfig, Trainer};
+
+fn main() {
+    banner("Table 7 — PLACETO pretraining ablation", "Appendix G.4");
+    let nets = PolicyNets::load_default().expect("artifacts required");
+    let g = by_name("ffnn", Scale::Full);
+    let topo = DeviceTopology::p100x4();
+    let b = bench_episodes();
+
+    let mut table = Table::new(
+        "Table 7: best assignment (FFNN, ms)",
+        &["PLACETO-pretrain", "PLACETO", "DOPPLER-SIM", "DOPPLER-SYS"],
+    );
+
+    // PLACETO-pretrain: stage I imitation + stage II sim RL
+    let mut cfg = TrainConfig::new(Method::Placeto, topo.clone(), 4);
+    cfg.scale_to_budget(b);
+    cfg.seed = 7;
+    let engine_cfg = EngineConfig::new(restrict(&topo, 4));
+    let result = Trainer::new(&nets, &g, topo.clone(), cfg)
+        .unwrap()
+        .run(Stages { imitation: b / 4, sim_rl: b * 3 / 4, real_rl: 0 }, &engine_cfg)
+        .unwrap();
+    let best = result
+        .stage_bests
+        .get(&2)
+        .map(|(a, _)| a.clone())
+        .unwrap_or(result.best_assignment);
+    let mut ctx = EvalCtx::new(Some(&nets), topo.clone(), 4);
+    ctx.episodes = b;
+    let pre = ctx.evaluate(&g, &best);
+    eprintln!("placeto-pretrain = {}", cell(&pre));
+
+    let mut cells = vec![cell(&pre)];
+    for id in [MethodId::Placeto, MethodId::DopplerSim, MethodId::DopplerSys] {
+        let r = run_method(id, &g, &ctx).unwrap();
+        eprintln!("{} = {}", id.name(), cell(&r.summary));
+        cells.push(cell(&r.summary));
+    }
+    table.row(cells);
+    table.emit(Some(std::path::Path::new("runs/table7.csv")));
+    println!("paper: 99.0 / 126.3 / 49.9 / 47.4 ms");
+}

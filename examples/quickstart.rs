@@ -1,0 +1,58 @@
+//! Quickstart: build a sharded dataflow graph, produce assignments with
+//! two heuristics, execute them on the work-conserving simulator and the
+//! real engine, and print what happened.
+//!
+//!     cargo run --release --example quickstart
+
+use doppler::engine::{execute, EngineConfig};
+use doppler::features::static_features;
+use doppler::graph::workloads::{chainmm, Scale};
+use doppler::heuristics::{critical_path_once, enumerative_optimizer};
+use doppler::sim::topology::DeviceTopology;
+use doppler::sim::{simulate, trace, SimConfig};
+use doppler::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. a workload: (A x B) + (C x (D x E)), five matrices 2x2-sharded
+    let g = chainmm(Scale::Full);
+    println!("graph: {}", doppler::graph::shard::describe(&g));
+
+    // 2. a machine: four P100-analog devices, all-pairs links
+    let topo = DeviceTopology::p100x4();
+    let mut rng = Rng::new(42);
+
+    // 3. two classic assignments
+    let feats = static_features(&g, &topo, 1.0);
+    let cp = critical_path_once(&g, &topo, &feats, &mut rng, 0.1);
+    let eo = enumerative_optimizer(&g, &topo, &mut rng);
+
+    // 4. simulate (the paper's Algorithm 1 digital twin) ...
+    let sim_cfg = SimConfig::new(topo.clone());
+    for (name, a) in [("critical-path", &cp), ("enumerative", &eo)] {
+        let r = simulate(&g, a, &sim_cfg, &mut rng);
+        println!(
+            "sim    {name:<14} {:6.1} ms  ({} transfers, {:.1} MB moved)",
+            r.makespan * 1e3,
+            r.transfers.len(),
+            r.bytes_moved / 1e6
+        );
+    }
+
+    // 5. ... and execute for real on the WC engine (real kernels)
+    let engine_cfg = EngineConfig::new(topo.clone());
+    for (name, a) in [("critical-path", &cp), ("enumerative", &eo)] {
+        let r = execute(&g, a, &engine_cfg);
+        println!(
+            "engine {name:<14} {:6.1} ms  (measured compute {:.1} ms)",
+            r.sim.makespan * 1e3,
+            r.real_compute * 1e3
+        );
+    }
+
+    // 6. look at the schedule
+    let r = simulate(&g, &eo, &sim_cfg, &mut rng);
+    let u = trace::utilization(&r, topo.n(), 64);
+    println!("\nenumerative-optimizer utilization timeline:");
+    println!("{}", trace::ascii_timeline(&u));
+    Ok(())
+}

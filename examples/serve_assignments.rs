@@ -1,0 +1,77 @@
+//! Serving scenario (§5 Stage III, "rewards for free"): a deployed
+//! coordinator serves a stream of execution requests for a fixed graph on
+//! the real WC engine while continuously refining its placement policy
+//! online — each served request's measured runtime doubles as the
+//! REINFORCE reward. Reports per-request latency over time.
+//!
+//!     make artifacts && cargo run --release --example serve_assignments
+
+use doppler::engine::{execute, EngineConfig};
+use doppler::graph::workloads::{llama_block, Scale};
+use doppler::policy::{Method, PolicyNets};
+use doppler::sim::topology::DeviceTopology;
+use doppler::train::{TrainConfig, Trainer};
+use doppler::util::env_usize;
+use doppler::util::stats::{mean, Summary};
+
+fn main() -> anyhow::Result<()> {
+    let nets = PolicyNets::load_default()
+        .map_err(|e| anyhow::anyhow!("run `make artifacts` first: {e}"))?;
+    let g = llama_block(Scale::Full);
+    let topo = DeviceTopology::p100x4();
+    let requests = env_usize("DOPPLER_REQUESTS", 120);
+
+    println!("=== online-refinement serving: {} ({} nodes) ===", g.name, g.n());
+
+    // warm-start: a short offline phase (imitation + a little sim RL),
+    // as a production deployment would (§5: avoid unstable exploration)
+    let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+    cfg.scale_to_budget(requests);
+    cfg.seed = 3;
+    cfg.epsilon = doppler::train::Schedule { start: 0.1, end: 0.0 }; // gentle online exploration
+    let mut trainer = Trainer::new(&nets, &g, topo.clone(), cfg)?;
+    trainer.stage1_imitation(20)?;
+    trainer.stage2_sim(40)?;
+    println!("warm-start done (20 imitation + 40 sim episodes)\n");
+
+    // serve: each request = one episode executed on the real engine;
+    // the measured latency is both the SLA metric and the reward
+    let engine_cfg = EngineConfig::new(topo.clone());
+    trainer.stage3_real(requests, &engine_cfg)?;
+
+    let served: Vec<f64> = trainer
+        .history
+        .iter()
+        .filter(|r| r.stage == 3)
+        .map(|r| r.exec_time * 1e3)
+        .collect();
+    let k = (served.len() / 4).max(1);
+    println!("served {} requests (latency = real WC-engine makespan):", served.len());
+    for (i, chunk) in served.chunks(k).enumerate() {
+        let s = Summary::of(chunk);
+        println!(
+            "  requests {:>3}-{:<3}  p50-ish mean {:.1} ± {:.1} ms",
+            i * k,
+            i * k + chunk.len() - 1,
+            s.mean,
+            s.std
+        );
+    }
+    let first_q = mean(&served[..k]);
+    let last_q = mean(&served[served.len() - k..]);
+    println!(
+        "\nlatency drift over deployment: {:.1} ms -> {:.1} ms ({:+.1}%)",
+        first_q,
+        last_q,
+        (last_q - first_q) / first_q * 100.0
+    );
+
+    // the best discovered placement is what a router would pin
+    let best = trainer.greedy_assignment()?;
+    let final_lat: Vec<f64> = (0..10)
+        .map(|_| execute(&g, &best, &engine_cfg).sim.makespan * 1e3)
+        .collect();
+    let s = Summary::of(&final_lat);
+    println!("pinned greedy placement: {:.1} ± {:.1} ms", s.mean, s.std);
+    Ok(())
+}

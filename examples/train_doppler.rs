@@ -1,0 +1,81 @@
+//! End-to-end driver (DESIGN.md §deliverables): train DOPPLER's dual
+//! policy through all three stages on the FFNN workload — imitation of
+//! the CRITICAL PATH teacher, REINFORCE against the WC simulator, then
+//! continued REINFORCE against the real engine — logging the training
+//! curve, and compare the result against the heuristic baselines on the
+//! real engine. This exercises every layer: L1 pallas kernels inside the
+//! L2 policy networks, AOT-loaded and driven by the L3 coordinator.
+//!
+//!     make artifacts && cargo run --release --example train_doppler
+//!
+//! Recorded run: EXPERIMENTS.md §End-to-end driver.
+
+use doppler::engine::EngineConfig;
+use doppler::eval::{run_method, EvalCtx, MethodId};
+use doppler::graph::workloads::{ffnn, Scale};
+use doppler::policy::{Method, PolicyNets};
+use doppler::sim::topology::DeviceTopology;
+use doppler::train::{write_history_csv, Stages, TrainConfig, Trainer};
+use doppler::util::env_usize;
+
+fn main() -> anyhow::Result<()> {
+    let nets = PolicyNets::load_default()
+        .map_err(|e| anyhow::anyhow!("run `make artifacts` first: {e}"))?;
+    let g = ffnn(Scale::Full);
+    let topo = DeviceTopology::p100x4();
+    let episodes = env_usize("DOPPLER_EPISODES", 300);
+
+    println!("=== DOPPLER end-to-end: {} ({} nodes, {} edges) ===", g.name, g.n(), g.m());
+
+    // --- three-stage training --------------------------------------
+    let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+    cfg.scale_to_budget(episodes);
+    cfg.seed = 7;
+    let stages = Stages::budget(episodes);
+    println!(
+        "training: {} episodes (imitation {}, sim-RL {}, real-RL {})",
+        stages.total(),
+        stages.imitation,
+        stages.sim_rl,
+        stages.real_rl
+    );
+    let engine_cfg = EngineConfig::new(topo.clone());
+    let t0 = std::time::Instant::now();
+    let trainer = Trainer::new(&nets, &g, topo.clone(), cfg)?;
+    let result = trainer.run(stages, &engine_cfg)?;
+    println!(
+        "trained in {:.0}s; best observed {:.1} ms",
+        t0.elapsed().as_secs_f64(),
+        result.best_time * 1e3
+    );
+
+    std::fs::create_dir_all("runs")?;
+    write_history_csv(std::path::Path::new("runs/train_doppler_ffnn.csv"), &result.history)?;
+    println!("loss/exec-time curve -> runs/train_doppler_ffnn.csv");
+
+    // print a compressed loss curve
+    let every = (result.history.len() / 12).max(1);
+    println!("\n  ep  stage  exec(ms)  best(ms)   loss");
+    for r in result.history.iter().step_by(every) {
+        println!(
+            "{:>4}  {:>5}  {:>8.1}  {:>8.1}  {:>6.3}",
+            r.episode,
+            r.stage,
+            r.exec_time * 1e3,
+            r.best_time * 1e3,
+            r.loss
+        );
+    }
+
+    // --- final comparison on the real engine ------------------------
+    println!("\n=== real-engine comparison (10 reps each) ===");
+    let mut ctx = EvalCtx::new(Some(&nets), topo.clone(), 4);
+    ctx.episodes = episodes;
+    let trained = ctx.evaluate(&g, &result.best_assignment);
+    for id in [MethodId::SingleDevice, MethodId::CriticalPath, MethodId::EnumOpt] {
+        let r = run_method(id, &g, &ctx)?;
+        println!("{:<14} {:>8.1} ± {:>5.1} ms", r.id.name(), r.summary.mean, r.summary.std);
+    }
+    println!("{:<14} {:>8.1} ± {:>5.1} ms   <- this training run", "DOPPLER-SYS", trained.mean, trained.std);
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Assignment visualization (Figs. 5 / 7-24 analog): produce assignments
+//! with several methods for one workload, write colored DOT files, and
+//! print ASCII device/transfer utilization timelines plus the
+//! communication-locality breakdown.
+//!
+//!     cargo run --release --example visualize_assignment [workload]
+
+use doppler::eval::{run_method, EvalCtx, MethodId};
+use doppler::graph::workloads::{by_name, Scale};
+use doppler::policy::PolicyNets;
+use doppler::sim::topology::DeviceTopology;
+use doppler::sim::{simulate, trace, SimConfig};
+use doppler::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let workload = std::env::args().nth(1).unwrap_or_else(|| "ffnn".into());
+    let g = by_name(&workload, Scale::Full);
+    let topo = DeviceTopology::p100x4();
+    let nets = PolicyNets::load_default().ok();
+    let mut ctx = EvalCtx::new(nets.as_ref(), topo.clone(), 4);
+    ctx.episodes = doppler::util::env_usize("DOPPLER_EPISODES", 150);
+    ctx.eval_reps = 3;
+
+    std::fs::create_dir_all("runs")?;
+    let mut methods = vec![MethodId::CriticalPath, MethodId::EnumOpt];
+    if ctx.nets.is_some() {
+        methods.push(MethodId::DopplerSys);
+    }
+
+    for id in methods {
+        let r = run_method(id, &g, &ctx)?;
+        let slug = id.name().to_lowercase().replace([' ', '.'], "");
+        let path = format!("runs/{}_{}.dot", g.name, slug);
+        std::fs::write(&path, g.to_dot(Some(&r.assignment)))?;
+
+        let cfg = SimConfig::new(topo.clone());
+        let sim = simulate(&g, &r.assignment, &cfg, &mut Rng::new(5));
+        let u = trace::utilization(&sim, 4, 64);
+        let (cross, same_g, same_d) = trace::transfer_locality(&g, &r.assignment, &topo);
+        println!(
+            "== {} == {:.1} ± {:.1} ms -> {}",
+            id.name(),
+            r.summary.mean,
+            r.summary.std,
+            path
+        );
+        println!("{}", trace::ascii_timeline(&u));
+        let busy = trace::busy_fraction(&sim, 4);
+        println!(
+            "busy: {} | edges: {} local, {} same-group, {} cross\n",
+            busy.iter()
+                .enumerate()
+                .map(|(d, b)| format!("d{d}={:.0}%", b * 100.0))
+                .collect::<Vec<_>>()
+                .join(" "),
+            same_d,
+            same_g,
+            cross
+        );
+    }
+    println!("render DOTs with: dot -Tsvg runs/<file>.dot -o out.svg");
+    Ok(())
+}

@@ -1,0 +1,155 @@
+"""AOT pipeline: lower every policy-network executable to HLO *text*
+(plus the initial parameter blob and a JSON manifest) under `artifacts/`.
+
+HLO text — not serialized HloModuleProto — is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONLY here. `make artifacts` invokes this module once; the
+rust binary then loads everything through PJRT and never touches Python.
+
+Usage:  python -m compile.aot --out ../artifacts [--variants n96,n256]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config as C
+from . import model
+from . import params as P
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    """Lower a jax function to XLA HLO text with a tuple return."""
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def executables_for(variant):
+    """(name, fn, arg_specs) for one (N, E) variant."""
+    n, e = variant.n, variant.e
+    m = C.MAX_DEVICES
+    pc = P.param_count()
+
+    statics = [
+        spec((n, C.NODE_FEATS)),          # xv
+        spec((e,), I32),                  # esrc
+        spec((e,), I32),                  # edst
+        spec((e, C.EDGE_FEATS)),          # efeat
+        spec((n,)),                       # node_mask
+        spec((e,)),                       # edge_mask
+        spec((n, n)),                     # pb
+        spec((n, n)),                     # pt
+    ]
+    trajectory = [
+        spec((n,), I32),                  # sel_actions
+        spec((n,), I32),                  # plc_actions
+        spec((n,)),                       # step_mask
+        spec((n, n)),                     # cand_masks
+        spec((n, m, C.DEV_FEATS)),        # xd_steps
+        spec((m,)),                       # dev_mask
+    ]
+    scalars = [spec((1,)), spec((1,)), spec((1,))]  # advantage, lr, entropy_w
+    adam = [spec((pc,)), spec((pc,)), spec((pc,)), spec((1,))]
+
+    out = []
+    out.append((
+        "encode",
+        lambda p, *a: (model.encode(p, *a),),
+        [spec((pc,))] + statics,
+    ))
+    out.append((
+        "sel",
+        lambda p, hcat, cand: (model.sel_logits(p, hcat, cand),),
+        [spec((pc,)), spec((n, C.SEL_IN)), spec((n,))],
+    ))
+    out.append((
+        "plc",
+        lambda p, hcat, voh, xd, pn, dm: (model.plc_logits(p, hcat, voh, xd, pn, dm),),
+        [spec((pc,)), spec((n, C.SEL_IN)), spec((n,)), spec((m, C.DEV_FEATS)),
+         spec((m, n)), spec((m,))],
+    ))
+    out.append((
+        "gdp",
+        lambda p, hcat, voh, nm, dm: (model.gdp_logits(p, hcat, voh, nm, dm),),
+        [spec((pc,)), spec((n, C.SEL_IN)), spec((n,)), spec((n,)), spec((m,))],
+    ))
+    for mode in ("dual", "plc_only", "gdp"):
+        step = model.make_train_step({"dual": "dual", "plc_only": "plc", "gdp": "gdp"}[mode])
+        out.append((
+            f"train_{mode}",
+            step,
+            adam[:1] + adam[1:3] + adam[3:] + statics + trajectory + scalars,
+        ))
+    return out
+
+
+def build(out_dir: str, variant_tags=None, verbose=True):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "hidden": C.HIDDEN,
+        "k_mpnn": C.K_MPNN,
+        "node_feats": C.NODE_FEATS,
+        "dev_feats": C.DEV_FEATS,
+        "max_devices": C.MAX_DEVICES,
+        "sel_in": C.SEL_IN,
+        "param_count": P.param_count(),
+        "init_params": "init_params.bin",
+        "variants": [],
+    }
+
+    init = P.init_params(seed=0)
+    init.tofile(os.path.join(out_dir, "init_params.bin"))
+
+    for variant in C.VARIANTS:
+        if variant_tags and variant.tag not in variant_tags:
+            continue
+        entry = {"n": variant.n, "e": variant.e, "artifacts": {}}
+        for name, fn, specs in executables_for(variant):
+            fname = f"{name}_{variant.tag}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            if verbose:
+                print(f"[aot] lowering {fname} ...", flush=True)
+            text = to_hlo_text(fn, specs)
+            with open(path, "w") as f:
+                f.write(text)
+            entry["artifacts"][name] = fname
+        manifest["variants"].append(entry)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"[aot] wrote manifest with {len(manifest['variants'])} variants, "
+              f"{P.param_count()} params")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--variants", default="", help="comma-separated tags, e.g. n96,n256")
+    args = ap.parse_args()
+    tags = [t for t in args.variants.split(",") if t] or None
+    build(args.out, tags)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

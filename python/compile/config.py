@@ -1,0 +1,50 @@
+"""Model/artifact configuration shared by L1/L2 and mirrored in the
+artifacts manifest consumed by the rust coordinator.
+
+All policy-network executables are AOT-lowered at fixed padded sizes; a
+`Variant` fixes the (max nodes, max edges) pair. Network weights are
+size-independent (they act per-node/per-edge/per-device), so one flat
+parameter vector works for every variant — this is what makes the paper's
+transfer experiments (Table 4/11) possible.
+"""
+
+from dataclasses import dataclass
+
+# network dims (paper §4.2: K message-passing rounds, FFNN encoders)
+HIDDEN = 32          # embedding width H
+K_MPNN = 2           # message-passing rounds per episode (§4.3)
+NODE_FEATS = 5       # Appendix E.1
+DEV_FEATS = 5        # Appendix E.2
+MAX_DEVICES = 8      # V100 box size; 4-device runs mask the rest
+EDGE_FEATS = 1       # normalized communication cost
+
+# concatenated SEL input: [H_gnn || h_b || h_t || Z]  (eq. 3)
+SEL_IN = 4 * HIDDEN
+# PLC input: [h_v (4H) || h_d (H) || Y[d] (H)]        (eq. 6)
+PLC_IN = 6 * HIDDEN
+# GDP head input: [h_v (4H) || attention ctx (4H) || dev embedding (H)]
+GDP_IN = 9 * HIDDEN
+
+
+@dataclass(frozen=True)
+class Variant:
+    """One padded-size family of AOT artifacts."""
+
+    n: int  # max nodes
+    e: int  # max edges
+
+    @property
+    def tag(self) -> str:
+        return f"n{self.n}"
+
+
+# chainmm fits 96; ffnn/llama-block fit 256; llama-layer fits 384.
+VARIANTS = [Variant(96, 224), Variant(256, 576), Variant(384, 832)]
+
+
+def variant_for(n_nodes: int, n_edges: int) -> Variant:
+    """Smallest variant that fits a graph."""
+    for v in VARIANTS:
+        if n_nodes <= v.n and n_edges <= v.e:
+            return v
+    raise ValueError(f"graph too large for any variant: {n_nodes} nodes / {n_edges} edges")

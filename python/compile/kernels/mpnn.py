@@ -1,0 +1,167 @@
+"""L1: Pallas kernels for the GNN encoder's hot contractions.
+
+The per-episode cost of DOPPLER's policies is dominated by the dense
+contractions inside message passing (§4.2-4.3): gathering source/target
+embeddings (one-hot `S @ H`), scattering messages back to nodes
+(`D^T @ M`), and the critical-path poolings (`P_b @ H`, `P_t @ H`). All
+of these are matrix products over padded, mask-inert operands, so the
+kernel is a tiled matmul with an accumulator block.
+
+TPU adaptation (DESIGN.md §2): a CUDA implementation would stage tiles in
+shared memory per threadblock; here `BlockSpec` expresses the same
+HBM↔VMEM schedule, the `(i, j, k)` grid walks K innermost so the output
+block stays resident in VMEM, and the inner `jnp.dot` maps onto the MXU.
+`interpret=True` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO for execution while
+keeping the TPU block structure for the §Perf VMEM/MXU analysis.
+
+A `jax.custom_vjp` makes the kernel differentiable (the backward pass is
+two more pallas matmuls), so the same code path serves both the inference
+executables and the REINFORCE train step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Candidate tile edges, largest first. All model dims are multiples of 32
+# (N in {96,256,384}, E=2N-ish, H=32), so a divisor is always found.
+_TILES = (256, 128, 96, 64, 32, 16, 8, 4, 2, 1)
+
+
+def _pick(dim: int, cap: int) -> int:
+    """Largest tile <= cap that divides dim."""
+    for t in _TILES:
+        if t <= cap and dim % t == 0:
+            return t
+    return 1
+
+
+def _mm_kernel(x_ref, y_ref, o_ref):
+    """One (i, j, k) grid step: o[i,j] += x[i,k] @ y[k,j]."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...])
+
+
+def matmul_pallas_raw(x, y, bm=128, bn=128, bk=128):
+    """Tiled pallas matmul (no VJP). Dims must divide by chosen tiles."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    bm, bn, bk = _pick(m, bm), _pick(n, bn), _pick(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, y)
+
+
+@jax.custom_vjp
+def matmul_pallas(x, y):
+    """Differentiable pallas matmul `x @ y`."""
+    return matmul_pallas_raw(x, y)
+
+
+def _mm_fwd(x, y):
+    return matmul_pallas_raw(x, y), (x, y)
+
+
+def _mm_bwd(res, g):
+    x, y = res
+    dx = matmul_pallas_raw(g, y.T)
+    dy = matmul_pallas_raw(x.T, g)
+    return dx, dy
+
+
+matmul_pallas.defvjp(_mm_fwd, _mm_bwd)
+
+
+def _msg_kernel(hsrc_ref, hdst_ref, ef_ref, wsrc_ref, wdst_ref, we_ref, bm_ref, o_ref):
+    """Fused edge-message kernel: one edge tile per grid step.
+
+    msg = tanh(h_src @ Wsrc + h_dst @ Wdst + e @ We + b)  (the psi of eq. 2)
+    """
+    acc = jnp.dot(hsrc_ref[...], wsrc_ref[...])
+    acc += jnp.dot(hdst_ref[...], wdst_ref[...])
+    acc += jnp.dot(ef_ref[...], we_ref[...])
+    o_ref[...] = jnp.tanh(acc + bm_ref[...])
+
+
+def _edge_messages_raw(h_src, h_dst, efeat, wsrc, wdst, we, bm):
+    e, h = h_src.shape
+    fe = efeat.shape[1]
+    be = _pick(e, 128)
+    grid = (e // be,)
+    return pl.pallas_call(
+        _msg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((be, h), lambda i: (i, 0)),
+            pl.BlockSpec((be, h), lambda i: (i, 0)),
+            pl.BlockSpec((be, fe), lambda i: (i, 0)),
+            pl.BlockSpec((h, h), lambda i: (0, 0)),
+            pl.BlockSpec((h, h), lambda i: (0, 0)),
+            pl.BlockSpec((fe, h), lambda i: (0, 0)),
+            pl.BlockSpec((1, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((be, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, h), h_src.dtype),
+        interpret=True,
+    )(h_src, h_dst, efeat, wsrc, wdst, we, bm.reshape(1, -1))
+
+
+@jax.custom_vjp
+def edge_messages_pallas(h_src, h_dst, efeat, wsrc, wdst, we, bm):
+    """Differentiable psi over all edges (eq. 2), edge-tiled pallas kernel.
+
+    h_src/h_dst: [E, H] gathered endpoint embeddings; efeat: [E, F_e].
+    The VJP runs the standard tanh/affine backward using pallas matmuls.
+    """
+    return _edge_messages_raw(h_src, h_dst, efeat, wsrc, wdst, we, bm)
+
+
+def _em_fwd(h_src, h_dst, efeat, wsrc, wdst, we, bm):
+    msg = _edge_messages_raw(h_src, h_dst, efeat, wsrc, wdst, we, bm)
+    return msg, (h_src, h_dst, efeat, wsrc, wdst, we, msg)
+
+
+def _em_bwd(res, g):
+    h_src, h_dst, efeat, wsrc, wdst, we, msg = res
+    dacc = g * (1.0 - msg * msg)  # through tanh
+    dh_src = matmul_pallas_raw(dacc, wsrc.T)
+    dh_dst = matmul_pallas_raw(dacc, wdst.T)
+    defeat = dacc @ we.T  # [E,H] @ [H,Fe] — Fe tiny, plain dot
+    dwsrc = matmul_pallas_raw(h_src.T, dacc)
+    dwdst = matmul_pallas_raw(h_dst.T, dacc)
+    dwe = efeat.T @ dacc
+    dbm = jnp.sum(dacc, axis=0)
+    return dh_src, dh_dst, defeat, dwsrc, dwdst, dwe, dbm
+
+
+edge_messages_pallas.defvjp(_em_fwd, _em_bwd)
+
+
+def vmem_report(n: int, e: int, h: int, bm: int = 128, bn: int = 128, bk: int = 128):
+    """Estimate VMEM footprint (bytes) and MXU utilization proxy for the
+    encoder's dominant contraction (scatter `D^T[N,E] @ M[E,H]`) at the
+    given tile sizes — the L1 §Perf analysis (interpret=True gives no TPU
+    wallclock, so we optimize structure).
+    """
+    bm, bn, bk = _pick(n, bm), _pick(h, bn), _pick(e, bk)
+    vmem = 4 * (bm * bk + bk * bn + bm * bn)  # x, y, acc tiles (f32)
+    # MXU proxy: fraction of a 128x128 systolic tile actually filled
+    mxu = min(bm, 128) * min(bn, 128) / (128.0 * 128.0)
+    return {"tiles": (bm, bn, bk), "vmem_bytes": vmem, "mxu_fill": mxu}

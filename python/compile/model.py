@@ -1,0 +1,260 @@
+"""L2: the dual-policy networks (paper §4.2) and their training steps,
+written in JAX over the L1 pallas kernels, AOT-lowered by `aot.py`.
+
+Everything here is a pure function of a flat `f32[P]` parameter vector
+plus padded, masked arrays — no Python state — so each entry point lowers
+to a single HLO executable the rust coordinator can run via PJRT:
+
+- `encode`      eq. 2-3: K rounds of message passing (pallas kernels) plus
+                critical-path poolings -> per-node embedding `Hcat[N, 4H]`.
+                Run ONCE per episode (the §4.3 efficiency trick).
+- `sel_scores`  eq. 4 head (candidate masking is applied by the caller or
+                in the step wrapper).
+- `plc_logits`  eqs. 5-8 head, given the selected node and the dynamic
+                device features X_D.
+- `gdp_logits`  the GDP baseline head: graph-attention context instead of
+                placement-aware device features.
+- `make_train_step(mode)` REINFORCE + entropy + Adam over a whole episode
+                trajectory (eq. 9 imitation falls out as advantage=1 with
+                teacher actions and entropy_w=0).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from . import params as P
+from .kernels.mpnn import edge_messages_pallas, matmul_pallas
+
+H = C.HIDDEN
+NEG = -1e9
+
+
+def _relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def _leaky(x):
+    return jnp.where(x > 0, x, 0.01 * x)
+
+
+# --------------------------------------------------------------------------
+# encoder (eqs. 2-3)
+# --------------------------------------------------------------------------
+
+def encode(p_flat, xv, esrc, edst, efeat, node_mask, edge_mask, pb, pt):
+    """Per-node embeddings `Hcat = [H_gnn || h_b || h_t || Z]`, `[N, 4H]`.
+
+    xv: [N,5] normalized static features; esrc/edst: [E] i32 endpoints
+    (padding edges point at node 0 with edge_mask 0); pb/pt: [N,N]
+    row-normalized critical-path membership matrices.
+    """
+    d = P.unpack(p_flat)
+    n = xv.shape[0]
+
+    # Z = FFNN(X_V)
+    z = _relu(xv @ d["enc.w0"] + d["enc.b0"])
+    z = z @ d["enc.w1"] + d["enc.b1"]
+    z = z * node_mask[:, None]
+
+    # one-hot incidence (masked): gather/scatter as MXU matmuls
+    src_oh = jax.nn.one_hot(esrc, n, dtype=jnp.float32) * edge_mask[:, None]
+    dst_oh = jax.nn.one_hot(edst, n, dtype=jnp.float32) * edge_mask[:, None]
+
+    h = z
+    for k in range(C.K_MPNN):
+        h_src = matmul_pallas(src_oh, h)  # [E,H] gather
+        h_dst = matmul_pallas(dst_oh, h)
+        msg = edge_messages_pallas(
+            h_src, h_dst, efeat,
+            d[f"mpnn{k}.wsrc"], d[f"mpnn{k}.wdst"], d[f"mpnn{k}.we"], d[f"mpnn{k}.bm"],
+        )
+        agg = matmul_pallas(dst_oh.T, msg)  # [N,H] scatter-sum
+        h = jnp.tanh(jnp.concatenate([h, agg], axis=1) @ d[f"mpnn{k}.wphi"] + d[f"mpnn{k}.bphi"])
+        h = h * node_mask[:, None]
+
+    # critical-path poolings h_{v,b}, h_{v,t} (eq. 3)
+    hb = matmul_pallas(pb, h)
+    ht = matmul_pallas(pt, h)
+    return jnp.concatenate([h, hb, ht, z], axis=1) * node_mask[:, None]
+
+
+# --------------------------------------------------------------------------
+# heads
+# --------------------------------------------------------------------------
+
+def sel_scores(p_flat, hcat):
+    """Unmasked SEL scores `q[N]` (eq. 4 before candidate masking)."""
+    d = P.unpack(p_flat)
+    x = _relu(hcat @ d["sel.w0"] + d["sel.b0"])
+    return (x @ d["sel.w1"] + d["sel.b1"])[:, 0]
+
+
+def sel_logits(p_flat, hcat, cand_mask):
+    """Candidate-masked SEL logits."""
+    q = sel_scores(p_flat, hcat)
+    return jnp.where(cand_mask > 0, q, NEG)
+
+
+def plc_logits(p_flat, hcat, v_onehot, xd, place_norm, dev_mask):
+    """PLC logits over devices (eqs. 5-8).
+
+    v_onehot: [N] one-hot of the selected node; xd: [M,5] normalized
+    dynamic device features; place_norm: [M,N] row-normalized matrix of
+    nodes already placed per device.
+    """
+    d = P.unpack(p_flat)
+    m = xd.shape[0]
+    hv = v_onehot @ hcat  # [4H]
+    hgnn = hcat[:, :H]
+    hd = place_norm @ hgnn  # [M,H] aggregate of nodes on each device
+    y = _relu(xd @ d["dev.w0"] + d["dev.b0"])  # [M,H]
+    feat = jnp.concatenate([jnp.tile(hv[None, :], (m, 1)), hd, y], axis=1)
+    x = _leaky(feat @ d["plc.w0"] + d["plc.b0"])  # eq. 7 LeakyReLU
+    q = (x @ d["plc.w1"] + d["plc.b1"])[:, 0]
+    return jnp.where(dev_mask > 0, q, NEG)
+
+
+def gdp_logits(p_flat, hcat, v_onehot, node_mask, dev_mask):
+    """GDP baseline head: attention over the graph embedding + a learned
+    device embedding — placement-state-blind by design (§7)."""
+    d = P.unpack(p_flat)
+    m = dev_mask.shape[0]
+    hv = v_onehot @ hcat  # [4H]
+    att = hcat @ (d["gdp.wq"] @ hv)  # [N]
+    att = jnp.where(node_mask > 0, att / jnp.sqrt(float(C.SEL_IN)), NEG)
+    w = jax.nn.softmax(att)
+    ctx = w @ hcat  # [4H]
+    feat = jnp.concatenate(
+        [jnp.tile(hv[None, :], (m, 1)), jnp.tile(ctx[None, :], (m, 1)), d["gdp.devemb"][:m]],
+        axis=1,
+    )
+    x = _leaky(feat @ d["gdp.w0"] + d["gdp.b0"])
+    q = (x @ d["gdp.w1"] + d["gdp.b1"])[:, 0]
+    return jnp.where(dev_mask > 0, q, NEG)
+
+
+# --------------------------------------------------------------------------
+# losses + Adam
+# --------------------------------------------------------------------------
+
+def _masked_log_softmax(logits):
+    z = logits - jax.scipy.special.logsumexp(logits)
+    return z
+
+
+def _masked_entropy(logits):
+    logp = _masked_log_softmax(logits)
+    p = jnp.exp(logp)
+    # contributions from masked entries vanish (p ~ 0)
+    return -jnp.sum(p * logp)
+
+
+def episode_loss(mode, p_flat, xv, esrc, edst, efeat, node_mask, edge_mask, pb, pt,
+                 sel_actions, plc_actions, step_mask, cand_masks, xd_steps, dev_mask,
+                 advantage, entropy_w):
+    """REINFORCE objective over one episode (eq. 10); `advantage=1` with
+    teacher actions recovers the imitation objective (eq. 9).
+
+    mode: 'dual' (SEL+PLC), 'plc' (PLACETO: placement only), or 'gdp'.
+    Returns (loss, (logp_total, entropy_total)).
+    """
+    t = sel_actions.shape[0]
+    n = xv.shape[0]
+    m = dev_mask.shape[0]
+
+    hcat = encode(p_flat, xv, esrc, edst, efeat, node_mask, edge_mask, pb, pt)
+
+    sel_oh = jax.nn.one_hot(sel_actions, n, dtype=jnp.float32) * step_mask[:, None]  # [T,N]
+    plc_oh = jax.nn.one_hot(plc_actions, m, dtype=jnp.float32) * step_mask[:, None]  # [T,M]
+
+    # placement state before each step: exclusive prefix of (device x node)
+    outer = plc_oh[:, :, None] * sel_oh[:, None, :]  # [T,M,N]
+    place_before = jnp.cumsum(outer, axis=0) - outer
+    counts = place_before.sum(axis=2, keepdims=True)
+    place_norm = place_before / jnp.maximum(counts, 1.0)
+
+    # ---- SEL terms (scores are step-independent; only the mask moves) ----
+    if mode == "dual":
+        q = sel_scores(p_flat, hcat)  # [N]
+
+        def sel_step(cand, soh):
+            logits = jnp.where(cand > 0, q, NEG)
+            logp = _masked_log_softmax(logits)
+            return jnp.sum(logp * soh), _masked_entropy(logits)
+
+        sel_logp, sel_ent = jax.vmap(sel_step)(cand_masks, sel_oh)
+        sel_logp = jnp.sum(sel_logp * step_mask)
+        sel_ent = jnp.sum(sel_ent * step_mask)
+    else:
+        sel_logp = 0.0
+        sel_ent = 0.0
+
+    # ---- PLC terms ----
+    if mode == "gdp":
+        def plc_step(soh, poh):
+            logits = gdp_logits(p_flat, hcat, soh, node_mask, dev_mask)
+            logp = _masked_log_softmax(logits)
+            return jnp.sum(logp * poh), _masked_entropy(logits)
+
+        plc_logp, plc_ent = jax.vmap(plc_step)(sel_oh, plc_oh)
+    else:
+        def plc_step(soh, poh, xd, pn):
+            logits = plc_logits(p_flat, hcat, soh, xd, pn, dev_mask)
+            logp = _masked_log_softmax(logits)
+            return jnp.sum(logp * poh), _masked_entropy(logits)
+
+        plc_logp, plc_ent = jax.vmap(plc_step)(sel_oh, plc_oh, xd_steps, place_norm)
+    plc_logp = jnp.sum(plc_logp * step_mask)
+    plc_ent = jnp.sum(plc_ent * step_mask)
+
+    steps = jnp.maximum(jnp.sum(step_mask), 1.0)
+    logp_total = (sel_logp + plc_logp) / steps
+    ent_total = (sel_ent + plc_ent) / steps
+    loss = -advantage * logp_total - entropy_w * ent_total
+    return loss, (logp_total, ent_total)
+
+
+def adam_update(p_flat, m, v, tstep, grads, lr, b1=0.9, b2=0.999, eps=1e-8, clip=1.0):
+    """One Adam step with global-norm gradient clipping."""
+    gnorm = jnp.sqrt(jnp.sum(grads * grads) + 1e-12)
+    grads = grads * jnp.minimum(1.0, clip / gnorm)
+    t_new = tstep + 1.0
+    m_new = b1 * m + (1.0 - b1) * grads
+    v_new = b2 * v + (1.0 - b2) * grads * grads
+    mhat = m_new / (1.0 - b1 ** t_new)
+    vhat = v_new / (1.0 - b2 ** t_new)
+    p_new = p_flat - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return p_new, m_new, v_new, t_new
+
+
+def make_train_step(mode):
+    """Build the episode train step for `mode` ('dual'|'plc'|'gdp').
+
+    Signature (all f32 unless noted):
+      params[P], m[P], v[P], tstep[1],
+      xv[N,5], esrc[E]i32, edst[E]i32, efeat[E,1], node_mask[N],
+      edge_mask[E], pb[N,N], pt[N,N],
+      sel_actions[N]i32, plc_actions[N]i32, step_mask[N],
+      cand_masks[N,N], xd_steps[N,M,5], dev_mask[M],
+      advantage[1], lr[1], entropy_w[1]
+    -> (params', m', v', tstep', loss[1], entropy[1])
+    """
+
+    def train_step(p_flat, m, v, tstep,
+                   xv, esrc, edst, efeat, node_mask, edge_mask, pb, pt,
+                   sel_actions, plc_actions, step_mask, cand_masks, xd_steps, dev_mask,
+                   advantage, lr, entropy_w):
+        def loss_fn(p):
+            loss, aux = episode_loss(
+                mode, p, xv, esrc, edst, efeat, node_mask, edge_mask, pb, pt,
+                sel_actions, plc_actions, step_mask, cand_masks, xd_steps, dev_mask,
+                advantage[0], entropy_w[0],
+            )
+            return loss, aux
+
+        (loss, (_, ent)), grads = jax.value_and_grad(loss_fn, has_aux=True)(p_flat)
+        p_new, m_new, v_new, t_new = adam_update(p_flat, m, v, tstep[0], grads, lr[0])
+        return (p_new, m_new, v_new, t_new.reshape(1), loss.reshape(1), ent.reshape(1))
+
+    return train_step

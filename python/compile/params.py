@@ -1,0 +1,117 @@
+"""Flat parameter packing.
+
+The rust coordinator treats policy parameters as one opaque `f32[P]` blob
+(plus two Adam-state blobs of the same length). This module defines the
+canonical layout — an ordered list of (name, shape) — along with
+pack/unpack helpers and the initializer whose output is shipped as
+`artifacts/init_params.bin`.
+
+One superset layout serves all three methods (DOPPLER, PLACETO, GDP):
+each method simply leaves the heads it does not use untouched.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import config as C
+
+H = C.HIDDEN
+
+
+def layout():
+    """Ordered (name, shape) list defining the flat layout."""
+    entries = [
+        # node-feature encoder Z = FFNN(X_V)  (2 layers)
+        ("enc.w0", (C.NODE_FEATS, H)),
+        ("enc.b0", (H,)),
+        ("enc.w1", (H, H)),
+        ("enc.b1", (H,)),
+    ]
+    # message-passing rounds (eq. 2): psi = f(h_src, h_dst, e), phi = f(h, agg)
+    for k in range(C.K_MPNN):
+        entries += [
+            (f"mpnn{k}.wsrc", (H, H)),
+            (f"mpnn{k}.wdst", (H, H)),
+            (f"mpnn{k}.we", (C.EDGE_FEATS, H)),
+            (f"mpnn{k}.bm", (H,)),
+            (f"mpnn{k}.wphi", (2 * H, H)),
+            (f"mpnn{k}.bphi", (H,)),
+        ]
+    entries += [
+        # SEL head (eq. 4)
+        ("sel.w0", (C.SEL_IN, H)),
+        ("sel.b0", (H,)),
+        ("sel.w1", (H, 1)),
+        ("sel.b1", (1,)),
+        # device-feature encoder Y = FFNN(X_D)  (eq. 5)
+        ("dev.w0", (C.DEV_FEATS, H)),
+        ("dev.b0", (H,)),
+        # PLC head (eqs. 6-8)
+        ("plc.w0", (C.PLC_IN, H)),
+        ("plc.b0", (H,)),
+        ("plc.w1", (H, 1)),
+        ("plc.b1", (1,)),
+        # GDP head: attention query projection + device embedding + MLP
+        ("gdp.wq", (C.SEL_IN, C.SEL_IN)),
+        ("gdp.devemb", (C.MAX_DEVICES, H)),
+        ("gdp.w0", (C.GDP_IN, H)),
+        ("gdp.b0", (H,)),
+        ("gdp.w1", (H, 1)),
+        ("gdp.b1", (1,)),
+    ]
+    return entries
+
+
+def param_count() -> int:
+    return sum(int(np.prod(shape)) for _, shape in layout())
+
+
+def offsets():
+    """name -> (offset, shape) mapping."""
+    out = {}
+    off = 0
+    for name, shape in layout():
+        size = int(np.prod(shape))
+        out[name] = (off, shape)
+        off += size
+    return out
+
+
+def unpack(flat):
+    """Slice a flat jnp vector into the named parameter dict."""
+    out = {}
+    for name, (off, shape) in offsets().items():
+        size = int(np.prod(shape))
+        out[name] = flat[off : off + size].reshape(shape)
+    return out
+
+
+def pack(tree) -> np.ndarray:
+    """Inverse of unpack (numpy, used at init time)."""
+    flat = np.zeros(param_count(), np.float32)
+    for name, (off, shape) in offsets().items():
+        size = int(np.prod(shape))
+        flat[off : off + size] = np.asarray(tree[name], np.float32).reshape(-1)
+    return flat
+
+
+def init_params(seed: int = 0) -> np.ndarray:
+    """He-style initialization; biases zero."""
+    rng = np.random.default_rng(seed)
+    tree = {}
+    for name, shape in layout():
+        if len(shape) == 1:
+            tree[name] = np.zeros(shape, np.float32)
+        else:
+            fan_in = shape[0]
+            tree[name] = rng.normal(0.0, (2.0 / fan_in) ** 0.5, shape).astype(np.float32)
+    return pack(tree)
+
+
+def zeros_like_params() -> np.ndarray:
+    """Fresh Adam-state blob."""
+    return np.zeros(param_count(), np.float32)
+
+
+def as_jnp(flat) -> jnp.ndarray:
+    return jnp.asarray(flat, jnp.float32)

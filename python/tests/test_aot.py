@@ -1,0 +1,68 @@
+"""AOT pipeline tests: manifest consistency, artifact content, init
+params, and lowering determinism (on a temp dir, smallest variant)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, config as C
+from compile import params as P
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.build(out, variant_tags=["n96"], verbose=False)
+    return out
+
+
+def test_manifest_fields(built):
+    m = json.load(open(os.path.join(built, "manifest.json")))
+    assert m["hidden"] == C.HIDDEN
+    assert m["param_count"] == P.param_count()
+    assert m["max_devices"] == C.MAX_DEVICES
+    assert len(m["variants"]) == 1
+    v = m["variants"][0]
+    assert v["n"] == 96 and v["e"] == 224
+    # all seven executables present
+    expected = {"encode", "sel", "plc", "gdp", "train_dual", "train_plc_only", "train_gdp"}
+    assert set(v["artifacts"]) == expected
+
+
+def test_artifacts_are_hlo_text(built):
+    m = json.load(open(os.path.join(built, "manifest.json")))
+    for fname in m["variants"][0]["artifacts"].values():
+        text = open(os.path.join(built, fname)).read()
+        assert text.startswith("HloModule"), fname
+        assert "ENTRY" in text, fname
+        assert len(text) > 500, fname
+
+
+def test_init_params_blob(built):
+    m = json.load(open(os.path.join(built, "manifest.json")))
+    blob = np.fromfile(os.path.join(built, m["init_params"]), np.float32)
+    assert blob.shape == (P.param_count(),)
+    assert np.isfinite(blob).all()
+    # matches the seeded initializer exactly (reproducibility)
+    np.testing.assert_array_equal(blob, P.init_params(seed=0))
+
+
+def test_lowering_is_deterministic(built, tmp_path):
+    out2 = str(tmp_path / "again")
+    aot.build(out2, variant_tags=["n96"], verbose=False)
+    a = open(os.path.join(built, "encode_n96.hlo.txt")).read()
+    b = open(os.path.join(out2, "encode_n96.hlo.txt")).read()
+    assert a == b
+
+
+def test_executable_signatures_match_config():
+    # parameter shapes in the lowered entry signature track the variant
+    specs = aot.executables_for(C.VARIANTS[0])
+    names = [n for n, _, _ in specs]
+    assert names == ["encode", "sel", "plc", "gdp", "train_dual", "train_plc_only", "train_gdp"]
+    # encode: params + 8 statics
+    assert len(specs[0][2]) == 9
+    # train: 4 adam + 8 statics + 6 trajectory + 3 scalars
+    assert len(specs[4][2]) == 21

@@ -1,0 +1,129 @@
+"""L2 model tests: shapes, masking inertness, head semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import config as C, model
+from compile import params as P
+
+N, E, M = 96, 224, 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    rng = np.random.default_rng(0)
+    p = jnp.asarray(P.init_params(0))
+    real_n, real_e = 72, 150
+    xv = jnp.asarray(rng.normal(size=(N, 5)), jnp.float32)
+    xv = xv * (np.arange(N) < real_n)[:, None]
+    esrc = jnp.asarray(rng.integers(0, real_n, E), jnp.int32)
+    edst = jnp.asarray(rng.integers(0, real_n, E), jnp.int32)
+    ef = jnp.asarray(rng.normal(size=(E, 1)), jnp.float32)
+    nm = jnp.asarray((np.arange(N) < real_n).astype(np.float32))
+    em = jnp.asarray((np.arange(E) < real_e).astype(np.float32))
+    pb = jnp.asarray(rng.random((N, N)), jnp.float32) / N
+    pt = jnp.asarray(rng.random((N, N)), jnp.float32) / N
+    hcat = model.encode(p, xv, esrc, edst, ef, nm, em, pb, pt)
+    return dict(p=p, xv=xv, esrc=esrc, edst=edst, ef=ef, nm=nm, em=em,
+                pb=pb, pt=pt, hcat=hcat, rng=rng, real_n=real_n)
+
+
+def test_encode_shape_and_finite(setup):
+    s = setup
+    assert s["hcat"].shape == (N, C.SEL_IN)
+    assert bool(jnp.isfinite(s["hcat"]).all())
+
+
+def test_encode_masks_padding(setup):
+    s = setup
+    pad = np.asarray(s["hcat"])[s["real_n"]:]
+    np.testing.assert_allclose(pad, 0.0, atol=1e-6)
+
+
+def test_padding_edges_are_inert(setup):
+    """Changing the endpoints of masked edges must not change the output."""
+    s = setup
+    esrc2 = np.asarray(s["esrc"]).copy()
+    edst2 = np.asarray(s["edst"]).copy()
+    esrc2[200:] = 7  # masked region (real_e=150)
+    edst2[200:] = 9
+    h2 = model.encode(s["p"], s["xv"], jnp.asarray(esrc2), jnp.asarray(edst2),
+                      s["ef"], s["nm"], s["em"], s["pb"], s["pt"])
+    np.testing.assert_allclose(np.asarray(h2), np.asarray(s["hcat"]), atol=1e-6)
+
+
+def test_sel_logits_respect_candidate_mask(setup):
+    s = setup
+    cand = np.zeros(N, np.float32)
+    cand[[3, 7, 11]] = 1.0
+    logits = np.asarray(model.sel_logits(s["p"], s["hcat"], jnp.asarray(cand)))
+    assert np.all(logits[cand == 0] < -1e8)
+    assert np.all(np.isfinite(logits[cand == 1]))
+    # softmax mass entirely on candidates
+    probs = np.asarray(jax.nn.softmax(jnp.asarray(logits)))
+    assert probs[cand == 0].sum() < 1e-6
+
+
+def test_plc_logits_mask_devices(setup):
+    s = setup
+    voh = jax.nn.one_hot(5, N)
+    xd = jnp.asarray(s["rng"].normal(size=(M, 5)), jnp.float32)
+    pn = jnp.zeros((M, N), jnp.float32)
+    dm = jnp.asarray([1.0] * 4 + [0.0] * 4)
+    logits = np.asarray(model.plc_logits(s["p"], s["hcat"], voh, xd, pn, dm))
+    assert np.all(logits[4:] < -1e8)
+    assert np.all(np.isfinite(logits[:4]))
+
+
+def test_plc_sensitive_to_placement_state(setup):
+    """The PLC head must react to which nodes sit on which device (the
+    placement-awareness GDP lacks)."""
+    s = setup
+    voh = jax.nn.one_hot(5, N)
+    xd = jnp.zeros((M, 5), jnp.float32)
+    dm = jnp.ones(M)
+    pn0 = jnp.zeros((M, N), jnp.float32)
+    pn1 = np.zeros((M, N), np.float32)
+    pn1[0, :10] = 0.1  # ten nodes on device 0
+    l0 = np.asarray(model.plc_logits(s["p"], s["hcat"], voh, xd, pn0, dm))
+    l1 = np.asarray(model.plc_logits(s["p"], s["hcat"], voh, xd, jnp.asarray(pn1), dm))
+    assert not np.allclose(l0, l1)
+
+
+def test_gdp_logits_shape_and_mask(setup):
+    s = setup
+    voh = jax.nn.one_hot(2, N)
+    dm = jnp.asarray([1.0] * 4 + [0.0] * 4)
+    logits = np.asarray(model.gdp_logits(s["p"], s["hcat"], voh, s["nm"], dm))
+    assert logits.shape == (M,)
+    assert np.all(logits[4:] < -1e8)
+
+
+def test_param_pack_roundtrip():
+    flat = P.init_params(7)
+    tree = P.unpack(jnp.asarray(flat))
+    again = P.pack({k: np.asarray(v) for k, v in tree.items()})
+    np.testing.assert_array_equal(flat, again)
+
+
+def test_param_count_matches_layout():
+    total = sum(int(np.prod(shape)) for _, shape in P.layout())
+    assert total == P.param_count()
+    assert P.init_params(0).shape == (total,)
+
+
+def test_encode_deterministic(setup):
+    s = setup
+    h2 = model.encode(s["p"], s["xv"], s["esrc"], s["edst"], s["ef"],
+                      s["nm"], s["em"], s["pb"], s["pt"])
+    np.testing.assert_array_equal(np.asarray(h2), np.asarray(s["hcat"]))
+
+
+def test_variant_for_selects_smallest():
+    assert C.variant_for(72, 150).n == 96
+    assert C.variant_for(220, 500).n == 256
+    assert C.variant_for(316, 700).n == 384
+    with pytest.raises(ValueError):
+        C.variant_for(1000, 10)

@@ -1,0 +1,74 @@
+//! Minimal benchmarking harness for the `benches/` targets (the offline
+//! image has no criterion): wall-clock timing with warmup, common env
+//! knobs, and a shared setup for learned-method benches.
+
+use std::time::Instant;
+
+use crate::util::stats::Summary;
+
+/// Time `f` with `warmup` discarded runs and `reps` measured runs;
+/// returns per-run milliseconds.
+pub fn time_ms(warmup: usize, reps: usize, mut f: impl FnMut()) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    Summary::of(&times)
+}
+
+/// Episode budget for learned methods in benches. The paper trains
+/// 4k/8k episodes; the default here keeps `cargo bench` tractable on
+/// this single-core box. Override with `DOPPLER_EPISODES`.
+pub fn bench_episodes() -> usize {
+    crate::util::env_usize("DOPPLER_EPISODES", 150)
+}
+
+/// Workload filter: `DOPPLER_WORKLOADS=chainmm,ffnn` restricts the
+/// per-table workload sweeps.
+pub fn bench_workloads() -> Vec<String> {
+    match std::env::var("DOPPLER_WORKLOADS") {
+        Ok(v) if !v.is_empty() => v.split(',').map(|s| s.to_string()).collect(),
+        _ => crate::graph::workloads::WORKLOADS
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
+    }
+}
+
+/// Standard bench banner: paper reference + budget disclosure.
+pub fn banner(what: &str, paper_ref: &str) {
+    println!("\n################################################################");
+    println!("# {what}");
+    println!("# reproduces: {paper_ref}");
+    println!(
+        "# episode budget: {} (paper: 4k/8k; set DOPPLER_EPISODES to scale)",
+        bench_episodes()
+    );
+    println!("################################################################");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_ms_measures() {
+        let s = time_ms(1, 3, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(s.n, 3);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn episodes_default() {
+        // no env in tests: default
+        assert!(bench_episodes() > 0);
+    }
+}

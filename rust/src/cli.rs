@@ -1,0 +1,86 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline image):
+//! `doppler <subcommand> [--key value ...]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flag map.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn parse() -> Args {
+        Self::from_iter(std::env::args().skip(1))
+    }
+
+    pub fn from_iter(iter: impl IntoIterator<Item = String>) -> Args {
+        let mut it = iter.into_iter().peekable();
+        let command = it.next().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                let val = if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(key.to_string(), val);
+            }
+        }
+        Args { command, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::from_iter(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = args("train --workload ffnn --episodes 400 --verbose");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.str_or("workload", "x"), "ffnn");
+        assert_eq!(a.usize_or("episodes", 0), 400);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("eval");
+        assert_eq!(a.usize_or("episodes", 7), 7);
+        assert_eq!(a.f64_or("lr", 0.5), 0.5);
+        assert!(!a.has("x"));
+    }
+}

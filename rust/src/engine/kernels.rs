@@ -1,0 +1,268 @@
+//! Native f32 tensor kernels for the real WC engine: one implementation
+//! per vertex kind (Appendix A.1 vocabulary). These run for real — their
+//! measured wall time is the engine's completion distribution — and their
+//! numerics are verified end-to-end (multi-device execution must produce
+//! bitwise-identical results to single-device execution).
+
+use crate::graph::{ElemOp, Node, OpKind};
+
+/// A dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    /// Deterministic pseudorandom tensor for graph inputs: value depends
+    /// only on `(seed, index)` so every device materializes identical
+    /// inputs ("available everywhere").
+    pub fn seeded(shape: Vec<usize>, seed: u64) -> Tensor {
+        let n: usize = shape.iter().product();
+        let mut data = Vec::with_capacity(n);
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) ^ 0xD1B54A32D192ED03;
+        for _ in 0..n {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            // map to [-0.5, 0.5) to keep products well-scaled
+            data.push(((s >> 40) as f32) / (1u64 << 24) as f32 - 0.5);
+        }
+        Tensor { shape, data }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.shape[0]
+    }
+    pub fn cols(&self) -> usize {
+        self.shape.get(1).copied().unwrap_or(1)
+    }
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+fn apply(op: ElemOp, a: f32, b: f32) -> f32 {
+    match op {
+        ElemOp::Add => a + b,
+        ElemOp::Sub => a - b,
+        ElemOp::Mul => a * b,
+        ElemOp::Div => a / (b + 1e-12),
+        ElemOp::Max => a.max(b),
+        // unary ops ignore b
+        ElemOp::Relu => a.max(0.0),
+        ElemOp::Exp => a.exp(),
+        ElemOp::Silu => a / (1.0 + (-a).exp()),
+        ElemOp::Rsqrt => 1.0 / (a.abs() + 1e-6).sqrt(),
+        ElemOp::Square => a * a,
+        ElemOp::Scale => a * 0.125,
+    }
+}
+
+/// Blocked matrix multiplication (ikj order; the k-loop hoists `a_ik`).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dim mismatch: {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Execute one vertex. `inputs` are ordered by the graph's predecessor
+/// list; `node.shape` is the declared output shape.
+pub fn run_node(node: &Node, inputs: &[&Tensor]) -> Tensor {
+    match node.kind {
+        OpKind::Input => Tensor::seeded(node.shape.clone(), node.id as u64),
+        OpKind::Fill => {
+            // deterministic fill value per node (mask/freq tables)
+            let v = ((node.id % 7) as f32 - 3.0) * 0.01;
+            let n: usize = node.shape.iter().product();
+            Tensor::new(node.shape.clone(), vec![v; n])
+        }
+        OpKind::MatMul => {
+            assert_eq!(inputs.len(), 2, "{}: matmul needs 2 inputs", node.name);
+            matmul(inputs[0], inputs[1])
+        }
+        OpKind::InputElemwise(op) => {
+            let a = inputs[0];
+            let data = a.data.iter().map(|&x| apply(op, x, 0.0)).collect();
+            Tensor::new(a.shape.clone(), data)
+        }
+        OpKind::StraightElemwise(op) => {
+            let (a, b) = (inputs[0], inputs[1]);
+            assert_eq!(a.shape, b.shape, "{}: shape mismatch", node.name);
+            let data = a
+                .data
+                .iter()
+                .zip(&b.data)
+                .map(|(&x, &y)| apply(op, x, y))
+                .collect();
+            Tensor::new(a.shape.clone(), data)
+        }
+        OpKind::BcastElemwise(op) => {
+            let (a, v) = (inputs[0], inputs[1]);
+            let (r, c) = (a.rows(), a.cols());
+            let mut data = Vec::with_capacity(r * c);
+            if v.rows() == r && v.cols() == 1 {
+                // column vector broadcast across each row
+                for i in 0..r {
+                    let vi = v.data[i];
+                    for j in 0..c {
+                        data.push(apply(op, a.data[i * c + j], vi));
+                    }
+                }
+            } else if v.rows() == 1 && v.cols() == c {
+                // row vector broadcast down each column
+                for i in 0..r {
+                    for j in 0..c {
+                        data.push(apply(op, a.data[i * c + j], v.data[j]));
+                    }
+                }
+            } else {
+                panic!(
+                    "{}: bcast vector shape {:?} incompatible with {:?}",
+                    node.name, v.shape, a.shape
+                );
+            }
+            Tensor::new(a.shape.clone(), data)
+        }
+        OpKind::MaxReduction | OpKind::MinReduction | OpKind::SumReduction | OpKind::ProdReduction => {
+            let a = inputs[0];
+            let (r, c) = (a.rows(), a.cols());
+            let mut out = Vec::with_capacity(r);
+            for i in 0..r {
+                let row = &a.data[i * c..(i + 1) * c];
+                let v = match node.kind {
+                    OpKind::MaxReduction => row.iter().copied().fold(f32::NEG_INFINITY, f32::max),
+                    OpKind::MinReduction => row.iter().copied().fold(f32::INFINITY, f32::min),
+                    OpKind::SumReduction => row.iter().sum(),
+                    _ => row.iter().product(),
+                };
+                out.push(v);
+            }
+            Tensor::new(vec![r, 1], out)
+        }
+        OpKind::Formation | OpKind::Selec => {
+            // copy (formation materializes the aggregated tensor; selec
+            // copies the selected block)
+            let a = inputs[0];
+            Tensor::new(node.shape.clone(), a.data.clone())
+        }
+        OpKind::Complexer => {
+            // float<->complex view change: a real data-movement pass
+            let a = inputs[0];
+            Tensor::new(node.shape.clone(), a.data.clone())
+        }
+        OpKind::Squeezer => {
+            // transpose per declared output shape
+            let a = inputs[0];
+            let (r, c) = (a.rows(), a.cols());
+            if node.shape == vec![c, r] {
+                let mut out = vec![0.0f32; r * c];
+                for i in 0..r {
+                    for j in 0..c {
+                        out[j * r + i] = a.data[i * c + j];
+                    }
+                }
+                Tensor::new(vec![c, r], out)
+            } else {
+                Tensor::new(node.shape.clone(), a.data.clone())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ElemOp, OpKind};
+
+    fn node(kind: OpKind, shape: Vec<usize>) -> Node {
+        Node {
+            id: 42,
+            kind,
+            shape,
+            flops: 0.0,
+            name: "t".into(),
+            meta_op: None,
+        }
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::new(vec![2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn seeded_deterministic_and_bounded() {
+        let a = Tensor::seeded(vec![8, 8], 3);
+        let b = Tensor::seeded(vec![8, 8], 3);
+        assert_eq!(a.data, b.data);
+        let c = Tensor::seeded(vec![8, 8], 4);
+        assert_ne!(a.data, c.data);
+        assert!(a.data.iter().all(|x| x.abs() <= 0.5));
+    }
+
+    #[test]
+    fn reductions() {
+        let a = Tensor::new(vec![2, 3], vec![1.0, 5.0, 2.0, -1.0, 0.0, 3.0]);
+        let mx = run_node(&node(OpKind::MaxReduction, vec![2, 1]), &[&a]);
+        assert_eq!(mx.data, vec![5.0, 3.0]);
+        let sm = run_node(&node(OpKind::SumReduction, vec![2, 1]), &[&a]);
+        assert_eq!(sm.data, vec![8.0, 2.0]);
+    }
+
+    #[test]
+    fn bcast_column_and_row() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let colv = Tensor::new(vec![2, 1], vec![10.0, 20.0]);
+        let out = run_node(&node(OpKind::BcastElemwise(ElemOp::Add), vec![2, 2]), &[&a, &colv]);
+        assert_eq!(out.data, vec![11.0, 12.0, 23.0, 24.0]);
+        let rowv = Tensor::new(vec![1, 2], vec![100.0, 200.0]);
+        let out = run_node(&node(OpKind::BcastElemwise(ElemOp::Add), vec![2, 2]), &[&a, &rowv]);
+        assert_eq!(out.data, vec![101.0, 202.0, 103.0, 204.0]);
+    }
+
+    #[test]
+    fn squeezer_transposes() {
+        let a = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = run_node(&node(OpKind::Squeezer, vec![3, 2]), &[&a]);
+        assert_eq!(out.data, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn elemwise_ops() {
+        let a = Tensor::new(vec![1, 4], vec![-1.0, 0.0, 1.0, 2.0]);
+        let relu = run_node(&node(OpKind::InputElemwise(ElemOp::Relu), vec![1, 4]), &[&a]);
+        assert_eq!(relu.data, vec![0.0, 0.0, 1.0, 2.0]);
+        let b = Tensor::new(vec![1, 4], vec![1.0, 2.0, 3.0, 4.0]);
+        let mul = run_node(&node(OpKind::StraightElemwise(ElemOp::Mul), vec![1, 4]), &[&a, &b]);
+        assert_eq!(mul.data, vec![-1.0, 0.0, 3.0, 8.0]);
+    }
+}

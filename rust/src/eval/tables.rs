@@ -1,0 +1,117 @@
+//! Paper-style table rendering: fixed-width columns, `mean ± std` cells,
+//! runtime-reduction columns, and CSV output for the figure harnesses.
+
+use crate::util::stats::Summary;
+
+/// A rendered table (also convertible to CSV).
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.header.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and optionally save CSV next to the bench outputs.
+    pub fn emit(&self, csv_path: Option<&std::path::Path>) {
+        println!("{}", self.render());
+        if let Some(p) = csv_path {
+            if let Some(dir) = p.parent() {
+                let _ = std::fs::create_dir_all(dir);
+            }
+            let _ = std::fs::write(p, self.to_csv());
+            println!("[csv written to {}]", p.display());
+        }
+    }
+}
+
+/// `a ± b` cell.
+pub fn cell(s: &Summary) -> String {
+    format!("{:.1} ± {:.1}", s.mean, s.std)
+}
+
+/// Percentage runtime reduction of `ours` vs `baseline` (positive =
+/// we are faster), as the paper's "RUNTIME REDUCTION" columns.
+pub fn reduction(baseline: f64, ours: f64) -> String {
+    format!("{:.1}%", (baseline - ours) / baseline * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_csvs() {
+        let mut t = Table::new("Demo", &["MODEL", "TIME"]);
+        t.row(vec!["chainmm".into(), "123.4 ± 2.5".into()]);
+        let r = t.render();
+        assert!(r.contains("Demo"));
+        assert!(r.contains("chainmm"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("MODEL,TIME\n"));
+    }
+
+    #[test]
+    fn reduction_formats() {
+        assert_eq!(reduction(200.0, 100.0), "50.0%");
+        assert_eq!(reduction(100.0, 110.0), "-10.0%");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["A", "B"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

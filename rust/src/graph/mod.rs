@@ -1,0 +1,484 @@
+//! Dataflow-graph IR (paper §2, Appendix A.1).
+//!
+//! A [`Graph`] is a DAG of tensor-kernel vertices connected by data
+//! dependency edges. Vertices carry the operation kind (the full kernel
+//! vocabulary of Appendix A.1), the output tensor shape, and a FLOP cost;
+//! edges carry the number of bytes that must move if producer and consumer
+//! land on different devices. Graphs produced by the sharding engine
+//! ([`shard`]) additionally group vertices into *meta-ops*
+//! (`shardOps`/`reduceOps`, Appendix B) which the ENUMERATIVEOPTIMIZER
+//! baseline consumes.
+
+pub mod shard;
+pub mod workloads;
+
+/// Vertex index into [`Graph::nodes`].
+pub type NodeId = usize;
+/// Device index into a topology.
+pub type DeviceId = usize;
+
+/// Scalar elementwise operations used by the elementwise vertex kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ElemOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Relu,
+    Exp,
+    Silu,
+    Rsqrt,
+    Square,
+    Scale,
+}
+
+/// Vertex kinds — the computation-node vocabulary of Appendix A.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    /// Input tensor (weights or activations); available at time 0.
+    Input,
+    /// Dense matrix multiplication of two shard matrices.
+    MatMul,
+    /// Unary elementwise op on one input tensor.
+    InputElemwise(ElemOp),
+    /// Binary elementwise op on two same-shape tensors.
+    StraightElemwise(ElemOp),
+    /// Binary elementwise op broadcasting a vector across matrix rows.
+    BcastElemwise(ElemOp),
+    /// Reduce one dimension by max.
+    MaxReduction,
+    /// Reduce one dimension by min.
+    MinReduction,
+    /// Reduce one dimension by sum.
+    SumReduction,
+    /// Reduce one dimension by product.
+    ProdReduction,
+    /// Placeholder forcing a meta-op aggregation into a single tensor.
+    Formation,
+    /// Conversion between floating-point and complex tensors (RoPE).
+    Complexer,
+    /// Create a tensor filled with a scalar / triangular mask.
+    Fill,
+    /// Add or remove singleton dimensions (transpose/reshape bookkeeping).
+    Squeezer,
+    /// Copy a subset of inputs into an output (subset/concat generalization).
+    Selec,
+}
+
+impl OpKind {
+    /// Short lowercase tag used in visualizations and DOT output.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            OpKind::Input => "input",
+            OpKind::MatMul => "matmul",
+            OpKind::InputElemwise(_) => "input_ew",
+            OpKind::StraightElemwise(_) => "straight_ew",
+            OpKind::BcastElemwise(_) => "bcast_ew",
+            OpKind::MaxReduction => "max_red",
+            OpKind::MinReduction => "min_red",
+            OpKind::SumReduction => "sum_red",
+            OpKind::ProdReduction => "prod_red",
+            OpKind::Formation => "formation",
+            OpKind::Complexer => "complexer",
+            OpKind::Fill => "fill",
+            OpKind::Squeezer => "squeezer",
+            OpKind::Selec => "selec",
+        }
+    }
+}
+
+/// A single dataflow vertex.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: OpKind,
+    /// Output tensor shape (row-major); scalars use an empty shape.
+    pub shape: Vec<usize>,
+    /// Floating-point operations performed by this vertex.
+    pub flops: f64,
+    /// Human-readable name, e.g. `"mm0.shard[1,0]"`.
+    pub name: String,
+    /// Meta-op this vertex belongs to, if produced by the sharder.
+    pub meta_op: Option<usize>,
+}
+
+impl Node {
+    /// Bytes of the output tensor (f32 elements).
+    pub fn out_bytes(&self) -> f64 {
+        4.0 * self.shape.iter().product::<usize>() as f64
+    }
+    /// Number of output elements.
+    pub fn out_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Meta-op grouping (Appendix B): all vertices descended from one original
+/// (pre-sharding) operation, split into the expensive shards and the cheap
+/// aggregation tail.
+#[derive(Clone, Debug, Default)]
+pub struct MetaOp {
+    pub name: String,
+    /// Expensive ops resulting directly from sharding (always `n_shards`).
+    pub shard_ops: Vec<NodeId>,
+    /// Aggregation/recomposition ops (partial sums, formations).
+    pub reduce_ops: Vec<NodeId>,
+}
+
+/// A static dataflow graph.
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// Directed dependency edges `(producer, consumer)`.
+    pub edges: Vec<(NodeId, NodeId)>,
+    /// Predecessors per node (filled by [`Graph::freeze`]).
+    pub preds: Vec<Vec<NodeId>>,
+    /// Successors per node (filled by [`Graph::freeze`]).
+    pub succs: Vec<Vec<NodeId>>,
+    /// Meta-op groups, topologically ordered (sharded graphs only).
+    pub meta_ops: Vec<MetaOp>,
+    /// Workload name, e.g. `"chainmm"`.
+    pub name: String,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph {
+            name: name.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Number of edges.
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Append a vertex and return its id.
+    pub fn add_node(&mut self, kind: OpKind, shape: Vec<usize>, flops: f64, name: String) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            kind,
+            shape,
+            flops,
+            name,
+            meta_op: None,
+        });
+        id
+    }
+
+    /// Append a dependency edge. Duplicate edges are ignored.
+    pub fn add_edge(&mut self, from: NodeId, to: NodeId) {
+        debug_assert!(from < self.nodes.len() && to < self.nodes.len());
+        if !self.edges.contains(&(from, to)) {
+            self.edges.push((from, to));
+        }
+    }
+
+    /// Build predecessor/successor lists; call once after construction.
+    pub fn freeze(&mut self) {
+        self.preds = vec![Vec::new(); self.n()];
+        self.succs = vec![Vec::new(); self.n()];
+        for &(a, b) in &self.edges {
+            self.preds[b].push(a);
+            self.succs[a].push(b);
+        }
+    }
+
+    /// Vertices with no predecessors (inputs / fills).
+    pub fn entry_nodes(&self) -> Vec<NodeId> {
+        (0..self.n()).filter(|&v| self.preds[v].is_empty()).collect()
+    }
+
+    /// Vertices with no successors (outputs).
+    pub fn exit_nodes(&self) -> Vec<NodeId> {
+        (0..self.n()).filter(|&v| self.succs[v].is_empty()).collect()
+    }
+
+    /// Kahn topological order. Returns `None` if the graph has a cycle.
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let mut indeg: Vec<usize> = self.preds.iter().map(|p| p.len()).collect();
+        let mut queue: Vec<NodeId> = (0..self.n()).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(self.n());
+        let mut head = 0;
+        while head < queue.len() {
+            let v = queue[head];
+            head += 1;
+            order.push(v);
+            for &s in &self.succs[v] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    queue.push(s);
+                }
+            }
+        }
+        if order.len() == self.n() {
+            Some(order)
+        } else {
+            None
+        }
+    }
+
+    /// Structural validity: frozen adjacency consistent with edge list,
+    /// acyclic, every non-input has at least one predecessor, and meta-op
+    /// membership partitions correctly.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.preds.len() != self.n() || self.succs.len() != self.n() {
+            return Err("graph not frozen".into());
+        }
+        if self.topo_order().is_none() {
+            return Err("graph has a cycle".into());
+        }
+        for node in &self.nodes {
+            let np = self.preds[node.id].len();
+            match node.kind {
+                OpKind::Input | OpKind::Fill => {
+                    if np != 0 {
+                        return Err(format!("{} has predecessors", node.name));
+                    }
+                }
+                _ => {
+                    if np == 0 {
+                        return Err(format!("{} ({}) has no inputs", node.name, node.kind.tag()));
+                    }
+                }
+            }
+        }
+        for (mi, m) in self.meta_ops.iter().enumerate() {
+            for &v in m.shard_ops.iter().chain(m.reduce_ops.iter()) {
+                if self.nodes[v].meta_op != Some(mi) {
+                    return Err(format!("meta-op {mi} membership mismatch at node {v}"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Edge communication bytes: the producer's output size.
+    pub fn edge_bytes(&self, from: NodeId, _to: NodeId) -> f64 {
+        self.nodes[from].out_bytes()
+    }
+
+    /// Cost-weighted longest path *from* each vertex back to an entry node
+    /// ("b-level path" in the paper's terminology, §4.2 / Appendix E),
+    /// counting vertex compute cost plus edge communication cost.
+    /// `node_cost`/`edge_cost` map raw flops/bytes to comparable units.
+    pub fn b_level(&self, node_cost: &dyn Fn(&Node) -> f64, edge_cost: &dyn Fn(f64) -> f64) -> Vec<f64> {
+        let order = self.topo_order().expect("DAG");
+        let mut level = vec![0.0; self.n()];
+        for &v in &order {
+            let mut best: f64 = 0.0;
+            for &p in &self.preds[v] {
+                best = best.max(level[p] + edge_cost(self.edge_bytes(p, v)));
+            }
+            level[v] = best + node_cost(&self.nodes[v]);
+        }
+        level
+    }
+
+    /// Cost-weighted longest path from each vertex *to* an exit node
+    /// ("t-level path"). Includes the vertex's own cost.
+    pub fn t_level(&self, node_cost: &dyn Fn(&Node) -> f64, edge_cost: &dyn Fn(f64) -> f64) -> Vec<f64> {
+        let order = self.topo_order().expect("DAG");
+        let mut level = vec![0.0; self.n()];
+        for &v in order.iter().rev() {
+            let mut best: f64 = 0.0;
+            for &s in &self.succs[v] {
+                best = best.max(level[s] + edge_cost(self.edge_bytes(v, s)));
+            }
+            level[v] = best + node_cost(&self.nodes[v]);
+        }
+        level
+    }
+
+    /// The actual longest path (as a node sequence) from `v` back to an
+    /// entry node, under the same costs as [`Graph::b_level`].
+    pub fn b_path(&self, v: NodeId, b: &[f64], edge_cost: &dyn Fn(f64) -> f64, node_cost: &dyn Fn(&Node) -> f64) -> Vec<NodeId> {
+        let mut path = vec![v];
+        let mut cur = v;
+        while !self.preds[cur].is_empty() {
+            let mut best = self.preds[cur][0];
+            let mut best_score = f64::NEG_INFINITY;
+            for &p in &self.preds[cur] {
+                let score = b[p] + edge_cost(self.edge_bytes(p, cur));
+                if score > best_score {
+                    best_score = score;
+                    best = p;
+                }
+            }
+            // sanity: the b-level recurrence must be consistent
+            debug_assert!((b[cur] - (best_score + node_cost(&self.nodes[cur]))).abs() < 1e-6 * b[cur].abs().max(1.0));
+            path.push(best);
+            cur = best;
+        }
+        path
+    }
+
+    /// Longest path from `v` to an exit node under [`Graph::t_level`] costs.
+    pub fn t_path(&self, v: NodeId, t: &[f64], edge_cost: &dyn Fn(f64) -> f64) -> Vec<NodeId> {
+        let mut path = vec![v];
+        let mut cur = v;
+        while !self.succs[cur].is_empty() {
+            let mut best = self.succs[cur][0];
+            let mut best_score = f64::NEG_INFINITY;
+            for &s in &self.succs[cur] {
+                let score = t[s] + edge_cost(self.edge_bytes(cur, s));
+                if score > best_score {
+                    best_score = score;
+                    best = s;
+                }
+            }
+            path.push(best);
+            cur = best;
+        }
+        path
+    }
+
+    /// Total FLOPs over all vertices.
+    pub fn total_flops(&self) -> f64 {
+        self.nodes.iter().map(|n| n.flops).sum()
+    }
+
+    /// Total bytes over all edges.
+    pub fn total_edge_bytes(&self) -> f64 {
+        self.edges.iter().map(|&(a, b)| self.edge_bytes(a, b)).sum()
+    }
+
+    /// Count vertices by kind tag (for workload summaries / tests).
+    pub fn kind_histogram(&self) -> std::collections::BTreeMap<&'static str, usize> {
+        let mut h = std::collections::BTreeMap::new();
+        for n in &self.nodes {
+            *h.entry(n.kind.tag()).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Graphviz DOT output with nodes colored by a device assignment
+    /// (used by the Fig. 5 / 7–24 visualization harness).
+    pub fn to_dot(&self, assignment: Option<&[DeviceId]>) -> String {
+        const COLORS: [&str; 8] = [
+            "#e41a1c", "#377eb8", "#4daf4a", "#984ea3", "#ff7f00", "#a65628", "#f781bf", "#999999",
+        ];
+        let mut out = String::from("digraph G {\n  rankdir=TB;\n  node [style=filled, fontsize=9];\n");
+        for node in &self.nodes {
+            let color = match assignment {
+                Some(a) => COLORS[a[node.id] % COLORS.len()],
+                None => "#dddddd",
+            };
+            out.push_str(&format!(
+                "  n{} [label=\"{}\\n{}\", fillcolor=\"{}\"];\n",
+                node.id,
+                node.name,
+                node.kind.tag(),
+                color
+            ));
+        }
+        for &(a, b) in &self.edges {
+            out.push_str(&format!("  n{a} -> n{b};\n"));
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+/// A device assignment `A : V -> D` (paper §2).
+pub type Assignment = Vec<DeviceId>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Diamond: a -> b, a -> c, b -> d, c -> d.
+    fn diamond() -> Graph {
+        let mut g = Graph::new("diamond");
+        let a = g.add_node(OpKind::Input, vec![4, 4], 0.0, "a".into());
+        let b = g.add_node(OpKind::MatMul, vec![4, 4], 128.0, "b".into());
+        let c = g.add_node(OpKind::InputElemwise(ElemOp::Relu), vec![4, 4], 16.0, "c".into());
+        let d = g.add_node(OpKind::StraightElemwise(ElemOp::Add), vec![4, 4], 16.0, "d".into());
+        g.add_edge(a, b);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(c, d);
+        g.freeze();
+        g
+    }
+
+    #[test]
+    fn topo_and_validate() {
+        let g = diamond();
+        g.validate().unwrap();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.n()];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for &(a, b) in &g.edges {
+            assert!(pos[a] < pos[b], "edge {a}->{b} violates topo order");
+        }
+    }
+
+    #[test]
+    fn entry_exit() {
+        let g = diamond();
+        assert_eq!(g.entry_nodes(), vec![0]);
+        assert_eq!(g.exit_nodes(), vec![3]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let mut g = Graph::new("cyc");
+        let a = g.add_node(OpKind::Input, vec![1], 0.0, "a".into());
+        let b = g.add_node(OpKind::Squeezer, vec![1], 0.0, "b".into());
+        g.add_edge(a, b);
+        g.add_edge(b, a);
+        g.freeze();
+        assert!(g.topo_order().is_none());
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn levels_monotone_along_edges() {
+        let g = diamond();
+        let nc = |n: &Node| n.flops.max(1.0);
+        let ec = |bytes: f64| bytes * 0.01;
+        let b = g.b_level(&nc, &ec);
+        let t = g.t_level(&nc, &ec);
+        for &(u, v) in &g.edges {
+            assert!(b[v] > b[u], "b-level must grow along edges");
+            assert!(t[u] > t[v], "t-level must shrink along edges");
+        }
+        // the path through b (matmul, flops 128) dominates
+        let path = g.b_path(3, &b, &ec, &nc);
+        assert_eq!(path, vec![3, 1, 0]);
+        let tp = g.t_path(0, &t, &ec);
+        assert_eq!(tp, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn duplicate_edges_ignored() {
+        let mut g = Graph::new("dup");
+        let a = g.add_node(OpKind::Input, vec![1], 0.0, "a".into());
+        let b = g.add_node(OpKind::Squeezer, vec![1], 0.0, "b".into());
+        g.add_edge(a, b);
+        g.add_edge(a, b);
+        assert_eq!(g.m(), 1);
+    }
+
+    #[test]
+    fn dot_contains_nodes_and_colors() {
+        let g = diamond();
+        let dot = g.to_dot(Some(&vec![0, 1, 2, 3]));
+        assert!(dot.contains("n0 ->") || dot.contains("n0 [label"));
+        assert!(dot.contains("#377eb8"));
+    }
+}

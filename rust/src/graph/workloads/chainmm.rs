@@ -1,0 +1,97 @@
+//! CHAINMM (Appendix D.1): `(A x B) + (C x (D x E))` over five square
+//! matrices, each sharded into a 2x2 block grid (4-way, as in Fig. 1).
+//!
+//! Paper dims: 10000^2 f32 matrices (≈400 MB each) on P100s; we scale to
+//! `N` so shard matmuls cost ~1 ms on this CPU (DESIGN.md §4). The graph
+//! has the same topology at every scale.
+
+use crate::graph::shard::Sharder;
+use crate::graph::{ElemOp, Graph};
+
+use super::Scale;
+
+/// Build the CHAINMM dataflow graph.
+pub fn chainmm(scale: Scale) -> Graph {
+    let n = match scale {
+        Scale::Full => 512,
+        Scale::Small => 128,
+        Scale::Tiny => 32,
+    };
+    chainmm_sized(n)
+}
+
+/// CHAINMM with explicit matrix dimension (grid fixed at 2x2).
+pub fn chainmm_sized(n: usize) -> Graph {
+    let mut s = Sharder::new("chainmm");
+    let (gr, gc) = (2, 2);
+    let a = s.input("A", n, n, gr, gc);
+    let b = s.input("B", n, n, gr, gc);
+    let c = s.input("C", n, n, gr, gc);
+    let d = s.input("D", n, n, gr, gc);
+    let e = s.input("E", n, n, gr, gc);
+
+    let ab = s.matmul("AB", &a, &b);
+    let de = s.matmul("DE", &d, &e);
+    let cde = s.matmul("CDE", &c, &de);
+    let _out = s.binary("out", ElemOp::Add, &ab, &cde);
+    s.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn structure() {
+        let g = chainmm(Scale::Tiny);
+        let h = g.kind_histogram();
+        assert_eq!(h["input"], 20); // 5 matrices x 4 shards
+        assert_eq!(h["matmul"], 24); // 3 matmuls x 8 shard-multiplies
+        // 3 matmuls x (4 partial adds) + 4 final elementwise adds
+        assert_eq!(h["straight_ew"], 16);
+        assert_eq!(h["formation"], 12);
+        assert_eq!(g.n(), 72);
+    }
+
+    #[test]
+    fn chain_dependency_cde_after_de() {
+        let g = chainmm(Scale::Tiny);
+        // every CDE shard-multiply must transitively depend on a DE formation
+        let order = g.topo_order().unwrap();
+        let mut pos = vec![0; g.n()];
+        for (i, &v) in order.iter().enumerate() {
+            pos[v] = i;
+        }
+        let de_forms: Vec<_> = g
+            .nodes
+            .iter()
+            .filter(|nd| nd.name.starts_with("DE.form"))
+            .map(|nd| nd.id)
+            .collect();
+        let cde_mms: Vec<_> = g
+            .nodes
+            .iter()
+            .filter(|nd| nd.name.starts_with("CDE.mm"))
+            .map(|nd| nd.id)
+            .collect();
+        assert_eq!(de_forms.len(), 4);
+        assert_eq!(cde_mms.len(), 8);
+        for &mm in &cde_mms {
+            assert!(g.preds[mm].iter().any(|p| de_forms.contains(p) || g.nodes[*p].name.starts_with('C')));
+        }
+    }
+
+    #[test]
+    fn flops_match_three_full_matmuls() {
+        let n = 64.0_f64;
+        let g = chainmm_sized(64);
+        let mm: f64 = g
+            .nodes
+            .iter()
+            .filter(|nd| nd.kind == OpKind::MatMul)
+            .map(|nd| nd.flops)
+            .sum();
+        assert!((mm - 3.0 * 2.0 * n * n * n).abs() < 1e-6);
+    }
+}

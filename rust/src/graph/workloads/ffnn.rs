@@ -1,0 +1,74 @@
+//! FFNN (Appendix D.2): `softmax(relu(X·W1 + b1)·W2 + b2)`.
+//!
+//! Paper dims: X[2^15 x 2^5], W1[2^5 x 2^16] — a very wide hidden layer,
+//! sharded 4-way on the batch dimension and 4-way on the hidden dimension.
+//! We keep that sharding (so the graph has the same topology and the same
+//! batch-parallel / hidden-parallel structure) and scale dims down.
+
+use crate::graph::shard::Sharder;
+use crate::graph::{ElemOp, Graph};
+
+use super::Scale;
+
+/// Build the FFNN dataflow graph.
+pub fn ffnn(scale: Scale) -> Graph {
+    let (s_batch, d_in, d_hidden, d_out) = match scale {
+        Scale::Full => (1024, 64, 2048, 64),
+        Scale::Small => (256, 32, 512, 32),
+        Scale::Tiny => (64, 16, 64, 16),
+    };
+    ffnn_sized(s_batch, d_in, d_hidden, d_out)
+}
+
+/// FFNN with explicit dims. Batch sharded 4-way (grid 4x1), hidden
+/// dimension sharded 4-way (grid 1x4 / 4x2).
+pub fn ffnn_sized(s_batch: usize, d_in: usize, d_hidden: usize, d_out: usize) -> Graph {
+    let mut sh = Sharder::new("ffnn");
+    let x = sh.input("X", s_batch, d_in, 4, 1);
+    let w1 = sh.input("W1", d_in, d_hidden, 1, 4);
+    let b1 = sh.input("b1", 1, d_hidden, 1, 4);
+    let w2 = sh.input("W2", d_hidden, d_out, 4, 2);
+    let b2 = sh.input("b2", 1, d_out, 1, 2);
+
+    // hidden layer: H = relu(X W1 + b1), H grid (4,4)
+    let xw1 = sh.matmul("mm1", &x, &w1);
+    let pre1 = sh.bcast_row("bias1", ElemOp::Add, &xw1, &b1);
+    let h = sh.unary("relu", ElemOp::Relu, &pre1);
+
+    // output layer: Y = softmax(H W2 + b2), Y grid (4,2)
+    let hw2 = sh.matmul("mm2", &h, &w2);
+    let pre2 = sh.bcast_row("bias2", ElemOp::Add, &hw2, &b2);
+    let _y = sh.softmax_rows("softmax", &pre2);
+    sh.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structure() {
+        let g = ffnn(Scale::Tiny);
+        let h = g.kind_histogram();
+        // inputs: X4 + W1 4 + b1 4 + W2 8 + b2 2
+        assert_eq!(h["input"], 22);
+        // mm1: 4x4x1 = 16 multiplies; mm2: 4x2x4 = 32 multiplies
+        assert_eq!(h["matmul"], 48);
+        assert!(h.contains_key("max_red") && h.contains_key("sum_red"));
+        // documented count (paper: 192; see DESIGN.md §4)
+        assert_eq!(g.n(), 214);
+    }
+
+    #[test]
+    fn batch_rows_independent_until_softmax() {
+        // In the hidden layer, different batch-row blocks must not share
+        // edges: they only meet through weights (inputs).
+        let g = ffnn(Scale::Tiny);
+        let relu_nodes: Vec<_> = g
+            .nodes
+            .iter()
+            .filter(|n| n.name.starts_with("relu["))
+            .collect();
+        assert_eq!(relu_nodes.len(), 16);
+    }
+}

@@ -1,0 +1,151 @@
+//! CRITICAL PATH list scheduling (Kwok & Ahmad 1999; the paper's §6.1
+//! baseline): repeatedly *select* the ready node with the longest path to
+//! an exit (t-level) and *place* it on the earliest-available device.
+//!
+//! The two halves are exported separately because the paper's Table 3
+//! ablations splice them into DOPPLER: DOPPLER-PLC uses
+//! [`select_critical_path`] for selection with the learned placement
+//! policy, and DOPPLER-SEL uses the learned selection with
+//! [`place_earliest`].
+
+use crate::features::{AssignState, StaticFeatures};
+use crate::graph::{Assignment, DeviceId, Graph, NodeId};
+use crate::sim::topology::DeviceTopology;
+use crate::util::rng::Rng;
+
+/// Select the candidate with the largest t-level. `tie_noise > 0`
+/// perturbs priorities multiplicatively so repeated runs explore
+/// different tie-breaks (the paper reports the best of 50 runs).
+pub fn select_critical_path(
+    st: &AssignState,
+    feats: &StaticFeatures,
+    rng: &mut Rng,
+    tie_noise: f64,
+) -> NodeId {
+    let mut best = st.candidates[0];
+    let mut best_score = f64::NEG_INFINITY;
+    for &c in &st.candidates {
+        let noise = if tie_noise > 0.0 {
+            1.0 + tie_noise * (rng.f64() - 0.5)
+        } else {
+            1.0
+        };
+        let score = feats.t_level[c] * noise;
+        if score > best_score {
+            best_score = score;
+            best = c;
+        }
+    }
+    best
+}
+
+/// Place `v` on the earliest-*available* device — the device whose queue
+/// frees first (§6.1 / Table 3: "assigns selected nodes to the
+/// earliest-available device"). Deliberately communication-oblivious,
+/// like the classic list-scheduling heuristic the paper benchmarks: this
+/// is why CRITICAL PATH degrades on communication-heavy graphs.
+pub fn place_earliest(st: &AssignState, v: NodeId, rng: &mut Rng) -> DeviceId {
+    let _ = v;
+    let nd = st.topo.n();
+    let min = st.ready_time.iter().copied().fold(f64::INFINITY, f64::min);
+    let ties: Vec<DeviceId> = (0..nd).filter(|&d| st.ready_time[d] <= min + 1e-12).collect();
+    *rng.choose(&ties)
+}
+
+/// Transfer-aware earliest-finish-time placement (EFT) — a stronger
+/// placement rule kept for ablations and the serving example.
+pub fn place_eft(st: &AssignState, v: NodeId, rng: &mut Rng) -> DeviceId {
+    let nd = st.topo.n();
+    let starts: Vec<f64> = (0..nd).map(|d| st.earliest_start(v, d)).collect();
+    let min = starts.iter().copied().fold(f64::INFINITY, f64::min);
+    let ties: Vec<DeviceId> = (0..nd).filter(|&d| starts[d] <= min + 1e-12).collect();
+    *rng.choose(&ties)
+}
+
+/// One full CRITICAL PATH assignment pass.
+pub fn critical_path_once(
+    g: &Graph,
+    topo: &DeviceTopology,
+    feats: &StaticFeatures,
+    rng: &mut Rng,
+    tie_noise: f64,
+) -> Assignment {
+    let mut st = AssignState::new(g, topo);
+    while !st.done() {
+        let v = select_critical_path(&st, feats, rng, tie_noise);
+        let d = place_earliest(&st, v, rng);
+        st.place(v, d);
+    }
+    st.into_assignment()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::static_features;
+    use crate::graph::workloads::{chainmm, ffnn, Scale};
+    use crate::heuristics::check_assignment;
+    use crate::sim::{simulate, SimConfig};
+
+    #[test]
+    fn produces_valid_assignment() {
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        let a = critical_path_once(&g, &topo, &feats, &mut Rng::new(1), 0.1);
+        check_assignment(&g, &a, 4).unwrap();
+    }
+
+    #[test]
+    fn beats_single_device_on_parallel_graph() {
+        let g = ffnn(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        let cfg = SimConfig::deterministic(topo.clone());
+        let mut rng = Rng::new(2);
+        let cp = critical_path_once(&g, &topo, &feats, &mut rng, 0.0);
+        let t_cp = simulate(&g, &cp, &cfg, &mut rng).makespan;
+        let t_one = simulate(&g, &vec![0; g.n()], &cfg, &mut rng).makespan;
+        assert!(
+            t_cp < t_one,
+            "critical path ({t_cp}) must beat single device ({t_one}) on ffnn"
+        );
+    }
+
+    #[test]
+    fn deterministic_without_noise() {
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        // tie-breaking in place_earliest is random, so fix the seed
+        let a1 = critical_path_once(&g, &topo, &feats, &mut Rng::new(9), 0.0);
+        let a2 = critical_path_once(&g, &topo, &feats, &mut Rng::new(9), 0.0);
+        assert_eq!(a1, a2);
+    }
+
+    #[test]
+    fn noise_diversifies_runs() {
+        let g = ffnn(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        let mut rng = Rng::new(3);
+        let a1 = critical_path_once(&g, &topo, &feats, &mut rng, 0.5);
+        let a2 = critical_path_once(&g, &topo, &feats, &mut rng, 0.5);
+        assert_ne!(a1, a2, "noisy runs should differ");
+    }
+
+    #[test]
+    fn selection_prefers_longest_path() {
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        let st = AssignState::new(&g, &topo);
+        let v = select_critical_path(&st, &feats, &mut Rng::new(1), 0.0);
+        let best = st
+            .candidates
+            .iter()
+            .cloned()
+            .fold(f64::NEG_INFINITY, |m, c| m.max(feats.t_level[c]));
+        assert_eq!(feats.t_level[v], best);
+    }
+}

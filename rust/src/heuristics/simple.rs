@@ -1,0 +1,59 @@
+//! Trivial assignment baselines: round-robin over a topological order,
+//! uniform random, and single-device (the "1 GPU" columns of Tables 8/9).
+
+use crate::graph::{Assignment, Graph};
+use crate::util::rng::Rng;
+
+/// Round-robin over the topological order — naive load balancing with no
+/// communication awareness.
+pub fn round_robin(g: &Graph, n_devices: usize) -> Assignment {
+    let order = g.topo_order().expect("DAG");
+    let mut a = vec![0; g.n()];
+    for (i, &v) in order.iter().enumerate() {
+        a[v] = i % n_devices;
+    }
+    a
+}
+
+/// Uniform random assignment.
+pub fn random_assignment(g: &Graph, n_devices: usize, rng: &mut Rng) -> Assignment {
+    (0..g.n()).map(|_| rng.below(n_devices)).collect()
+}
+
+/// Everything on one device.
+pub fn single_device(g: &Graph, d: usize) -> Assignment {
+    vec![d; g.n()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::workloads::{chainmm, Scale};
+
+    #[test]
+    fn round_robin_balances() {
+        let g = chainmm(Scale::Tiny);
+        let a = round_robin(&g, 4);
+        let mut counts = [0usize; 4];
+        for &d in &a {
+            counts[d] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max - min <= 1, "counts {counts:?}");
+    }
+
+    #[test]
+    fn random_in_range() {
+        let g = chainmm(Scale::Tiny);
+        let a = random_assignment(&g, 4, &mut Rng::new(1));
+        assert!(a.iter().all(|&d| d < 4));
+    }
+
+    #[test]
+    fn single_constant() {
+        let g = chainmm(Scale::Tiny);
+        let a = single_device(&g, 2);
+        assert!(a.iter().all(|&d| d == 2));
+    }
+}

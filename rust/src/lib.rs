@@ -1,0 +1,35 @@
+//! # DOPPLER — dual-policy learning for device assignment in asynchronous
+//! dataflow graphs
+//!
+//! A full reproduction of Yao et al., "DOPPLER: Dual-Policy Learning for
+//! Device Assignment in Asynchronous Dataflow Graphs" (2025), as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the coordination layer: sharded dataflow-graph
+//!   substrate, work-conserving simulator and real engine, heuristic
+//!   baselines, the ASSIGN episode runner, and the three-stage trainer.
+//! - **L2 (python/compile, build-time only)** — the SEL/PLC policy
+//!   networks in JAX, AOT-lowered to HLO text artifacts.
+//! - **L1 (python/compile/kernels)** — the Pallas message-passing kernel
+//!   inside the GNN encoder.
+//!
+//! At run time the rust binary loads `artifacts/*.hlo.txt` through the
+//! PJRT CPU client (`runtime`); Python is never on the request path.
+//!
+//! See DESIGN.md for the full system inventory and experiment index, and
+//! EXPERIMENTS.md for reproduction results.
+
+pub mod bench_util;
+pub mod cli;
+pub mod engine;
+pub mod eval;
+pub mod features;
+pub mod graph;
+pub mod heuristics;
+pub mod policy;
+pub mod runtime;
+pub mod sim;
+pub mod train;
+pub mod util;
+
+pub use graph::{Assignment, DeviceId, Graph, NodeId};

@@ -1,0 +1,323 @@
+//! DOPPLER command-line launcher.
+//!
+//! Subcommands:
+//!   compare    run methods on a workload and print a Table-2-style row
+//!   train      train a policy, write checkpoint + training-curve CSV
+//!   evaluate   evaluate a saved checkpoint / heuristic on a workload
+//!   visualize  DOT + ASCII utilization timeline for an assignment
+//!   calibrate  measure native kernel throughput for the cost model
+//!   simfit     simulator-vs-engine correlation (Fig. 26 protocol)
+//!   info       print workload/graph statistics
+//!
+//! Common flags: --workload {chainmm|ffnn|llama-block|llama-layer}
+//!               --scale {tiny|small|full}   --devices N
+//!               --topology {p100x4|v100x8|single}
+//!               --episodes N   --seed S   --out PATH
+
+use anyhow::{bail, Context, Result};
+
+use doppler::cli::Args;
+use doppler::engine::EngineConfig;
+use doppler::eval::{run_method, EvalCtx, MethodId};
+use doppler::features::static_features;
+use doppler::graph::workloads::{self, Scale};
+use doppler::graph::Graph;
+use doppler::policy::PolicyNets;
+use doppler::sim::topology::DeviceTopology;
+use doppler::sim::{simulate, trace, SimConfig};
+use doppler::train::{write_history_csv, Stages, TrainConfig, Trainer};
+use doppler::util::rng::Rng;
+use doppler::util::stats;
+
+fn main() {
+    let args = Args::parse();
+    let r = match args.command.as_str() {
+        "compare" => cmd_compare(&args),
+        "train" => cmd_train(&args),
+        "evaluate" => cmd_evaluate(&args),
+        "visualize" => cmd_visualize(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "simfit" => cmd_simfit(&args),
+        "info" => cmd_info(&args),
+        "" | "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{HELP}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const HELP: &str = "doppler — dual-policy device assignment (paper reproduction)
+  compare | train | evaluate | visualize | calibrate | simfit | info
+  see rust/src/main.rs header for flags";
+
+fn load_graph(args: &Args) -> Result<Graph> {
+    let name = args.str_or("workload", "chainmm");
+    let scale = Scale::parse(&args.str_or("scale", "full")).context("bad --scale")?;
+    Ok(workloads::by_name(&name, scale))
+}
+
+fn load_topo(args: &Args) -> Result<DeviceTopology> {
+    let name = args.str_or("topology", "p100x4");
+    DeviceTopology::by_name(&name).with_context(|| format!("unknown topology {name}"))
+}
+
+fn parse_method(s: &str) -> Result<MethodId> {
+    Ok(match s {
+        "single" => MethodId::SingleDevice,
+        "round-robin" => MethodId::RoundRobin,
+        "random" => MethodId::Random,
+        "critical-path" => MethodId::CriticalPath,
+        "placeto" => MethodId::Placeto,
+        "gdp" => MethodId::Gdp,
+        "enum-opt" => MethodId::EnumOpt,
+        "doppler-sim" => MethodId::DopplerSim,
+        "doppler-sys" => MethodId::DopplerSys,
+        "doppler-sel" => MethodId::DopplerSel,
+        "doppler-plc" => MethodId::DopplerPlc,
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let topo = load_topo(args)?;
+    let n_devices = args.usize_or("devices", 4);
+    let nets = PolicyNets::load_default().ok();
+    let mut ctx = EvalCtx::new(nets.as_ref(), topo, n_devices);
+    ctx.episodes = args.usize_or("episodes", ctx.episodes);
+    ctx.seed = args.u64_or("seed", 0);
+
+    let methods: Vec<MethodId> = match args.get("methods") {
+        Some(list) => list
+            .split(',')
+            .map(parse_method)
+            .collect::<Result<Vec<_>>>()?,
+        None => vec![
+            MethodId::CriticalPath,
+            MethodId::Placeto,
+            MethodId::Gdp,
+            MethodId::EnumOpt,
+            MethodId::DopplerSim,
+            MethodId::DopplerSys,
+        ],
+    };
+
+    println!(
+        "workload={} n={} devices={n_devices} episodes={}",
+        g.name,
+        g.n(),
+        ctx.episodes
+    );
+    for id in methods {
+        if id.needs_nets() && ctx.nets.is_none() {
+            println!("{:<14} SKIPPED (no artifacts)", id.name());
+            continue;
+        }
+        let t0 = std::time::Instant::now();
+        let r = run_method(id, &g, &ctx)?;
+        println!(
+            "{:<14} {:>8.1} ± {:>5.1} ms   [{:.1}s]",
+            r.id.name(),
+            r.summary.mean,
+            r.summary.std,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let topo = load_topo(args)?;
+    let n_devices = args.usize_or("devices", 4);
+    let nets = PolicyNets::load_default()?;
+    let method = match args.str_or("method", "doppler").as_str() {
+        "doppler" => doppler::policy::Method::Doppler,
+        "placeto" => doppler::policy::Method::Placeto,
+        "gdp" => doppler::policy::Method::Gdp,
+        other => bail!("unknown method {other}"),
+    };
+    let sub = doppler::eval::restrict(&topo, n_devices);
+    let mut cfg = TrainConfig::new(method, sub.clone(), n_devices);
+    cfg.seed = args.u64_or("seed", 0);
+    let budget = args.usize_or("episodes", 400);
+    let stages = Stages::budget(budget);
+    let engine_cfg = EngineConfig::new(sub);
+
+    let mut trainer = Trainer::new(&nets, &g, doppler::eval::restrict(&topo, n_devices), cfg)?;
+    if let Some(init) = args.get("init") {
+        let p = doppler::runtime::manifest::load_params(std::path::Path::new(init))?;
+        trainer = trainer.with_params(p);
+    }
+    println!(
+        "training {method:?} on {} ({} nodes) for {} episodes (I={} II={} III={})",
+        g.name,
+        g.n(),
+        stages.total(),
+        stages.imitation,
+        stages.sim_rl,
+        stages.real_rl
+    );
+    let t0 = std::time::Instant::now();
+    let result = trainer.run(stages, &engine_cfg)?;
+    println!(
+        "done in {:.1}s; best observed {:.1} ms",
+        t0.elapsed().as_secs_f64(),
+        result.best_time * 1e3
+    );
+    if let Some(out) = args.get("out") {
+        doppler::runtime::manifest::save_params(std::path::Path::new(out), &result.params)?;
+        println!("checkpoint -> {out}");
+    }
+    if let Some(csv) = args.get("csv") {
+        write_history_csv(std::path::Path::new(csv), &result.history)?;
+        println!("history -> {csv}");
+    }
+    Ok(())
+}
+
+fn cmd_evaluate(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let topo = load_topo(args)?;
+    let n_devices = args.usize_or("devices", 4);
+    let nets = PolicyNets::load_default().ok();
+    let mut ctx = EvalCtx::new(nets.as_ref(), topo, n_devices);
+    ctx.episodes = args.usize_or("episodes", ctx.episodes);
+    ctx.seed = args.u64_or("seed", 0);
+    let id = parse_method(&args.str_or("method", "critical-path"))?;
+    let r = run_method(id, &g, &ctx)?;
+    println!(
+        "{}: {:.1} ± {:.1} ms",
+        r.id.name(),
+        r.summary.mean,
+        r.summary.std
+    );
+    Ok(())
+}
+
+fn cmd_visualize(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    let topo = load_topo(args)?;
+    let n_devices = args.usize_or("devices", 4);
+    let nets = PolicyNets::load_default().ok();
+    let mut ctx = EvalCtx::new(nets.as_ref(), topo.clone(), n_devices);
+    ctx.episodes = args.usize_or("episodes", 200);
+    ctx.eval_reps = 3;
+    let id = parse_method(&args.str_or("method", "enum-opt"))?;
+    let r = run_method(id, &g, &ctx)?;
+
+    // DOT (Figs. 5 / 7-24 analog)
+    let dot = g.to_dot(Some(&r.assignment));
+    let default_out = format!("runs/{}_{}.dot", g.name, args.str_or("method", "enum-opt"));
+    let out = args.str_or("out", &default_out);
+    if let Some(dir) = std::path::Path::new(&out).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, dot)?;
+    println!("assignment DOT -> {out}");
+
+    // ASCII utilization timeline (Figs. 9/10/13/14 analog)
+    let sub = doppler::eval::restrict(&topo, n_devices);
+    let cfg = SimConfig::new(sub);
+    let mut rng = Rng::new(1);
+    let sim = simulate(&g, &r.assignment, &cfg, &mut rng);
+    let u = trace::utilization(&sim, n_devices, 72);
+    println!(
+        "{} exec time {:.1} ± {:.1} ms",
+        r.id.name(),
+        r.summary.mean,
+        r.summary.std
+    );
+    println!("{}", trace::ascii_timeline(&u));
+    let busy = trace::busy_fraction(&sim, n_devices);
+    println!(
+        "busy fractions: {}",
+        busy.iter()
+            .enumerate()
+            .map(|(d, b)| format!("dev{d}={:.0}%", b * 100.0))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    Ok(())
+}
+
+fn cmd_calibrate(_args: &Args) -> Result<()> {
+    println!("measuring native kernel throughput (this is what the simulator's");
+    println!("device rates are calibrated against — DESIGN.md §5) ...");
+    for dim in [64, 128, 256] {
+        let gflops = doppler::engine::measure_matmul_gflops(dim, 5);
+        println!("  matmul {dim}x{dim}: {gflops:.2} GFLOP/s");
+    }
+    let eps = doppler::engine::measure_elemwise_eps(1 << 16, 50);
+    println!("  elemwise add: {:.2} Gelem/s", eps / 1e9);
+    let bps = doppler::engine::measure_memcpy_bps(1 << 20, 20);
+    println!("  memcpy: {:.2} GB/s", bps / 1e9);
+    let topo = DeviceTopology::p100x4();
+    println!(
+        "topology p100x4 calibrated to {:.1} GFLOP/s matmul-effective",
+        topo.flops_per_sec[0] / 1e9
+    );
+    Ok(())
+}
+
+fn cmd_simfit(args: &Args) -> Result<()> {
+    // Fig. 26: simulator vs engine times over a population of assignments
+    let g = load_graph(args)?;
+    let topo = load_topo(args)?;
+    let n_devices = args.usize_or("devices", 4);
+    let sub = doppler::eval::restrict(&topo, n_devices);
+    let samples = args.usize_or("samples", 40);
+    let mut rng = Rng::new(args.u64_or("seed", 1));
+    let feats = static_features(&g, &sub, 1.0);
+
+    let sim_cfg = SimConfig::new(sub.clone());
+    let engine_cfg = EngineConfig::new(sub.clone());
+    let mut sim_ms = Vec::new();
+    let mut eng_ms = Vec::new();
+    for i in 0..samples {
+        // mix of random and heuristic assignments spans the quality range
+        let a = if i % 4 == 0 {
+            doppler::heuristics::critical_path_once(&g, &sub, &feats, &mut rng, 0.5)
+        } else {
+            doppler::heuristics::random_assignment(&g, n_devices, &mut rng)
+        };
+        sim_ms.push(simulate(&g, &a, &sim_cfg, &mut rng).makespan * 1e3);
+        eng_ms.push(doppler::engine::execute(&g, &a, &engine_cfg).sim.makespan * 1e3);
+    }
+    let pearson = stats::pearson(&sim_ms, &eng_ms);
+    let spearman = stats::spearman(&sim_ms, &eng_ms);
+    println!("simulator-vs-engine over {samples} assignments on {}:", g.name);
+    println!("  pearson  = {pearson:.3}   (paper: 0.79)");
+    println!("  spearman = {spearman:.3}   (paper: 0.69)");
+    if let Some(csv) = args.get("csv") {
+        let mut out = String::from("sim_ms,engine_ms\n");
+        for (s, e) in sim_ms.iter().zip(&eng_ms) {
+            out.push_str(&format!("{s:.3},{e:.3}\n"));
+        }
+        std::fs::write(csv, out)?;
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let g = load_graph(args)?;
+    println!("{}", doppler::graph::shard::describe(&g));
+    for (k, c) in g.kind_histogram() {
+        println!("  {k:<12} {c}");
+    }
+    println!("meta-ops: {}", g.meta_ops.len());
+    println!(
+        "entries: {}, exits: {}",
+        g.entry_nodes().len(),
+        g.exit_nodes().len()
+    );
+    Ok(())
+}

@@ -1,0 +1,185 @@
+//! Graph → padded policy-network inputs: normalized static features,
+//! edge index arrays, masks, and the critical-path membership matrices
+//! `P_b`/`P_t` (eq. 3). Built once per graph and reused across episodes.
+
+use anyhow::Result;
+
+use crate::features::StaticFeatures;
+use crate::graph::Graph;
+use crate::runtime::manifest::{Manifest, VariantInfo};
+
+/// Padded, normalized model inputs for one graph under one variant.
+#[derive(Clone, Debug)]
+pub struct GraphEncoding {
+    /// Padded node/edge capacity.
+    pub n: usize,
+    pub e: usize,
+    /// Actual counts.
+    pub real_n: usize,
+    pub real_e: usize,
+    /// `[n*5]` normalized static features (Appendix E.1).
+    pub xv: Vec<f32>,
+    /// `[e]` edge endpoints (padding points at node 0, masked out).
+    pub esrc: Vec<i32>,
+    pub edst: Vec<i32>,
+    /// `[e*1]` normalized communication cost.
+    pub efeat: Vec<f32>,
+    /// `[n]` / `[e]` validity masks.
+    pub node_mask: Vec<f32>,
+    pub edge_mask: Vec<f32>,
+    /// `[n*n]` row-normalized b-path / t-path membership.
+    pub pb: Vec<f32>,
+    pub pt: Vec<f32>,
+    /// Normalization constant (seconds; the critical-path length).
+    pub norm: f64,
+    /// Topological position per node (used for the fixed selection order
+    /// of the single-policy baselines).
+    pub topo_pos: Vec<usize>,
+}
+
+impl GraphEncoding {
+    /// Build the encoding for `g` under `variant`.
+    pub fn build(
+        g: &Graph,
+        feats: &StaticFeatures,
+        manifest: &Manifest,
+        variant: &VariantInfo,
+    ) -> Result<GraphEncoding> {
+        let (n, e) = (variant.n, variant.e);
+        anyhow::ensure!(g.n() <= n && g.m() <= e, "graph exceeds variant capacity");
+        let nf = manifest.node_feats;
+        let norm = feats.norm;
+
+        let mut xv = vec![0.0f32; n * nf];
+        for v in 0..g.n() {
+            for k in 0..nf {
+                xv[v * nf + k] = (feats.x[v][k] / norm) as f32;
+            }
+        }
+
+        let mut esrc = vec![0i32; e];
+        let mut edst = vec![0i32; e];
+        let mut efeat = vec![0.0f32; e];
+        let mut edge_mask = vec![0.0f32; e];
+        for (i, &(a, b)) in g.edges.iter().enumerate() {
+            esrc[i] = a as i32;
+            edst[i] = b as i32;
+            // normalized communication cost of this edge
+            efeat[i] = (g.edge_bytes(a, b) / (norm * 1e9)) as f32;
+            edge_mask[i] = 1.0;
+        }
+
+        let mut node_mask = vec![0.0f32; n];
+        for v in 0..g.n() {
+            node_mask[v] = 1.0;
+        }
+
+        let mut pb = vec![0.0f32; n * n];
+        let mut pt = vec![0.0f32; n * n];
+        for v in 0..g.n() {
+            let bp = &feats.b_paths[v];
+            let w = 1.0 / bp.len() as f32;
+            for &u in bp {
+                pb[v * n + u] = w;
+            }
+            let tp = &feats.t_paths[v];
+            let w = 1.0 / tp.len() as f32;
+            for &u in tp {
+                pt[v * n + u] = w;
+            }
+        }
+
+        let order = g.topo_order().expect("DAG");
+        let mut topo_pos = vec![0; g.n()];
+        for (i, &v) in order.iter().enumerate() {
+            topo_pos[v] = i;
+        }
+
+        Ok(GraphEncoding {
+            n,
+            e,
+            real_n: g.n(),
+            real_e: g.m(),
+            xv,
+            esrc,
+            edst,
+            efeat,
+            node_mask,
+            edge_mask,
+            pb,
+            pt,
+            norm,
+            topo_pos,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::static_features;
+    use crate::graph::workloads::{chainmm, Scale};
+    use crate::sim::topology::DeviceTopology;
+
+    fn fake_manifest() -> Manifest {
+        Manifest {
+            dir: std::path::PathBuf::from("/tmp"),
+            hidden: 32,
+            k_mpnn: 2,
+            node_feats: 5,
+            dev_feats: 5,
+            max_devices: 8,
+            sel_in: 128,
+            param_count: 10,
+            init_params_file: "x".into(),
+            variants: vec![],
+        }
+    }
+
+    fn variant(n: usize, e: usize) -> VariantInfo {
+        VariantInfo {
+            n,
+            e,
+            artifacts: Default::default(),
+        }
+    }
+
+    #[test]
+    fn builds_padded_arrays() {
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        let enc = GraphEncoding::build(&g, &feats, &fake_manifest(), &variant(96, 224)).unwrap();
+        assert_eq!(enc.xv.len(), 96 * 5);
+        assert_eq!(enc.esrc.len(), 224);
+        assert_eq!(enc.node_mask.iter().filter(|&&m| m > 0.0).count(), g.n());
+        assert_eq!(enc.edge_mask.iter().filter(|&&m| m > 0.0).count(), g.m());
+        // features normalized: b-level max = norm -> feature value 1.0
+        let max_b = (0..g.n()).map(|v| enc.xv[v * 5 + 4]).fold(0.0f32, f32::max);
+        assert!((max_b - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn path_rows_normalized() {
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        let enc = GraphEncoding::build(&g, &feats, &fake_manifest(), &variant(96, 224)).unwrap();
+        for v in 0..g.n() {
+            let row: f32 = enc.pb[v * 96..(v + 1) * 96].iter().sum();
+            assert!((row - 1.0).abs() < 1e-5, "pb row {v} sums to {row}");
+        }
+        // padding rows all zero
+        for v in g.n()..96 {
+            assert!(enc.pb[v * 96..(v + 1) * 96].iter().all(|&x| x == 0.0));
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_graph() {
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        assert!(GraphEncoding::build(&g, &feats, &fake_manifest(), &variant(16, 16)).is_err());
+    }
+}

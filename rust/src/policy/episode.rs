@@ -1,0 +1,234 @@
+//! The ASSIGN episode (Algorithm 3 / Fig. 2): sequentially build a device
+//! assignment with the SEL and PLC policies, recording the trajectory the
+//! train step replays.
+//!
+//! Efficiency notes mirroring the paper:
+//! - message passing runs ONCE per episode (§4.3); the Table 6 ablation
+//!   re-encodes per step via `per_step_encode`;
+//! - SEL scores are step-independent given `Hcat` (only the candidate
+//!   mask changes), so they are fetched once and masked rust-side — the
+//!   result is bit-identical to calling the masked executable per step.
+
+use anyhow::Result;
+
+use crate::features::{AssignState, StaticFeatures, DEVICE_FEATS};
+use crate::graph::{Assignment, Graph};
+use crate::sim::topology::DeviceTopology;
+use crate::util::rng::Rng;
+
+use super::encoding::GraphEncoding;
+use super::nets::{Method, PolicyNets};
+
+/// Recorded episode trajectory, padded to the variant size — exactly the
+/// arrays the `train_*` executables replay.
+#[derive(Clone, Debug)]
+pub struct Trajectory {
+    pub sel_actions: Vec<i32>,
+    pub plc_actions: Vec<i32>,
+    pub step_mask: Vec<f32>,
+    /// `[n*n]`: row h = candidate mask at step h.
+    pub cand_masks: Vec<f32>,
+    /// `[n*m*dev_feats]`: dynamic device features at each step.
+    pub xd_steps: Vec<f32>,
+}
+
+/// Episode output.
+#[derive(Clone, Debug)]
+pub struct EpisodeResult {
+    pub assignment: Assignment,
+    pub trajectory: Trajectory,
+    /// Number of encoder invocations (1, or |V| in per-step mode).
+    pub encode_calls: usize,
+}
+
+/// Episode configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EpisodeCfg {
+    pub method: Method,
+    /// Exploration rate (argmax w.p. 1-eps, uniform random w.p. eps).
+    pub epsilon: f64,
+    /// Number of devices actually available (<= manifest.max_devices).
+    pub n_devices: usize,
+    /// Re-run message passing at every MDP step (Table 6 ablation).
+    pub per_step_encode: bool,
+}
+
+/// Greedy-with-exploration pick over masked logits.
+fn pick(logits: &[f32], allowed: &[usize], epsilon: f64, rng: &mut Rng) -> usize {
+    debug_assert!(!allowed.is_empty());
+    if rng.chance(epsilon) {
+        return *rng.choose(allowed);
+    }
+    let mut best = allowed[0];
+    let mut best_q = f32::NEG_INFINITY;
+    for &i in allowed {
+        if logits[i] > best_q {
+            best_q = logits[i];
+            best = i;
+        }
+    }
+    best
+}
+
+/// Run one ASSIGN episode. Returns the finished assignment plus the
+/// trajectory for the policy-gradient update.
+#[allow(clippy::too_many_arguments)]
+pub fn run_episode(
+    nets: &PolicyNets,
+    enc: &GraphEncoding,
+    g: &Graph,
+    topo: &DeviceTopology,
+    feats: &StaticFeatures,
+    params: &[f32],
+    cfg: &EpisodeCfg,
+    rng: &mut Rng,
+) -> Result<EpisodeResult> {
+    let variant = nets.variant_for(enc)?;
+    let n = enc.n;
+    let m = nets.manifest.max_devices;
+    let df = DEVICE_FEATS;
+    debug_assert_eq!(df, nets.manifest.dev_feats);
+
+    let mut dev_mask = vec![0.0f32; m];
+    for d in 0..cfg.n_devices.min(m) {
+        dev_mask[d] = 1.0;
+    }
+    let devices: Vec<usize> = (0..cfg.n_devices.min(m)).collect();
+
+    // encode once (or lazily per step for the ablation)
+    let mut hcat = nets.encode(&variant, enc, params)?;
+    let mut encode_calls = 1;
+    let mut sel_scores = nets.sel_scores(&variant, enc, params, &hcat)?;
+    // episode-constant literals: marshal params/Hcat once, not per step
+    let mut cache = nets.episode_literals(enc, params, &hcat)?;
+
+    let mut st = AssignState::new(g, topo);
+    let mut traj = Trajectory {
+        sel_actions: vec![0; n],
+        plc_actions: vec![0; n],
+        step_mask: vec![0.0; n],
+        cand_masks: vec![0.0; n * n],
+        xd_steps: vec![0.0; n * m * df],
+    };
+
+    // placement counts for the (row-normalizable) device x node matrix
+    let mut place = vec![0.0f32; m * n];
+    let mut place_counts = vec![0usize; m];
+
+    let norm = enc.norm as f32;
+    let mut h = 0usize;
+    while !st.done() {
+        if cfg.per_step_encode && h > 0 {
+            hcat = nets.encode(&variant, enc, params)?;
+            sel_scores = nets.sel_scores(&variant, enc, params, &hcat)?;
+            cache = nets.episode_literals(enc, params, &hcat)?;
+            encode_calls += 1;
+        }
+
+        // --- SEL ---
+        let cand = &st.candidates;
+        for &c in cand {
+            traj.cand_masks[h * n + c] = 1.0;
+        }
+        let v = match cfg.method {
+            Method::Doppler => pick(&sel_scores, cand, cfg.epsilon, rng),
+            // single-policy baselines walk a fixed topological order
+            Method::Placeto | Method::Gdp => {
+                *cand.iter().min_by_key(|&&c| enc.topo_pos[c]).unwrap()
+            }
+        };
+        traj.sel_actions[h] = v as i32;
+
+        // --- dynamic device features (Appendix E.2), normalized ---
+        let xd = st.device_features(v);
+        for d in 0..cfg.n_devices.min(m) {
+            for k in 0..df {
+                traj.xd_steps[(h * m + d) * df + k] = (xd[d][k] / enc.norm) as f32;
+            }
+        }
+
+        // --- PLC ---
+        let mut v_onehot = vec![0.0f32; n];
+        v_onehot[v] = 1.0;
+        let d = match cfg.method {
+            Method::Gdp => {
+                let logits = nets.gdp_logits_cached(&variant, enc, &cache, &v_onehot, &dev_mask)?;
+                pick(&logits, &devices, cfg.epsilon, rng)
+            }
+            _ => {
+                // row-normalized placement matrix
+                let mut place_norm = vec![0.0f32; m * n];
+                for dd in 0..m {
+                    if place_counts[dd] > 0 {
+                        let w = 1.0 / place_counts[dd] as f32;
+                        for vv in 0..n {
+                            place_norm[dd * n + vv] = place[dd * n + vv] * w;
+                        }
+                    }
+                }
+                let xd_slice = &traj.xd_steps[h * m * df..(h + 1) * m * df];
+                let logits = nets.plc_logits_cached(
+                    &variant, enc, &cache, &v_onehot, xd_slice, &place_norm, &dev_mask,
+                )?;
+                pick(&logits, &devices, cfg.epsilon, rng)
+            }
+        };
+        traj.plc_actions[h] = d as i32;
+        traj.step_mask[h] = 1.0;
+
+        place[d * n + v] = 1.0;
+        place_counts[d] += 1;
+        st.place(v, d);
+        h += 1;
+    }
+    let _ = (feats, norm); // feats reserved for future richer features
+
+    Ok(EpisodeResult {
+        assignment: st.into_assignment(),
+        trajectory: traj,
+        encode_calls,
+    })
+}
+
+/// Build the device mask literal data for `n_devices`.
+pub fn device_mask(max_devices: usize, n_devices: usize) -> Vec<f32> {
+    let mut mask = vec![0.0; max_devices];
+    for d in 0..n_devices.min(max_devices) {
+        mask[d] = 1.0;
+    }
+    mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_respects_epsilon_zero() {
+        let logits = vec![0.1, 5.0, -3.0, 2.0];
+        let allowed = vec![0, 2, 3];
+        let mut rng = Rng::new(1);
+        // index 1 is NOT allowed: must pick 3 (best among allowed)
+        for _ in 0..10 {
+            assert_eq!(pick(&logits, &allowed, 0.0, &mut rng), 3);
+        }
+    }
+
+    #[test]
+    fn pick_explores_with_epsilon_one() {
+        let logits = vec![0.0; 4];
+        let allowed = vec![0, 1, 2, 3];
+        let mut rng = Rng::new(2);
+        let mut seen = [false; 4];
+        for _ in 0..100 {
+            seen[pick(&logits, &allowed, 1.0, &mut rng)] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn device_mask_shape() {
+        let m = device_mask(8, 4);
+        assert_eq!(m, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+}

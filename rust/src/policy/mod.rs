@@ -1,0 +1,10 @@
+//! Policy layer: padded graph encodings, PJRT-backed policy-network call
+//! wrappers, and the ASSIGN episode runner (Algorithm 3).
+
+pub mod encoding;
+pub mod episode;
+pub mod nets;
+
+pub use encoding::GraphEncoding;
+pub use episode::{device_mask, run_episode, EpisodeCfg, EpisodeResult, Trajectory};
+pub use nets::{Method, OptState, PolicyNets};

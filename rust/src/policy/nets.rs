@@ -1,0 +1,323 @@
+//! Policy-network call wrappers: lazily compile the per-variant PJRT
+//! executables and expose typed `encode` / `sel` / `plc` / `gdp` / `train`
+//! calls over flat f32 buffers.
+//!
+//! Single-threaded by design (PJRT handles are not shared across threads
+//! here); the training loop and the serving coordinator both run the
+//! policy from the leader thread, exactly like the paper's Stage III
+//! deployment.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::{Manifest, VariantInfo};
+use crate::runtime::{lit, Executable, Runtime};
+use xla::Literal;
+
+use super::encoding::GraphEncoding;
+
+/// Which policy architecture drives an episode (paper §6.1 methods).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Dual policy: learned SEL + learned PLC (DOPPLER).
+    Doppler,
+    /// Single placement policy over a fixed topological order (PLACETO).
+    Placeto,
+    /// Graph-attention placement policy, placement-state-blind (GDP).
+    Gdp,
+}
+
+impl Method {
+    /// Train-step artifact name for this method.
+    pub fn train_artifact(&self) -> &'static str {
+        match self {
+            Method::Doppler => "train_dual",
+            Method::Placeto => "train_plc_only",
+            Method::Gdp => "train_gdp",
+        }
+    }
+}
+
+/// Adam optimizer state held rust-side as opaque blobs.
+#[derive(Clone, Debug)]
+pub struct OptState {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub t: f32,
+}
+
+impl OptState {
+    pub fn new(param_count: usize) -> OptState {
+        OptState {
+            m: vec![0.0; param_count],
+            v: vec![0.0; param_count],
+            t: 0.0,
+        }
+    }
+}
+
+/// Lazily-compiled executables for all variants.
+pub struct PolicyNets {
+    pub manifest: Manifest,
+    runtime: Runtime,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl PolicyNets {
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<PolicyNets> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    /// Load manifest + PJRT client; executables compile on first use.
+    pub fn load(dir: &std::path::Path) -> Result<PolicyNets> {
+        let manifest = Manifest::load(dir)?;
+        let runtime = Runtime::new()?;
+        Ok(PolicyNets {
+            manifest,
+            runtime,
+            cache: RefCell::new(BTreeMap::new()),
+        })
+    }
+
+    /// Fetch (compiling if needed) one executable.
+    pub fn exec(&self, variant: &VariantInfo, name: &str) -> Result<Rc<Executable>> {
+        let key = format!("{}_{}", name, variant.n);
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(variant, name)?;
+        let exe = Rc::new(self.runtime.load(&path)?);
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Pick the variant for a graph encoding.
+    pub fn variant_for(&self, enc: &GraphEncoding) -> Result<VariantInfo> {
+        Ok(self.manifest.variant_for(enc.real_n, enc.real_e)?.clone())
+    }
+
+    /// Run the encoder once: returns `Hcat` as a flat `[n * sel_in]` vec.
+    pub fn encode(&self, variant: &VariantInfo, enc: &GraphEncoding, params: &[f32]) -> Result<Vec<f32>> {
+        let exe = self.exec(variant, "encode")?;
+        let (n, e) = (enc.n as i64, enc.e as i64);
+        let nf = self.manifest.node_feats as i64;
+        let out = exe.run(&[
+            lit::f32(params, &[params.len() as i64])?,
+            lit::f32(&enc.xv, &[n, nf])?,
+            lit::i32(&enc.esrc, &[e])?,
+            lit::i32(&enc.edst, &[e])?,
+            lit::f32(&enc.efeat, &[e, 1])?,
+            lit::f32(&enc.node_mask, &[n])?,
+            lit::f32(&enc.edge_mask, &[e])?,
+            lit::f32(&enc.pb, &[n, n])?,
+            lit::f32(&enc.pt, &[n, n])?,
+        ])?;
+        lit::to_f32(&out[0])
+    }
+
+    /// SEL scores for all nodes (call once per episode with a full mask;
+    /// candidate masking is exact to apply rust-side since the executable
+    /// computes `where(cand, q, -1e9)`).
+    pub fn sel_scores(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+    ) -> Result<Vec<f32>> {
+        let exe = self.exec(variant, "sel")?;
+        let n = enc.n as i64;
+        let si = self.manifest.sel_in as i64;
+        let out = exe.run(&[
+            lit::f32(params, &[params.len() as i64])?,
+            lit::f32(hcat, &[n, si])?,
+            lit::f32(&enc.node_mask, &[n])?, // full mask -> raw q on valid nodes
+        ])?;
+        lit::to_f32(&out[0])
+    }
+
+    /// PLC logits over devices for candidate `v_onehot` given dynamic
+    /// device features and the placement matrix.
+    #[allow(clippy::too_many_arguments)]
+    pub fn plc_logits(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        xd: &[f32],
+        place_norm: &[f32],
+        dev_mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let exe = self.exec(variant, "plc")?;
+        let n = enc.n as i64;
+        let m = self.manifest.max_devices as i64;
+        let si = self.manifest.sel_in as i64;
+        let df = self.manifest.dev_feats as i64;
+        let out = exe.run(&[
+            lit::f32(params, &[params.len() as i64])?,
+            lit::f32(hcat, &[n, si])?,
+            lit::f32(v_onehot, &[n])?,
+            lit::f32(xd, &[m, df])?,
+            lit::f32(place_norm, &[m, n])?,
+            lit::f32(dev_mask, &[m])?,
+        ])?;
+        lit::to_f32(&out[0])
+    }
+
+    /// GDP logits (graph-attention head, placement-state-blind).
+    pub fn gdp_logits(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        dev_mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let exe = self.exec(variant, "gdp")?;
+        let n = enc.n as i64;
+        let m = self.manifest.max_devices as i64;
+        let si = self.manifest.sel_in as i64;
+        let out = exe.run(&[
+            lit::f32(params, &[params.len() as i64])?,
+            lit::f32(hcat, &[n, si])?,
+            lit::f32(v_onehot, &[n])?,
+            lit::f32(&enc.node_mask, &[n])?,
+            lit::f32(dev_mask, &[m])?,
+        ])?;
+        lit::to_f32(&out[0])
+    }
+
+    /// Episode-constant literal cache for the per-step PLC hot loop:
+    /// params and Hcat are marshalled once per episode instead of once
+    /// per MDP step (§Perf L3).
+    pub fn episode_literals(
+        &self,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+    ) -> Result<EpisodeLiterals> {
+        let n = enc.n as i64;
+        let si = self.manifest.sel_in as i64;
+        Ok(EpisodeLiterals {
+            params: lit::f32(params, &[params.len() as i64])?,
+            hcat: lit::f32(hcat, &[n, si])?,
+            node_mask: lit::f32(&enc.node_mask, &[n])?,
+        })
+    }
+
+    /// PLC logits using the cached episode literals (hot path).
+    #[allow(clippy::too_many_arguments)]
+    pub fn plc_logits_cached(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        cache: &EpisodeLiterals,
+        v_onehot: &[f32],
+        xd: &[f32],
+        place_norm: &[f32],
+        dev_mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let exe = self.exec(variant, "plc")?;
+        let n = enc.n as i64;
+        let m = self.manifest.max_devices as i64;
+        let df = self.manifest.dev_feats as i64;
+        let voh = lit::f32(v_onehot, &[n])?;
+        let xdl = lit::f32(xd, &[m, df])?;
+        let pnl = lit::f32(place_norm, &[m, n])?;
+        let dml = lit::f32(dev_mask, &[m])?;
+        let out = exe.run_refs(&[&cache.params, &cache.hcat, &voh, &xdl, &pnl, &dml])?;
+        lit::to_f32(&out[0])
+    }
+
+    /// GDP logits using the cached episode literals (hot path).
+    pub fn gdp_logits_cached(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        cache: &EpisodeLiterals,
+        v_onehot: &[f32],
+        dev_mask: &[f32],
+    ) -> Result<Vec<f32>> {
+        let exe = self.exec(variant, "gdp")?;
+        let n = enc.n as i64;
+        let m = self.manifest.max_devices as i64;
+        let voh = lit::f32(v_onehot, &[n])?;
+        let dml = lit::f32(dev_mask, &[m])?;
+        let out = exe.run_refs(&[&cache.params, &cache.hcat, &voh, &cache.node_mask, &dml])?;
+        lit::to_f32(&out[0])
+    }
+
+    /// One REINFORCE/imitation train step: updates `params` and `opt` in
+    /// place; returns `(loss, entropy)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &self,
+        method: Method,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        traj: &super::episode::Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        lr: f32,
+        entropy_w: f32,
+    ) -> Result<(f32, f32)> {
+        let exe = self.exec(variant, method.train_artifact())?;
+        let (n, e) = (enc.n as i64, enc.e as i64);
+        let m = self.manifest.max_devices as i64;
+        let nf = self.manifest.node_feats as i64;
+        let df = self.manifest.dev_feats as i64;
+        let pc = params.len() as i64;
+        let out = exe.run(&[
+            lit::f32(params, &[pc])?,
+            lit::f32(&opt.m, &[pc])?,
+            lit::f32(&opt.v, &[pc])?,
+            lit::scalar1(opt.t)?,
+            lit::f32(&enc.xv, &[n, nf])?,
+            lit::i32(&enc.esrc, &[e])?,
+            lit::i32(&enc.edst, &[e])?,
+            lit::f32(&enc.efeat, &[e, 1])?,
+            lit::f32(&enc.node_mask, &[n])?,
+            lit::f32(&enc.edge_mask, &[e])?,
+            lit::f32(&enc.pb, &[n, n])?,
+            lit::f32(&enc.pt, &[n, n])?,
+            lit::i32(&traj.sel_actions, &[n])?,
+            lit::i32(&traj.plc_actions, &[n])?,
+            lit::f32(&traj.step_mask, &[n])?,
+            lit::f32(&traj.cand_masks, &[n, n])?,
+            lit::f32(&traj.xd_steps, &[n, m, df])?,
+            lit::f32(dev_mask, &[m])?,
+            lit::scalar1(advantage)?,
+            lit::scalar1(lr)?,
+            lit::scalar1(entropy_w)?,
+        ])?;
+        *params = lit::to_f32(&out[0])?;
+        opt.m = lit::to_f32(&out[1])?;
+        opt.v = lit::to_f32(&out[2])?;
+        opt.t = lit::to_f32(&out[3])?[0];
+        let loss = lit::to_f32(&out[4])?[0];
+        let ent = lit::to_f32(&out[5])?[0];
+        anyhow::ensure!(loss.is_finite(), "train step produced non-finite loss");
+        Ok((loss, ent))
+    }
+
+    /// Initial parameters from the artifacts directory.
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        self.manifest.init_params().context("loading init params")
+    }
+}
+
+/// Episode-constant argument literals (see `PolicyNets::episode_literals`).
+pub struct EpisodeLiterals {
+    pub params: Literal,
+    pub hcat: Literal,
+    pub node_mask: Literal,
+}

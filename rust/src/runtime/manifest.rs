@@ -1,0 +1,188 @@
+//! Parser for `artifacts/manifest.json` (written by `python -m
+//! compile.aot`): model dims, the flat parameter-blob length, and the
+//! per-variant artifact file names.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::parse;
+
+/// One padded-size artifact family.
+#[derive(Clone, Debug)]
+pub struct VariantInfo {
+    /// Max nodes.
+    pub n: usize,
+    /// Max edges.
+    pub e: usize,
+    /// executable name ("encode", "sel", ...) -> artifact file name.
+    pub artifacts: std::collections::BTreeMap<String, String>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub hidden: usize,
+    pub k_mpnn: usize,
+    pub node_feats: usize,
+    pub dev_feats: usize,
+    pub max_devices: usize,
+    pub sel_in: usize,
+    pub param_count: usize,
+    pub init_params_file: String,
+    pub variants: Vec<VariantInfo>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = parse(&text).map_err(|e| anyhow::anyhow!("manifest parse error: {e}"))?;
+        let need = |key: &str| -> Result<usize> {
+            j.get(key)
+                .as_usize()
+                .with_context(|| format!("manifest missing '{key}'"))
+        };
+        let mut variants = Vec::new();
+        for v in j.get("variants").as_arr().context("missing variants")? {
+            let mut artifacts = std::collections::BTreeMap::new();
+            if let Some(obj) = v.get("artifacts").as_obj() {
+                for (k, f) in obj {
+                    artifacts.insert(k.clone(), f.as_str().context("bad artifact name")?.to_string());
+                }
+            }
+            variants.push(VariantInfo {
+                n: v.get("n").as_usize().context("variant missing n")?,
+                e: v.get("e").as_usize().context("variant missing e")?,
+                artifacts,
+            });
+        }
+        variants.sort_by_key(|v| v.n);
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            hidden: need("hidden")?,
+            k_mpnn: need("k_mpnn")?,
+            node_feats: need("node_feats")?,
+            dev_feats: need("dev_feats")?,
+            max_devices: need("max_devices")?,
+            sel_in: need("sel_in")?,
+            param_count: need("param_count")?,
+            init_params_file: j
+                .get("init_params")
+                .as_str()
+                .context("missing init_params")?
+                .to_string(),
+            variants,
+        })
+    }
+
+    /// Smallest variant fitting a graph. Errors if none fits.
+    pub fn variant_for(&self, n_nodes: usize, n_edges: usize) -> Result<&VariantInfo> {
+        self.variants
+            .iter()
+            .find(|v| n_nodes <= v.n && n_edges <= v.e)
+            .with_context(|| {
+                format!("no artifact variant fits {n_nodes} nodes / {n_edges} edges — re-run aot with a larger size")
+            })
+    }
+
+    /// Absolute path of one artifact.
+    pub fn artifact_path(&self, variant: &VariantInfo, name: &str) -> Result<PathBuf> {
+        let f = variant
+            .artifacts
+            .get(name)
+            .with_context(|| format!("variant n{} has no artifact '{name}'", variant.n))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Load the initial parameter blob (raw little-endian f32).
+    pub fn init_params(&self) -> Result<Vec<f32>> {
+        let path = self.dir.join(&self.init_params_file);
+        let bytes = std::fs::read(&path).with_context(|| format!("reading {path:?}"))?;
+        anyhow::ensure!(
+            bytes.len() == 4 * self.param_count,
+            "init params size {} != 4 * {}",
+            bytes.len(),
+            self.param_count
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    /// Default artifacts directory: `$DOPPLER_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DOPPLER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+/// Parameter blob I/O (checkpoints).
+pub fn save_params(path: &Path, params: &[f32]) -> Result<()> {
+    let mut bytes = Vec::with_capacity(params.len() * 4);
+    for &x in params {
+        bytes.extend_from_slice(&x.to_le_bytes());
+    }
+    std::fs::write(path, bytes).with_context(|| format!("writing {path:?}"))
+}
+
+/// Load a parameter blob saved by [`save_params`].
+pub fn load_params(path: &Path) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    anyhow::ensure!(bytes.len() % 4 == 0, "blob not f32-aligned");
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_blob_roundtrip() {
+        let dir = std::env::temp_dir().join("doppler_test_params");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.bin");
+        let data: Vec<f32> = (0..100).map(|i| i as f32 * 0.5 - 3.0).collect();
+        save_params(&path, &data).unwrap();
+        let back = load_params(&path).unwrap();
+        assert_eq!(data, back);
+    }
+
+    #[test]
+    fn manifest_parses_generated_file() {
+        // parse a synthetic manifest (not the real artifacts dir)
+        let dir = std::env::temp_dir().join("doppler_test_manifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let manifest = r#"{
+          "hidden": 32, "k_mpnn": 2, "node_feats": 5, "dev_feats": 5,
+          "max_devices": 8, "sel_in": 128, "param_count": 4,
+          "init_params": "init_params.bin",
+          "variants": [
+            {"n": 96, "e": 224, "artifacts": {"encode": "encode_n96.hlo.txt"}},
+            {"n": 256, "e": 576, "artifacts": {"encode": "encode_n256.hlo.txt"}}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        save_params(&dir.join("init_params.bin"), &[1.0, 2.0, 3.0, 4.0]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.param_count, 4);
+        assert_eq!(m.variants.len(), 2);
+        assert_eq!(m.variant_for(90, 200).unwrap().n, 96);
+        assert_eq!(m.variant_for(100, 200).unwrap().n, 256);
+        assert!(m.variant_for(400, 200).is_err());
+        assert_eq!(m.init_params().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let p = m
+            .artifact_path(&m.variants[0], "encode")
+            .unwrap();
+        assert!(p.ends_with("encode_n96.hlo.txt"));
+        assert!(m.artifact_path(&m.variants[0], "nope").is_err());
+    }
+}

@@ -1,0 +1,109 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them on the CPU PJRT client.
+//! This is the only place rust touches XLA; Python never runs here.
+//!
+//! Interchange is HLO *text* — `HloModuleProto::from_text_file` reassigns
+//! instruction ids, avoiding the 64-bit-id protos of jax >= 0.5 that
+//! xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+pub use manifest::Manifest;
+
+/// Shared PJRT CPU client + artifact loader.
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn new() -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Load and compile one HLO-text artifact.
+    pub fn load(&self, path: &std::path::Path) -> Result<Executable> {
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable {
+            exe,
+            name: path.file_name().unwrap().to_string_lossy().into_owned(),
+        })
+    }
+}
+
+/// A compiled policy-network executable.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with host literals; returns the decomposed output tuple
+    /// (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let out = self
+            .exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple()
+            .with_context(|| format!("untupling result of {}", self.name))
+    }
+
+    /// Like [`Executable::run`] but borrowing the literals — lets hot
+    /// loops reuse episode-constant argument literals (params, Hcat)
+    /// instead of re-marshalling them every call (§Perf L3).
+    pub fn run_refs(&self, args: &[&Literal]) -> Result<Vec<Literal>> {
+        let out = self
+            .exe
+            .execute::<&Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple()
+            .with_context(|| format!("untupling result of {}", self.name))
+    }
+}
+
+/// Literal construction/extraction helpers for the f32/i32 tensors the
+/// policy executables exchange.
+pub mod lit {
+    use super::*;
+
+    /// f32 tensor from a flat slice + dims.
+    pub fn f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        Ok(Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// i32 tensor from a flat slice + dims.
+    pub fn i32(data: &[i32], dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        anyhow::ensure!(n as usize == data.len(), "shape/data mismatch");
+        Ok(Literal::vec1(data).reshape(dims)?)
+    }
+
+    /// 1-element f32 tensor (the `[1]`-shaped scalars of the train step).
+    pub fn scalar1(x: f32) -> Result<Literal> {
+        f32(&[x], &[1])
+    }
+
+    /// Extract a flat f32 vector.
+    pub fn to_f32(l: &Literal) -> Result<Vec<f32>> {
+        Ok(l.to_vec::<f32>()?)
+    }
+}

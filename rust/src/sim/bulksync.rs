@@ -1,0 +1,120 @@
+//! Bulk-synchronous executor (Valiant-style) — the baseline execution
+//! model of Table 1: the graph is processed level by level with a global
+//! barrier after each level's communication phase and each level's
+//! compute phase, the way lock-step frameworks (PyTorch DDP / ScaLAPACK)
+//! proceed. One slow kernel delays the whole step, and communication
+//! never overlaps compute.
+
+use crate::graph::{Assignment, Graph};
+use super::topology::DeviceTopology;
+
+/// Result of a bulk-synchronous execution.
+#[derive(Clone, Debug)]
+pub struct BulkSyncResult {
+    pub makespan: f64,
+    /// (transfer_phase, compute_phase) per level.
+    pub levels: Vec<(f64, f64)>,
+}
+
+/// Execute `g` under assignment `a` level-synchronously and return the
+/// total time. Deterministic (no jitter: the barrier structure already
+/// dominates any noise).
+pub fn bulksync_exec(g: &Graph, a: &Assignment, topo: &DeviceTopology) -> BulkSyncResult {
+    let order = g.topo_order().expect("DAG");
+    // level = 1 + max level of predecessors; entry nodes at level 0
+    let mut level = vec![0usize; g.n()];
+    let mut max_level = 0;
+    for &v in &order {
+        for &p in &g.preds[v] {
+            level[v] = level[v].max(level[p] + 1);
+        }
+        max_level = max_level.max(level[v]);
+    }
+
+    let nd = topo.n();
+    let mut levels = Vec::with_capacity(max_level);
+    let mut makespan = 0.0;
+    for l in 1..=max_level {
+        let nodes: Vec<usize> = (0..g.n()).filter(|&v| level[v] == l).collect();
+
+        // communication phase: bring every input to its consumer's device;
+        // channels work in parallel, transfers on one channel serialize.
+        let mut chan_time = vec![vec![0.0f64; nd]; nd];
+        for &v in &nodes {
+            let d = a[v];
+            for &p in &g.preds[v] {
+                if g.preds[p].is_empty() {
+                    continue; // entries available everywhere
+                }
+                let src = a[p];
+                if src != d {
+                    chan_time[src][d] += topo.transfer_time(g.nodes[p].out_bytes(), src, d);
+                }
+            }
+        }
+        let transfer_phase = chan_time
+            .iter()
+            .flatten()
+            .copied()
+            .fold(0.0f64, f64::max);
+
+        // compute phase: per-device serial execution, barrier at the max.
+        let mut dev_time = vec![0.0f64; nd];
+        for &v in &nodes {
+            dev_time[a[v]] += topo.exec_time(&g.nodes[v], a[v]);
+        }
+        let compute_phase = dev_time.iter().copied().fold(0.0f64, f64::max);
+
+        makespan += transfer_phase + compute_phase;
+        levels.push((transfer_phase, compute_phase));
+    }
+
+    BulkSyncResult { makespan, levels }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::workloads::{chainmm, ffnn, Scale};
+    use crate::sim::{simulate, SimConfig};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn wc_never_slower_than_bulksync() {
+        // The WC scheduler overlaps comm/compute and never inserts
+        // barriers, so with zero jitter it must not lose to bulk-sync on
+        // the same assignment (Table 1's premise).
+        for g in [chainmm(Scale::Tiny), ffnn(Scale::Tiny)] {
+            let topo = DeviceTopology::p100x4();
+            let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+            let bs = bulksync_exec(&g, &a, &topo);
+            let cfg = SimConfig::deterministic(topo);
+            let wc = simulate(&g, &a, &cfg, &mut Rng::new(1));
+            assert!(
+                wc.makespan <= bs.makespan * 1.001,
+                "{}: wc={} bs={}",
+                g.name,
+                wc.makespan,
+                bs.makespan
+            );
+        }
+    }
+
+    #[test]
+    fn level_count_matches_depth() {
+        let g = chainmm(Scale::Tiny);
+        let bs = bulksync_exec(&g, &vec![0; g.n()], &DeviceTopology::p100x4());
+        assert!(!bs.levels.is_empty());
+        let sum: f64 = bs.levels.iter().map(|(t, c)| t + c).sum();
+        assert!((sum - bs.makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_device_has_no_transfer_phase() {
+        let g = chainmm(Scale::Tiny);
+        let bs = bulksync_exec(&g, &vec![0; g.n()], &DeviceTopology::p100x4());
+        for (t, _) in bs.levels {
+            assert_eq!(t, 0.0);
+        }
+    }
+}

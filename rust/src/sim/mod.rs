@@ -1,0 +1,573 @@
+//! Work-conserving discrete-event simulator — the paper's `ExecTime(A)`
+//! (Algorithm 1) with the task enumeration of Algorithm 2.
+//!
+//! The simulator is the "digital twin" used for Stage II training: given a
+//! graph, an assignment and a [`DeviceTopology`], it dynamically schedules
+//! `exec` and `transfer` tasks the moment their dependencies and resources
+//! are available (never idling a free resource — work conservation), with
+//! lognormal duration jitter realizing the stochastic completion
+//! distribution `P(<t_out, task> | S, t_in)`.
+//!
+//! Resources: one execution unit per device and one channel per directed
+//! device pair, so computation overlaps with communication — the WC
+//! advantage Table 1 measures.
+
+pub mod bulksync;
+pub mod topology;
+pub mod trace;
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use crate::graph::{Assignment, Graph, NodeId};
+use crate::util::rng::Rng;
+use topology::DeviceTopology;
+
+/// Strategy for `ChooseTask` — which ready task the dynamic scheduler
+/// starts first when several compete (Algorithm 1 is generic in this).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Choose {
+    /// Enumeration order (stable, node-id based).
+    Fifo,
+    /// Prefer tasks whose node has the largest t-level (deepest remaining
+    /// path) — a depth-first probe into the graph.
+    DepthFirst,
+    /// Uniformly random among ready tasks.
+    Random,
+}
+
+/// Simulator configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub topology: DeviceTopology,
+    /// Lognormal sigma on task durations (0.0 = deterministic).
+    pub jitter_sigma: f64,
+    pub choose: Choose,
+    /// Track per-device memory and charge Turnip-style spill penalties
+    /// when a device exceeds its capacity.
+    pub enforce_memory: bool,
+}
+
+impl SimConfig {
+    pub fn new(topology: DeviceTopology) -> SimConfig {
+        SimConfig {
+            topology,
+            jitter_sigma: 0.08,
+            choose: Choose::Fifo,
+            enforce_memory: false,
+        }
+    }
+    pub fn deterministic(topology: DeviceTopology) -> SimConfig {
+        SimConfig {
+            jitter_sigma: 0.0,
+            ..SimConfig::new(topology)
+        }
+    }
+}
+
+/// A completed `exec` event in the schedule S.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecEvent {
+    pub node: NodeId,
+    pub device: usize,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// A completed `transfer` event in the schedule S.
+#[derive(Clone, Copy, Debug)]
+pub struct TransferEvent {
+    pub node: NodeId,
+    pub from: usize,
+    pub to: usize,
+    pub start: f64,
+    pub end: f64,
+}
+
+/// Simulation output: makespan plus the full schedule trace.
+#[derive(Clone, Debug, Default)]
+pub struct SimResult {
+    pub makespan: f64,
+    pub execs: Vec<ExecEvent>,
+    pub transfers: Vec<TransferEvent>,
+    /// Total spill penalty charged (memory mode).
+    pub spill_time: f64,
+    /// Total bytes moved between devices.
+    pub bytes_moved: f64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Task {
+    Exec { v: NodeId },
+    Transfer { v: NodeId, from: usize, to: usize },
+}
+
+/// Heap entry ordered by completion time (min-heap via Reverse semantics).
+struct Completion {
+    time: f64,
+    seq: u64,
+    task: Task,
+    start: f64,
+}
+
+impl PartialEq for Completion {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl Eq for Completion {}
+impl PartialOrd for Completion {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Completion {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // reversed: smallest time pops first
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Simulate the work-conserving execution of assignment `a` (Algorithm 1).
+///
+/// Entry vertices (inputs/fills) are "available everywhere" at time 0 and
+/// are never executed or transferred, exactly as in the paper.
+pub fn simulate(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng) -> SimResult {
+    assert_eq!(a.len(), g.n(), "assignment length mismatch");
+    let nd = cfg.topology.n();
+    debug_assert!(a.iter().all(|&d| d < nd), "device out of range");
+
+    // --- state ---------------------------------------------------------
+    // present[v] = bitmask of devices holding v's output
+    let mut present: Vec<u64> = vec![0; g.n()];
+    let mut executed: Vec<bool> = vec![false; g.n()];
+    let mut exec_issued: Vec<bool> = vec![false; g.n()];
+    // transfer (v -> to) issued
+    let mut transfer_issued: Vec<u64> = vec![0; g.n()];
+    let all_devices_mask: u64 = if nd >= 64 { u64::MAX } else { (1u64 << nd) - 1 };
+
+    let entry: Vec<bool> = (0..g.n()).map(|v| g.preds[v].is_empty()).collect();
+    for v in 0..g.n() {
+        if entry[v] {
+            present[v] = all_devices_mask;
+            executed[v] = true;
+            exec_issued[v] = true;
+        }
+    }
+
+    // resources
+    let mut exec_busy = vec![false; nd];
+    let mut chan_busy = vec![vec![false; nd]; nd];
+
+    // memory accounting (enforce_memory mode)
+    let mut resident = vec![0.0f64; nd];
+    // remaining uses of v's buffer on device d before it can be freed
+    let mut need = vec![vec![0u32; nd]; g.n()];
+    let mut spill_time_total = 0.0;
+    if cfg.enforce_memory {
+        for v in 0..g.n() {
+            let home = a[v];
+            let mut remote_targets: u64 = 0;
+            for &u in &g.succs[v] {
+                need[v][a[u]] += 1; // consumer will read it on its device
+                if a[u] != home && !entry[v] {
+                    remote_targets |= 1 << a[u];
+                }
+            }
+            // the home copy also feeds each outgoing transfer
+            if !entry[v] {
+                need[v][home] += remote_targets.count_ones();
+            }
+        }
+        // entry buffers materialize where consumed, at time 0
+        for v in 0..g.n() {
+            if entry[v] {
+                let mut where_used: u64 = 0;
+                for &u in &g.succs[v] {
+                    where_used |= 1 << a[u];
+                }
+                for d in 0..nd {
+                    if where_used >> d & 1 == 1 {
+                        resident[d] += g.nodes[v].out_bytes();
+                    }
+                }
+            }
+        }
+    }
+
+    // depth-first priority: static t-level (deepest remaining work first)
+    let priority: Vec<f64> = if cfg.choose == Choose::DepthFirst {
+        let nc = |n: &crate::graph::Node| cfg.topology.ref_exec_time(n);
+        let ec = |b: f64| cfg.topology.ref_transfer_time(b);
+        g.t_level(&nc, &ec)
+    } else {
+        vec![0.0; g.n()]
+    };
+
+    let mut heap: BinaryHeap<Completion> = BinaryHeap::new();
+    let mut seq: u64 = 0;
+    let mut t = 0.0f64;
+    let mut result = SimResult::default();
+
+    // charge a spill penalty if allocating `bytes` on `d` exceeds capacity
+    let alloc = |resident: &mut Vec<f64>, d: usize, bytes: f64| -> f64 {
+        resident[d] += bytes;
+        if resident[d] > cfg.topology.mem_capacity[d] {
+            bytes / cfg.topology.spill_bw
+        } else {
+            0.0
+        }
+    };
+
+    loop {
+        // --- EnumTasks + work-conserving start loop ---------------------
+        loop {
+            let mut startable: Vec<Task> = Vec::new();
+            // transfers (Algorithm 2, first loop)
+            for &(v1, v2) in &g.edges {
+                if entry[v1] {
+                    continue; // inputs available everywhere
+                }
+                let to = a[v2];
+                let from = a[v1];
+                if from == to {
+                    continue;
+                }
+                if executed[v1]
+                    && present[v1] >> to & 1 == 0
+                    && transfer_issued[v1] >> to & 1 == 0
+                    && !chan_busy[from][to]
+                {
+                    startable.push(Task::Transfer { v: v1, from, to });
+                }
+            }
+            // execs (Algorithm 2, second loop)
+            for v in 0..g.n() {
+                if exec_issued[v] {
+                    continue;
+                }
+                let d = a[v];
+                if exec_busy[d] {
+                    continue;
+                }
+                if g.preds[v].iter().all(|&p| present[p] >> d & 1 == 1) {
+                    startable.push(Task::Exec { v });
+                }
+            }
+            if startable.is_empty() {
+                break;
+            }
+            // ChooseTask
+            let chosen = match cfg.choose {
+                Choose::Fifo => startable[0],
+                Choose::Random => *rng.choose(&startable),
+                Choose::DepthFirst => {
+                    let mut best = startable[0];
+                    let mut best_p = f64::NEG_INFINITY;
+                    for &task in &startable {
+                        let p = match task {
+                            Task::Exec { v } => priority[v],
+                            Task::Transfer { v, .. } => priority[v] + 1e9, // comm first
+                        };
+                        if p > best_p {
+                            best_p = p;
+                            best = task;
+                        }
+                    }
+                    best
+                }
+            };
+            // start it
+            let jitter = if cfg.jitter_sigma > 0.0 {
+                rng.lognormal(cfg.jitter_sigma)
+            } else {
+                1.0
+            };
+            match chosen {
+                Task::Exec { v } => {
+                    let d = a[v];
+                    let mut dur = cfg.topology.exec_time(&g.nodes[v], d) * jitter;
+                    if cfg.enforce_memory {
+                        let pen = alloc(&mut resident, d, g.nodes[v].out_bytes());
+                        spill_time_total += pen;
+                        dur += pen;
+                    }
+                    exec_busy[d] = true;
+                    exec_issued[v] = true;
+                    seq += 1;
+                    heap.push(Completion {
+                        time: t + dur,
+                        seq,
+                        task: chosen,
+                        start: t,
+                    });
+                }
+                Task::Transfer { v, from, to } => {
+                    let bytes = g.nodes[v].out_bytes();
+                    let mut dur = cfg.topology.transfer_time(bytes, from, to) * jitter;
+                    if cfg.enforce_memory {
+                        let pen = alloc(&mut resident, to, bytes);
+                        spill_time_total += pen;
+                        dur += pen;
+                    }
+                    chan_busy[from][to] = true;
+                    transfer_issued[v] |= 1 << to;
+                    result.bytes_moved += bytes;
+                    seq += 1;
+                    heap.push(Completion {
+                        time: t + dur,
+                        seq,
+                        task: chosen,
+                        start: t,
+                    });
+                }
+            }
+        }
+
+        // --- wait for the next completion (P(<t_out, task> | S, t)) -----
+        let Some(done) = heap.pop() else {
+            break; // nothing in flight and nothing startable: finished
+        };
+        t = done.time;
+        match done.task {
+            Task::Exec { v } => {
+                let d = a[v];
+                executed[v] = true;
+                present[v] |= 1 << d;
+                exec_busy[d] = false;
+                result.execs.push(ExecEvent {
+                    node: v,
+                    device: d,
+                    start: done.start,
+                    end: t,
+                });
+                if cfg.enforce_memory {
+                    // consuming v's inputs on d: decrement and free
+                    for &p in &g.preds[v] {
+                        if need[p][d] > 0 {
+                            need[p][d] -= 1;
+                            if need[p][d] == 0 {
+                                resident[d] -= g.nodes[p].out_bytes();
+                            }
+                        }
+                    }
+                }
+            }
+            Task::Transfer { v, from, to } => {
+                present[v] |= 1 << to;
+                chan_busy[from][to] = false;
+                result.transfers.push(TransferEvent {
+                    node: v,
+                    from,
+                    to,
+                    start: done.start,
+                    end: t,
+                });
+                if cfg.enforce_memory && need[v][from] > 0 {
+                    // the home copy served one outgoing transfer
+                    need[v][from] -= 1;
+                    if need[v][from] == 0 {
+                        resident[from] -= g.nodes[v].out_bytes();
+                    }
+                }
+            }
+        }
+    }
+
+    // completion check: every vertex's result present on its own device
+    debug_assert!(
+        (0..g.n()).all(|v| present[v] >> a[v] & 1 == 1),
+        "simulation ended with unexecuted vertices"
+    );
+
+    result.makespan = t;
+    result.spill_time = spill_time_total;
+    result
+}
+
+/// Convenience: mean makespan over `reps` jittered runs.
+pub fn mean_exec_time(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng, reps: usize) -> f64 {
+    let total: f64 = (0..reps).map(|_| simulate(g, a, cfg, rng).makespan).sum();
+    total / reps.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::workloads::{chainmm, Scale};
+    use crate::graph::OpKind;
+
+    fn chain_graph(k: usize) -> Graph {
+        // linear chain: input -> mm -> mm -> ... (k matmuls)
+        let mut g = Graph::new("chain");
+        let mut prev = g.add_node(OpKind::Input, vec![32, 32], 0.0, "in".into());
+        for i in 0..k {
+            let v = g.add_node(OpKind::MatMul, vec![32, 32], 1e6, format!("mm{i}"));
+            g.add_edge(prev, v);
+            prev = v;
+        }
+        g.freeze();
+        g
+    }
+
+    #[test]
+    fn chain_on_one_device_serializes() {
+        let g = chain_graph(5);
+        let cfg = SimConfig::deterministic(topology::DeviceTopology::p100x4());
+        let mut rng = Rng::new(1);
+        let a = vec![0; g.n()];
+        let r = simulate(&g, &a, &cfg, &mut rng);
+        let per = cfg.topology.exec_time(&g.nodes[1], 0);
+        assert!((r.makespan - 5.0 * per).abs() < 1e-9);
+        assert!(r.transfers.is_empty(), "same-device chain must not transfer");
+    }
+
+    #[test]
+    fn chain_across_devices_pays_transfers() {
+        let g = chain_graph(4);
+        let cfg = SimConfig::deterministic(topology::DeviceTopology::p100x4());
+        let mut rng = Rng::new(1);
+        let same = simulate(&g, &vec![0; g.n()], &cfg, &mut rng).makespan;
+        // alternate devices 0,1,0,1...
+        let alt: Vec<usize> = (0..g.n()).map(|v| v % 2).collect();
+        let split = simulate(&g, &alt, &cfg, &mut rng);
+        assert!(split.makespan > same);
+        assert!(!split.transfers.is_empty());
+    }
+
+    #[test]
+    fn independent_chains_parallelize() {
+        // two independent chains; on two devices ≈ half the single-device time
+        let mut g = Graph::new("two-chains");
+        for c in ["a", "b"] {
+            let mut prev = g.add_node(OpKind::Input, vec![32, 32], 0.0, format!("in{c}"));
+            for i in 0..4 {
+                let v = g.add_node(OpKind::MatMul, vec![32, 32], 1e6, format!("mm{c}-{i}"));
+                g.add_edge(prev, v);
+                prev = v;
+            }
+        }
+        g.freeze();
+        let cfg = SimConfig::deterministic(topology::DeviceTopology::p100x4());
+        let mut rng = Rng::new(1);
+        let serial = simulate(&g, &vec![0; g.n()], &cfg, &mut rng).makespan;
+        let a: Vec<usize> = g
+            .nodes
+            .iter()
+            .map(|n| if n.name.contains('a') { 0 } else { 1 })
+            .collect();
+        let par = simulate(&g, &a, &cfg, &mut rng).makespan;
+        assert!((par - serial / 2.0).abs() < serial * 0.01, "par={par} serial={serial}");
+    }
+
+    #[test]
+    fn schedule_respects_dependencies() {
+        let g = chainmm(Scale::Tiny);
+        let cfg = SimConfig::new(topology::DeviceTopology::p100x4());
+        let mut rng = Rng::new(7);
+        let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+        let r = simulate(&g, &a, &cfg, &mut rng);
+        // availability time of node v's output on device d
+        let mut avail = std::collections::HashMap::new();
+        for e in &r.execs {
+            avail.insert((e.node, e.device), e.end);
+        }
+        for tr in &r.transfers {
+            avail.insert((tr.node, tr.to), tr.end);
+        }
+        for e in &r.execs {
+            for &p in &g.preds[e.node] {
+                if g.preds[p].is_empty() {
+                    continue; // entry: available everywhere at 0
+                }
+                let av = avail
+                    .get(&(p, e.device))
+                    .unwrap_or_else(|| panic!("input {p} never reached device {}", e.device));
+                assert!(
+                    *av <= e.start + 1e-9,
+                    "node {} started before input {} arrived",
+                    e.node,
+                    p
+                );
+            }
+        }
+        // every non-entry node executed exactly once
+        assert_eq!(
+            r.execs.len(),
+            (0..g.n()).filter(|&v| !g.preds[v].is_empty()).count()
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = chainmm(Scale::Tiny);
+        let cfg = SimConfig::new(topology::DeviceTopology::p100x4());
+        let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+        let m1 = simulate(&g, &a, &cfg, &mut Rng::new(5)).makespan;
+        let m2 = simulate(&g, &a, &cfg, &mut Rng::new(5)).makespan;
+        assert_eq!(m1, m2);
+        let m3 = simulate(&g, &a, &cfg, &mut Rng::new(6)).makespan;
+        assert_ne!(m1, m3);
+    }
+
+    #[test]
+    fn jitter_zero_matches_across_strategies_on_serial_graph() {
+        let g = chain_graph(6);
+        let mut base = SimConfig::deterministic(topology::DeviceTopology::p100x4());
+        let a = vec![0; g.n()];
+        let mut times = Vec::new();
+        for c in [Choose::Fifo, Choose::DepthFirst, Choose::Random] {
+            base.choose = c;
+            times.push(simulate(&g, &a, &base, &mut Rng::new(3)).makespan);
+        }
+        assert!((times[0] - times[1]).abs() < 1e-12);
+        assert!((times[0] - times[2]).abs() < 1e-12);
+    }
+
+    #[test]
+    fn memory_mode_charges_spill_on_tight_budget() {
+        let g = chainmm(Scale::Small);
+        let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+        let topo = topology::DeviceTopology::p100x4();
+        let unlimited = SimConfig::deterministic(topo.clone());
+        let mut rng = Rng::new(1);
+        let base = simulate(&g, &a, &unlimited, &mut rng);
+        assert_eq!(base.spill_time, 0.0);
+
+        // budget far below working set forces spills
+        let tight = topology::DeviceTopology::p100x4_restricted(g.total_edge_bytes(), 0.01);
+        let mut cfg = SimConfig::deterministic(tight);
+        cfg.enforce_memory = true;
+        let r = simulate(&g, &a, &cfg, &mut rng);
+        assert!(r.spill_time > 0.0);
+        assert!(r.makespan > base.makespan);
+    }
+
+    #[test]
+    fn work_conserving_beats_nothing_queued() {
+        // makespan lower bound: total work / devices (perfect balance)
+        let g = chainmm(Scale::Tiny);
+        let cfg = SimConfig::deterministic(topology::DeviceTopology::p100x4());
+        let mut rng = Rng::new(2);
+        let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+        let r = simulate(&g, &a, &cfg, &mut rng);
+        let total_work: f64 = g
+            .nodes
+            .iter()
+            .filter(|n| !g.preds[n.id].is_empty())
+            .map(|n| cfg.topology.exec_time(n, 0))
+            .sum();
+        assert!(r.makespan >= total_work / 4.0 - 1e-9);
+        // and an upper bound: everything serialized plus all transfers
+        let mut serial = total_work;
+        for &(p, c) in &g.edges {
+            let _ = c;
+            serial += cfg.topology.ref_transfer_time(g.nodes[p].out_bytes());
+        }
+        assert!(r.makespan <= serial);
+    }
+}

@@ -1,0 +1,240 @@
+//! Device and interconnect model: per-device compute rates, pairwise
+//! bandwidth matrix (uniform for the P100 box, hierarchical NVLink groups
+//! for the V100 box), memory capacities, and the exec/transfer cost
+//! functions shared by the simulator, the feature extractor, and the
+//! heuristics.
+//!
+//! Substitution note (DESIGN.md §1): absolute rates are calibrated to this
+//! CPU testbed's real-engine kernel throughput; *ratios* between devices
+//! and links follow published P100/V100/NVLink specs, which is what
+//! placement quality depends on.
+
+use crate::graph::{Node, OpKind};
+
+/// A multi-device machine.
+#[derive(Clone, Debug)]
+pub struct DeviceTopology {
+    pub name: String,
+    /// Matmul-effective FLOPs/s per device.
+    pub flops_per_sec: Vec<f64>,
+    /// Bytes/s between device pairs; `bandwidth[i][i]` is unused.
+    pub bandwidth: Vec<Vec<f64>>,
+    /// Fixed per-transfer latency (seconds).
+    pub latency_s: f64,
+    /// Fixed per-kernel launch overhead (seconds).
+    pub launch_overhead_s: f64,
+    /// Memory capacity per device in bytes (`f64::INFINITY` = unlimited).
+    pub mem_capacity: Vec<f64>,
+    /// Spill bandwidth (bytes/s) when a device exceeds its capacity —
+    /// models Turnip-style CPU-RAM offload over PCIe.
+    pub spill_bw: f64,
+    /// NVLink group id per device (devices in the same group enjoy full
+    /// bandwidth; used by the Table 10 locality analysis).
+    pub group: Vec<usize>,
+}
+
+/// Efficiency of a vertex kind relative to peak matmul throughput:
+/// elementwise/reduction kernels are memory-bound, bookkeeping kernels
+/// (formation/squeezer/selec/complexer/fill) cheaper still.
+pub fn kind_efficiency(kind: OpKind) -> f64 {
+    match kind {
+        OpKind::MatMul => 1.0,
+        OpKind::InputElemwise(_)
+        | OpKind::StraightElemwise(_)
+        | OpKind::BcastElemwise(_)
+        | OpKind::MaxReduction
+        | OpKind::MinReduction
+        | OpKind::SumReduction
+        | OpKind::ProdReduction => 0.07,
+        OpKind::Formation | OpKind::Squeezer | OpKind::Selec | OpKind::Complexer | OpKind::Fill => {
+            0.04
+        }
+        OpKind::Input => 1.0, // inputs are never executed
+    }
+}
+
+impl DeviceTopology {
+    /// Number of devices.
+    pub fn n(&self) -> usize {
+        self.flops_per_sec.len()
+    }
+
+    /// Execution time of `node` on device `d` (seconds, noise-free).
+    pub fn exec_time(&self, node: &Node, d: usize) -> f64 {
+        if node.kind == OpKind::Input {
+            return 0.0;
+        }
+        let rate = self.flops_per_sec[d] * kind_efficiency(node.kind);
+        self.launch_overhead_s + node.flops / rate
+    }
+
+    /// Transfer time for `bytes` from device `a` to device `b` (seconds).
+    pub fn transfer_time(&self, bytes: f64, a: usize, b: usize) -> f64 {
+        if a == b {
+            return 0.0;
+        }
+        self.latency_s + bytes / self.bandwidth[a][b]
+    }
+
+    /// Reference (device-0) exec time — used for static graph features.
+    pub fn ref_exec_time(&self, node: &Node) -> f64 {
+        self.exec_time(node, 0)
+    }
+
+    /// Reference transfer time between distinct devices (max-bandwidth
+    /// pair), used for static communication features.
+    pub fn ref_transfer_time(&self, bytes: f64) -> f64 {
+        let mut bw: f64 = 0.0;
+        for i in 0..self.n() {
+            for j in 0..self.n() {
+                if i != j {
+                    bw = bw.max(self.bandwidth[i][j]);
+                }
+            }
+        }
+        self.latency_s + bytes / bw.max(1.0)
+    }
+
+    /// Uniform-bandwidth helper.
+    fn uniform(name: &str, n: usize, rate: f64, bw: f64) -> DeviceTopology {
+        DeviceTopology {
+            name: name.to_string(),
+            flops_per_sec: vec![rate; n],
+            bandwidth: vec![vec![bw; n]; n],
+            latency_s: 40e-6,
+            launch_overhead_s: 8e-6,
+            mem_capacity: vec![f64::INFINITY; n],
+            spill_bw: bw / 4.0,
+            group: vec![0; n],
+        }
+    }
+
+    /// 4x P100 analog: four uniform devices, all-pairs NVLink.
+    /// Rates are calibrated to the real engine's measured kernel
+    /// throughput (`doppler calibrate` on this image: matmul ~11.5
+    /// GFLOP/s, elemwise ~0.8 Gelem/s -> kind_efficiency 0.07; see
+    /// DESIGN.md §5).
+    pub fn p100x4() -> DeviceTopology {
+        Self::uniform("p100x4", 4, 11.5e9, 1.2e9)
+    }
+
+    /// 4x P100 with memory restricted to `frac` of the workload's peak
+    /// working set (Table 8's 8GB-of-16GB study, scaled).
+    pub fn p100x4_restricted(total_graph_bytes: f64, frac: f64) -> DeviceTopology {
+        let mut t = Self::p100x4();
+        t.name = "p100x4-mem".into();
+        // per-device budget: a fraction of an even split of the working set
+        let budget = (total_graph_bytes / t.n() as f64) * frac;
+        t.mem_capacity = vec![budget; t.n()];
+        t
+    }
+
+    /// 8x V100 analog: two fully-connected groups of four, with thinner
+    /// cross-group links (Appendix H.2 / J).
+    pub fn v100x8() -> DeviceTopology {
+        let n = 8;
+        let rate = 17.0e9; // V100/P100 ≈ 1.5x (of the calibrated 11.5)
+        let intra = 2.0e9; // full NVLink mesh inside a group
+        let cross = 0.55e9; // four shared links across groups
+        let mut bandwidth = vec![vec![intra; n]; n];
+        let group: Vec<usize> = (0..n).map(|d| d / 4).collect();
+        for i in 0..n {
+            for j in 0..n {
+                if group[i] != group[j] {
+                    bandwidth[i][j] = cross;
+                }
+            }
+        }
+        DeviceTopology {
+            name: "v100x8".into(),
+            flops_per_sec: vec![rate; n],
+            bandwidth,
+            latency_s: 40e-6,
+            launch_overhead_s: 8e-6,
+            mem_capacity: vec![f64::INFINITY; n],
+            spill_bw: 0.5e9,
+            group,
+        }
+    }
+
+    /// Single device (the 1-GPU columns of Tables 8/9).
+    pub fn single() -> DeviceTopology {
+        Self::uniform("single", 1, 11.5e9, 1.2e9)
+    }
+
+    /// Build by name (CLI / bench config).
+    pub fn by_name(name: &str) -> Option<DeviceTopology> {
+        match name {
+            "p100x4" => Some(Self::p100x4()),
+            "v100x8" => Some(Self::v100x8()),
+            "single" => Some(Self::single()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ElemOp, OpKind};
+
+    fn matmul_node(flops: f64) -> Node {
+        Node {
+            id: 0,
+            kind: OpKind::MatMul,
+            shape: vec![64, 64],
+            flops,
+            name: "mm".into(),
+            meta_op: None,
+        }
+    }
+
+    #[test]
+    fn exec_time_scales_with_flops() {
+        let t = DeviceTopology::p100x4();
+        let a = t.exec_time(&matmul_node(1e6), 0);
+        let b = t.exec_time(&matmul_node(2e6), 0);
+        assert!(b > a);
+        assert!((b - t.launch_overhead_s) / (a - t.launch_overhead_s) > 1.99);
+    }
+
+    #[test]
+    fn elemwise_slower_per_flop_than_matmul() {
+        let t = DeviceTopology::p100x4();
+        let mm = matmul_node(1e6);
+        let mut ew = matmul_node(1e6);
+        ew.kind = OpKind::StraightElemwise(ElemOp::Add);
+        assert!(t.exec_time(&ew, 0) > t.exec_time(&mm, 0));
+    }
+
+    #[test]
+    fn transfer_zero_on_same_device() {
+        let t = DeviceTopology::p100x4();
+        assert_eq!(t.transfer_time(1e6, 2, 2), 0.0);
+        assert!(t.transfer_time(1e6, 0, 1) > 0.0);
+    }
+
+    #[test]
+    fn v100_hierarchical_bandwidth() {
+        let t = DeviceTopology::v100x8();
+        assert_eq!(t.n(), 8);
+        assert_eq!(t.group[0], t.group[3]);
+        assert_ne!(t.group[0], t.group[4]);
+        // cross-group transfers slower than intra-group
+        assert!(t.transfer_time(1e7, 0, 4) > t.transfer_time(1e7, 0, 1));
+    }
+
+    #[test]
+    fn restricted_memory_caps() {
+        let t = DeviceTopology::p100x4_restricted(4e9, 0.5);
+        assert!((t.mem_capacity[0] - 0.5e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn inputs_free() {
+        let t = DeviceTopology::p100x4();
+        let mut n = matmul_node(1e9);
+        n.kind = OpKind::Input;
+        assert_eq!(t.exec_time(&n, 0), 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Schedule-trace analysis: per-device utilization timelines (the data
+//! behind Figs. 9/10/13/14), transfer-locality breakdowns (Table 10),
+//! and ASCII rendering for the visualization example.
+
+use super::{SimResult, topology::DeviceTopology};
+
+/// Binned busy-fraction series per device plus a transfer series.
+#[derive(Clone, Debug)]
+pub struct Utilization {
+    /// `device_busy[d][b]` = fraction of bin `b` device `d` spent executing.
+    pub device_busy: Vec<Vec<f64>>,
+    /// Fraction of each bin during which at least one transfer was active.
+    pub transfer_busy: Vec<f64>,
+    pub bin_width: f64,
+    pub makespan: f64,
+}
+
+/// Compute a binned utilization profile from a simulation trace.
+pub fn utilization(result: &SimResult, n_devices: usize, bins: usize) -> Utilization {
+    let makespan = result.makespan.max(1e-12);
+    let w = makespan / bins as f64;
+    let mut device_busy = vec![vec![0.0; bins]; n_devices];
+    let mut transfer_busy = vec![0.0; bins];
+
+    let spread = |series: &mut Vec<f64>, start: f64, end: f64| {
+        let b0 = ((start / w).floor() as usize).min(bins - 1);
+        let b1 = ((end / w).ceil() as usize).min(bins);
+        for b in b0..b1 {
+            let lo = (b as f64 * w).max(start);
+            let hi = ((b + 1) as f64 * w).min(end);
+            if hi > lo {
+                series[b] += (hi - lo) / w;
+            }
+        }
+    };
+
+    for e in &result.execs {
+        spread(&mut device_busy[e.device], e.start, e.end);
+    }
+    for t in &result.transfers {
+        spread(&mut transfer_busy, t.start, t.end);
+    }
+    for b in transfer_busy.iter_mut() {
+        *b = b.min(1.0);
+    }
+
+    Utilization {
+        device_busy,
+        transfer_busy,
+        bin_width: w,
+        makespan,
+    }
+}
+
+/// Overall busy fraction per device (integral of the exec trace).
+pub fn busy_fraction(result: &SimResult, n_devices: usize) -> Vec<f64> {
+    let mut busy = vec![0.0; n_devices];
+    for e in &result.execs {
+        busy[e.device] += e.end - e.start;
+    }
+    busy.iter().map(|b| b / result.makespan.max(1e-12)).collect()
+}
+
+/// Transfer locality counts for Table 10: `(cross_group, same_group,
+/// same_device)` where "same_device" counts dependency edges that needed
+/// no transfer at all.
+pub fn transfer_locality(
+    g: &crate::graph::Graph,
+    a: &crate::graph::Assignment,
+    topo: &DeviceTopology,
+) -> (usize, usize, usize) {
+    let mut cross = 0;
+    let mut same_group = 0;
+    let mut same_dev = 0;
+    for &(p, c) in &g.edges {
+        if g.preds[p].is_empty() {
+            continue; // entries are replicated, never transferred
+        }
+        let (dp, dc) = (a[p], a[c]);
+        if dp == dc {
+            same_dev += 1;
+        } else if topo.group[dp] == topo.group[dc] {
+            same_group += 1;
+        } else {
+            cross += 1;
+        }
+    }
+    (cross, same_group, same_dev)
+}
+
+/// Render an ASCII utilization timeline (one row per device, one row for
+/// transfers) — the textual analog of the paper's utilization figures.
+pub fn ascii_timeline(u: &Utilization) -> String {
+    const SHADES: [char; 5] = [' ', '░', '▒', '▓', '█'];
+    let mut out = String::new();
+    for (d, series) in u.device_busy.iter().enumerate() {
+        out.push_str(&format!("dev{d} |"));
+        for &frac in series {
+            let idx = ((frac * 4.0).round() as usize).min(4);
+            out.push(SHADES[idx]);
+        }
+        out.push_str("|\n");
+    }
+    out.push_str("xfer |");
+    for &frac in &u.transfer_busy {
+        let idx = ((frac * 4.0).round() as usize).min(4);
+        out.push(SHADES[idx]);
+    }
+    out.push_str("|\n");
+    out.push_str(&format!(
+        "      0 {:>width$.1} ms\n",
+        u.makespan * 1e3,
+        width = u.transfer_busy.len().saturating_sub(2)
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::workloads::{chainmm, Scale};
+    use crate::sim::{simulate, SimConfig};
+    use crate::util::rng::Rng;
+
+    fn sample() -> (crate::graph::Graph, SimResult) {
+        let g = chainmm(Scale::Tiny);
+        let cfg = SimConfig::deterministic(DeviceTopology::p100x4());
+        let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+        let r = simulate(&g, &a, &cfg, &mut Rng::new(1));
+        (g, r)
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let (_, r) = sample();
+        let u = utilization(&r, 4, 50);
+        for dev in &u.device_busy {
+            for &f in dev {
+                assert!((0.0..=1.0 + 1e-9).contains(&f));
+            }
+        }
+    }
+
+    #[test]
+    fn busy_fraction_integrates_exec_time() {
+        let (_, r) = sample();
+        let busy = busy_fraction(&r, 4);
+        let total_busy: f64 = busy.iter().sum::<f64>() * r.makespan;
+        let total_exec: f64 = r.execs.iter().map(|e| e.end - e.start).sum();
+        assert!((total_busy - total_exec).abs() < 1e-9);
+    }
+
+    #[test]
+    fn locality_counts_partition_edges() {
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::v100x8();
+        let a: Vec<usize> = (0..g.n()).map(|v| v % 8).collect();
+        let (c, sg, sd) = transfer_locality(&g, &a, &topo);
+        let non_entry_edges = g
+            .edges
+            .iter()
+            .filter(|&&(p, _)| !g.preds[p].is_empty())
+            .count();
+        assert_eq!(c + sg + sd, non_entry_edges);
+        // all-same-device assignment: everything local
+        let (c0, s0, d0) = transfer_locality(&g, &vec![0; g.n()], &topo);
+        assert_eq!((c0, s0), (0, 0));
+        assert_eq!(d0, non_entry_edges);
+    }
+
+    #[test]
+    fn ascii_renders() {
+        let (_, r) = sample();
+        let u = utilization(&r, 4, 40);
+        let s = ascii_timeline(&u);
+        assert!(s.contains("dev0"));
+        assert!(s.contains("xfer"));
+    }
+}

@@ -1,0 +1,573 @@
+//! Three-stage training orchestrator (§5, Fig. 3):
+//!
+//! - **Stage I — imitation**: the dual policy learns to mimic a CRITICAL
+//!   PATH teacher (eq. 9) from teacher-generated trajectories.
+//! - **Stage II — simulation RL**: REINFORCE (eq. 10) with rewards from
+//!   the WC simulator's `ExecTime`.
+//! - **Stage III — real-system RL**: the same update driven by the real
+//!   engine's measured execution times ("rewards for free" during
+//!   deployment).
+//!
+//! Hyperparameters follow §6.1: linearly decaying learning rate and
+//! exploration, entropy weight 1e-2, and a running-mean reward baseline.
+
+pub mod teacher;
+
+use anyhow::Result;
+
+use crate::features::{static_features, StaticFeatures};
+use crate::graph::{Assignment, Graph};
+use crate::policy::{
+    run_episode, EpisodeCfg, GraphEncoding, Method, OptState, PolicyNets, Trajectory,
+};
+use crate::sim::topology::DeviceTopology;
+use crate::sim::{simulate, SimConfig};
+use crate::util::rng::Rng;
+
+/// Linear schedule over episodes.
+#[derive(Clone, Copy, Debug)]
+pub struct Schedule {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Schedule {
+    pub fn at(&self, i: usize, total: usize) -> f64 {
+        if total <= 1 {
+            return self.start;
+        }
+        let f = i as f64 / (total - 1) as f64;
+        self.start + (self.end - self.start) * f
+    }
+}
+
+/// Which stages to run (the Fig. 4 combinations).
+#[derive(Clone, Copy, Debug)]
+pub struct Stages {
+    pub imitation: usize,
+    pub sim_rl: usize,
+    pub real_rl: usize,
+}
+
+impl Stages {
+    /// Paper defaults scaled by the `DOPPLER_EPISODES` budget `b`
+    /// (I : II : III = 1 : 6 : 3 of the budget).
+    pub fn budget(b: usize) -> Stages {
+        if b < 1000 {
+            // short budgets lean harder on imitation (the paper's ratios
+            // assume 4k-8k episodes)
+            Stages {
+                imitation: (b * 25 / 100).max(1),
+                sim_rl: b * 50 / 100,
+                real_rl: b * 25 / 100,
+            }
+        } else {
+            Stages {
+                imitation: (b / 10).max(1),
+                sim_rl: b * 6 / 10,
+                real_rl: b * 3 / 10,
+            }
+        }
+    }
+    pub fn none() -> Stages {
+        Stages { imitation: 0, sim_rl: 0, real_rl: 0 }
+    }
+    pub fn total(&self) -> usize {
+        self.imitation + self.sim_rl + self.real_rl
+    }
+}
+
+/// Training configuration (paper §6.1 defaults).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub method: Method,
+    pub n_devices: usize,
+    pub lr: Schedule,
+    pub epsilon: Schedule,
+    pub entropy_w: f32,
+    pub seed: u64,
+    /// Simulator used for Stage II rewards.
+    pub sim: SimConfig,
+    /// Re-encode per MDP step (Table 6 ablation).
+    pub per_step_encode: bool,
+    /// Ablations (Table 3): replace one learned policy with its
+    /// CRITICAL PATH counterpart.
+    pub force_teacher_sel: bool,
+    pub force_teacher_plc: bool,
+}
+
+impl TrainConfig {
+    /// Scale the paper's 4k-episode learning-rate schedule to a shorter
+    /// budget: small-budget runs need a hotter, shorter decay.
+    pub fn scale_to_budget(&mut self, episodes: usize) {
+        if episodes < 2000 {
+            self.lr = Schedule { start: 1.5e-3, end: 1e-5 };
+        }
+    }
+
+    pub fn new(method: Method, topo: DeviceTopology, n_devices: usize) -> TrainConfig {
+        TrainConfig {
+            method,
+            n_devices,
+            // §6.1: 1e-4 -> 1e-7 for DOPPLER/GDP (PLACETO uses 1e-3 -> 1e-6)
+            lr: match method {
+                Method::Placeto => Schedule { start: 1e-3, end: 1e-6 },
+                _ => Schedule { start: 1e-4, end: 1e-7 },
+            },
+            // §6.1: 0.2 -> 0.0 (PLACETO 0.5 -> 0.0)
+            epsilon: match method {
+                Method::Placeto => Schedule { start: 0.5, end: 0.0 },
+                _ => Schedule { start: 0.2, end: 0.0 },
+            },
+            entropy_w: 1e-2,
+            seed: 0,
+            sim: SimConfig::new(topo),
+            per_step_encode: false,
+            force_teacher_sel: false,
+            force_teacher_plc: false,
+        }
+    }
+}
+
+/// One log row per episode.
+#[derive(Clone, Debug)]
+pub struct LogRow {
+    pub episode: usize,
+    pub stage: u8,
+    /// Observed execution time (seconds) of this episode's assignment.
+    pub exec_time: f64,
+    /// Best observed execution time so far.
+    pub best_time: f64,
+    pub loss: f32,
+    pub entropy: f32,
+    pub encode_calls: usize,
+}
+
+/// Training output.
+pub struct TrainResult {
+    pub params: Vec<f32>,
+    pub best_assignment: Assignment,
+    pub best_time: f64,
+    /// Best observed assignment per stage (rewards are stage-local:
+    /// stage 2 times come from the simulator, stage 3 from the engine).
+    pub stage_bests: std::collections::BTreeMap<u8, (Assignment, f64)>,
+    pub history: Vec<LogRow>,
+}
+
+/// The trainer: owns policy params + optimizer state for one graph
+/// (the paper trains one dual policy per computation graph).
+pub struct Trainer<'a> {
+    pub nets: &'a PolicyNets,
+    pub g: &'a Graph,
+    pub topo: DeviceTopology,
+    pub feats: StaticFeatures,
+    pub enc: GraphEncoding,
+    variant: crate::runtime::manifest::VariantInfo,
+    pub cfg: TrainConfig,
+    pub params: Vec<f32>,
+    pub opt: OptState,
+    dev_mask: Vec<f32>,
+    baseline: f64,
+    baseline_n: usize,
+    pub history: Vec<LogRow>,
+    best: Option<(Assignment, f64)>,
+    /// Best observed assignment per stage (2 = sim, 3 = real).
+    stage_bests: std::collections::BTreeMap<u8, (Assignment, f64)>,
+    rng: Rng,
+}
+
+impl<'a> Trainer<'a> {
+    pub fn new(
+        nets: &'a PolicyNets,
+        g: &'a Graph,
+        topo: DeviceTopology,
+        cfg: TrainConfig,
+    ) -> Result<Trainer<'a>> {
+        let feats = static_features(g, &topo, 1.0);
+        let variant = nets.manifest.variant_for(g.n(), g.m())?.clone();
+        let enc = GraphEncoding::build(g, &feats, &nets.manifest, &variant)?;
+        let params = nets.init_params()?;
+        let opt = OptState::new(params.len());
+        let dev_mask = crate::policy::device_mask(nets.manifest.max_devices, cfg.n_devices);
+        let rng = Rng::new(cfg.seed ^ 0xD0BB1E);
+        Ok(Trainer {
+            nets,
+            g,
+            topo,
+            feats,
+            enc,
+            variant,
+            cfg,
+            params,
+            opt,
+            dev_mask,
+            baseline: 0.0,
+            baseline_n: 0,
+            history: Vec::new(),
+            best: None,
+            stage_bests: std::collections::BTreeMap::new(),
+            rng,
+        })
+    }
+
+    /// Start from pretrained parameters (transfer learning, Table 4/11).
+    pub fn with_params(mut self, params: Vec<f32>) -> Self {
+        assert_eq!(params.len(), self.params.len());
+        self.params = params;
+        self
+    }
+
+    /// Stage I: imitation of the CRITICAL PATH teacher.
+    pub fn stage1_imitation(&mut self, episodes: usize) -> Result<()> {
+        let sel_mode = match self.cfg.method {
+            Method::Doppler => teacher::TeacherSel::CriticalPath,
+            _ => teacher::TeacherSel::TopoOrder,
+        };
+        for i in 0..episodes {
+            let (_, traj) = teacher::run_teacher_episode(
+                self.g,
+                &self.topo,
+                &self.feats,
+                &self.enc,
+                self.nets.manifest.max_devices,
+                self.cfg.n_devices,
+                sel_mode,
+                0.25,
+                &mut self.rng,
+            );
+            let lr = self.cfg.lr.start as f32; // imitation at the initial lr
+            let (loss, ent) = self.nets.train(
+                self.cfg.method,
+                &self.variant,
+                &self.enc,
+                &mut self.params,
+                &mut self.opt,
+                &traj,
+                &self.dev_mask,
+                1.0, // advantage=1 + teacher actions = CE (eq. 9)
+                lr,
+                0.0,
+            )?;
+            self.history.push(LogRow {
+                episode: self.history.len(),
+                stage: 1,
+                exec_time: f64::NAN,
+                best_time: self.best.as_ref().map_or(f64::NAN, |b| b.1),
+                loss,
+                entropy: ent,
+                encode_calls: 0,
+            });
+            let _ = i;
+        }
+        Ok(())
+    }
+
+    /// Run one RL episode and update; `exec_time_of` supplies the reward
+    /// (Stage II: simulator; Stage III: real engine).
+    fn rl_episode(
+        &mut self,
+        i: usize,
+        total: usize,
+        stage: u8,
+        exec_time_of: &mut dyn FnMut(&Assignment, &mut Rng) -> f64,
+    ) -> Result<()> {
+        // every 10th episode is pure exploitation: the best-assignment
+        // tracker then observes the policy's greedy quality, matching how
+        // the trained policy will actually be deployed
+        let epsilon = if i % 10 == 9 {
+            0.0
+        } else {
+            self.cfg.epsilon.at(i, total)
+        };
+        let lr = self.cfg.lr.at(i, total) as f32;
+        let ep_cfg = EpisodeCfg {
+            method: self.cfg.method,
+            epsilon,
+            n_devices: self.cfg.n_devices,
+            per_step_encode: self.cfg.per_step_encode,
+        };
+
+        // episode (optionally with teacher-forced SEL or PLC for Table 3)
+        let ep = if self.cfg.force_teacher_sel || self.cfg.force_teacher_plc {
+            self.ablated_episode(&ep_cfg)?
+        } else {
+            run_episode(
+                self.nets,
+                &self.enc,
+                self.g,
+                &self.topo,
+                &self.feats,
+                &self.params,
+                &ep_cfg,
+                &mut self.rng,
+            )?
+        };
+
+        let t = exec_time_of(&ep.assignment, &mut self.rng);
+        // reward baseline (paper §4.1 uses the mean over past episodes;
+        // an exponential moving average tracks the improving policy
+        // better on short budgets)
+        self.baseline_n += 1;
+        if self.baseline_n == 1 {
+            self.baseline = t;
+        } else {
+            let alpha = 0.05f64.max(1.0 / self.baseline_n as f64);
+            self.baseline += alpha * (t - self.baseline);
+        }
+        // reward r = -t; advantage = (baseline - t) / norm
+        let advantage = ((self.baseline - t) / self.enc.norm) as f32;
+
+        if self.best.as_ref().map_or(true, |(_, bt)| t < *bt) {
+            self.best = Some((ep.assignment.clone(), t));
+        }
+        let sb = self.stage_bests.entry(stage).or_insert_with(|| (ep.assignment.clone(), t));
+        if t < sb.1 {
+            *sb = (ep.assignment.clone(), t);
+        }
+
+        let (loss, ent) = self.nets.train(
+            self.cfg.method,
+            &self.variant,
+            &self.enc,
+            &mut self.params,
+            &mut self.opt,
+            &ep.trajectory,
+            &self.dev_mask,
+            advantage,
+            lr,
+            self.cfg.entropy_w,
+        )?;
+        self.history.push(LogRow {
+            episode: self.history.len(),
+            stage,
+            exec_time: t,
+            best_time: self.best.as_ref().unwrap().1,
+            loss,
+            entropy: ent,
+            encode_calls: ep.encode_calls,
+        });
+        Ok(())
+    }
+
+    /// Episode with one policy replaced by its CRITICAL PATH counterpart
+    /// (Table 3 ablations: DOPPLER-SEL / DOPPLER-PLC).
+    fn ablated_episode(&mut self, ep_cfg: &EpisodeCfg) -> Result<crate::policy::EpisodeResult> {
+        use crate::features::{AssignState, DEVICE_FEATS};
+        use crate::heuristics::{place_earliest, select_critical_path};
+
+        let n = self.enc.n;
+        let m = self.nets.manifest.max_devices;
+        let df = DEVICE_FEATS;
+        let hcat = self.nets.encode(&self.variant, &self.enc, &self.params)?;
+        let sel_scores = self
+            .nets
+            .sel_scores(&self.variant, &self.enc, &self.params, &hcat)?;
+        let mut st = AssignState::new(self.g, &self.topo);
+        let mut traj = Trajectory {
+            sel_actions: vec![0; n],
+            plc_actions: vec![0; n],
+            step_mask: vec![0.0; n],
+            cand_masks: vec![0.0; n * n],
+            xd_steps: vec![0.0; n * m * df],
+        };
+        let mut place = vec![0.0f32; m * n];
+        let mut place_counts = vec![0usize; m];
+        let devices: Vec<usize> = (0..self.cfg.n_devices).collect();
+        let mut h = 0;
+        while !st.done() {
+            for &c in &st.candidates {
+                traj.cand_masks[h * n + c] = 1.0;
+            }
+            // SEL: teacher (DOPPLER-PLC variant) or learned (DOPPLER-SEL)
+            let v = if self.cfg.force_teacher_sel {
+                select_critical_path(&st, &self.feats, &mut self.rng, 0.1)
+            } else {
+                let mut best = st.candidates[0];
+                let mut bq = f32::NEG_INFINITY;
+                if self.rng.chance(ep_cfg.epsilon) {
+                    best = *self.rng.choose(&st.candidates);
+                } else {
+                    for &c in &st.candidates {
+                        if sel_scores[c] > bq {
+                            bq = sel_scores[c];
+                            best = c;
+                        }
+                    }
+                }
+                best
+            };
+            let xd = st.device_features(v);
+            for d in 0..self.cfg.n_devices.min(m) {
+                for k in 0..df {
+                    traj.xd_steps[(h * m + d) * df + k] = (xd[d][k] / self.enc.norm) as f32;
+                }
+            }
+            // PLC: teacher (DOPPLER-SEL variant) or learned (DOPPLER-PLC)
+            let d = if self.cfg.force_teacher_plc {
+                place_earliest(&st, v, &mut self.rng)
+            } else {
+                let mut v_onehot = vec![0.0f32; n];
+                v_onehot[v] = 1.0;
+                let mut place_norm = vec![0.0f32; m * n];
+                for dd in 0..m {
+                    if place_counts[dd] > 0 {
+                        let w = 1.0 / place_counts[dd] as f32;
+                        for vv in 0..n {
+                            place_norm[dd * n + vv] = place[dd * n + vv] * w;
+                        }
+                    }
+                }
+                let xd_slice = &traj.xd_steps[h * m * df..(h + 1) * m * df];
+                let logits = self.nets.plc_logits(
+                    &self.variant,
+                    &self.enc,
+                    &self.params,
+                    &hcat,
+                    &v_onehot,
+                    xd_slice,
+                    &place_norm,
+                    &self.dev_mask,
+                )?;
+                if self.rng.chance(ep_cfg.epsilon) {
+                    *self.rng.choose(&devices)
+                } else {
+                    let mut best = 0;
+                    let mut bq = f32::NEG_INFINITY;
+                    for &dd in &devices {
+                        if logits[dd] > bq {
+                            bq = logits[dd];
+                            best = dd;
+                        }
+                    }
+                    best
+                }
+            };
+            traj.sel_actions[h] = v as i32;
+            traj.plc_actions[h] = d as i32;
+            traj.step_mask[h] = 1.0;
+            place[d * n + v] = 1.0;
+            place_counts[d] += 1;
+            st.place(v, d);
+            h += 1;
+        }
+        Ok(crate::policy::EpisodeResult {
+            assignment: st.into_assignment(),
+            trajectory: traj,
+            encode_calls: 1,
+        })
+    }
+
+    /// Stage II: REINFORCE against the WC simulator.
+    pub fn stage2_sim(&mut self, episodes: usize) -> Result<()> {
+        let sim_cfg = self.cfg.sim.clone();
+        for i in 0..episodes {
+            let mut f = |a: &Assignment, rng: &mut Rng| simulate(self.g, a, &sim_cfg, rng).makespan;
+            self.rl_episode(i, episodes, 2, &mut f)?;
+        }
+        Ok(())
+    }
+
+    /// Stage III: REINFORCE against the real engine.
+    pub fn stage3_real(&mut self, episodes: usize, engine_cfg: &crate::engine::EngineConfig) -> Result<()> {
+        for i in 0..episodes {
+            let mut f =
+                |a: &Assignment, _rng: &mut Rng| crate::engine::execute(self.g, a, engine_cfg).sim.makespan;
+            self.rl_episode(i, episodes, 3, &mut f)?;
+        }
+        Ok(())
+    }
+
+    /// Run the requested stage combination and return the result.
+    pub fn run(mut self, stages: Stages, engine_cfg: &crate::engine::EngineConfig) -> Result<TrainResult> {
+        self.stage1_imitation(stages.imitation)?;
+        self.stage2_sim(stages.sim_rl)?;
+        self.stage3_real(stages.real_rl, engine_cfg)?;
+        let (best_assignment, best_time) = self.best.unwrap_or_else(|| {
+            // imitation-only runs never observed an exec time: fall back
+            // to a greedy rollout with the trained policy
+            let ep_cfg = EpisodeCfg {
+                method: self.cfg.method,
+                epsilon: 0.0,
+                n_devices: self.cfg.n_devices,
+                per_step_encode: false,
+            };
+            let ep = run_episode(
+                self.nets, &self.enc, self.g, &self.topo, &self.feats, &self.params, &ep_cfg,
+                &mut self.rng,
+            )
+            .expect("rollout failed");
+            let t = crate::engine::execute(self.g, &ep.assignment, engine_cfg).sim.makespan;
+            (ep.assignment, t)
+        });
+        Ok(TrainResult {
+            params: self.params,
+            best_assignment,
+            best_time,
+            stage_bests: self.stage_bests,
+            history: self.history,
+        })
+    }
+
+    /// Greedy (epsilon=0) rollout with the current parameters.
+    pub fn greedy_assignment(&mut self) -> Result<Assignment> {
+        let ep_cfg = EpisodeCfg {
+            method: self.cfg.method,
+            epsilon: 0.0,
+            n_devices: self.cfg.n_devices,
+            per_step_encode: false,
+        };
+        Ok(run_episode(
+            self.nets,
+            &self.enc,
+            self.g,
+            &self.topo,
+            &self.feats,
+            &self.params,
+            &ep_cfg,
+            &mut self.rng,
+        )?
+        .assignment)
+    }
+}
+
+/// Write a training history to CSV (for the Fig. 4 curves).
+pub fn write_history_csv(path: &std::path::Path, history: &[LogRow]) -> Result<()> {
+    let mut out = String::from("episode,stage,exec_time_ms,best_time_ms,loss,entropy,encode_calls\n");
+    for r in history {
+        out.push_str(&format!(
+            "{},{},{:.4},{:.4},{:.5},{:.4},{}\n",
+            r.episode,
+            r.stage,
+            r.exec_time * 1e3,
+            r.best_time * 1e3,
+            r.loss,
+            r.entropy,
+            r.encode_calls
+        ));
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_interpolates() {
+        let s = Schedule { start: 1.0, end: 0.0 };
+        assert_eq!(s.at(0, 11), 1.0);
+        assert_eq!(s.at(10, 11), 0.0);
+        assert!((s.at(5, 11) - 0.5).abs() < 1e-12);
+        assert_eq!(s.at(0, 1), 1.0);
+    }
+
+    #[test]
+    fn stages_budget_partitions() {
+        let st = Stages::budget(1000);
+        assert_eq!(st.imitation, 100);
+        assert_eq!(st.sim_rl, 600);
+        assert_eq!(st.real_rl, 300);
+        assert!(st.total() <= 1000);
+    }
+}

@@ -1,0 +1,154 @@
+//! Teacher episodes for Stage I imitation learning (§5, eq. 9): walk the
+//! assignment MDP with the CRITICAL PATH heuristic making both decisions,
+//! recording exactly the trajectory arrays the `train_*` executables
+//! replay (candidate masks + dynamic device features at every step).
+
+use crate::features::{AssignState, StaticFeatures, DEVICE_FEATS};
+use crate::graph::Graph;
+use crate::heuristics::{place_earliest, select_critical_path};
+use crate::policy::encoding::GraphEncoding;
+use crate::policy::episode::Trajectory;
+use crate::sim::topology::DeviceTopology;
+use crate::util::rng::Rng;
+
+/// How the teacher picks the next node.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TeacherSel {
+    /// Longest-path-to-exit (the CRITICAL PATH select step) — the DOPPLER
+    /// dual-policy teacher.
+    CriticalPath,
+    /// Fixed topological order — the teacher for the single-policy
+    /// baselines (PLACETO walks nodes in a fixed order).
+    TopoOrder,
+}
+
+/// Run one teacher episode; returns the assignment and the trajectory.
+#[allow(clippy::too_many_arguments)]
+pub fn run_teacher_episode(
+    g: &Graph,
+    topo: &DeviceTopology,
+    feats: &StaticFeatures,
+    enc: &GraphEncoding,
+    max_devices: usize,
+    n_devices: usize,
+    sel_mode: TeacherSel,
+    tie_noise: f64,
+    rng: &mut Rng,
+) -> (Vec<usize>, Trajectory) {
+    let n = enc.n;
+    let m = max_devices;
+    let df = DEVICE_FEATS;
+    let mut st = AssignState::new(g, topo);
+    let mut traj = Trajectory {
+        sel_actions: vec![0; n],
+        plc_actions: vec![0; n],
+        step_mask: vec![0.0; n],
+        cand_masks: vec![0.0; n * n],
+        xd_steps: vec![0.0; n * m * df],
+    };
+
+    let mut h = 0usize;
+    while !st.done() {
+        for &c in &st.candidates {
+            traj.cand_masks[h * n + c] = 1.0;
+        }
+        let v = match sel_mode {
+            TeacherSel::CriticalPath => select_critical_path(&st, feats, rng, tie_noise),
+            TeacherSel::TopoOrder => *st
+                .candidates
+                .iter()
+                .min_by_key(|&&c| enc.topo_pos[c])
+                .unwrap(),
+        };
+        let xd = st.device_features(v);
+        for d in 0..n_devices.min(m) {
+            for k in 0..df {
+                traj.xd_steps[(h * m + d) * df + k] = (xd[d][k] / enc.norm) as f32;
+            }
+        }
+        // teacher placement: earliest-available device, restricted to the
+        // active device count (AssignState already uses `topo` with the
+        // right device count)
+        let d = place_earliest(&st, v, rng);
+        traj.sel_actions[h] = v as i32;
+        traj.plc_actions[h] = d as i32;
+        traj.step_mask[h] = 1.0;
+        st.place(v, d);
+        h += 1;
+    }
+    (st.into_assignment(), traj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::features::static_features;
+    use crate::graph::workloads::{chainmm, Scale};
+    use crate::runtime::manifest::{Manifest, VariantInfo};
+
+    fn fake_manifest() -> Manifest {
+        Manifest {
+            dir: std::path::PathBuf::from("/tmp"),
+            hidden: 32,
+            k_mpnn: 2,
+            node_feats: 5,
+            dev_feats: 5,
+            max_devices: 8,
+            sel_in: 128,
+            param_count: 10,
+            init_params_file: "x".into(),
+            variants: vec![],
+        }
+    }
+
+    #[test]
+    fn teacher_episode_covers_graph() {
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        let variant = VariantInfo {
+            n: 96,
+            e: 224,
+            artifacts: Default::default(),
+        };
+        let enc = GraphEncoding::build(&g, &feats, &fake_manifest(), &variant).unwrap();
+        for mode in [TeacherSel::CriticalPath, TeacherSel::TopoOrder] {
+            let mut rng = Rng::new(1);
+            let (a, traj) = run_teacher_episode(&g, &topo, &feats, &enc, 8, 4, mode, 0.1, &mut rng);
+            assert_eq!(a.len(), g.n());
+            assert!(a.iter().all(|&d| d < 4));
+            let steps: f32 = traj.step_mask.iter().sum();
+            assert_eq!(steps as usize, g.n());
+            // chosen action is always among candidates
+            for h in 0..g.n() {
+                let v = traj.sel_actions[h] as usize;
+                assert!(traj.cand_masks[h * enc.n + v] > 0.0, "step {h} action not candidate");
+            }
+        }
+    }
+
+    #[test]
+    fn topo_teacher_is_topologically_sorted() {
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let feats = static_features(&g, &topo, 1.0);
+        let variant = VariantInfo {
+            n: 96,
+            e: 224,
+            artifacts: Default::default(),
+        };
+        let enc = GraphEncoding::build(&g, &feats, &fake_manifest(), &variant).unwrap();
+        let mut rng = Rng::new(2);
+        let (_, traj) =
+            run_teacher_episode(&g, &topo, &feats, &enc, 8, 4, TeacherSel::TopoOrder, 0.0, &mut rng);
+        // selection sequence must respect dependencies
+        let mut seen = vec![false; g.n()];
+        for h in 0..g.n() {
+            let v = traj.sel_actions[h] as usize;
+            for &p in &g.preds[v] {
+                assert!(seen[p]);
+            }
+            seen[v] = true;
+        }
+    }
+}

@@ -1,0 +1,27 @@
+//! Shared utilities: deterministic PRNG, statistics, minimal JSON.
+//! (The offline image ships no rand/serde/criterion — see DESIGN.md §8.)
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+
+/// Format a milliseconds quantity the way the paper's tables do.
+pub fn fmt_ms(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+/// Read an env var as usize with a default (used for episode budgets).
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Read an env var as f64 with a default.
+pub fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}

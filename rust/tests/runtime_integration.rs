@@ -1,0 +1,115 @@
+//! Integration: load real AOT artifacts via PJRT, run encode/sel/plc,
+//! a full ASSIGN episode, and a train step. Requires `make artifacts`
+//! (skips with a notice when artifacts/ is missing).
+
+use doppler::features::static_features;
+use doppler::graph::workloads::{chainmm, Scale};
+use doppler::policy::{run_episode, EpisodeCfg, GraphEncoding, Method, OptState, PolicyNets};
+use doppler::sim::topology::DeviceTopology;
+use doppler::util::rng::Rng;
+
+fn nets_or_skip() -> Option<PolicyNets> {
+    match PolicyNets::load_default() {
+        Ok(n) => Some(n),
+        Err(e) => {
+            eprintln!("SKIP runtime integration (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn episode_and_train_roundtrip() {
+    let Some(nets) = nets_or_skip() else { return };
+    let g = chainmm(Scale::Tiny);
+    let topo = DeviceTopology::p100x4();
+    let feats = static_features(&g, &topo, 1.0);
+    let variant = nets.manifest.variant_for(g.n(), g.m()).unwrap().clone();
+    let enc = GraphEncoding::build(&g, &feats, &nets.manifest, &variant).unwrap();
+
+    let mut params = nets.init_params().unwrap();
+    assert_eq!(params.len(), nets.manifest.param_count);
+
+    // encode: finite, masked padding
+    let hcat = nets.encode(&variant, &enc, &params).unwrap();
+    assert_eq!(hcat.len(), variant.n * nets.manifest.sel_in);
+    assert!(hcat.iter().all(|x| x.is_finite()));
+    let pad = &hcat[g.n() * nets.manifest.sel_in..];
+    assert!(pad.iter().all(|&x| x.abs() < 1e-6), "padding region not masked");
+
+    // deterministic encode
+    let hcat2 = nets.encode(&variant, &enc, &params).unwrap();
+    assert_eq!(hcat, hcat2);
+
+    // full episode for each method
+    for method in [Method::Doppler, Method::Placeto, Method::Gdp] {
+        let cfg = EpisodeCfg {
+            method,
+            epsilon: 0.2,
+            n_devices: 4,
+            per_step_encode: false,
+        };
+        let mut rng = Rng::new(7);
+        let ep = run_episode(&nets, &enc, &g, &topo, &feats, &params, &cfg, &mut rng).unwrap();
+        assert_eq!(ep.assignment.len(), g.n());
+        assert!(ep.assignment.iter().all(|&d| d < 4));
+        assert_eq!(ep.encode_calls, 1);
+        let steps: f32 = ep.trajectory.step_mask.iter().sum();
+        assert_eq!(steps as usize, g.n());
+
+        // train step: loss finite, params move
+        let mut opt = OptState::new(params.len());
+        let dev_mask = doppler::policy::device_mask(nets.manifest.max_devices, 4);
+        let p_before = params.clone();
+        let (loss, ent) = nets
+            .train(method, &variant, &enc, &mut params, &mut opt, &ep.trajectory,
+                   &dev_mask, 1.0, 1e-3, 1e-2)
+            .unwrap();
+        assert!(loss.is_finite() && ent.is_finite(), "{method:?}: loss={loss} ent={ent}");
+        assert!(ent >= 0.0);
+        assert_ne!(params, p_before, "{method:?}: params did not change");
+        assert_eq!(opt.t, 1.0);
+        params = p_before; // reset for next method
+    }
+}
+
+#[test]
+fn imitation_converges_through_pjrt() {
+    // repeated imitation steps on one fixed trajectory must reduce loss —
+    // the end-to-end Stage-I signal through the full rust->PJRT path.
+    let Some(nets) = nets_or_skip() else { return };
+    let g = chainmm(Scale::Tiny);
+    let topo = DeviceTopology::p100x4();
+    let feats = static_features(&g, &topo, 1.0);
+    let variant = nets.manifest.variant_for(g.n(), g.m()).unwrap().clone();
+    let enc = GraphEncoding::build(&g, &feats, &nets.manifest, &variant).unwrap();
+    let mut params = nets.init_params().unwrap();
+
+    let cfg = EpisodeCfg {
+        method: Method::Doppler,
+        epsilon: 1.0, // random behavior: trajectory quality irrelevant here
+        n_devices: 4,
+        per_step_encode: false,
+    };
+    let mut rng = Rng::new(11);
+    let ep = run_episode(&nets, &enc, &g, &topo, &feats, &params, &cfg, &mut rng).unwrap();
+
+    let mut opt = OptState::new(params.len());
+    let dev_mask = doppler::policy::device_mask(nets.manifest.max_devices, 4);
+    let mut first = 0.0;
+    let mut last = 0.0;
+    for i in 0..60 {
+        let (loss, _) = nets
+            .train(Method::Doppler, &variant, &enc, &mut params, &mut opt,
+                   &ep.trajectory, &dev_mask, 1.0, 5e-3, 0.0)
+            .unwrap();
+        if i == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    assert!(
+        last < first * 0.92,
+        "imitation loss did not drop: {first} -> {last} (note: symmetric shard nodes bound the CE floor)"
+    );
+}

@@ -1,0 +1,60 @@
+//! End-to-end training integration: Stage I + II + III on CHAINMM-tiny
+//! with a small budget must produce an assignment no worse than random
+//! and exercise the whole three-layer stack. Requires `make artifacts`.
+
+use doppler::engine::EngineConfig;
+use doppler::graph::workloads::{chainmm, Scale};
+use doppler::heuristics::random_assignment;
+use doppler::policy::{Method, PolicyNets};
+use doppler::sim::topology::DeviceTopology;
+use doppler::sim::{simulate, SimConfig};
+use doppler::train::{Stages, TrainConfig, Trainer};
+use doppler::util::rng::Rng;
+use doppler::util::stats::mean;
+
+#[test]
+fn three_stage_training_improves_over_random() {
+    let Ok(nets) = PolicyNets::load_default() else {
+        eprintln!("SKIP train integration (run `make artifacts`)");
+        return;
+    };
+    let g = chainmm(Scale::Tiny);
+    let topo = DeviceTopology::p100x4();
+    let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+    cfg.seed = 42;
+    // compress the schedules into the small test budget
+    cfg.lr = doppler::train::Schedule { start: 1e-3, end: 1e-4 };
+    cfg.epsilon = doppler::train::Schedule { start: 0.3, end: 0.05 };
+
+    let trainer = Trainer::new(&nets, &g, topo.clone(), cfg).unwrap();
+    let stages = Stages { imitation: 10, sim_rl: 60, real_rl: 10 };
+    let engine_cfg = EngineConfig::new(topo.clone());
+    let result = trainer.run(stages, &engine_cfg).unwrap();
+
+    assert_eq!(result.best_assignment.len(), g.n());
+    assert!(result.best_time.is_finite() && result.best_time > 0.0);
+    assert_eq!(result.history.len(), 80);
+    assert!(result.history.iter().all(|r| r.loss.is_finite()));
+
+    // compare on the deterministic simulator against mean random
+    let sim_cfg = SimConfig::deterministic(topo);
+    let mut rng = Rng::new(123);
+    let t_best = simulate(&g, &result.best_assignment, &sim_cfg, &mut rng).makespan;
+    let rand_times: Vec<f64> = (0..8)
+        .map(|s| {
+            let mut r = Rng::new(1000 + s);
+            let a = random_assignment(&g, 4, &mut r);
+            simulate(&g, &a, &sim_cfg, &mut r).makespan
+        })
+        .collect();
+    let t_rand = mean(&rand_times);
+    assert!(
+        t_best < t_rand,
+        "trained best ({t_best:.4}s) should beat mean random ({t_rand:.4}s)"
+    );
+
+    // stage markers present in the history
+    assert!(result.history.iter().any(|r| r.stage == 1));
+    assert!(result.history.iter().any(|r| r.stage == 2));
+    assert!(result.history.iter().any(|r| r.stage == 3));
+}
