@@ -1,0 +1,104 @@
+//! Rollout scaling: Stage II episode-simulation throughput (episodes/sec)
+//! at 1/2/4/8 worker threads on a simulation-bound workload, plus a live
+//! determinism check (every thread count must reproduce the serial
+//! rewards bit-for-bit).
+//!
+//! This measures the batched reward path (`rollout::episode_rewards`,
+//! one work unit per (episode, replicate)). The trainer's per-episode
+//! Stage II loop reaches the same engine but fans out at most
+//! `--sim-reps` units per reward (episodes are sequential by nature);
+//! see DESIGN.md §9 "Parallelism bounds".
+//!
+//! Acceptance target: >= 2x episodes/sec at 4 threads vs 1 thread on a
+//! machine with >= 4 cores. Knobs: DOPPLER_ROLLOUT_EPISODES (batch size,
+//! default 48), DOPPLER_SIM_REPS (replicates per episode reward, default
+//! 4), DOPPLER_ROLLOUT_NODES (graph size, default 600).
+
+use std::time::Instant;
+
+use doppler::bench_util::banner;
+use doppler::eval::tables::Table;
+use doppler::graph::workloads::synthetic_layered;
+use doppler::graph::Assignment;
+use doppler::heuristics::random_assignment;
+use doppler::rollout;
+use doppler::sim::topology::DeviceTopology;
+use doppler::sim::SimConfig;
+use doppler::util::env_usize;
+use doppler::util::rng::Rng;
+
+fn main() {
+    banner(
+        "Rollout scaling — parallel Stage II simulation throughput",
+        "DESIGN.md §Rollout (systems extension; no paper analog)",
+    );
+    let episodes = env_usize("DOPPLER_ROLLOUT_EPISODES", 48);
+    let reps = env_usize("DOPPLER_SIM_REPS", rollout::DEFAULT_SIM_REPS).max(1);
+    let nodes = env_usize("DOPPLER_ROLLOUT_NODES", 600);
+    let cores = rollout::available_threads();
+
+    let g = synthetic_layered(nodes, 7);
+    let topo = DeviceTopology::p100x4();
+    let cfg = SimConfig::new(topo.clone());
+    let mut rng = Rng::new(11);
+    let assignments: Vec<Assignment> = (0..episodes)
+        .map(|_| random_assignment(&g, topo.n(), &mut rng))
+        .collect();
+    println!(
+        "workload: {} ({} nodes, {} edges), {} episodes x {} replicates, {} cores",
+        g.name,
+        g.n(),
+        g.m(),
+        episodes,
+        reps,
+        cores
+    );
+
+    // serial reference: rewards every thread count must reproduce exactly
+    let reference = rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, 1);
+
+    let mut table = Table::new(
+        "Rollout scaling (episodes/sec, higher is better)",
+        &["THREADS", "EPISODES/SEC", "SPEEDUP", "DETERMINISTIC"],
+    );
+    let mut base_eps = 0.0f64;
+    let mut eps_at = std::collections::BTreeMap::new();
+    for threads in [1usize, 2, 4, 8] {
+        // warmup + best-of-3 wall clock
+        let _ = rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, threads);
+        let mut best = f64::INFINITY;
+        let mut rewards = Vec::new();
+        for _ in 0..3 {
+            let t0 = Instant::now();
+            rewards = rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, threads);
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        let eps = episodes as f64 / best;
+        eps_at.insert(threads, eps);
+        if threads == 1 {
+            base_eps = eps;
+        }
+        let bitwise = rewards == reference;
+        assert!(bitwise, "threads={threads}: rewards diverged from serial");
+        table.row(vec![
+            format!("{threads}"),
+            format!("{eps:.1}"),
+            format!("{:.2}x", eps / base_eps),
+            "yes (bitwise)".to_string(),
+        ]);
+    }
+    table.emit(Some(std::path::Path::new("runs/rollout_scaling.csv")));
+
+    let four = eps_at.get(&4).copied().unwrap_or(0.0);
+    println!(
+        "4-thread speedup: {:.2}x {}",
+        four / base_eps,
+        if cores < 4 {
+            "(machine has < 4 cores; target >= 2x needs >= 4)"
+        } else if four / base_eps >= 2.0 {
+            "-- meets the >= 2x acceptance target"
+        } else {
+            "-- BELOW the >= 2x acceptance target"
+        }
+    );
+}

@@ -29,6 +29,18 @@ pub fn bench_episodes() -> usize {
     crate::util::env_usize("DOPPLER_EPISODES", 150)
 }
 
+/// Rollout worker threads for benches and the evaluation harness:
+/// `DOPPLER_ROLLOUT_THREADS` overrides, default = available cores. The
+/// deterministic rollout engine guarantees identical results at any
+/// thread count, so this only changes wall-clock.
+pub fn rollout_threads() -> usize {
+    crate::util::env_usize(
+        "DOPPLER_ROLLOUT_THREADS",
+        crate::rollout::available_threads(),
+    )
+    .max(1)
+}
+
 /// Workload filter: `DOPPLER_WORKLOADS=chainmm,ffnn` restricts the
 /// per-table workload sweeps.
 pub fn bench_workloads() -> Vec<String> {

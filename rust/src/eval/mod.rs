@@ -14,7 +14,7 @@ use crate::graph::{Assignment, Graph};
 use crate::heuristics::{self, critical_path_once, enumerative_optimizer};
 use crate::policy::{Method, PolicyNets};
 use crate::sim::topology::DeviceTopology;
-use crate::sim::{simulate, SimConfig};
+use crate::sim::SimConfig;
 use crate::train::{Stages, TrainConfig, Trainer};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
@@ -81,6 +81,10 @@ pub struct EvalCtx<'a> {
     pub enforce_memory: bool,
     /// Evaluation repetitions on the engine (paper: 10).
     pub eval_reps: usize,
+    /// Parallel rollout configuration, inherited by trained methods and
+    /// by simulator-based table generation. Thread count never changes
+    /// results (deterministic fan-out; see `rollout`).
+    pub rollout: crate::rollout::RolloutCfg,
 }
 
 impl<'a> EvalCtx<'a> {
@@ -93,6 +97,10 @@ impl<'a> EvalCtx<'a> {
             seed: 0,
             enforce_memory: false,
             eval_reps: 10,
+            rollout: crate::rollout::RolloutCfg {
+                threads: crate::bench_util::rollout_threads(),
+                sim_reps: crate::rollout::DEFAULT_SIM_REPS,
+            },
         }
     }
 
@@ -171,6 +179,7 @@ fn train_method(id: MethodId, g: &Graph, nets: &PolicyNets, ctx: &EvalCtx) -> Re
     let mut cfg = TrainConfig::new(method, restrict(&ctx.topo, ctx.n_devices), ctx.n_devices);
     cfg.seed = ctx.seed;
     cfg.sim.enforce_memory = ctx.enforce_memory;
+    cfg.rollout = ctx.rollout;
     match id {
         MethodId::DopplerSel => cfg.force_teacher_plc = true, // learned SEL only
         MethodId::DopplerPlc => cfg.force_teacher_sel = true, // learned PLC only
@@ -225,14 +234,25 @@ pub fn restrict(topo: &DeviceTopology, n: usize) -> DeviceTopology {
 }
 
 /// Quick simulator-based mean makespan (ms) — used where the paper
-/// compares simulated numbers (Fig. 26, Table 6).
+/// compares simulated numbers (Fig. 26, Table 6). Replicates fan out
+/// over the default rollout thread pool; the result is deterministic in
+/// `seed` regardless of the thread count.
 pub fn sim_time_ms(g: &Graph, a: &Assignment, topo: &DeviceTopology, seed: u64, reps: usize) -> f64 {
+    sim_time_ms_par(g, a, topo, seed, reps, crate::bench_util::rollout_threads())
+}
+
+/// [`sim_time_ms`] with an explicit worker-thread count.
+pub fn sim_time_ms_par(
+    g: &Graph,
+    a: &Assignment,
+    topo: &DeviceTopology,
+    seed: u64,
+    reps: usize,
+    threads: usize,
+) -> f64 {
     let cfg = SimConfig::new(topo.clone());
     let mut rng = Rng::new(seed);
-    let total: f64 = (0..reps)
-        .map(|_| simulate(g, a, &cfg, &mut rng).makespan)
-        .sum();
-    total / reps as f64 * 1e3
+    crate::rollout::mean_exec_time(g, a, &cfg, &mut rng, reps, threads) * 1e3
 }
 
 #[cfg(test)]

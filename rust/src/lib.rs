@@ -27,6 +27,7 @@ pub mod features;
 pub mod graph;
 pub mod heuristics;
 pub mod policy;
+pub mod rollout;
 pub mod runtime;
 pub mod sim;
 pub mod train;

@@ -13,6 +13,13 @@
 //!               --scale {tiny|small|full}   --devices N
 //!               --topology {p100x4|v100x8|single}
 //!               --episodes N   --seed S   --out PATH
+//!               --rollout-threads N  simulation worker threads
+//!                   (default: DOPPLER_ROLLOUT_THREADS, else all cores;
+//!                   results are identical at any thread count — see
+//!                   DESIGN.md §Rollout)
+//!               --sim-reps R  simulator replicates per Stage II reward
+//!                   (also bounds per-reward parallelism; default 4)
+//!               --engine-reps R  engine executions per Stage III reward
 
 use anyhow::{bail, Context, Result};
 
@@ -56,7 +63,33 @@ fn main() {
 
 const HELP: &str = "doppler — dual-policy device assignment (paper reproduction)
   compare | train | evaluate | visualize | calibrate | simfit | info
-  see rust/src/main.rs header for flags";
+  common flags:
+    --workload {chainmm|ffnn|llama-block|llama-layer}
+    --scale {tiny|small|full}  --devices N  --topology {p100x4|v100x8|single}
+    --episodes N  --seed S  --out PATH
+    --rollout-threads N   simulation worker threads (default:
+                          DOPPLER_ROLLOUT_THREADS, else all cores;
+                          deterministic: any thread count, same results)
+    --sim-reps R          simulator replicates per Stage II reward (also
+                          bounds per-reward parallelism; default 4)
+    --engine-reps R       engine executions per Stage III reward (train)
+  see rust/src/main.rs header for the full flag list";
+
+/// Parse the shared `--rollout-threads` / `--sim-reps` flags. The
+/// fallback honors `DOPPLER_ROLLOUT_THREADS` (like the benches and
+/// `EvalCtx::new`) before defaulting to all cores.
+fn rollout_cfg(args: &Args) -> doppler::rollout::RolloutCfg {
+    let mut ro = doppler::rollout::RolloutCfg::with_threads(
+        args.usize_or("rollout-threads", doppler::bench_util::rollout_threads()),
+    );
+    // Note: a Stage II reward fans out at most `sim_reps` simulations
+    // (episodes are sequential: each updates the policy), so raising
+    // --rollout-threads beyond --sim-reps only helps batched/eval paths.
+    ro.sim_reps = args
+        .usize_or("sim-reps", doppler::rollout::DEFAULT_SIM_REPS)
+        .max(1);
+    ro
+}
 
 fn load_graph(args: &Args) -> Result<Graph> {
     let name = args.str_or("workload", "chainmm");
@@ -94,6 +127,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let mut ctx = EvalCtx::new(nets.as_ref(), topo, n_devices);
     ctx.episodes = args.usize_or("episodes", ctx.episodes);
     ctx.seed = args.u64_or("seed", 0);
+    ctx.rollout = rollout_cfg(args);
 
     let methods: Vec<MethodId> = match args.get("methods") {
         Some(list) => list
@@ -148,6 +182,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let sub = doppler::eval::restrict(&topo, n_devices);
     let mut cfg = TrainConfig::new(method, sub.clone(), n_devices);
     cfg.seed = args.u64_or("seed", 0);
+    cfg.rollout = rollout_cfg(args);
+    cfg.engine_reps = args.usize_or("engine-reps", cfg.engine_reps).max(1);
     let budget = args.usize_or("episodes", 400);
     let stages = Stages::budget(budget);
     let engine_cfg = EngineConfig::new(sub);
@@ -192,6 +228,7 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
     let mut ctx = EvalCtx::new(nets.as_ref(), topo, n_devices);
     ctx.episodes = args.usize_or("episodes", ctx.episodes);
     ctx.seed = args.u64_or("seed", 0);
+    ctx.rollout = rollout_cfg(args);
     let id = parse_method(&args.str_or("method", "critical-path"))?;
     let r = run_method(id, &g, &ctx)?;
     println!(
@@ -211,6 +248,7 @@ fn cmd_visualize(args: &Args) -> Result<()> {
     let mut ctx = EvalCtx::new(nets.as_ref(), topo.clone(), n_devices);
     ctx.episodes = args.usize_or("episodes", 200);
     ctx.eval_reps = 3;
+    ctx.rollout = rollout_cfg(args);
     let id = parse_method(&args.str_or("method", "enum-opt"))?;
     let r = run_method(id, &g, &ctx)?;
 

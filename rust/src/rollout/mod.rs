@@ -1,0 +1,322 @@
+//! Deterministic parallel rollout engine — the Stage II throughput
+//! subsystem (DESIGN.md §Rollout).
+//!
+//! The trainer's wall-clock is dominated by work-conserving simulations:
+//! every Stage II episode needs `ExecTime(A)` replicates and every
+//! evaluation table re-simulates assignments dozens of times. This module
+//! fans those simulations out over `std::thread::scope` workers while
+//! keeping results **bit-identical** to the serial path:
+//!
+//! - **Stream-keyed RNGs.** Every unit of work gets its own generator,
+//!   derived up front on the leader thread with [`Rng::fork`] keyed by the
+//!   unit index (for Stage II: the flattened `(episode, replicate)`
+//!   index). Worker scheduling can therefore never perturb the sampled
+//!   jitter — a replicate draws the same lognormal sequence whether it
+//!   runs first on thread 7 or last on thread 0.
+//! - **Canonical-order merge.** Workers pull indices from an atomic work
+//!   queue but results are written back into their index slot, so sums
+//!   and means are reduced in the same order as the serial loop
+//!   (floating-point addition is not associative; order matters for
+//!   bit-identity).
+//! - **Leader/actor split.** Policy inference (PJRT handles are
+//!   single-threaded by design, see `policy/nets.rs`) stays on the leader
+//!   thread: the leader materializes each episode's assignment — the
+//!   CPU-side snapshot of all logits/ε-greedy decisions — and workers
+//!   only consume `(&Graph, &Assignment, Rng)` work items.
+//!
+//! The determinism contract is enforced by
+//! `tests/prop_invariants.rs::prop_rollout_parallel_matches_serial`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::graph::{Assignment, Graph};
+use crate::sim::{simulate, SimConfig, SimResult};
+use crate::util::rng::Rng;
+
+/// Rollout parallelism configuration, threaded through the trainer, the
+/// evaluation harness, and the CLI (`--rollout-threads N`).
+#[derive(Clone, Copy, Debug)]
+pub struct RolloutCfg {
+    /// Worker threads for simulation fan-out (1 = serial).
+    pub threads: usize,
+    /// Simulator replicates per Stage II reward (`mean ExecTime`).
+    pub sim_reps: usize,
+}
+
+impl RolloutCfg {
+    /// Serial reference configuration: one thread, one replicate.
+    pub fn serial() -> RolloutCfg {
+        RolloutCfg {
+            threads: 1,
+            sim_reps: 1,
+        }
+    }
+
+    /// `threads` workers, replicate count untouched (`sim_reps = 1`, so
+    /// `with_threads(1)` is exactly [`RolloutCfg::serial`]). `threads`
+    /// is a pure wall-clock knob; `sim_reps` changes rewards and must be
+    /// raised explicitly. Callers that want "all cores, env-overridable"
+    /// should size `threads` with `bench_util::rollout_threads()`
+    /// (honors `DOPPLER_ROLLOUT_THREADS`).
+    pub fn with_threads(threads: usize) -> RolloutCfg {
+        RolloutCfg {
+            threads: threads.max(1),
+            sim_reps: 1,
+        }
+    }
+}
+
+impl Default for RolloutCfg {
+    fn default() -> RolloutCfg {
+        RolloutCfg::serial()
+    }
+}
+
+/// Harness/CLI default for Stage II simulator replicates per reward
+/// (the paper trains against a mean over jittered `ExecTime` draws; 4
+/// keeps reward variance low without starving small machines). Library
+/// constructors ([`RolloutCfg::serial`], [`RolloutCfg::with_threads`])
+/// stay at 1 replicate — `sim_reps` changes rewards and is never
+/// raised implicitly.
+pub const DEFAULT_SIM_REPS: usize = 4;
+
+/// Number of hardware threads available to this process.
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Deterministic parallel map with per-item RNG streams.
+///
+/// Item `i` receives a generator forked from `base` with stream key `i`;
+/// the forks happen serially on the caller thread **before** any worker
+/// starts, so the result is a pure function of `base`'s state and `n` —
+/// independent of `threads` and of scheduling order. Results are returned
+/// in item order.
+pub fn parallel_map_rng<T, F>(threads: usize, base: &mut Rng, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut Rng) -> T + Sync,
+{
+    let streams: Vec<Rng> = (0..n).map(|i| base.fork(i as u64)).collect();
+    run_indexed(threads, n, move |i| {
+        let mut rng = streams[i].clone();
+        f(i, &mut rng)
+    })
+}
+
+/// Deterministic parallel map without RNG streams, for work items that
+/// are pure functions of their index. Results in item order. (Not for
+/// engine-timed work: measured wall clock must stay serial — see
+/// [`mean_engine_time`].)
+pub fn parallel_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    run_indexed(threads, n, f)
+}
+
+/// Shared work-queue executor: workers pull indices from an atomic
+/// counter and results are merged back into index order.
+///
+/// Threads are scoped per call (spawned and joined here), trading a few
+/// tens of microseconds of spawn overhead per batch for zero shared
+/// state between calls. That is negligible for the intended work items
+/// (Full-scale simulations run ~ms each); for micro work — Tiny test
+/// graphs, single replicates — pass `threads = 1` (the trainer's
+/// default) and this degrades to a plain serial loop with no spawns.
+fn run_indexed<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = threads.max(1).min(n.max(1));
+    if workers <= 1 {
+        return (0..n).map(f).collect();
+    }
+
+    let next = AtomicUsize::new(0);
+    let per_worker: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                let next = &next;
+                let f = &f;
+                s.spawn(move || {
+                    let mut got: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        got.push((i, f(i)));
+                    }
+                    got
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("rollout worker panicked"))
+            .collect()
+    });
+
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for chunk in per_worker {
+        for (i, v) in chunk {
+            debug_assert!(slots[i].is_none(), "work item {i} produced twice");
+            slots[i] = Some(v);
+        }
+    }
+    slots
+        .into_iter()
+        .map(|v| v.expect("work item lost"))
+        .collect()
+}
+
+/// Simulate `reps` jittered replicates of one assignment. Replicate `r`
+/// uses the stream-`r` fork of `base`; the returned traces are in
+/// replicate order and bit-identical across thread counts.
+pub fn simulate_replicates(
+    g: &Graph,
+    a: &Assignment,
+    cfg: &SimConfig,
+    base: &mut Rng,
+    reps: usize,
+    threads: usize,
+) -> Vec<SimResult> {
+    parallel_map_rng(threads, base, reps, |_r, rng| simulate(g, a, cfg, rng))
+}
+
+/// Parallel `mean ExecTime`: mean makespan over `reps` jittered
+/// replicates, reduced in replicate order. With `threads == 1` this is
+/// exactly [`crate::sim::mean_exec_time`].
+pub fn mean_exec_time(
+    g: &Graph,
+    a: &Assignment,
+    cfg: &SimConfig,
+    base: &mut Rng,
+    reps: usize,
+    threads: usize,
+) -> f64 {
+    let total: f64 = simulate_replicates(g, a, cfg, base, reps, threads)
+        .iter()
+        .map(|r| r.makespan)
+        .sum();
+    total / reps.max(1) as f64
+}
+
+/// Stage II batch reward evaluation: given the leader-produced episode
+/// assignments (the policy/ε snapshot), evaluate every `(episode,
+/// replicate)` simulation as one work unit — stream key `e * reps + r` —
+/// and reduce each episode's replicates in order. Returns one mean
+/// `ExecTime` reward per episode.
+pub fn episode_rewards(
+    g: &Graph,
+    assignments: &[Assignment],
+    cfg: &SimConfig,
+    base: &mut Rng,
+    reps: usize,
+    threads: usize,
+) -> Vec<f64> {
+    let reps = reps.max(1);
+    let makespans = parallel_map_rng(threads, base, assignments.len() * reps, |u, rng| {
+        let e = u / reps;
+        simulate(g, &assignments[e], cfg, rng).makespan
+    });
+    makespans
+        .chunks(reps)
+        .map(|c| c.iter().sum::<f64>() / reps as f64)
+        .collect()
+}
+
+/// Mean real-engine makespan over `reps` executions — always serial.
+/// The engine measures wall-clock kernel durations, so concurrent reps
+/// would contend for cores and let the thread count leak into measured
+/// rewards, breaking the "threads never change results" contract;
+/// engine fidelity wins over throughput here.
+pub fn mean_engine_time(
+    g: &Graph,
+    a: &Assignment,
+    engine_cfg: &crate::engine::EngineConfig,
+    reps: usize,
+) -> f64 {
+    let reps = reps.max(1);
+    let total: f64 = (0..reps)
+        .map(|_| crate::engine::execute(g, a, engine_cfg).sim.makespan)
+        .sum();
+    total / reps as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::workloads::{chainmm, Scale};
+    use crate::sim::topology::DeviceTopology;
+
+    #[test]
+    fn parallel_map_rng_independent_of_thread_count() {
+        // the map result must be a pure function of (base state, n)
+        let reference: Vec<u64> = {
+            let mut base = Rng::new(99);
+            parallel_map_rng(1, &mut base, 37, |i, rng| rng.next_u64() ^ i as u64)
+        };
+        for threads in [2, 3, 4, 8, 64] {
+            let mut base = Rng::new(99);
+            let got = parallel_map_rng(threads, &mut base, 37, |i, rng| rng.next_u64() ^ i as u64);
+            assert_eq!(got, reference, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_map_rng_advances_base_identically() {
+        // the leader-side fork loop must leave `base` in the same state
+        // regardless of thread count, so subsequent draws line up
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        let _ = parallel_map_rng(1, &mut a, 10, |i, _| i);
+        let _ = parallel_map_rng(8, &mut b, 10, |i, _| i);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn parallel_map_handles_edge_sizes() {
+        let empty: Vec<usize> = parallel_map(4, 0, |i| i);
+        assert!(empty.is_empty());
+        let one = parallel_map(4, 1, |i| i * 10);
+        assert_eq!(one, vec![0]);
+        let many = parallel_map(3, 100, |i| i);
+        assert_eq!(many, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mean_exec_time_matches_sim_serial_reference() {
+        let g = chainmm(Scale::Tiny);
+        let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+        let cfg = SimConfig::new(DeviceTopology::p100x4());
+        let serial = crate::sim::mean_exec_time(&g, &a, &cfg, &mut Rng::new(7), 6);
+        for threads in [1, 2, 4] {
+            let par = mean_exec_time(&g, &a, &cfg, &mut Rng::new(7), 6, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn episode_rewards_match_per_episode_means() {
+        let g = chainmm(Scale::Tiny);
+        let cfg = SimConfig::new(DeviceTopology::p100x4());
+        let assignments: Vec<Assignment> = (0..5)
+            .map(|s| {
+                let mut r = Rng::new(40 + s);
+                crate::heuristics::random_assignment(&g, 4, &mut r)
+            })
+            .collect();
+        let serial = episode_rewards(&g, &assignments, &cfg, &mut Rng::new(3), 3, 1);
+        let par = episode_rewards(&g, &assignments, &cfg, &mut Rng::new(3), 3, 4);
+        assert_eq!(serial, par);
+        assert_eq!(serial.len(), 5);
+        assert!(serial.iter().all(|t| t.is_finite() && *t > 0.0));
+    }
+}

@@ -389,9 +389,20 @@ pub fn simulate(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng) -> Si
     result
 }
 
-/// Convenience: mean makespan over `reps` jittered runs.
+/// Convenience: mean makespan over `reps` jittered replicates.
+///
+/// Replicate `r` runs on the stream-`r` fork of `rng` (not on `rng`
+/// itself), which makes this the serial reference implementation of
+/// [`crate::rollout::mean_exec_time`]: the parallel version distributes
+/// the same forked streams over workers and reduces in replicate order,
+/// so both are bit-identical for any worker count.
 pub fn mean_exec_time(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng, reps: usize) -> f64 {
-    let total: f64 = (0..reps).map(|_| simulate(g, a, cfg, rng).makespan).sum();
+    let total: f64 = (0..reps)
+        .map(|r| {
+            let mut child = rng.fork(r as u64);
+            simulate(g, a, cfg, &mut child).makespan
+        })
+        .sum();
     total / reps.max(1) as f64
 }
 

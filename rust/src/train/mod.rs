@@ -21,7 +21,7 @@ use crate::policy::{
     run_episode, EpisodeCfg, GraphEncoding, Method, OptState, PolicyNets, Trajectory,
 };
 use crate::sim::topology::DeviceTopology;
-use crate::sim::{simulate, SimConfig};
+use crate::sim::SimConfig;
 use crate::util::rng::Rng;
 
 /// Linear schedule over episodes.
@@ -94,6 +94,13 @@ pub struct TrainConfig {
     /// CRITICAL PATH counterpart.
     pub force_teacher_sel: bool,
     pub force_teacher_plc: bool,
+    /// Parallel rollout: worker threads + Stage II simulator replicates
+    /// per reward. Thread count never changes results (see `rollout`);
+    /// `sim_reps` does (it defines the reward as a mean over jittered
+    /// `ExecTime` draws).
+    pub rollout: crate::rollout::RolloutCfg,
+    /// Real-engine executions averaged per Stage III reward.
+    pub engine_reps: usize,
 }
 
 impl TrainConfig {
@@ -125,6 +132,8 @@ impl TrainConfig {
             per_step_encode: false,
             force_teacher_sel: false,
             force_teacher_plc: false,
+            rollout: crate::rollout::RolloutCfg::serial(),
+            engine_reps: 1,
         }
     }
 }
@@ -457,21 +466,37 @@ impl<'a> Trainer<'a> {
         })
     }
 
-    /// Stage II: REINFORCE against the WC simulator.
+    /// Stage II: REINFORCE against the WC simulator. The reward is the
+    /// mean `ExecTime` over `rollout.sim_reps` jittered replicates,
+    /// fanned out across `rollout.threads` workers — the leader thread
+    /// runs the policy (PJRT is single-threaded by design) and workers
+    /// only consume the finished assignment. Thread count never changes
+    /// the trained policy: replicate RNG streams are forked per
+    /// `(episode, replicate)` on the leader and merged in order.
     pub fn stage2_sim(&mut self, episodes: usize) -> Result<()> {
         let sim_cfg = self.cfg.sim.clone();
+        let g = self.g;
+        let ro = self.cfg.rollout;
         for i in 0..episodes {
-            let mut f = |a: &Assignment, rng: &mut Rng| simulate(self.g, a, &sim_cfg, rng).makespan;
+            let mut f = |a: &Assignment, rng: &mut Rng| {
+                crate::rollout::mean_exec_time(g, a, &sim_cfg, rng, ro.sim_reps, ro.threads)
+            };
             self.rl_episode(i, episodes, 2, &mut f)?;
         }
         Ok(())
     }
 
-    /// Stage III: REINFORCE against the real engine.
+    /// Stage III: REINFORCE against the real engine (mean over
+    /// `engine_reps` executions; 1 by default). Engine rewards are
+    /// measured wall clock, so replicates run serially — rollout
+    /// threads never touch engine timing (see `rollout::mean_engine_time`).
     pub fn stage3_real(&mut self, episodes: usize, engine_cfg: &crate::engine::EngineConfig) -> Result<()> {
+        let g = self.g;
+        let reps = self.cfg.engine_reps;
         for i in 0..episodes {
-            let mut f =
-                |a: &Assignment, _rng: &mut Rng| crate::engine::execute(self.g, a, engine_cfg).sim.makespan;
+            let mut f = |a: &Assignment, _rng: &mut Rng| {
+                crate::rollout::mean_engine_time(g, a, engine_cfg, reps)
+            };
             self.rl_episode(i, episodes, 3, &mut f)?;
         }
         Ok(())

@@ -1,0 +1,186 @@
+//! Golden-trace regression: the deterministic work-conserving schedule of
+//! CHAINMM(Tiny) under `SimConfig::deterministic` (zero jitter, FIFO
+//! choose) is pinned event-by-event in a committed JSON fixture, so any
+//! future scheduler change that silently shifts `ExecTime` — reordered
+//! task enumeration, cost-model edits, heap tie-break changes — fails
+//! loudly here instead of quietly perturbing every training reward.
+//!
+//! Re-bless after an *intentional* scheduler change with either
+//!   cargo test -q --test golden_trace -- --ignored bless_golden_trace
+//! or `python3 tools/gen_golden_trace.py` (an independent port of the
+//! deterministic simulator; both produce the same trace).
+
+use doppler::graph::workloads::{chainmm, Scale};
+use doppler::graph::Graph;
+use doppler::sim::topology::DeviceTopology;
+use doppler::sim::{simulate, SimConfig, SimResult};
+use doppler::util::json::{self, Json};
+use doppler::util::rng::Rng;
+
+const FIXTURE: &str = concat!(
+    env!("CARGO_MANIFEST_DIR"),
+    "/tests/fixtures/golden_trace_chainmm_tiny.json"
+);
+
+fn run_reference() -> (Graph, SimResult) {
+    let g = chainmm(Scale::Tiny);
+    let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+    let cfg = SimConfig::deterministic(DeviceTopology::p100x4());
+    // deterministic + FIFO never consumes the RNG; seed 0 documents that
+    let r = simulate(&g, &a, &cfg, &mut Rng::new(0));
+    (g, r)
+}
+
+/// Relative comparison for times that should be bit-identical; the
+/// tolerance only absorbs decimal serialization, not scheduling drift.
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-9 * a.abs().max(b.abs()) + 1e-15
+}
+
+fn field(row: &Json, i: usize) -> f64 {
+    row.as_arr().expect("fixture row is an array")[i]
+        .as_f64()
+        .expect("fixture cell is a number")
+}
+
+#[test]
+fn golden_trace_replays_event_by_event() {
+    let text = std::fs::read_to_string(FIXTURE)
+        .unwrap_or_else(|e| panic!("missing fixture {FIXTURE}: {e} (see module docs to bless)"));
+    let fx = json::parse(&text).expect("fixture parses");
+
+    let (g, r) = run_reference();
+    assert_eq!(fx.get("n_nodes").as_usize(), Some(g.n()), "graph shape changed");
+    assert_eq!(fx.get("n_edges").as_usize(), Some(g.m()), "graph shape changed");
+
+    // scalar summary first: cheapest signal when something moved
+    let makespan = fx.get("makespan").as_f64().unwrap();
+    assert!(
+        close(r.makespan, makespan),
+        "makespan drifted: got {} fixture {}",
+        r.makespan,
+        makespan
+    );
+    let bytes = fx.get("bytes_moved").as_f64().unwrap();
+    assert!(
+        close(r.bytes_moved, bytes),
+        "bytes_moved drifted: got {} fixture {}",
+        r.bytes_moved,
+        bytes
+    );
+
+    // exec events, in completion order: [node, device, start, end]
+    let execs = fx.get("execs").as_arr().expect("execs array");
+    assert_eq!(r.execs.len(), execs.len(), "exec event count changed");
+    for (i, (got, want)) in r.execs.iter().zip(execs).enumerate() {
+        assert_eq!(got.node as f64, field(want, 0), "exec {i}: node");
+        assert_eq!(got.device as f64, field(want, 1), "exec {i}: device");
+        assert!(
+            close(got.start, field(want, 2)),
+            "exec {i} (node {}): start {} != {}",
+            got.node,
+            got.start,
+            field(want, 2)
+        );
+        assert!(
+            close(got.end, field(want, 3)),
+            "exec {i} (node {}): end {} != {}",
+            got.node,
+            got.end,
+            field(want, 3)
+        );
+    }
+
+    // transfer events, in completion order: [node, from, to, start, end]
+    let transfers = fx.get("transfers").as_arr().expect("transfers array");
+    assert_eq!(r.transfers.len(), transfers.len(), "transfer event count changed");
+    for (i, (got, want)) in r.transfers.iter().zip(transfers).enumerate() {
+        assert_eq!(got.node as f64, field(want, 0), "transfer {i}: node");
+        assert_eq!(got.from as f64, field(want, 1), "transfer {i}: from");
+        assert_eq!(got.to as f64, field(want, 2), "transfer {i}: to");
+        assert!(
+            close(got.start, field(want, 3)),
+            "transfer {i} (node {}): start {} != {}",
+            got.node,
+            got.start,
+            field(want, 3)
+        );
+        assert!(
+            close(got.end, field(want, 4)),
+            "transfer {i} (node {}): end {} != {}",
+            got.node,
+            got.end,
+            field(want, 4)
+        );
+    }
+}
+
+/// The deterministic trace must also be independent of the seed (zero
+/// jitter + FIFO never touch the RNG) — the precondition that makes a
+/// single committed fixture meaningful.
+#[test]
+fn deterministic_trace_ignores_seed() {
+    let g = chainmm(Scale::Tiny);
+    let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+    let cfg = SimConfig::deterministic(DeviceTopology::p100x4());
+    let r1 = simulate(&g, &a, &cfg, &mut Rng::new(0));
+    let r2 = simulate(&g, &a, &cfg, &mut Rng::new(0xDEADBEEF));
+    assert_eq!(r1.makespan, r2.makespan);
+    assert_eq!(r1.execs.len(), r2.execs.len());
+    for (x, y) in r1.execs.iter().zip(&r2.execs) {
+        assert_eq!((x.node, x.device, x.start, x.end), (y.node, y.device, y.start, y.end));
+    }
+    for (x, y) in r1.transfers.iter().zip(&r2.transfers) {
+        assert_eq!((x.node, x.from, x.to), (y.node, y.from, y.to));
+        assert_eq!((x.start, x.end), (y.start, y.end));
+    }
+}
+
+/// Rewrite the fixture from a live run. `#[ignore]`d: run explicitly
+/// after an intentional scheduler change, then commit the diff.
+#[test]
+#[ignore]
+fn bless_golden_trace() {
+    let (g, r) = run_reference();
+    let execs: Vec<Json> = r
+        .execs
+        .iter()
+        .map(|e| {
+            Json::Arr(vec![
+                json::num(e.node as f64),
+                json::num(e.device as f64),
+                json::num(e.start),
+                json::num(e.end),
+            ])
+        })
+        .collect();
+    let transfers: Vec<Json> = r
+        .transfers
+        .iter()
+        .map(|t| {
+            Json::Arr(vec![
+                json::num(t.node as f64),
+                json::num(t.from as f64),
+                json::num(t.to as f64),
+                json::num(t.start),
+                json::num(t.end),
+            ])
+        })
+        .collect();
+    let fx = json::obj(vec![
+        ("workload", json::s("chainmm")),
+        ("scale", json::s("tiny")),
+        ("topology", json::s("p100x4")),
+        ("sim_config", json::s("deterministic+fifo")),
+        ("assignment", json::s("node_id mod 4")),
+        ("seed", json::num(0.0)),
+        ("n_nodes", json::num(g.n() as f64)),
+        ("n_edges", json::num(g.m() as f64)),
+        ("makespan", json::num(r.makespan)),
+        ("bytes_moved", json::num(r.bytes_moved)),
+        ("execs", Json::Arr(execs)),
+        ("transfers", Json::Arr(transfers)),
+    ]);
+    std::fs::write(FIXTURE, fx.to_string()).expect("writing fixture");
+    eprintln!("blessed {FIXTURE}");
+}

@@ -10,9 +10,10 @@ use doppler::graph::{Assignment, Graph};
 use doppler::heuristics::{
     check_assignment, critical_path_once, enumerative_optimizer, random_assignment, round_robin,
 };
+use doppler::rollout;
 use doppler::sim::bulksync::bulksync_exec;
 use doppler::sim::topology::DeviceTopology;
-use doppler::sim::{simulate, Choose, SimConfig};
+use doppler::sim::{simulate, Choose, SimConfig, SimResult};
 use doppler::util::rng::Rng;
 
 fn random_graph(seed: u64) -> Graph {
@@ -234,6 +235,161 @@ fn prop_feature_ordering_scale_invariant() {
         let ks = small.nodes[argmax(&fs.b_level)].kind;
         let kb = big.nodes[argmax(&fb.b_level)].kind;
         assert_eq!(ks.tag(), kb.tag(), "{name}: critical path moved between op kinds");
+    }
+}
+
+/// Work conservation, checked from the trace: no execution unit idles
+/// while it has a task whose inputs are present, and no channel idles
+/// while a transfer is waiting on it. Concretely, every event starts no
+/// later than the moment its resource was last free AND its dependencies
+/// were satisfied — any later start is an idle-while-ready violation of
+/// Algorithm 1's work-conserving guarantee.
+#[test]
+fn prop_work_conservation_no_idle_while_ready() {
+    for seed in 0..20u64 {
+        let g = random_graph(seed + 1100);
+        let mut rng = Rng::new(seed ^ 0x77);
+        let nd = 2 + rng.below(7);
+        let a = random_valid_assignment(&g, nd, &mut rng);
+        let mut cfg = SimConfig::new(doppler::eval::restrict(&DeviceTopology::v100x8(), nd));
+        // decorrelated indices: every (jitter, choose) pair occurs
+        cfg.jitter_sigma = [0.0, 0.1, 0.25][seed as usize % 3];
+        cfg.choose = [Choose::Fifo, Choose::DepthFirst, Choose::Random][(seed as usize / 3) % 3];
+        let r = simulate(&g, &a, &cfg, &mut rng);
+
+        // availability time of node v's output on device d
+        let mut avail = std::collections::HashMap::new();
+        for e in &r.execs {
+            avail.insert((e.node, e.device), e.end);
+        }
+        for t in &r.transfers {
+            avail.insert((t.node, t.to), t.end);
+        }
+        let ready_on = |v: usize, d: usize| -> f64 {
+            g.preds[v]
+                .iter()
+                .filter(|&&p| !g.preds[p].is_empty())
+                .map(|&p| *avail.get(&(p, d)).expect("dependency never arrived"))
+                .fold(0.0f64, f64::max)
+        };
+
+        // execution units: walk each device's exec timeline in order
+        let mut by_dev: Vec<Vec<&doppler::sim::ExecEvent>> = vec![Vec::new(); nd];
+        for e in &r.execs {
+            by_dev[e.device].push(e);
+        }
+        for dev in by_dev.iter_mut() {
+            dev.sort_by(|x, y| x.start.partial_cmp(&y.start).unwrap());
+            let mut free_at = 0.0f64;
+            for e in dev.iter() {
+                let ready = ready_on(e.node, e.device);
+                let must_start_by = free_at.max(ready);
+                assert!(
+                    e.start <= must_start_by + 1e-9,
+                    "seed {seed}: device {} idled {:.3e}s while node {} was ready \
+                     (start {:.6e}, free {:.6e}, ready {:.6e})",
+                    e.device,
+                    e.start - must_start_by,
+                    e.node,
+                    e.start,
+                    free_at,
+                    ready
+                );
+                free_at = e.end;
+            }
+        }
+
+        // channels: a transfer is ready the moment its producer executed
+        let mut by_chan: Vec<Vec<&doppler::sim::TransferEvent>> = vec![Vec::new(); nd * nd];
+        for t in &r.transfers {
+            by_chan[t.from * nd + t.to].push(t);
+        }
+        for chan in by_chan.iter_mut() {
+            chan.sort_by(|x, y| x.start.partial_cmp(&y.start).unwrap());
+            let mut free_at = 0.0f64;
+            for t in chan.iter() {
+                let produced = *avail
+                    .get(&(t.node, t.from))
+                    .expect("transferred a result that never executed");
+                let must_start_by = free_at.max(produced);
+                assert!(
+                    t.start <= must_start_by + 1e-9,
+                    "seed {seed}: channel {}->{} idled while node {}'s result waited",
+                    t.from,
+                    t.to,
+                    t.node
+                );
+                free_at = t.end;
+            }
+        }
+    }
+}
+
+fn assert_same_trace(x: &SimResult, y: &SimResult, ctx: &str) {
+    assert_eq!(x.makespan, y.makespan, "{ctx}: makespan");
+    assert_eq!(x.bytes_moved, y.bytes_moved, "{ctx}: bytes_moved");
+    assert_eq!(x.execs.len(), y.execs.len(), "{ctx}: exec count");
+    for (i, (a, b)) in x.execs.iter().zip(&y.execs).enumerate() {
+        assert_eq!(
+            (a.node, a.device, a.start, a.end),
+            (b.node, b.device, b.start, b.end),
+            "{ctx}: exec event {i}"
+        );
+    }
+    assert_eq!(x.transfers.len(), y.transfers.len(), "{ctx}: transfer count");
+    for (i, (a, b)) in x.transfers.iter().zip(&y.transfers).enumerate() {
+        assert_eq!(
+            (a.node, a.from, a.to, a.start, a.end),
+            (b.node, b.from, b.to, b.start, b.end),
+            "{ctx}: transfer event {i}"
+        );
+    }
+}
+
+/// Parallel-vs-serial determinism: the rollout engine produces
+/// bit-identical rewards AND traces at any worker count, for randomized
+/// seeds, graphs, jitter levels, and device counts — the contract that
+/// makes `--rollout-threads` a pure wall-clock knob.
+#[test]
+fn prop_rollout_parallel_matches_serial() {
+    for seed in 0..12u64 {
+        let g = random_graph(seed + 1300);
+        let mut rng = Rng::new(seed ^ 0x5151);
+        let nd = 2 + rng.below(7);
+        let a = random_valid_assignment(&g, nd, &mut rng);
+        let mut cfg = SimConfig::new(doppler::eval::restrict(&DeviceTopology::v100x8(), nd));
+        cfg.jitter_sigma = [0.05, 0.15, 0.3][seed as usize % 3];
+        let reps = 1 + (seed as usize % 4);
+
+        // replicate traces: serial reference vs every worker count
+        let serial = rollout::simulate_replicates(&g, &a, &cfg, &mut Rng::new(seed), reps, 1);
+        for threads in [2usize, 4, 8] {
+            let par = rollout::simulate_replicates(&g, &a, &cfg, &mut Rng::new(seed), reps, threads);
+            assert_eq!(serial.len(), par.len());
+            for (r, (x, y)) in serial.iter().zip(&par).enumerate() {
+                assert_same_trace(x, y, &format!("seed {seed} threads {threads} rep {r}"));
+            }
+        }
+
+        // scalar rewards: rollout::mean_exec_time == sim::mean_exec_time
+        let reference = doppler::sim::mean_exec_time(&g, &a, &cfg, &mut Rng::new(seed + 9), reps);
+        for threads in [1usize, 2, 4, 8] {
+            let got =
+                rollout::mean_exec_time(&g, &a, &cfg, &mut Rng::new(seed + 9), reps, threads);
+            assert_eq!(got, reference, "seed {seed} threads {threads}: reward drifted");
+        }
+
+        // batched Stage II rewards over several episode assignments
+        let assignments: Vec<Assignment> = (0..4)
+            .map(|e| random_valid_assignment(&g, nd, &mut Rng::new(seed * 100 + e)))
+            .collect();
+        let serial_r =
+            rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(seed), reps, 1);
+        for threads in [2usize, 8] {
+            let par_r =
+                rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(seed), reps, threads);
+            assert_eq!(serial_r, par_r, "seed {seed} threads {threads}: batch rewards");
+        }
     }
 }
 

@@ -1,0 +1,162 @@
+//! Minimal, API-compatible subset of the `anyhow` crate, vendored because
+//! the offline build image cannot reach crates.io. Covers exactly what
+//! this repository uses: [`Error`], [`Result`], the [`Context`] trait,
+//! and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Like the real crate, [`Error`] deliberately does **not** implement
+//! `std::error::Error`, which is what makes the blanket
+//! `From<E: std::error::Error>` conversion coherent.
+
+use std::fmt;
+
+/// A string-backed error value with optional context frames.
+pub struct Error {
+    /// Context frames, outermost first, then the root message last.
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            chain: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap with an outer context frame.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` renders the whole chain, like anyhow's `{:#}`.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// `anyhow::Result<T>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        // `{:#}` preserves the full chain when E is itself an `Error`.
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{e:#}")).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")
+            .context("reading config")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        let rendered = format!("{e:#}");
+        assert!(rendered.starts_with("reading config: "), "{rendered}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {} at {}", "token", 3);
+        assert_eq!(format!("{e}"), "bad token at 3");
+
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert!(f(3).is_ok());
+        assert!(f(5).is_err());
+        assert!(f(50).is_err());
+    }
+
+    #[test]
+    fn alternate_display_shows_chain() {
+        let e = Error::msg("root cause").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+}

@@ -1,0 +1,240 @@
+//! Compile-time stub for the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The offline build image ships neither the `xla` crate nor
+//! libxla_extension, so this vendored crate provides the exact API surface
+//! `doppler::runtime` and `doppler::policy::nets` compile against, with
+//! [`PjRtClient::cpu`] returning an error at run time. Everything that
+//! needs the policy networks (`PolicyNets::load*`) therefore fails with a
+//! clear message and the callers skip gracefully — the simulator,
+//! engine, heuristics, rollout, and trainer plumbing stay fully testable.
+//!
+//! Dropping a real `xla` crate (with libxla_extension) in place of this
+//! stub re-enables the PJRT path without touching `doppler` itself; the
+//! host types and [`Literal`] layout match xla_extension 0.5.x.
+
+#![allow(dead_code)]
+
+use std::fmt;
+
+/// Error type for every fallible stub operation.
+#[derive(Debug, Clone)]
+pub struct XlaError {
+    msg: String,
+}
+
+impl XlaError {
+    pub fn new<M: fmt::Display>(msg: M) -> XlaError {
+        XlaError {
+            msg: msg.to_string(),
+        }
+    }
+}
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+const STUB_MSG: &str = "PJRT runtime unavailable: this build uses the vendored xla stub \
+     (no libxla_extension in the offline image); policy-network paths are disabled";
+
+/// Element types a [`Literal`] can hold (only what doppler exchanges).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Sealed-ish helper for the generic `Literal::vec1` / `Literal::to_vec`.
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn to_bits_vec(xs: &[Self]) -> Vec<u8>;
+    fn from_bits(bytes: &[u8]) -> Vec<Self>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn to_bits_vec(xs: &[Self]) -> Vec<u8> {
+        xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+    fn from_bits(bytes: &[u8]) -> Vec<Self> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn to_bits_vec(xs: &[Self]) -> Vec<u8> {
+        xs.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+    fn from_bits(bytes: &[u8]) -> Vec<Self> {
+        bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+/// A host tensor (or tuple of tensors): the literal interchange type.
+#[derive(Clone, Debug)]
+pub enum Literal {
+    Tensor {
+        ty: ElementType,
+        dims: Vec<i64>,
+        bytes: Vec<u8>,
+    },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal from a flat host slice.
+    pub fn vec1<T: NativeType>(xs: &[T]) -> Literal {
+        Literal::Tensor {
+            ty: T::TY,
+            dims: vec![xs.len() as i64],
+            bytes: T::to_bits_vec(xs),
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match self {
+            Literal::Tensor { ty, bytes, .. } => {
+                let want: i64 = dims.iter().product();
+                let have = (bytes.len() / 4) as i64;
+                if want != have {
+                    return Err(XlaError::new(format!(
+                        "reshape: {have} elements into dims {dims:?}"
+                    )));
+                }
+                Ok(Literal::Tensor {
+                    ty: *ty,
+                    dims: dims.to_vec(),
+                    bytes: bytes.clone(),
+                })
+            }
+            Literal::Tuple(_) => Err(XlaError::new("reshape on tuple literal")),
+        }
+    }
+
+    /// Flat host vector copy-out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match self {
+            Literal::Tensor { ty, bytes, .. } => {
+                if *ty != T::TY {
+                    return Err(XlaError::new("to_vec: element type mismatch"));
+                }
+                Ok(T::from_bits(bytes))
+            }
+            Literal::Tuple(_) => Err(XlaError::new("to_vec on tuple literal")),
+        }
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self {
+            Literal::Tuple(xs) => Ok(xs),
+            lit => Ok(vec![lit]),
+        }
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    /// Parse HLO text from a file. The stub only checks readability; the
+    /// failure point for stub builds is [`PjRtClient::cpu`].
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        std::fs::read_to_string(path)
+            .map_err(|e| XlaError::new(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { _priv: () })
+    }
+}
+
+/// An XLA computation handle (stub).
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client (stub: construction always fails, gating all callers).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(XlaError::new(STUB_MSG))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(XlaError::new(STUB_MSG))
+    }
+}
+
+/// Compiled executable (stub: unreachable — the client cannot be built).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<A: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[A],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(XlaError::new(STUB_MSG))
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(XlaError::new(STUB_MSG))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let l = Literal::vec1(&[-1i32, 7]);
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![-1, 7]);
+        assert!(l.to_vec::<f32>().is_err());
+    }
+
+    #[test]
+    fn client_is_gated() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}

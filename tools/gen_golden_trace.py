@@ -1,0 +1,288 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/fixtures/golden_trace_chainmm_tiny.json.
+
+A line-for-line port of the *deterministic* configuration of the Rust
+work-conserving simulator (rust/src/sim/mod.rs, SimConfig::deterministic:
+jitter_sigma = 0, Choose::Fifo) plus the CHAINMM(Tiny) graph builder
+(rust/src/graph/workloads/chainmm.rs via rust/src/graph/shard.rs).
+
+With zero jitter and FIFO task choice the simulator never consumes the
+RNG, so this port only has to mirror graph construction order, the cost
+model, and the event loop — all plain IEEE-754 double arithmetic in the
+same operation order, which reproduces the Rust trace bit-for-bit.
+
+The fixture pins the schedule of `simulate(chainmm(Tiny), v % 4,
+deterministic(p100x4))`; rust/tests/golden_trace.rs replays it
+event-by-event. To re-bless from the Rust side instead, run:
+
+    cargo test -q --test golden_trace -- --ignored bless_golden_trace
+"""
+
+import heapq
+import json
+import os
+
+# --- graph IR ---------------------------------------------------------------
+
+INPUT, MATMUL, STRAIGHT_EW, FORMATION = "input", "matmul", "straight_ew", "formation"
+
+
+class Graph:
+    def __init__(self):
+        self.kinds = []   # per-node kind tag
+        self.shapes = []  # per-node output shape
+        self.flops = []   # per-node FLOPs
+        self.names = []
+        self.edges = []   # (producer, consumer), insertion order
+        self._edge_set = set()
+
+    def add_node(self, kind, shape, flops, name):
+        self.kinds.append(kind)
+        self.shapes.append(shape)
+        self.flops.append(flops)
+        self.names.append(name)
+        return len(self.kinds) - 1
+
+    def add_edge(self, a, b):
+        if (a, b) not in self._edge_set:  # Graph::add_edge dedups
+            self._edge_set.add((a, b))
+            self.edges.append((a, b))
+
+    def n(self):
+        return len(self.kinds)
+
+    def freeze(self):
+        self.preds = [[] for _ in range(self.n())]
+        for a, b in self.edges:
+            self.preds[b].append(a)
+
+    def out_bytes(self, v):
+        p = 1
+        for d in self.shapes[v]:
+            p *= d
+        return 4.0 * p
+
+
+class Sharded:
+    def __init__(self, gr, gc, br, bc, ids):
+        self.gr, self.gc, self.br, self.bc, self.ids = gr, gc, br, bc, ids
+
+    def at(self, i, j):
+        return self.ids[i * self.gc + j]
+
+
+def sh_input(g, name, r, c, gr, gc):
+    br, bc = r // gr, c // gc
+    ids = []
+    for i in range(gr):
+        for j in range(gc):
+            ids.append(g.add_node(INPUT, [br, bc], 0.0, f"{name}[{i},{j}]"))
+    return Sharded(gr, gc, br, bc, ids)
+
+
+def sh_matmul(g, name, a, b):
+    assert a.gc == b.gr and a.bc == b.br
+    gr, gc, gk = a.gr, b.gc, a.gc
+    br, bc, bk = a.br, b.bc, a.bc
+    mm_flops = 2.0 * br * bk * bc
+    ids = []
+    for i in range(gr):
+        for j in range(gc):
+            partials = []
+            for k in range(gk):
+                mm = g.add_node(MATMUL, [br, bc], mm_flops, f"{name}.mm[{i},{j},{k}]")
+                g.add_edge(a.at(i, k), mm)
+                g.add_edge(b.at(k, j), mm)
+                partials.append(mm)
+            acc = partials[0]
+            for k in range(1, len(partials)):
+                add = g.add_node(
+                    STRAIGHT_EW, [br, bc], float(br * bc), f"{name}.agg[{i},{j},{k}]"
+                )
+                g.add_edge(acc, add)
+                g.add_edge(partials[k], add)
+                acc = add
+            form = g.add_node(
+                FORMATION, [br, bc], (br * bc) * 0.25, f"{name}.form[{i},{j}]"
+            )
+            g.add_edge(acc, form)
+            ids.append(form)
+    return Sharded(gr, gc, br, bc, ids)
+
+
+def sh_binary_add(g, name, a, b):
+    # Sharder::binary with ElemOp::Add: ew_flops weight 1.0
+    ids = []
+    for i in range(a.gr):
+        for j in range(a.gc):
+            v = g.add_node(
+                STRAIGHT_EW, [a.br, a.bc], float(a.br * a.bc), f"{name}[{i},{j}]"
+            )
+            g.add_edge(a.at(i, j), v)
+            g.add_edge(b.at(i, j), v)
+            ids.append(v)
+    return Sharded(a.gr, a.gc, a.br, a.bc, ids)
+
+
+def chainmm_tiny():
+    # chainmm_sized(32), grid 2x2 (rust/src/graph/workloads/chainmm.rs)
+    g = Graph()
+    n = 32
+    a = sh_input(g, "A", n, n, 2, 2)
+    b = sh_input(g, "B", n, n, 2, 2)
+    c = sh_input(g, "C", n, n, 2, 2)
+    d = sh_input(g, "D", n, n, 2, 2)
+    e = sh_input(g, "E", n, n, 2, 2)
+    ab = sh_matmul(g, "AB", a, b)
+    de = sh_matmul(g, "DE", d, e)
+    cde = sh_matmul(g, "CDE", c, de)
+    sh_binary_add(g, "out", ab, cde)
+    g.freeze()
+    return g
+
+
+# --- cost model (DeviceTopology::p100x4) ------------------------------------
+
+FLOPS_PER_SEC = 11.5e9
+BANDWIDTH = 1.2e9
+LATENCY_S = 40e-6
+LAUNCH_OVERHEAD_S = 8e-6
+
+KIND_EFFICIENCY = {MATMUL: 1.0, STRAIGHT_EW: 0.07, FORMATION: 0.04, INPUT: 1.0}
+
+
+def exec_time(g, v):
+    if g.kinds[v] == INPUT:
+        return 0.0
+    rate = FLOPS_PER_SEC * KIND_EFFICIENCY[g.kinds[v]]
+    return LAUNCH_OVERHEAD_S + g.flops[v] / rate
+
+
+def transfer_time(nbytes, a, b):
+    if a == b:
+        return 0.0
+    return LATENCY_S + nbytes / BANDWIDTH
+
+
+# --- deterministic WC simulator (sim/mod.rs, jitter=0, Fifo) ----------------
+
+def simulate(g, assign, nd):
+    n = g.n()
+    entry = [len(g.preds[v]) == 0 for v in range(n)]
+    all_mask = (1 << nd) - 1
+    present = [all_mask if entry[v] else 0 for v in range(n)]
+    executed = [entry[v] for v in range(n)]
+    exec_issued = [entry[v] for v in range(n)]
+    transfer_issued = [0] * n
+    exec_busy = [False] * nd
+    chan_busy = [[False] * nd for _ in range(nd)]
+
+    heap = []  # (time, seq, kind, payload, start)
+    seq = 0
+    t = 0.0
+    execs, transfers = [], []
+    bytes_moved = 0.0
+
+    while True:
+        # EnumTasks + work-conserving start loop: start ONE task per scan
+        while True:
+            startable = None
+            for v1, v2 in g.edges:
+                if entry[v1]:
+                    continue
+                to, frm = assign[v2], assign[v1]
+                if frm == to:
+                    continue
+                if (
+                    executed[v1]
+                    and (present[v1] >> to) & 1 == 0
+                    and (transfer_issued[v1] >> to) & 1 == 0
+                    and not chan_busy[frm][to]
+                ):
+                    startable = ("transfer", (v1, frm, to))
+                    break
+            if startable is None:
+                for v in range(n):
+                    if exec_issued[v]:
+                        continue
+                    d = assign[v]
+                    if exec_busy[d]:
+                        continue
+                    if all((present[p] >> d) & 1 == 1 for p in g.preds[v]):
+                        startable = ("exec", (v,))
+                        break
+            if startable is None:
+                break
+            kind, payload = startable
+            if kind == "exec":
+                (v,) = payload
+                d = assign[v]
+                dur = exec_time(g, v) * 1.0
+                exec_busy[d] = True
+                exec_issued[v] = True
+                seq += 1
+                heapq.heappush(heap, (t + dur, seq, kind, payload, t))
+            else:
+                v, frm, to = payload
+                nbytes = g.out_bytes(v)
+                dur = transfer_time(nbytes, frm, to) * 1.0
+                chan_busy[frm][to] = True
+                transfer_issued[v] |= 1 << to
+                bytes_moved += nbytes
+                seq += 1
+                heapq.heappush(heap, (t + dur, seq, kind, payload, t))
+
+        if not heap:
+            break
+        time, _, kind, payload, start = heapq.heappop(heap)
+        t = time
+        if kind == "exec":
+            (v,) = payload
+            d = assign[v]
+            executed[v] = True
+            present[v] |= 1 << d
+            exec_busy[d] = False
+            execs.append((v, d, start, t))
+        else:
+            v, frm, to = payload
+            present[v] |= 1 << to
+            chan_busy[frm][to] = False
+            transfers.append((v, frm, to, start, t))
+
+    return {"makespan": t, "bytes_moved": bytes_moved, "execs": execs, "transfers": transfers}
+
+
+def main():
+    g = chainmm_tiny()
+    assert g.n() == 72, g.n()
+    nd = 4
+    assign = [v % nd for v in range(g.n())]
+    r = simulate(g, assign, nd)
+    fixture = {
+        "workload": "chainmm",
+        "scale": "tiny",
+        "topology": "p100x4",
+        "sim_config": "deterministic+fifo",
+        "assignment": "node_id mod 4",
+        "seed": 0,
+        "n_nodes": g.n(),
+        "n_edges": len(g.edges),
+        "makespan": r["makespan"],
+        "bytes_moved": r["bytes_moved"],
+        "execs": [list(e) for e in r["execs"]],
+        "transfers": [list(t) for t in r["transfers"]],
+    }
+    out = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "rust", "tests", "fixtures", "golden_trace_chainmm_tiny.json",
+    )
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    with open(out, "w") as f:
+        json.dump(fixture, f, indent=1)
+        f.write("\n")
+    print(f"{out}: {len(r['execs'])} execs, {len(r['transfers'])} transfers, "
+          f"makespan {r['makespan'] * 1e3:.3f} ms")
+
+
+if __name__ == "__main__":
+    main()
