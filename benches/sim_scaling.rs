@@ -1,0 +1,176 @@
+//! Simulator throughput: graphs/sec and tasks/sec for the incremental
+//! ready-set engine vs the reference full-rescan engine, across graph
+//! sizes (ISSUE 2 / DESIGN.md §10).
+//!
+//! `ExecTime(A)` is the Stage II reward oracle — every candidate
+//! assignment costs `sim_reps` full simulations — so simulate()
+//! throughput bounds training throughput. The reference engine rescans
+//! all nodes and edges per scheduling decision (~O((N+E)·T) per run);
+//! the incremental engine touches O(degree) state per event, so the gap
+//! must widen with graph size. Acceptance target: >= 5x on the largest
+//! workload.
+//!
+//! Writes BENCH_sim.json at the repo root so future PRs can track the
+//! perf trajectory. Knobs: DOPPLER_SIM_BENCH_REPS (timed repetitions
+//! per cell, default 5), DOPPLER_SIM_BENCH_NODES (comma-separated
+//! synthetic sizes, default 150,400,1000,2500).
+
+use std::time::Instant;
+
+use doppler::bench_util::banner;
+use doppler::eval::tables::Table;
+use doppler::graph::workloads::{chainmm, synthetic_layered, Scale};
+use doppler::graph::{Assignment, Graph};
+use doppler::heuristics::random_assignment;
+use doppler::sim::topology::DeviceTopology;
+use doppler::sim::{simulate, Engine, SimConfig};
+use doppler::util::json::{self, Json};
+use doppler::util::{env_usize, rng::Rng};
+
+const OUT_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim.json");
+
+struct Cell {
+    workload: String,
+    nodes: usize,
+    edges: usize,
+    engine: &'static str,
+    graphs_per_sec: f64,
+    tasks_per_sec: f64,
+    ms_per_sim: f64,
+}
+
+/// Time `reps` simulations of `(g, a)` under `engine`; returns the cell
+/// plus the makespan (for the cross-engine identity check).
+fn bench_engine(
+    g: &Graph,
+    a: &Assignment,
+    engine: Engine,
+    reps: usize,
+) -> (Cell, f64) {
+    // Stage II's configuration: default jitter + FIFO choose
+    let cfg = SimConfig::new(DeviceTopology::p100x4()).with_engine(engine);
+    // warmup + task count (every rep schedules the identical task set;
+    // jitter only perturbs durations)
+    let warm = simulate(g, a, &cfg, &mut Rng::new(1).fork(0));
+    let tasks = warm.execs.len() + warm.transfers.len();
+
+    let t0 = Instant::now();
+    let mut last_makespan = 0.0;
+    for r in 0..reps {
+        // fresh forked stream per rep, same streams for both engines
+        let mut rng = Rng::new(1).fork(r as u64);
+        last_makespan = simulate(g, a, &cfg, &mut rng).makespan;
+    }
+    let secs = t0.elapsed().as_secs_f64().max(1e-12);
+    let cell = Cell {
+        workload: g.name.clone(),
+        nodes: g.n(),
+        edges: g.m(),
+        engine: match engine {
+            Engine::Incremental => "incremental",
+            Engine::Reference => "reference",
+        },
+        graphs_per_sec: reps as f64 / secs,
+        tasks_per_sec: (reps * tasks) as f64 / secs,
+        ms_per_sim: secs * 1e3 / reps as f64,
+    };
+    (cell, last_makespan)
+}
+
+fn main() {
+    banner(
+        "Simulator scaling — incremental vs reference ExecTime(A) throughput",
+        "ISSUE 2 perf target (systems extension; no paper analog)",
+    );
+    let reps = env_usize("DOPPLER_SIM_BENCH_REPS", 5).max(1);
+    let sizes: Vec<usize> = match std::env::var("DOPPLER_SIM_BENCH_NODES") {
+        Ok(v) if !v.is_empty() => v
+            .split(',')
+            .filter_map(|s| s.trim().parse().ok())
+            .collect(),
+        _ => vec![150, 400, 1000, 2500],
+    };
+
+    // paper workload first (fixed size), then the synthetic scaling sweep
+    let mut graphs: Vec<Graph> = vec![chainmm(Scale::Full)];
+    for &n in &sizes {
+        graphs.push(synthetic_layered(n, 7));
+    }
+
+    let mut table = Table::new(
+        "simulate() throughput (per-engine; higher is better)",
+        &[
+            "WORKLOAD", "NODES", "EDGES", "ENGINE", "GRAPHS/S", "TASKS/S", "MS/SIM", "SPEEDUP",
+        ],
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut largest_speedup = 0.0f64;
+    let mut largest_nodes = 0usize;
+    for g in &graphs {
+        let mut arng = Rng::new(99);
+        let a = random_assignment(g, 4, &mut arng);
+        let (inc, m_inc) = bench_engine(g, &a, Engine::Incremental, reps);
+        let (refr, m_ref) = bench_engine(g, &a, Engine::Reference, reps);
+        assert_eq!(
+            m_inc, m_ref,
+            "{}: engines diverged — fix correctness before trusting the bench",
+            g.name
+        );
+        let speedup = inc.graphs_per_sec / refr.graphs_per_sec.max(1e-12);
+        if g.n() >= largest_nodes {
+            largest_nodes = g.n();
+            largest_speedup = speedup;
+        }
+        for (cell, tag) in [(&inc, format!("{speedup:.2}x")), (&refr, "1.00x".into())] {
+            table.row(vec![
+                cell.workload.clone(),
+                format!("{}", cell.nodes),
+                format!("{}", cell.edges),
+                cell.engine.to_string(),
+                format!("{:.1}", cell.graphs_per_sec),
+                format!("{:.0}", cell.tasks_per_sec),
+                format!("{:.3}", cell.ms_per_sim),
+                tag,
+            ]);
+        }
+        cells.push(inc);
+        cells.push(refr);
+    }
+    table.emit(Some(std::path::Path::new("runs/sim_scaling.csv")));
+
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            json::obj(vec![
+                ("workload", json::s(&c.workload)),
+                ("nodes", json::num(c.nodes as f64)),
+                ("edges", json::num(c.edges as f64)),
+                ("engine", json::s(c.engine)),
+                ("graphs_per_sec", json::num(c.graphs_per_sec)),
+                ("tasks_per_sec", json::num(c.tasks_per_sec)),
+                ("ms_per_sim", json::num(c.ms_per_sim)),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("bench", json::s("sim_scaling")),
+        ("source", json::s("cargo bench --bench sim_scaling")),
+        ("config", json::s("p100x4, jitter 0.08, Choose::Fifo, random assignment")),
+        ("reps_per_cell", json::num(reps as f64)),
+        ("largest_nodes", json::num(largest_nodes as f64)),
+        ("speedup_largest", json::num(largest_speedup)),
+        ("target_speedup", json::num(5.0)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(OUT_JSON, doc.to_string() + "\n").expect("writing BENCH_sim.json");
+    println!("[perf snapshot written to {OUT_JSON}]");
+
+    println!(
+        "largest workload ({largest_nodes} nodes): {largest_speedup:.2}x {}",
+        if largest_speedup >= 5.0 {
+            "-- meets the >= 5x acceptance target"
+        } else {
+            "-- BELOW the >= 5x acceptance target"
+        }
+    );
+}

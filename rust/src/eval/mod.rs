@@ -85,6 +85,10 @@ pub struct EvalCtx<'a> {
     /// by simulator-based table generation. Thread count never changes
     /// results (deterministic fan-out; see `rollout`).
     pub rollout: crate::rollout::RolloutCfg,
+    /// Simulator task-enumeration engine for trained methods' Stage II
+    /// rewards. Engines are bitwise-identical (DESIGN.md §10), so this
+    /// is a wall-clock knob like `rollout.threads`.
+    pub sim_engine: crate::sim::Engine,
 }
 
 impl<'a> EvalCtx<'a> {
@@ -101,6 +105,7 @@ impl<'a> EvalCtx<'a> {
                 threads: crate::bench_util::rollout_threads(),
                 sim_reps: crate::rollout::DEFAULT_SIM_REPS,
             },
+            sim_engine: crate::sim::Engine::Incremental,
         }
     }
 
@@ -179,6 +184,7 @@ fn train_method(id: MethodId, g: &Graph, nets: &PolicyNets, ctx: &EvalCtx) -> Re
     let mut cfg = TrainConfig::new(method, restrict(&ctx.topo, ctx.n_devices), ctx.n_devices);
     cfg.seed = ctx.seed;
     cfg.sim.enforce_memory = ctx.enforce_memory;
+    cfg.sim.engine = ctx.sim_engine;
     cfg.rollout = ctx.rollout;
     match id {
         MethodId::DopplerSel => cfg.force_teacher_plc = true, // learned SEL only
@@ -235,13 +241,24 @@ pub fn restrict(topo: &DeviceTopology, n: usize) -> DeviceTopology {
 
 /// Quick simulator-based mean makespan (ms) — used where the paper
 /// compares simulated numbers (Fig. 26, Table 6). Replicates fan out
-/// over the default rollout thread pool; the result is deterministic in
-/// `seed` regardless of the thread count.
+/// over the default rollout thread pool with the default (incremental)
+/// engine; the result is deterministic in `seed` regardless of either
+/// knob.
 pub fn sim_time_ms(g: &Graph, a: &Assignment, topo: &DeviceTopology, seed: u64, reps: usize) -> f64 {
-    sim_time_ms_par(g, a, topo, seed, reps, crate::bench_util::rollout_threads())
+    sim_time_ms_par(
+        g,
+        a,
+        topo,
+        seed,
+        reps,
+        crate::bench_util::rollout_threads(),
+        crate::sim::Engine::Incremental,
+    )
 }
 
-/// [`sim_time_ms`] with an explicit worker-thread count.
+/// [`sim_time_ms`] with explicit worker-thread count and simulator
+/// engine — the escape hatch for checking numbers against the
+/// `Engine::Reference` oracle (DESIGN.md §10).
 pub fn sim_time_ms_par(
     g: &Graph,
     a: &Assignment,
@@ -249,8 +266,9 @@ pub fn sim_time_ms_par(
     seed: u64,
     reps: usize,
     threads: usize,
+    engine: crate::sim::Engine,
 ) -> f64 {
-    let cfg = SimConfig::new(topo.clone());
+    let cfg = SimConfig::new(topo.clone()).with_engine(engine);
     let mut rng = Rng::new(seed);
     crate::rollout::mean_exec_time(g, a, &cfg, &mut rng, reps, threads) * 1e3
 }

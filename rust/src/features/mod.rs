@@ -83,7 +83,11 @@ pub struct AssignState<'g> {
     pub assigned: Vec<usize>,
     /// Ready-set membership: unassigned nodes whose preds are all assigned.
     pub candidates: Vec<NodeId>,
-    in_candidates: Vec<bool>,
+    /// `cand_pos[v]` = index of `v` in `candidates` (`NOT_A_CANDIDATE`
+    /// when absent), so removal is O(1) instead of an O(|C|) scan —
+    /// `place` runs once per node per episode, making this the episode
+    /// hot path.
+    cand_pos: Vec<usize>,
     unassigned_preds: Vec<usize>,
     /// Estimated completion time per assigned node.
     pub est_end: Vec<f64>,
@@ -97,6 +101,9 @@ pub struct AssignState<'g> {
     pub step: usize,
 }
 
+/// Sentinel for [`AssignState::cand_pos`]: node is not a candidate.
+const NOT_A_CANDIDATE: usize = usize::MAX;
+
 impl<'g> AssignState<'g> {
     pub fn new(g: &'g Graph, topo: &'g DeviceTopology) -> AssignState<'g> {
         let nd = topo.n();
@@ -106,7 +113,7 @@ impl<'g> AssignState<'g> {
             topo,
             assigned: vec![usize::MAX; g.n()],
             candidates: Vec::new(),
-            in_candidates: vec![false; g.n()],
+            cand_pos: vec![NOT_A_CANDIDATE; g.n()],
             unassigned_preds,
             est_end: vec![0.0; g.n()],
             est_start: vec![0.0; g.n()],
@@ -115,7 +122,7 @@ impl<'g> AssignState<'g> {
             step: 0,
         };
         for v in g.entry_nodes() {
-            st.in_candidates[v] = true;
+            st.cand_pos[v] = st.candidates.len();
             st.candidates.push(v);
         }
         st
@@ -149,7 +156,10 @@ impl<'g> AssignState<'g> {
     /// Place node `v` on device `d`; updates candidate set and estimates.
     /// Panics if `v` is not currently a candidate.
     pub fn place(&mut self, v: NodeId, d: DeviceId) {
-        assert!(self.in_candidates[v], "node {v} is not in the candidate set");
+        assert!(
+            self.cand_pos[v] != NOT_A_CANDIDATE,
+            "node {v} is not in the candidate set"
+        );
         let start = self.earliest_start(v, d);
         let dur = self.topo.exec_time(&self.g.nodes[v], d);
         self.assigned[v] = d;
@@ -165,14 +175,19 @@ impl<'g> AssignState<'g> {
         }
         self.step += 1;
 
-        // candidate-set update
-        self.in_candidates[v] = false;
-        let idx = self.candidates.iter().position(|&c| c == v).unwrap();
+        // candidate-set update: O(1) swap_remove via the stored index
+        // (same removal semantics as the old linear scan — `v` occurs
+        // exactly once — so candidate order evolves identically)
+        let idx = self.cand_pos[v];
+        self.cand_pos[v] = NOT_A_CANDIDATE;
         self.candidates.swap_remove(idx);
+        if idx < self.candidates.len() {
+            self.cand_pos[self.candidates[idx]] = idx;
+        }
         for &s in &self.g.succs[v] {
             self.unassigned_preds[s] -= 1;
-            if self.unassigned_preds[s] == 0 && !self.in_candidates[s] {
-                self.in_candidates[s] = true;
+            if self.unassigned_preds[s] == 0 && self.cand_pos[s] == NOT_A_CANDIDATE {
+                self.cand_pos[s] = self.candidates.len();
                 self.candidates.push(s);
             }
         }
@@ -290,6 +305,33 @@ mod tests {
         assert_eq!(placed, g.n());
         let a = st.into_assignment();
         assert!(a.iter().all(|&d| d < t.n()));
+    }
+
+    #[test]
+    fn cand_pos_index_stays_consistent() {
+        // the O(1)-removal index map must mirror `candidates` exactly at
+        // every step, for arbitrary placement orders
+        let g = ffnn(Scale::Tiny);
+        let t = topo();
+        let mut st = AssignState::new(&g, &t);
+        let mut rng = Rng::new(11);
+        loop {
+            for (i, &c) in st.candidates.iter().enumerate() {
+                assert_eq!(st.cand_pos[c], i, "cand_pos out of sync at step {}", st.step);
+            }
+            let n_candidates = st.candidates.len();
+            assert_eq!(
+                st.cand_pos.iter().filter(|&&p| p != NOT_A_CANDIDATE).count(),
+                n_candidates,
+                "stale cand_pos entries at step {}",
+                st.step
+            );
+            if st.done() {
+                break;
+            }
+            let v = *rng.choose(&st.candidates);
+            st.place(v, rng.below(t.n()));
+        }
     }
 
     #[test]

@@ -19,6 +19,9 @@
 //!                   DESIGN.md §Rollout)
 //!               --sim-reps R  simulator replicates per Stage II reward
 //!                   (also bounds per-reward parallelism; default 4)
+//!               --sim-engine {incremental|reference}  simulator task
+//!                   enumeration engine (bitwise-identical results; the
+//!                   incremental default is the fast path — DESIGN.md §10)
 //!               --engine-reps R  engine executions per Stage III reward
 
 use anyhow::{bail, Context, Result};
@@ -72,6 +75,8 @@ const HELP: &str = "doppler — dual-policy device assignment (paper reproductio
                           deterministic: any thread count, same results)
     --sim-reps R          simulator replicates per Stage II reward (also
                           bounds per-reward parallelism; default 4)
+    --sim-engine E        {incremental|reference} task enumeration engine
+                          (bitwise-identical results; default incremental)
     --engine-reps R       engine executions per Stage III reward (train)
   see rust/src/main.rs header for the full flag list";
 
@@ -89,6 +94,14 @@ fn rollout_cfg(args: &Args) -> doppler::rollout::RolloutCfg {
         .usize_or("sim-reps", doppler::rollout::DEFAULT_SIM_REPS)
         .max(1);
     ro
+}
+
+/// Parse `--sim-engine` (default: the incremental fast path; results are
+/// engine-independent by the DESIGN.md §10 bit-identity contract).
+fn sim_engine(args: &Args) -> Result<doppler::sim::Engine> {
+    let s = args.str_or("sim-engine", "incremental");
+    doppler::sim::Engine::parse(&s)
+        .with_context(|| format!("unknown --sim-engine '{s}' (expected incremental|reference)"))
 }
 
 fn load_graph(args: &Args) -> Result<Graph> {
@@ -128,6 +141,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
     ctx.episodes = args.usize_or("episodes", ctx.episodes);
     ctx.seed = args.u64_or("seed", 0);
     ctx.rollout = rollout_cfg(args);
+    ctx.sim_engine = sim_engine(args)?;
 
     let methods: Vec<MethodId> = match args.get("methods") {
         Some(list) => list
@@ -183,6 +197,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = TrainConfig::new(method, sub.clone(), n_devices);
     cfg.seed = args.u64_or("seed", 0);
     cfg.rollout = rollout_cfg(args);
+    cfg.sim.engine = sim_engine(args)?;
     cfg.engine_reps = args.usize_or("engine-reps", cfg.engine_reps).max(1);
     let budget = args.usize_or("episodes", 400);
     let stages = Stages::budget(budget);
@@ -229,6 +244,7 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
     ctx.episodes = args.usize_or("episodes", ctx.episodes);
     ctx.seed = args.u64_or("seed", 0);
     ctx.rollout = rollout_cfg(args);
+    ctx.sim_engine = sim_engine(args)?;
     let id = parse_method(&args.str_or("method", "critical-path"))?;
     let r = run_method(id, &g, &ctx)?;
     println!(
@@ -249,6 +265,7 @@ fn cmd_visualize(args: &Args) -> Result<()> {
     ctx.episodes = args.usize_or("episodes", 200);
     ctx.eval_reps = 3;
     ctx.rollout = rollout_cfg(args);
+    ctx.sim_engine = sim_engine(args)?;
     let id = parse_method(&args.str_or("method", "enum-opt"))?;
     let r = run_method(id, &g, &ctx)?;
 
@@ -264,7 +281,7 @@ fn cmd_visualize(args: &Args) -> Result<()> {
 
     // ASCII utilization timeline (Figs. 9/10/13/14 analog)
     let sub = doppler::eval::restrict(&topo, n_devices);
-    let cfg = SimConfig::new(sub);
+    let cfg = SimConfig::new(sub).with_engine(ctx.sim_engine);
     let mut rng = Rng::new(1);
     let sim = simulate(&g, &r.assignment, &cfg, &mut rng);
     let u = trace::utilization(&sim, n_devices, 72);
@@ -316,7 +333,7 @@ fn cmd_simfit(args: &Args) -> Result<()> {
     let mut rng = Rng::new(args.u64_or("seed", 1));
     let feats = static_features(&g, &sub, 1.0);
 
-    let sim_cfg = SimConfig::new(sub.clone());
+    let sim_cfg = SimConfig::new(sub.clone()).with_engine(sim_engine(args)?);
     let engine_cfg = EngineConfig::new(sub.clone());
     let mut sim_ms = Vec::new();
     let mut eng_ms = Vec::new();

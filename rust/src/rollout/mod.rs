@@ -26,6 +26,13 @@
 //!
 //! The determinism contract is enforced by
 //! `tests/prop_invariants.rs::prop_rollout_parallel_matches_serial`.
+//!
+//! Both simulator engines ([`crate::sim::Engine`]) honor this contract:
+//! the incremental ready-set engine (default) and the reference rescan
+//! loop are bitwise-identical per simulation, so `SimConfig::engine` —
+//! like the thread count — is a pure wall-clock knob that never changes
+//! rewards (see `tests/prop_invariants.rs::prop_sim_engines_bitwise_identical`
+//! and DESIGN.md §10).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
@@ -300,6 +307,28 @@ mod tests {
         for threads in [1, 2, 4] {
             let par = mean_exec_time(&g, &a, &cfg, &mut Rng::new(7), 6, threads);
             assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn episode_rewards_engine_invariant() {
+        // Stage II rewards must not depend on the simulator engine (the
+        // engines are bitwise-identical per simulation) — at any thread
+        // count, so engine choice composes with the rollout contract.
+        let g = chainmm(Scale::Tiny);
+        let assignments: Vec<Assignment> = (0..4)
+            .map(|s| {
+                let mut r = Rng::new(60 + s);
+                crate::heuristics::random_assignment(&g, 4, &mut r)
+            })
+            .collect();
+        let base = SimConfig::new(DeviceTopology::p100x4());
+        let inc_cfg = base.clone().with_engine(crate::sim::Engine::Incremental);
+        let ref_cfg = base.with_engine(crate::sim::Engine::Reference);
+        let want = episode_rewards(&g, &assignments, &inc_cfg, &mut Rng::new(5), 3, 1);
+        for threads in [1usize, 4] {
+            let got = episode_rewards(&g, &assignments, &ref_cfg, &mut Rng::new(5), 3, threads);
+            assert_eq!(got, want, "threads={threads}: engine leaked into rewards");
         }
     }
 

@@ -76,27 +76,30 @@ pub fn bulksync_exec(g: &Graph, a: &Assignment, topo: &DeviceTopology) -> BulkSy
 mod tests {
     use super::*;
     use crate::graph::workloads::{chainmm, ffnn, Scale};
-    use crate::sim::{simulate, SimConfig};
+    use crate::sim::{simulate, Engine, SimConfig};
     use crate::util::rng::Rng;
 
     #[test]
     fn wc_never_slower_than_bulksync() {
         // The WC scheduler overlaps comm/compute and never inserts
         // barriers, so with zero jitter it must not lose to bulk-sync on
-        // the same assignment (Table 1's premise).
+        // the same assignment (Table 1's premise) — under either
+        // task-enumeration engine.
         for g in [chainmm(Scale::Tiny), ffnn(Scale::Tiny)] {
             let topo = DeviceTopology::p100x4();
             let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
             let bs = bulksync_exec(&g, &a, &topo);
-            let cfg = SimConfig::deterministic(topo);
-            let wc = simulate(&g, &a, &cfg, &mut Rng::new(1));
-            assert!(
-                wc.makespan <= bs.makespan * 1.001,
-                "{}: wc={} bs={}",
-                g.name,
-                wc.makespan,
-                bs.makespan
-            );
+            for engine in [Engine::Incremental, Engine::Reference] {
+                let cfg = SimConfig::deterministic(topo.clone()).with_engine(engine);
+                let wc = simulate(&g, &a, &cfg, &mut Rng::new(1));
+                assert!(
+                    wc.makespan <= bs.makespan * 1.001,
+                    "{} ({engine:?}): wc={} bs={}",
+                    g.name,
+                    wc.makespan,
+                    bs.makespan
+                );
+            }
         }
     }
 

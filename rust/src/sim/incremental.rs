@@ -1,0 +1,410 @@
+//! Incremental task-enumeration engine: event-driven ready queues that
+//! make each scheduling decision touch O(degree) state instead of the
+//! reference engine's O(N+E) full rescan.
+//!
+//! # Data structures
+//!
+//! - `missing[v]` — how many of `v`'s inputs are not yet present on
+//!   `a[v]`. Initialized to the non-entry predecessor count; decremented
+//!   when a completion lands the corresponding output on `a[v]`. At zero,
+//!   `v` enters its device's pending-exec queue.
+//! - `dev[d]` — pending execs on device `d` (all inputs present, not yet
+//!   issued). Ready exactly while `d`'s execution unit is free.
+//! - `chan[from→to]` — pending transfers on a channel, keyed by *edge
+//!   index*: one entry per dependency edge whose consumer lives on `to`,
+//!   mirroring the reference enumeration, which lists a producer once
+//!   per edge until the `(v, to)` transfer is issued (the duplicate
+//!   multiplicity is observable under `Choose::Random`). A producer's
+//!   edges enter the queues the moment its exec completes; all
+//!   duplicates leave when one of them starts.
+//!
+//! Queues are ordered sets keyed by edge/node index for `Fifo`/`Random`
+//! (`BTreeSet`, eagerly maintained) and max-priority heaps with lazy
+//! dead-entry reaping for `DepthFirst` (an entry is dead once its
+//! transfer/exec was issued — the flags on [`SimCore`] are the ground
+//! truth, so no re-ordering can desynchronize them).
+//!
+//! # Determinism contract (DESIGN.md §10)
+//!
+//! Every pick reproduces the reference `ChooseTask` exactly:
+//! - `Fifo` — smallest edge index over free channels, else smallest
+//!   node id over free devices (the reference's `startable[0]`).
+//! - `DepthFirst` — maximum effective priority (`t_level + 1e9` for
+//!   transfers), ties to the earliest enumeration position: transfers
+//!   before execs, then smallest index.
+//! - `Random` — materializes the identical ready list (transfers in
+//!   edge order, then execs in node order, duplicates included) and
+//!   spends exactly one `rng.below` draw on it.
+//!
+//! Jitter draws happen inside [`SimCore::start`], after the pick —
+//! the same per-task draw order as the reference. The equivalence is
+//! enforced bitwise by `tests/prop_invariants.rs` and by the golden
+//! trace replay.
+
+use std::cmp::Ordering;
+use std::collections::{BTreeSet, BinaryHeap};
+
+use crate::graph::{Assignment, Graph, NodeId};
+use crate::util::rng::Rng;
+
+use super::{Choose, SimConfig, SimCore, SimResult, Task};
+
+/// Heap entry for the `DepthFirst` queues: max priority first, ties
+/// toward the smallest index (= earliest in reference enumeration).
+#[derive(Clone, Copy)]
+struct PrioEntry {
+    p: f64,
+    idx: usize,
+}
+
+impl PartialEq for PrioEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.p == other.p && self.idx == other.idx
+    }
+}
+impl Eq for PrioEntry {}
+impl PartialOrd for PrioEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for PrioEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // max-heap: larger priority wins; equal priorities pop the
+        // smaller index first (priorities are finite t-level sums)
+        self.p
+            .partial_cmp(&other.p)
+            .unwrap_or(Ordering::Equal)
+            .then(other.idx.cmp(&self.idx))
+    }
+}
+
+/// One pending queue — index-ordered for `Fifo`/`Random`, priority-
+/// ordered (with lazy dead-entry reaping) for `DepthFirst`.
+enum Queue {
+    Ordered(BTreeSet<usize>),
+    Prio(BinaryHeap<PrioEntry>),
+}
+
+impl Queue {
+    fn new(depth_first: bool) -> Queue {
+        if depth_first {
+            Queue::Prio(BinaryHeap::new())
+        } else {
+            Queue::Ordered(BTreeSet::new())
+        }
+    }
+
+    fn insert(&mut self, idx: usize, p: f64) {
+        match self {
+            Queue::Ordered(s) => {
+                s.insert(idx);
+            }
+            Queue::Prio(h) => h.push(PrioEntry { p, idx }),
+        }
+    }
+
+    /// Eager removal (Ordered only; Prio entries die lazily via the
+    /// issued flags checked at peek time).
+    fn remove(&mut self, idx: usize) {
+        if let Queue::Ordered(s) = self {
+            s.remove(&idx);
+        }
+    }
+
+    /// Smallest index (Ordered only — kept free of dead entries).
+    fn peek_min(&self) -> Option<usize> {
+        match self {
+            Queue::Ordered(s) => s.iter().next().copied(),
+            Queue::Prio(_) => unreachable!("peek_min on a DepthFirst queue"),
+        }
+    }
+
+    /// Highest-priority live entry (Prio only), permanently discarding
+    /// dead entries from the top.
+    fn peek_top(&mut self, is_dead: impl Fn(usize) -> bool) -> Option<PrioEntry> {
+        match self {
+            Queue::Prio(h) => {
+                while let Some(top) = h.peek() {
+                    if is_dead(top.idx) {
+                        h.pop();
+                    } else {
+                        return Some(*top);
+                    }
+                }
+                None
+            }
+            Queue::Ordered(_) => unreachable!("peek_top on a Fifo/Random queue"),
+        }
+    }
+
+    /// Ascending index iteration (Ordered only).
+    fn iter_ordered(&self) -> impl Iterator<Item = usize> + '_ {
+        match self {
+            Queue::Ordered(s) => s.iter().copied(),
+            Queue::Prio(_) => unreachable!("iter_ordered on a DepthFirst queue"),
+        }
+    }
+}
+
+struct ReadyQueues {
+    /// Pending transfers per channel (`from * nd + to`), keyed by edge index.
+    chan: Vec<Queue>,
+    /// Pending execs per device, keyed by node id.
+    dev: Vec<Queue>,
+    /// `(edge index, consumer)` per producer, in edge order.
+    out_edges: Vec<Vec<(usize, NodeId)>>,
+    /// Inputs of `v` not yet present on `a[v]`.
+    missing: Vec<u32>,
+    nd: usize,
+}
+
+impl ReadyQueues {
+    fn new(core: &SimCore) -> ReadyQueues {
+        let g = core.g;
+        let nd = core.nd;
+        let depth_first = core.cfg.choose == Choose::DepthFirst;
+        let mut out_edges: Vec<Vec<(usize, NodeId)>> = vec![Vec::new(); g.n()];
+        for (e, &(v1, v2)) in g.edges.iter().enumerate() {
+            out_edges[v1].push((e, v2));
+        }
+        let mut rq = ReadyQueues {
+            chan: (0..nd * nd).map(|_| Queue::new(depth_first)).collect(),
+            dev: (0..nd).map(|_| Queue::new(depth_first)).collect(),
+            out_edges,
+            missing: vec![0; g.n()],
+            nd,
+        };
+        for v in 0..g.n() {
+            if core.entry[v] {
+                continue; // never executed; outputs replicated at t=0
+            }
+            rq.missing[v] = g.preds[v].iter().filter(|&&p| !core.entry[p]).count() as u32;
+            if rq.missing[v] == 0 {
+                rq.dev[core.a[v]].insert(v, core.priority[v]);
+            }
+        }
+        rq
+    }
+
+    /// The next task the reference engine would choose, or `None` when
+    /// no pending task has a free resource. Consumes RNG only for
+    /// `Choose::Random`, and only when the ready set is non-empty.
+    fn pick(&mut self, core: &SimCore, rng: &mut Rng) -> Option<Task> {
+        match core.cfg.choose {
+            Choose::Fifo => self.pick_fifo(core),
+            Choose::DepthFirst => self.pick_depth_first(core),
+            Choose::Random => self.pick_random(core, rng),
+        }
+    }
+
+    fn pick_fifo(&self, core: &SimCore) -> Option<Task> {
+        let g = core.g;
+        let a = core.a;
+        let mut best_e: Option<usize> = None;
+        for from in 0..self.nd {
+            for to in 0..self.nd {
+                if core.chan_busy[from][to] {
+                    continue;
+                }
+                if let Some(e) = self.chan[from * self.nd + to].peek_min() {
+                    if best_e.map_or(true, |b| e < b) {
+                        best_e = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = best_e {
+            let (v1, v2) = g.edges[e];
+            return Some(Task::Transfer {
+                v: v1,
+                from: a[v1],
+                to: a[v2],
+            });
+        }
+        let mut best_v: Option<usize> = None;
+        for d in 0..self.nd {
+            if core.exec_busy[d] {
+                continue;
+            }
+            if let Some(v) = self.dev[d].peek_min() {
+                if best_v.map_or(true, |b| v < b) {
+                    best_v = Some(v);
+                }
+            }
+        }
+        best_v.map(|v| Task::Exec { v })
+    }
+
+    fn pick_depth_first(&mut self, core: &SimCore) -> Option<Task> {
+        let g = core.g;
+        let a = core.a;
+        let dead_transfer = |e: usize| {
+            let (v1, v2) = g.edges[e];
+            core.transfer_issued[v1] >> a[v2] & 1 == 1
+        };
+        let dead_exec = |v: usize| core.exec_issued[v];
+        // (effective priority, class, index): the reference scans
+        // transfers (edge order) then execs (node order) keeping the
+        // first maximum under strict `>`, so ties resolve toward the
+        // lower class, then the lower index.
+        let mut best: Option<(f64, u8, usize)> = None;
+        for from in 0..self.nd {
+            for to in 0..self.nd {
+                if core.chan_busy[from][to] {
+                    continue;
+                }
+                if let Some(top) = self.chan[from * self.nd + to].peek_top(dead_transfer) {
+                    let eff = top.p + 1e9; // comm first
+                    let better = match best {
+                        None => true,
+                        Some((bp, bc, bi)) => eff > bp || (eff == bp && bc == 0 && top.idx < bi),
+                    };
+                    if better {
+                        best = Some((eff, 0, top.idx));
+                    }
+                }
+            }
+        }
+        for d in 0..self.nd {
+            if core.exec_busy[d] {
+                continue;
+            }
+            if let Some(top) = self.dev[d].peek_top(dead_exec) {
+                let eff = top.p;
+                let better = match best {
+                    None => true,
+                    Some((bp, bc, bi)) => eff > bp || (eff == bp && bc == 1 && top.idx < bi),
+                };
+                if better {
+                    best = Some((eff, 1, top.idx));
+                }
+            }
+        }
+        match best? {
+            (_, 0, e) => {
+                let (v1, v2) = g.edges[e];
+                Some(Task::Transfer {
+                    v: v1,
+                    from: a[v1],
+                    to: a[v2],
+                })
+            }
+            (_, _, v) => Some(Task::Exec { v }),
+        }
+    }
+
+    fn pick_random(&self, core: &SimCore, rng: &mut Rng) -> Option<Task> {
+        let g = core.g;
+        let a = core.a;
+        // materialize the ready set exactly as the reference enumerates
+        // it: transfers in edge order (duplicates included), then execs
+        // in node order
+        let mut tlist: Vec<usize> = Vec::new();
+        for from in 0..self.nd {
+            for to in 0..self.nd {
+                if !core.chan_busy[from][to] {
+                    tlist.extend(self.chan[from * self.nd + to].iter_ordered());
+                }
+            }
+        }
+        tlist.sort_unstable();
+        let mut elist: Vec<usize> = Vec::new();
+        for d in 0..self.nd {
+            if !core.exec_busy[d] {
+                elist.extend(self.dev[d].iter_ordered());
+            }
+        }
+        elist.sort_unstable();
+        let total = tlist.len() + elist.len();
+        if total == 0 {
+            return None;
+        }
+        // one uniform draw, same as the reference's `rng.choose`
+        let k = rng.below(total);
+        Some(if k < tlist.len() {
+            let e = tlist[k];
+            let (v1, v2) = g.edges[e];
+            Task::Transfer {
+                v: v1,
+                from: a[v1],
+                to: a[v2],
+            }
+        } else {
+            Task::Exec {
+                v: elist[k - tlist.len()],
+            }
+        })
+    }
+
+    /// Maintain the queues for a task that is about to start. Ordered
+    /// queues are cleaned eagerly (a starting transfer satisfies every
+    /// duplicate edge toward the same device); Prio entries die lazily
+    /// once [`SimCore::start`] sets the issued flags.
+    fn on_start(&mut self, task: Task, core: &SimCore) {
+        match task {
+            Task::Exec { v } => self.dev[core.a[v]].remove(v),
+            Task::Transfer { v, from, to } => {
+                let q = &mut self.chan[from * self.nd + to];
+                for &(e, v2) in &self.out_edges[v] {
+                    if core.a[v2] == to {
+                        q.remove(e);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Propagate a completion: an exec publishes `v`'s output on its
+    /// home device (enabling local consumers and outgoing transfers); a
+    /// transfer publishes it on the destination device.
+    fn on_complete(&mut self, task: Task, core: &SimCore) {
+        match task {
+            Task::Exec { v } => {
+                let d = core.a[v];
+                for i in 0..self.out_edges[v].len() {
+                    let (e, v2) = self.out_edges[v][i];
+                    let to = core.a[v2];
+                    if to != d {
+                        self.chan[d * self.nd + to].insert(e, core.priority[v]);
+                    } else {
+                        self.dec_missing(v2, core);
+                    }
+                }
+            }
+            Task::Transfer { v, to, .. } => {
+                for i in 0..self.out_edges[v].len() {
+                    let (_, v2) = self.out_edges[v][i];
+                    if core.a[v2] == to {
+                        self.dec_missing(v2, core);
+                    }
+                }
+            }
+        }
+    }
+
+    fn dec_missing(&mut self, v2: NodeId, core: &SimCore) {
+        self.missing[v2] -= 1;
+        if self.missing[v2] == 0 {
+            self.dev[core.a[v2]].insert(v2, core.priority[v2]);
+        }
+    }
+}
+
+pub(super) fn simulate(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng) -> SimResult {
+    let mut core = SimCore::new(g, a, cfg);
+    let mut rq = ReadyQueues::new(&core);
+    loop {
+        // work-conserving start loop: drain ready tasks one at a time
+        // (each start seizes a resource, shrinking the ready set)
+        while let Some(task) = rq.pick(&core, rng) {
+            rq.on_start(task, &core);
+            core.start(task, rng);
+        }
+        match core.pop_completion() {
+            None => break, // nothing in flight and nothing startable
+            Some(done) => rq.on_complete(done, &core),
+        }
+    }
+    core.finish()
+}

@@ -11,8 +11,20 @@
 //! Resources: one execution unit per device and one channel per directed
 //! device pair, so computation overlaps with communication — the WC
 //! advantage Table 1 measures.
+//!
+//! Two task-enumeration engines share one state core ([`SimCore`]) and
+//! are bit-identical by contract (DESIGN.md §10):
+//!
+//! - [`Engine::Incremental`] (`incremental.rs`, the default) keeps
+//!   per-device / per-channel ready queues updated on completions, so
+//!   each scheduling decision touches O(degree) state;
+//! - [`Engine::Reference`] (`reference.rs`) re-scans all nodes and edges
+//!   per decision — the original O(N+E) Algorithm 2 loop, kept as the
+//!   semantics oracle for property tests and the `sim_scaling` bench.
 
 pub mod bulksync;
+mod incremental;
+mod reference;
 pub mod topology;
 pub mod trace;
 
@@ -36,6 +48,31 @@ pub enum Choose {
     Random,
 }
 
+/// Task-enumeration engine backing [`simulate`]. Both engines implement
+/// the same scheduling semantics — same `ChooseTask` tie-breaking, same
+/// RNG draw order — and produce bitwise-identical [`SimResult`]s
+/// (enforced by `tests/prop_invariants.rs` and the golden trace).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Event-driven ready queues: O(degree) work per decision/completion.
+    /// The production default.
+    Incremental,
+    /// Full O(N+E) rescan per decision — the original Algorithm 2 loop,
+    /// kept as the equivalence oracle for tests and benches.
+    Reference,
+}
+
+impl Engine {
+    /// Parse from CLI / env text.
+    pub fn parse(s: &str) -> Option<Engine> {
+        match s {
+            "incremental" => Some(Engine::Incremental),
+            "reference" => Some(Engine::Reference),
+            _ => None,
+        }
+    }
+}
+
 /// Simulator configuration.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
@@ -46,6 +83,8 @@ pub struct SimConfig {
     /// Track per-device memory and charge Turnip-style spill penalties
     /// when a device exceeds its capacity.
     pub enforce_memory: bool,
+    /// Task-enumeration engine (results are engine-independent).
+    pub engine: Engine,
 }
 
 impl SimConfig {
@@ -55,6 +94,7 @@ impl SimConfig {
             jitter_sigma: 0.08,
             choose: Choose::Fifo,
             enforce_memory: false,
+            engine: Engine::Incremental,
         }
     }
     pub fn deterministic(topology: DeviceTopology) -> SimConfig {
@@ -62,6 +102,11 @@ impl SimConfig {
             jitter_sigma: 0.0,
             ..SimConfig::new(topology)
         }
+    }
+    /// Builder-style engine override (benches, property tests, CLI).
+    pub fn with_engine(mut self, engine: Engine) -> SimConfig {
+        self.engine = engine;
+        self
     }
 }
 
@@ -97,7 +142,7 @@ pub struct SimResult {
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
-enum Task {
+pub(crate) enum Task {
     Exec { v: NodeId },
     Transfer { v: NodeId, from: usize, to: usize },
 }
@@ -132,261 +177,259 @@ impl Ord for Completion {
     }
 }
 
-/// Simulate the work-conserving execution of assignment `a` (Algorithm 1).
-///
-/// Entry vertices (inputs/fills) are "available everywhere" at time 0 and
-/// are never executed or transferred, exactly as in the paper.
-pub fn simulate(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng) -> SimResult {
-    assert_eq!(a.len(), g.n(), "assignment length mismatch");
-    let nd = cfg.topology.n();
-    debug_assert!(a.iter().all(|&d| d < nd), "device out of range");
-
-    // --- state ---------------------------------------------------------
-    // present[v] = bitmask of devices holding v's output
-    let mut present: Vec<u64> = vec![0; g.n()];
-    let mut executed: Vec<bool> = vec![false; g.n()];
-    let mut exec_issued: Vec<bool> = vec![false; g.n()];
-    // transfer (v -> to) issued
-    let mut transfer_issued: Vec<u64> = vec![0; g.n()];
-    let all_devices_mask: u64 = if nd >= 64 { u64::MAX } else { (1u64 << nd) - 1 };
-
-    let entry: Vec<bool> = (0..g.n()).map(|v| g.preds[v].is_empty()).collect();
-    for v in 0..g.n() {
-        if entry[v] {
-            present[v] = all_devices_mask;
-            executed[v] = true;
-            exec_issued[v] = true;
-        }
-    }
-
-    // resources
-    let mut exec_busy = vec![false; nd];
-    let mut chan_busy = vec![vec![false; nd]; nd];
-
+/// Shared simulation state and transitions. Both engines drive exactly
+/// this core — initialization, task starts (resource seizure, jitter
+/// draw, memory accounting, completion-heap push) and completions
+/// (resource release, presence updates, trace recording) are one code
+/// path, so the engines can only differ in *which* ready task they pick,
+/// and the bit-identity contract reduces to the pick being identical.
+pub(crate) struct SimCore<'a> {
+    pub g: &'a Graph,
+    pub a: &'a Assignment,
+    pub cfg: &'a SimConfig,
+    pub nd: usize,
+    /// entry[v]: no predecessors — available everywhere at time 0.
+    pub entry: Vec<bool>,
+    /// present[v] = bitmask of devices holding v's output.
+    pub present: Vec<u64>,
+    pub executed: Vec<bool>,
+    pub exec_issued: Vec<bool>,
+    /// transfer (v -> to) issued, as a device bitmask.
+    pub transfer_issued: Vec<u64>,
+    pub exec_busy: Vec<bool>,
+    pub chan_busy: Vec<Vec<bool>>,
+    /// Static t-level priority (DepthFirst only; zeros otherwise).
+    pub priority: Vec<f64>,
     // memory accounting (enforce_memory mode)
-    let mut resident = vec![0.0f64; nd];
-    // remaining uses of v's buffer on device d before it can be freed
-    let mut need = vec![vec![0u32; nd]; g.n()];
-    let mut spill_time_total = 0.0;
-    if cfg.enforce_memory {
-        for v in 0..g.n() {
-            let home = a[v];
-            let mut remote_targets: u64 = 0;
-            for &u in &g.succs[v] {
-                need[v][a[u]] += 1; // consumer will read it on its device
-                if a[u] != home && !entry[v] {
-                    remote_targets |= 1 << a[u];
-                }
-            }
-            // the home copy also feeds each outgoing transfer
-            if !entry[v] {
-                need[v][home] += remote_targets.count_ones();
-            }
-        }
-        // entry buffers materialize where consumed, at time 0
+    resident: Vec<f64>,
+    /// remaining uses of v's buffer on device d before it can be freed
+    need: Vec<Vec<u32>>,
+    spill_time_total: f64,
+    heap: BinaryHeap<Completion>,
+    seq: u64,
+    pub t: f64,
+    result: SimResult,
+}
+
+impl<'a> SimCore<'a> {
+    pub fn new(g: &'a Graph, a: &'a Assignment, cfg: &'a SimConfig) -> SimCore<'a> {
+        let nd = cfg.topology.n();
+        let mut present: Vec<u64> = vec![0; g.n()];
+        let mut executed: Vec<bool> = vec![false; g.n()];
+        let mut exec_issued: Vec<bool> = vec![false; g.n()];
+        let all_devices_mask: u64 = if nd >= 64 { u64::MAX } else { (1u64 << nd) - 1 };
+
+        let entry: Vec<bool> = (0..g.n()).map(|v| g.preds[v].is_empty()).collect();
         for v in 0..g.n() {
             if entry[v] {
-                let mut where_used: u64 = 0;
+                present[v] = all_devices_mask;
+                executed[v] = true;
+                exec_issued[v] = true;
+            }
+        }
+
+        let mut resident = vec![0.0f64; nd];
+        let mut need = vec![vec![0u32; nd]; g.n()];
+        if cfg.enforce_memory {
+            for v in 0..g.n() {
+                let home = a[v];
+                let mut remote_targets: u64 = 0;
                 for &u in &g.succs[v] {
-                    where_used |= 1 << a[u];
+                    need[v][a[u]] += 1; // consumer will read it on its device
+                    if a[u] != home && !entry[v] {
+                        remote_targets |= 1 << a[u];
+                    }
                 }
-                for d in 0..nd {
-                    if where_used >> d & 1 == 1 {
-                        resident[d] += g.nodes[v].out_bytes();
+                // the home copy also feeds each outgoing transfer
+                if !entry[v] {
+                    need[v][home] += remote_targets.count_ones();
+                }
+            }
+            // entry buffers materialize where consumed, at time 0
+            for v in 0..g.n() {
+                if entry[v] {
+                    let mut where_used: u64 = 0;
+                    for &u in &g.succs[v] {
+                        where_used |= 1 << a[u];
+                    }
+                    for d in 0..nd {
+                        if where_used >> d & 1 == 1 {
+                            resident[d] += g.nodes[v].out_bytes();
+                        }
                     }
                 }
             }
         }
+
+        // depth-first priority: static t-level (deepest remaining work first)
+        let priority: Vec<f64> = if cfg.choose == Choose::DepthFirst {
+            let nc = |n: &crate::graph::Node| cfg.topology.ref_exec_time(n);
+            let ec = |b: f64| cfg.topology.ref_transfer_time(b);
+            g.t_level(&nc, &ec)
+        } else {
+            vec![0.0; g.n()]
+        };
+
+        SimCore {
+            g,
+            a,
+            cfg,
+            nd,
+            entry,
+            present,
+            executed,
+            exec_issued,
+            transfer_issued: vec![0; g.n()],
+            exec_busy: vec![false; nd],
+            chan_busy: vec![vec![false; nd]; nd],
+            priority,
+            resident,
+            need,
+            spill_time_total: 0.0,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            t: 0.0,
+            result: SimResult::default(),
+        }
     }
 
-    // depth-first priority: static t-level (deepest remaining work first)
-    let priority: Vec<f64> = if cfg.choose == Choose::DepthFirst {
-        let nc = |n: &crate::graph::Node| cfg.topology.ref_exec_time(n);
-        let ec = |b: f64| cfg.topology.ref_transfer_time(b);
-        g.t_level(&nc, &ec)
-    } else {
-        vec![0.0; g.n()]
-    };
-
-    let mut heap: BinaryHeap<Completion> = BinaryHeap::new();
-    let mut seq: u64 = 0;
-    let mut t = 0.0f64;
-    let mut result = SimResult::default();
-
-    // charge a spill penalty if allocating `bytes` on `d` exceeds capacity
-    let alloc = |resident: &mut Vec<f64>, d: usize, bytes: f64| -> f64 {
-        resident[d] += bytes;
-        if resident[d] > cfg.topology.mem_capacity[d] {
-            bytes / cfg.topology.spill_bw
+    /// Charge a spill penalty if allocating `bytes` on `d` exceeds capacity.
+    fn alloc(&mut self, d: usize, bytes: f64) -> f64 {
+        self.resident[d] += bytes;
+        if self.resident[d] > self.cfg.topology.mem_capacity[d] {
+            bytes / self.cfg.topology.spill_bw
         } else {
             0.0
         }
-    };
+    }
 
-    loop {
-        // --- EnumTasks + work-conserving start loop ---------------------
-        loop {
-            let mut startable: Vec<Task> = Vec::new();
-            // transfers (Algorithm 2, first loop)
-            for &(v1, v2) in &g.edges {
-                if entry[v1] {
-                    continue; // inputs available everywhere
-                }
-                let to = a[v2];
-                let from = a[v1];
-                if from == to {
-                    continue;
-                }
-                if executed[v1]
-                    && present[v1] >> to & 1 == 0
-                    && transfer_issued[v1] >> to & 1 == 0
-                    && !chan_busy[from][to]
-                {
-                    startable.push(Task::Transfer { v: v1, from, to });
-                }
-            }
-            // execs (Algorithm 2, second loop)
-            for v in 0..g.n() {
-                if exec_issued[v] {
-                    continue;
-                }
-                let d = a[v];
-                if exec_busy[d] {
-                    continue;
-                }
-                if g.preds[v].iter().all(|&p| present[p] >> d & 1 == 1) {
-                    startable.push(Task::Exec { v });
-                }
-            }
-            if startable.is_empty() {
-                break;
-            }
-            // ChooseTask
-            let chosen = match cfg.choose {
-                Choose::Fifo => startable[0],
-                Choose::Random => *rng.choose(&startable),
-                Choose::DepthFirst => {
-                    let mut best = startable[0];
-                    let mut best_p = f64::NEG_INFINITY;
-                    for &task in &startable {
-                        let p = match task {
-                            Task::Exec { v } => priority[v],
-                            Task::Transfer { v, .. } => priority[v] + 1e9, // comm first
-                        };
-                        if p > best_p {
-                            best_p = p;
-                            best = task;
-                        }
-                    }
-                    best
-                }
-            };
-            // start it
-            let jitter = if cfg.jitter_sigma > 0.0 {
-                rng.lognormal(cfg.jitter_sigma)
-            } else {
-                1.0
-            };
-            match chosen {
-                Task::Exec { v } => {
-                    let d = a[v];
-                    let mut dur = cfg.topology.exec_time(&g.nodes[v], d) * jitter;
-                    if cfg.enforce_memory {
-                        let pen = alloc(&mut resident, d, g.nodes[v].out_bytes());
-                        spill_time_total += pen;
-                        dur += pen;
-                    }
-                    exec_busy[d] = true;
-                    exec_issued[v] = true;
-                    seq += 1;
-                    heap.push(Completion {
-                        time: t + dur,
-                        seq,
-                        task: chosen,
-                        start: t,
-                    });
-                }
-                Task::Transfer { v, from, to } => {
-                    let bytes = g.nodes[v].out_bytes();
-                    let mut dur = cfg.topology.transfer_time(bytes, from, to) * jitter;
-                    if cfg.enforce_memory {
-                        let pen = alloc(&mut resident, to, bytes);
-                        spill_time_total += pen;
-                        dur += pen;
-                    }
-                    chan_busy[from][to] = true;
-                    transfer_issued[v] |= 1 << to;
-                    result.bytes_moved += bytes;
-                    seq += 1;
-                    heap.push(Completion {
-                        time: t + dur,
-                        seq,
-                        task: chosen,
-                        start: t,
-                    });
-                }
-            }
-        }
-
-        // --- wait for the next completion (P(<t_out, task> | S, t)) -----
-        let Some(done) = heap.pop() else {
-            break; // nothing in flight and nothing startable: finished
+    /// Start `task` now: draw jitter, seize the resource, account memory,
+    /// schedule the completion. RNG contract: exactly one lognormal draw
+    /// per started task when `jitter_sigma > 0` (after any ChooseTask
+    /// draw the engine made).
+    pub fn start(&mut self, task: Task, rng: &mut Rng) {
+        let jitter = if self.cfg.jitter_sigma > 0.0 {
+            rng.lognormal(self.cfg.jitter_sigma)
+        } else {
+            1.0
         };
-        t = done.time;
+        let dur = match task {
+            Task::Exec { v } => {
+                let d = self.a[v];
+                let mut dur = self.cfg.topology.exec_time(&self.g.nodes[v], d) * jitter;
+                if self.cfg.enforce_memory {
+                    let bytes = self.g.nodes[v].out_bytes();
+                    let pen = self.alloc(d, bytes);
+                    self.spill_time_total += pen;
+                    dur += pen;
+                }
+                self.exec_busy[d] = true;
+                self.exec_issued[v] = true;
+                dur
+            }
+            Task::Transfer { v, from, to } => {
+                let bytes = self.g.nodes[v].out_bytes();
+                let mut dur = self.cfg.topology.transfer_time(bytes, from, to) * jitter;
+                if self.cfg.enforce_memory {
+                    let pen = self.alloc(to, bytes);
+                    self.spill_time_total += pen;
+                    dur += pen;
+                }
+                self.chan_busy[from][to] = true;
+                self.transfer_issued[v] |= 1 << to;
+                self.result.bytes_moved += bytes;
+                dur
+            }
+        };
+        self.seq += 1;
+        self.heap.push(Completion {
+            time: self.t + dur,
+            seq: self.seq,
+            task,
+            start: self.t,
+        });
+    }
+
+    /// Advance to the next completion (`P(<t_out, task> | S, t)`), apply
+    /// its state transition, and return the completed task so the engine
+    /// can update its ready sets. `None` when nothing is in flight.
+    pub fn pop_completion(&mut self) -> Option<Task> {
+        let g = self.g;
+        let done = self.heap.pop()?;
+        self.t = done.time;
         match done.task {
             Task::Exec { v } => {
-                let d = a[v];
-                executed[v] = true;
-                present[v] |= 1 << d;
-                exec_busy[d] = false;
-                result.execs.push(ExecEvent {
+                let d = self.a[v];
+                self.executed[v] = true;
+                self.present[v] |= 1 << d;
+                self.exec_busy[d] = false;
+                self.result.execs.push(ExecEvent {
                     node: v,
                     device: d,
                     start: done.start,
-                    end: t,
+                    end: self.t,
                 });
-                if cfg.enforce_memory {
+                if self.cfg.enforce_memory {
                     // consuming v's inputs on d: decrement and free
                     for &p in &g.preds[v] {
-                        if need[p][d] > 0 {
-                            need[p][d] -= 1;
-                            if need[p][d] == 0 {
-                                resident[d] -= g.nodes[p].out_bytes();
+                        if self.need[p][d] > 0 {
+                            self.need[p][d] -= 1;
+                            if self.need[p][d] == 0 {
+                                self.resident[d] -= g.nodes[p].out_bytes();
                             }
                         }
                     }
                 }
             }
             Task::Transfer { v, from, to } => {
-                present[v] |= 1 << to;
-                chan_busy[from][to] = false;
-                result.transfers.push(TransferEvent {
+                self.present[v] |= 1 << to;
+                self.chan_busy[from][to] = false;
+                self.result.transfers.push(TransferEvent {
                     node: v,
                     from,
                     to,
                     start: done.start,
-                    end: t,
+                    end: self.t,
                 });
-                if cfg.enforce_memory && need[v][from] > 0 {
+                if self.cfg.enforce_memory && self.need[v][from] > 0 {
                     // the home copy served one outgoing transfer
-                    need[v][from] -= 1;
-                    if need[v][from] == 0 {
-                        resident[from] -= g.nodes[v].out_bytes();
+                    self.need[v][from] -= 1;
+                    if self.need[v][from] == 0 {
+                        self.resident[from] -= g.nodes[v].out_bytes();
                     }
                 }
             }
         }
+        Some(done.task)
     }
 
-    // completion check: every vertex's result present on its own device
-    debug_assert!(
-        (0..g.n()).all(|v| present[v] >> a[v] & 1 == 1),
-        "simulation ended with unexecuted vertices"
-    );
+    /// Finalize: completion check plus summary fields.
+    pub fn finish(mut self) -> SimResult {
+        // completion check: every vertex's result present on its own device
+        debug_assert!(
+            (0..self.g.n()).all(|v| self.present[v] >> self.a[v] & 1 == 1),
+            "simulation ended with unexecuted vertices"
+        );
+        self.result.makespan = self.t;
+        self.result.spill_time = self.spill_time_total;
+        self.result
+    }
+}
 
-    result.makespan = t;
-    result.spill_time = spill_time_total;
-    result
+/// Simulate the work-conserving execution of assignment `a` (Algorithm 1).
+///
+/// Entry vertices (inputs/fills) are "available everywhere" at time 0 and
+/// are never executed or transferred, exactly as in the paper.
+pub fn simulate(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng) -> SimResult {
+    assert_eq!(a.len(), g.n(), "assignment length mismatch");
+    debug_assert!(
+        a.iter().all(|&d| d < cfg.topology.n()),
+        "device out of range"
+    );
+    match cfg.engine {
+        Engine::Incremental => incremental::simulate(g, a, cfg, rng),
+        Engine::Reference => reference::simulate(g, a, cfg, rng),
+    }
 }
 
 /// Convenience: mean makespan over `reps` jittered replicates.
@@ -409,7 +452,7 @@ pub fn mean_exec_time(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng,
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::workloads::{chainmm, Scale};
+    use crate::graph::workloads::{chainmm, synthetic_layered, Scale};
     use crate::graph::OpKind;
 
     fn chain_graph(k: usize) -> Graph {
@@ -483,13 +526,7 @@ mod tests {
         let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
         let r = simulate(&g, &a, &cfg, &mut rng);
         // availability time of node v's output on device d
-        let mut avail = std::collections::HashMap::new();
-        for e in &r.execs {
-            avail.insert((e.node, e.device), e.end);
-        }
-        for tr in &r.transfers {
-            avail.insert((tr.node, tr.to), tr.end);
-        }
+        let avail = trace::availability(&r);
         for e in &r.execs {
             for &p in &g.preds[e.node] {
                 if g.preds[p].is_empty() {
@@ -580,5 +617,56 @@ mod tests {
             serial += cfg.topology.ref_transfer_time(g.nodes[p].out_bytes());
         }
         assert!(r.makespan <= serial);
+    }
+
+    /// Both engines exist behind the flag and agree on every strategy —
+    /// the cheap in-crate smoke check of the equivalence contract
+    /// (`tests/prop_invariants.rs` sweeps it across random graphs).
+    #[test]
+    fn engines_bitwise_identical_smoke() {
+        let g = chainmm(Scale::Tiny);
+        let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+        for choose in [Choose::Fifo, Choose::DepthFirst, Choose::Random] {
+            for jitter in [0.0, 0.1] {
+                let mut cfg = SimConfig::new(topology::DeviceTopology::p100x4());
+                cfg.choose = choose;
+                cfg.jitter_sigma = jitter;
+                let inc = simulate(&g, &a, &cfg.clone().with_engine(Engine::Incremental), &mut Rng::new(9));
+                let refr = simulate(&g, &a, &cfg.with_engine(Engine::Reference), &mut Rng::new(9));
+                assert_eq!(inc.makespan, refr.makespan, "{choose:?} jitter={jitter}");
+                assert_eq!(inc.bytes_moved, refr.bytes_moved);
+                assert_eq!(inc.execs.len(), refr.execs.len());
+                for (x, y) in inc.execs.iter().zip(&refr.execs) {
+                    assert_eq!(
+                        (x.node, x.device, x.start, x.end),
+                        (y.node, y.device, y.start, y.end),
+                        "{choose:?} jitter={jitter}"
+                    );
+                }
+                for (x, y) in inc.transfers.iter().zip(&refr.transfers) {
+                    assert_eq!(
+                        (x.node, x.from, x.to, x.start, x.end),
+                        (y.node, y.from, y.to, y.start, y.end),
+                        "{choose:?} jitter={jitter}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The engine flag must never leak into results through the RNG: a
+    /// draw-count mismatch would desynchronize later replicates even if
+    /// each trace matched.
+    #[test]
+    fn engines_leave_rng_in_same_state() {
+        let g = synthetic_layered(120, 3);
+        let a: Vec<usize> = (0..g.n()).map(|v| v % 4).collect();
+        let mut cfg = SimConfig::new(topology::DeviceTopology::p100x4());
+        cfg.choose = Choose::Random;
+        let mut r1 = Rng::new(21);
+        let mut r2 = Rng::new(21);
+        let _ = simulate(&g, &a, &cfg.clone().with_engine(Engine::Incremental), &mut r1);
+        let _ = simulate(&g, &a, &cfg.with_engine(Engine::Reference), &mut r2);
+        assert_eq!(r1.next_u64(), r2.next_u64(), "engines consumed different draw counts");
     }
 }

@@ -1,0 +1,101 @@
+//! Reference task-enumeration engine: the original Algorithm 2 loop that
+//! rebuilds the full `startable` set — scanning every edge, then every
+//! node — before each scheduling decision. O(N+E) per decision, so a
+//! whole simulation is ~O((N+E)·T).
+//!
+//! Kept (behind [`Engine::Reference`](super::Engine)) as the semantics
+//! oracle: it is the direct transcription of the paper's pseudocode, and
+//! `tests/prop_invariants.rs::prop_sim_engines_bitwise_identical` pins
+//! the incremental engine to it bitwise. It also anchors the speedup
+//! measurement in `benches/sim_scaling.rs`. Do not optimize this file —
+//! its value is being obviously correct.
+
+use crate::graph::{Assignment, Graph};
+use crate::util::rng::Rng;
+
+use super::{Choose, SimConfig, SimCore, SimResult, Task};
+
+pub(super) fn simulate(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng) -> SimResult {
+    let mut core = SimCore::new(g, a, cfg);
+    loop {
+        // EnumTasks + work-conserving start loop: rebuild the ready set
+        // and start one task, until nothing is startable.
+        loop {
+            let startable = enumerate(&core);
+            if startable.is_empty() {
+                break;
+            }
+            let chosen = choose_task(&core, &startable, rng);
+            core.start(chosen, rng);
+        }
+        if core.pop_completion().is_none() {
+            break; // nothing in flight and nothing startable: finished
+        }
+    }
+    core.finish()
+}
+
+/// Materialize the ready set: transfers in edge-enumeration order
+/// (Algorithm 2, first loop — one entry per *edge*, so a producer with
+/// several consumers on one device appears once per edge until the
+/// transfer is issued), then execs in node-id order (second loop).
+fn enumerate(core: &SimCore) -> Vec<Task> {
+    let g = core.g;
+    let a = core.a;
+    let mut startable: Vec<Task> = Vec::new();
+    for &(v1, v2) in &g.edges {
+        if core.entry[v1] {
+            continue; // inputs available everywhere
+        }
+        let to = a[v2];
+        let from = a[v1];
+        if from == to {
+            continue;
+        }
+        if core.executed[v1]
+            && core.present[v1] >> to & 1 == 0
+            && core.transfer_issued[v1] >> to & 1 == 0
+            && !core.chan_busy[from][to]
+        {
+            startable.push(Task::Transfer { v: v1, from, to });
+        }
+    }
+    for v in 0..g.n() {
+        if core.exec_issued[v] {
+            continue;
+        }
+        let d = a[v];
+        if core.exec_busy[d] {
+            continue;
+        }
+        if g.preds[v].iter().all(|&p| core.present[p] >> d & 1 == 1) {
+            startable.push(Task::Exec { v });
+        }
+    }
+    startable
+}
+
+/// ChooseTask over the materialized set. Ties in `DepthFirst` resolve to
+/// the first maximum in enumeration order (strict `>`); `Random` draws
+/// one uniform index (the only ChooseTask RNG consumption).
+fn choose_task(core: &SimCore, startable: &[Task], rng: &mut Rng) -> Task {
+    match core.cfg.choose {
+        Choose::Fifo => startable[0],
+        Choose::Random => *rng.choose(startable),
+        Choose::DepthFirst => {
+            let mut best = startable[0];
+            let mut best_p = f64::NEG_INFINITY;
+            for &task in startable {
+                let p = match task {
+                    Task::Exec { v } => core.priority[v],
+                    Task::Transfer { v, .. } => core.priority[v] + 1e9, // comm first
+                };
+                if p > best_p {
+                    best_p = p;
+                    best = task;
+                }
+            }
+            best
+        }
+    }
+}

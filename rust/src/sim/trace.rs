@@ -2,7 +2,28 @@
 //! behind Figs. 9/10/13/14), transfer-locality breakdowns (Table 10),
 //! and ASCII rendering for the visualization example.
 
+use std::collections::HashMap;
+
+use crate::graph::NodeId;
+
 use super::{SimResult, topology::DeviceTopology};
+
+/// Availability times extracted from a trace: `(node, device) -> time`
+/// at which the node's output became present on the device (exec end on
+/// the producer's home device, transfer end on each destination). The
+/// dependency / work-conservation property tests and the schedule
+/// analyses all start from this enumeration; entry nodes never appear
+/// (they are available everywhere at time 0).
+pub fn availability(result: &SimResult) -> HashMap<(NodeId, usize), f64> {
+    let mut avail = HashMap::with_capacity(result.execs.len() + result.transfers.len());
+    for e in &result.execs {
+        avail.insert((e.node, e.device), e.end);
+    }
+    for t in &result.transfers {
+        avail.insert((t.node, t.to), t.end);
+    }
+    avail
+}
 
 /// Binned busy-fraction series per device plus a transfer series.
 #[derive(Clone, Debug)]
@@ -175,5 +196,24 @@ mod tests {
         let s = ascii_timeline(&u);
         assert!(s.contains("dev0"));
         assert!(s.contains("xfer"));
+    }
+
+    #[test]
+    fn availability_covers_all_events() {
+        let (g, r) = sample();
+        let avail = availability(&r);
+        // every exec and transfer endpoint is present, with its end time
+        for e in &r.execs {
+            assert_eq!(avail[&(e.node, e.device)], e.end);
+        }
+        for t in &r.transfers {
+            assert_eq!(avail[&(t.node, t.to)], t.end);
+        }
+        // entry nodes never appear
+        for v in g.entry_nodes() {
+            for d in 0..4 {
+                assert!(!avail.contains_key(&(v, d)));
+            }
+        }
     }
 }

@@ -86,7 +86,11 @@ pub struct TrainConfig {
     pub epsilon: Schedule,
     pub entropy_w: f32,
     pub seed: u64,
-    /// Simulator used for Stage II rewards.
+    /// Simulator used for Stage II rewards. Its `engine` field (the
+    /// incremental ready-set scheduler by default) is a pure wall-clock
+    /// knob: engines are bitwise-identical, so switching it — like
+    /// changing `rollout.threads` — never changes the trained policy
+    /// (DESIGN.md §10).
     pub sim: SimConfig,
     /// Re-encode per MDP step (Table 6 ablation).
     pub per_step_encode: bool,

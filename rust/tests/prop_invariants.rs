@@ -13,7 +13,7 @@ use doppler::heuristics::{
 use doppler::rollout;
 use doppler::sim::bulksync::bulksync_exec;
 use doppler::sim::topology::DeviceTopology;
-use doppler::sim::{simulate, Choose, SimConfig, SimResult};
+use doppler::sim::{simulate, Choose, Engine, SimConfig, SimResult};
 use doppler::util::rng::Rng;
 
 fn random_graph(seed: u64) -> Graph {
@@ -328,6 +328,7 @@ fn prop_work_conservation_no_idle_while_ready() {
 fn assert_same_trace(x: &SimResult, y: &SimResult, ctx: &str) {
     assert_eq!(x.makespan, y.makespan, "{ctx}: makespan");
     assert_eq!(x.bytes_moved, y.bytes_moved, "{ctx}: bytes_moved");
+    assert_eq!(x.spill_time, y.spill_time, "{ctx}: spill_time");
     assert_eq!(x.execs.len(), y.execs.len(), "{ctx}: exec count");
     for (i, (a, b)) in x.execs.iter().zip(&y.execs).enumerate() {
         assert_eq!(
@@ -343,6 +344,64 @@ fn assert_same_trace(x: &SimResult, y: &SimResult, ctx: &str) {
             (b.node, b.from, b.to, b.start, b.end),
             "{ctx}: transfer event {i}"
         );
+    }
+}
+
+/// Engine equivalence: the incremental ready-set simulator is
+/// **bitwise-identical** to the reference full-rescan engine —
+/// makespan, spill_time, bytes_moved, and every exec/transfer event —
+/// across random graphs, assignments, device counts, jitter levels,
+/// and all three ChooseTask strategies. This is the contract that lets
+/// `Engine::Incremental` be the production default while the reference
+/// loop stays the semantics oracle (DESIGN.md §10).
+#[test]
+fn prop_sim_engines_bitwise_identical() {
+    for seed in 0..30u64 {
+        let g = random_graph(seed + 1700);
+        let mut rng = Rng::new(seed ^ 0x1C0);
+        let nd = 2 + rng.below(7);
+        let a = random_valid_assignment(&g, nd, &mut rng);
+        let mut cfg = SimConfig::new(doppler::eval::restrict(&DeviceTopology::v100x8(), nd));
+        cfg.jitter_sigma = [0.0, 0.07, 0.25][seed as usize % 3];
+        cfg.choose = [Choose::Fifo, Choose::DepthFirst, Choose::Random][(seed as usize / 3) % 3];
+        let ctx = format!(
+            "seed {seed} nd {nd} choose {:?} jitter {}",
+            cfg.choose, cfg.jitter_sigma
+        );
+
+        let inc = simulate(
+            &g,
+            &a,
+            &cfg.clone().with_engine(Engine::Incremental),
+            &mut Rng::new(seed * 31),
+        );
+        let refr = simulate(
+            &g,
+            &a,
+            &cfg.clone().with_engine(Engine::Reference),
+            &mut Rng::new(seed * 31),
+        );
+        assert_same_trace(&inc, &refr, &ctx);
+
+        // memory mode: spill penalties stretch durations and reorder
+        // completions, so queue updates are exercised under pressure too
+        let mut mem_cfg = cfg.clone();
+        mem_cfg.topology.mem_capacity =
+            vec![g.total_edge_bytes() * 0.05 / nd as f64; nd];
+        mem_cfg.enforce_memory = true;
+        let inc_m = simulate(
+            &g,
+            &a,
+            &mem_cfg.clone().with_engine(Engine::Incremental),
+            &mut Rng::new(seed * 31 + 7),
+        );
+        let ref_m = simulate(
+            &g,
+            &a,
+            &mem_cfg.with_engine(Engine::Reference),
+            &mut Rng::new(seed * 31 + 7),
+        );
+        assert_same_trace(&inc_m, &ref_m, &format!("{ctx} (memory)"));
     }
 }
 

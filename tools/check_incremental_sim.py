@@ -1,0 +1,468 @@
+#!/usr/bin/env python3
+"""Design-validation harness for the incremental ready-set simulator.
+
+Ports BOTH task-enumeration engines of rust/src/sim/ to Python — the
+reference O(N+E)-per-decision scan (sim/reference.rs, the original
+Algorithm 2 loop) and the incremental ready-queue engine
+(sim/incremental.rs) — plus the xoshiro256++ RNG (util/rng.rs), and
+checks that the two engines produce **bitwise-identical traces** (every
+event tuple, every float) across:
+
+  - randomized layered DAGs (including duplicate transfer targets:
+    several consumers of one producer on the same device),
+  - random assignments over 2..8 devices,
+  - all three ChooseTask strategies (Fifo / DepthFirst / Random),
+  - jitter on and off (Random + jitter exercises the full RNG draw
+    order contract: one `below` per Random pick, one lognormal per
+    started task, in start order).
+
+Both ports share the completion heap and cost model, exactly like the
+Rust engines share `SimCore`; what this harness validates is the part
+that differs — the ready-set state machine — which was written
+compile-blind (no rustc in the build image). It is NOT a substitute for
+`cargo test` (tests/prop_invariants.rs enforces the same property on
+the real code); it is the fastest way to falsify the algorithm itself.
+
+Run: python3 tools/check_incremental_sim.py  (exits non-zero on drift)
+"""
+
+import heapq
+import math
+import sys
+
+MASK = (1 << 64) - 1
+
+# --- xoshiro256++ (util/rng.rs) ---------------------------------------------
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    def __init__(self, seed):
+        s = []
+        sm = seed & MASK
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def below(self, n):
+        return (self.next_u64() * n) >> 64
+
+    def normal(self):
+        u1 = max(self.f64(), 1e-300)
+        u2 = self.f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def lognormal(self, sigma):
+        return math.exp(sigma * self.normal())
+
+
+# --- graph + cost model ------------------------------------------------------
+
+
+class G:
+    """preds/succs adjacency plus per-node cost inputs."""
+
+    def __init__(self, n):
+        self.n = n
+        self.edges = []       # (producer, consumer), insertion order
+        self.preds = [[] for _ in range(n)]
+        self.succs = [[] for _ in range(n)]
+        self.out_edges = [[] for _ in range(n)]  # (edge_idx, consumer)
+        self.exec_s = [0.0] * n   # per-node exec seconds (device-uniform)
+        self.bytes = [0.0] * n    # per-node output bytes
+
+    def add_edge(self, a, b):
+        e = len(self.edges)
+        self.edges.append((a, b))
+        self.preds[b].append(a)
+        self.succs[a].append(b)
+        self.out_edges[a].append((e, b))
+
+
+LATENCY = 40e-6
+BW = 1.2e9
+
+
+def transfer_time(nbytes):
+    return LATENCY + nbytes / BW
+
+
+def t_level(g):
+    # reverse-topological longest path (Graph::t_level); node ids are
+    # already topologically ordered by construction here
+    level = [0.0] * g.n
+    for v in range(g.n - 1, -1, -1):
+        best = 0.0
+        for s in g.succs[v]:
+            best = max(best, level[s] + transfer_time(g.bytes[v]))
+        level[v] = best + g.exec_s[v]
+    return level
+
+
+def random_graph(seed, n):
+    rng = Rng(seed)
+    g = G(n)
+    for v in range(n):
+        g.exec_s[v] = 1e-4 * (1 + rng.below(50))
+        # coarse byte sizes -> frequent equal transfer durations (tie stress)
+        g.bytes[v] = float((1 + rng.below(4)) * 4096)
+        if v == 0:
+            continue
+        # 1-3 predecessors among earlier nodes; entry nodes occur when
+        # rng happens to pick none (k=0 below)
+        k = rng.below(4)
+        for _ in range(k):
+            p = rng.below(v)
+            if (p, v) not in g._edge_set() :
+                g.add_edge(p, v)
+    return g
+
+
+def _edge_set(self):
+    return set(self.edges)
+
+
+G._edge_set = _edge_set
+
+FIFO, DEPTH, RANDOM = 0, 1, 2
+
+
+# --- engine 1: reference full-rescan (sim/reference.rs) ----------------------
+
+
+def simulate_ref(g, a, nd, choose, jitter, rng):
+    n = g.n
+    entry = [len(g.preds[v]) == 0 for v in range(n)]
+    all_mask = (1 << nd) - 1
+    present = [all_mask if entry[v] else 0 for v in range(n)]
+    executed = [entry[v] for v in range(n)]
+    exec_issued = [entry[v] for v in range(n)]
+    transfer_issued = [0] * n
+    exec_busy = [False] * nd
+    chan_busy = [[False] * nd for _ in range(nd)]
+    prio = t_level(g) if choose == DEPTH else None
+
+    heap, seq, t = [], 0, 0.0
+    execs, transfers = [], []
+
+    while True:
+        while True:
+            startable = []
+            for e, (v1, v2) in enumerate(g.edges):
+                if entry[v1]:
+                    continue
+                to, frm = a[v2], a[v1]
+                if frm == to:
+                    continue
+                if (
+                    executed[v1]
+                    and (present[v1] >> to) & 1 == 0
+                    and (transfer_issued[v1] >> to) & 1 == 0
+                    and not chan_busy[frm][to]
+                ):
+                    startable.append(("t", v1, frm, to))
+            for v in range(n):
+                if exec_issued[v]:
+                    continue
+                d = a[v]
+                if exec_busy[d]:
+                    continue
+                if all((present[p] >> d) & 1 for p in g.preds[v]):
+                    startable.append(("x", v, d, -1))
+            if not startable:
+                break
+            if choose == FIFO:
+                chosen = startable[0]
+            elif choose == RANDOM:
+                chosen = startable[rng.below(len(startable))]
+            else:
+                best, best_p = startable[0], -math.inf
+                for task in startable:
+                    p = prio[task[1]] + (1e9 if task[0] == "t" else 0.0)
+                    if p > best_p:
+                        best_p, best = p, task
+                chosen = best
+            jit = rng.lognormal(jitter) if jitter > 0.0 else 1.0
+            if chosen[0] == "x":
+                _, v, d, _ = chosen
+                dur = g.exec_s[v] * jit
+                exec_busy[d] = True
+                exec_issued[v] = True
+            else:
+                _, v, frm, to = chosen
+                dur = transfer_time(g.bytes[v]) * jit
+                chan_busy[frm][to] = True
+                transfer_issued[v] |= 1 << to
+            seq += 1
+            heapq.heappush(heap, (t + dur, seq, chosen, t))
+
+        if not heap:
+            break
+        t, _, done, start = heapq.heappop(heap)
+        if done[0] == "x":
+            _, v, d, _ = done
+            executed[v] = True
+            present[v] |= 1 << d
+            exec_busy[d] = False
+            execs.append((v, d, start, t))
+        else:
+            _, v, frm, to = done
+            present[v] |= 1 << to
+            chan_busy[frm][to] = False
+            transfers.append((v, frm, to, start, t))
+
+    return execs, transfers, t
+
+
+# --- engine 2: incremental ready queues (sim/incremental.rs) -----------------
+#
+# Pending sets are modelled as plain python sets; peeks use min()/max(),
+# which is order-equivalent to the Rust BTreeSet / priority-heap peeks.
+
+
+def simulate_inc(g, a, nd, choose, jitter, rng):
+    n = g.n
+    entry = [len(g.preds[v]) == 0 for v in range(n)]
+    all_mask = (1 << nd) - 1
+    present = [all_mask if entry[v] else 0 for v in range(n)]
+    executed = [entry[v] for v in range(n)]
+    exec_issued = [entry[v] for v in range(n)]
+    transfer_issued = [0] * n
+    exec_busy = [False] * nd
+    chan_busy = [[False] * nd for _ in range(nd)]
+    prio = t_level(g) if choose == DEPTH else None
+
+    # ready-queue state
+    chan_pending = [[set() for _ in range(nd)] for _ in range(nd)]  # edge idxs
+    dev_pending = [set() for _ in range(nd)]                       # node ids
+    missing = [0] * n
+    for v in range(n):
+        if entry[v]:
+            continue
+        missing[v] = sum(1 for p in g.preds[v] if not entry[p])
+        if missing[v] == 0:
+            dev_pending[a[v]].add(v)
+
+    heap, seq, t = [], 0, 0.0
+    execs, transfers = [], []
+
+    def dec_missing(v2):
+        missing[v2] -= 1
+        if missing[v2] == 0:
+            dev_pending[a[v2]].add(v2)
+
+    def pick():
+        """Mirror of the reference ChooseTask over the materialized set."""
+        if choose == FIFO:
+            # first ready transfer in edge order, else first ready exec
+            best_e = None
+            for frm in range(nd):
+                for to in range(nd):
+                    if chan_busy[frm][to] or not chan_pending[frm][to]:
+                        continue
+                    e = min(chan_pending[frm][to])
+                    if best_e is None or e < best_e:
+                        best_e = e
+            if best_e is not None:
+                v1, v2 = g.edges[best_e]
+                return ("t", v1, a[v1], a[v2], best_e)
+            best_v = None
+            for d in range(nd):
+                if exec_busy[d] or not dev_pending[d]:
+                    continue
+                v = min(dev_pending[d])
+                if best_v is None or v < best_v:
+                    best_v = v
+            if best_v is not None:
+                return ("x", best_v, a[best_v], -1, -1)
+            return None
+        if choose == DEPTH:
+            # max effective priority; ties -> transfers before execs,
+            # then min edge idx / node id (= first in enumeration order)
+            best = None  # (eff, cls, idx, payload)
+            for frm in range(nd):
+                for to in range(nd):
+                    if chan_busy[frm][to] or not chan_pending[frm][to]:
+                        continue
+                    # channel top: max priority, tie min edge idx
+                    e = min(
+                        chan_pending[frm][to],
+                        key=lambda e: (-prio[g.edges[e][0]], e),
+                    )
+                    v1 = g.edges[e][0]
+                    eff = prio[v1] + 1e9
+                    cand = (eff, 0, e, ("t", v1, frm, to, e))
+                    if (
+                        best is None
+                        or eff > best[0]
+                        or (eff == best[0] and cand[1] == best[1] and e < best[2])
+                    ):
+                        best = cand
+            for d in range(nd):
+                if exec_busy[d] or not dev_pending[d]:
+                    continue
+                v = min(dev_pending[d], key=lambda v: (-prio[v], v))
+                eff = prio[v]
+                cand = (eff, 1, v, ("x", v, d, -1, -1))
+                if (
+                    best is None
+                    or eff > best[0]
+                    or (eff == best[0] and cand[1] == best[1] and v < best[2])
+                ):
+                    best = cand
+            return best[3] if best else None
+        # RANDOM: materialize the identical list (transfers in edge order,
+        # then execs in node order) and draw one index
+        tlist = []
+        for frm in range(nd):
+            for to in range(nd):
+                if not chan_busy[frm][to]:
+                    tlist.extend(chan_pending[frm][to])
+        tlist.sort()
+        elist = []
+        for d in range(nd):
+            if not exec_busy[d]:
+                elist.extend(dev_pending[d])
+        elist.sort()
+        total = len(tlist) + len(elist)
+        if total == 0:
+            return None
+        k = rng.below(total)
+        if k < len(tlist):
+            e = tlist[k]
+            v1, v2 = g.edges[e]
+            return ("t", v1, a[v1], a[v2], e)
+        v = elist[k - len(tlist)]
+        return ("x", v, a[v], -1, -1)
+
+    while True:
+        while True:
+            picked = pick()
+            if picked is None:
+                break
+            jit = rng.lognormal(jitter) if jitter > 0.0 else 1.0
+            if picked[0] == "x":
+                _, v, d, _, _ = picked
+                dur = g.exec_s[v] * jit
+                exec_busy[d] = True
+                exec_issued[v] = True
+                dev_pending[d].discard(v)
+                task = ("x", v, d, -1)
+            else:
+                _, v, frm, to, _ = picked
+                dur = transfer_time(g.bytes[v]) * jit
+                chan_busy[frm][to] = True
+                transfer_issued[v] |= 1 << to
+                # eager removal: every duplicate edge (v -> device `to`)
+                # is now dead (transfer_issued), drop them all
+                for e2, v2 in g.out_edges[v]:
+                    if a[v2] == to:
+                        chan_pending[frm][to].discard(e2)
+                task = ("t", v, frm, to)
+            seq += 1
+            heapq.heappush(heap, (t + dur, seq, task, t))
+
+        if not heap:
+            break
+        t, _, done, start = heapq.heappop(heap)
+        if done[0] == "x":
+            _, v, d, _ = done
+            executed[v] = True
+            present[v] |= 1 << d
+            exec_busy[d] = False
+            execs.append((v, d, start, t))
+            # newly-pending transfers: v's output toward remote consumers
+            for e, v2 in g.out_edges[v]:
+                to = a[v2]
+                if to != d:
+                    chan_pending[d][to].add(e)
+            # newly-satisfied local inputs
+            for _, v2 in g.out_edges[v]:
+                if a[v2] == d:
+                    dec_missing(v2)
+        else:
+            _, v, frm, to = done
+            present[v] |= 1 << to
+            chan_busy[frm][to] = False
+            transfers.append((v, frm, to, start, t))
+            for _, v2 in g.out_edges[v]:
+                if a[v2] == to:
+                    dec_missing(v2)
+
+    return execs, transfers, t
+
+
+# --- equivalence sweep -------------------------------------------------------
+
+
+def uniform_graph(seed, n):
+    """Identical costs everywhere: maximal DepthFirst-priority and
+    duration ties, the adversarial case for tie-break fidelity."""
+    g = random_graph(seed, n)
+    for v in range(n):
+        g.exec_s[v] = 2e-4
+        g.bytes[v] = 4096.0
+    return g
+
+
+def main():
+    cases = 0
+    for seed in range(90):
+        builder = uniform_graph if seed >= 60 else random_graph
+        g = builder(seed % 60, 40 + ((seed % 60) * 7) % 120)
+        arng = Rng(seed ^ 0xA55)
+        nd = 2 + arng.below(7)
+        a = [arng.below(nd) for _ in range(g.n)]
+        for choose in (FIFO, DEPTH, RANDOM):
+            for jitter in (0.0, 0.12):
+                r_ref = simulate_ref(g, a, nd, choose, jitter, Rng(seed))
+                r_inc = simulate_inc(g, a, nd, choose, jitter, Rng(seed))
+                if r_ref != r_inc:
+                    print(
+                        f"MISMATCH seed={seed} n={g.n} nd={nd} "
+                        f"choose={choose} jitter={jitter}"
+                    )
+                    for name, x, y in (
+                        ("execs", r_ref[0], r_inc[0]),
+                        ("transfers", r_ref[1], r_inc[1]),
+                    ):
+                        for i, (p, q) in enumerate(zip(x, y)):
+                            if p != q:
+                                print(f"  first {name} diff at {i}: {p} != {q}")
+                                break
+                        if len(x) != len(y):
+                            print(f"  {name} count {len(x)} != {len(y)}")
+                    sys.exit(1)
+                cases += 1
+    print(f"OK: {cases} cases bitwise-identical (ref vs incremental)")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,9 +2,14 @@
 """Generate rust/tests/fixtures/golden_trace_chainmm_tiny.json.
 
 A line-for-line port of the *deterministic* configuration of the Rust
-work-conserving simulator (rust/src/sim/mod.rs, SimConfig::deterministic:
-jitter_sigma = 0, Choose::Fifo) plus the CHAINMM(Tiny) graph builder
+work-conserving simulator (rust/src/sim/reference.rs — the Algorithm 2
+oracle loop; SimConfig::deterministic: jitter_sigma = 0, Choose::Fifo)
+plus the CHAINMM(Tiny) graph builder
 (rust/src/graph/workloads/chainmm.rs via rust/src/graph/shard.rs).
+The incremental ready-set engine (rust/src/sim/incremental.rs, the
+default) is bitwise-identical to the reference engine, so this fixture
+pins both; tools/check_incremental_sim.py validates that equivalence in
+Python across random graphs and all ChooseTask strategies.
 
 With zero jitter and FIFO task choice the simulator never consumes the
 RNG, so this port only has to mirror graph construction order, the cost
