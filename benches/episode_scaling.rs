@@ -1,0 +1,163 @@
+//! Episode-generation throughput: ASSIGN episodes/sec with the native
+//! policy backend as rollout worker threads grow (ISSUE 3 / DESIGN.md
+//! §11).
+//!
+//! Stage II wall-clock is bounded by episode *generation* — every
+//! REINFORCE update needs a fresh trajectory — and the PJRT path ran all
+//! of it serially on the leader thread. The native backend is
+//! `Send + Sync`, so `rollout::generate_episodes` fans whole episodes
+//! (encode + per-step SEL/PLC heads + ε-greedy draws) across the
+//! deterministic worker pool. Episodes are independent given the
+//! parameter snapshot, so throughput should scale near-linearly with
+//! cores. Acceptance target: >= 4x episodes/sec at 4 threads vs 1 on
+//! the 500-node synthetic workload (needs >= 4 physical cores).
+//!
+//! The bench also *asserts* the determinism contract: merged episode
+//! streams must be bit-identical at every thread count.
+//!
+//! Writes BENCH_episode.json at the repo root (same shape as
+//! BENCH_sim.json). Knobs: DOPPLER_EPISODE_BENCH_N (episodes per cell,
+//! default 16), DOPPLER_EPISODE_BENCH_NODES (default 500),
+//! DOPPLER_EPISODE_BENCH_THREADS (default 1,2,4,8).
+
+use std::time::Instant;
+
+use doppler::bench_util::banner;
+use doppler::eval::tables::Table;
+use doppler::features::static_features;
+use doppler::graph::workloads::synthetic_layered;
+use doppler::policy::{EpisodeCfg, EpisodeResult, GraphEncoding, Method, NativePolicy, PolicyBackend};
+use doppler::rollout;
+use doppler::sim::topology::DeviceTopology;
+use doppler::util::json::{self, Json};
+use doppler::util::{env_usize, rng::Rng};
+
+const OUT_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_episode.json");
+
+fn same_episodes(a: &[EpisodeResult], b: &[EpisodeResult]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| {
+            x.assignment == y.assignment
+                && x.trajectory.sel_actions == y.trajectory.sel_actions
+                && x.trajectory.plc_actions == y.trajectory.plc_actions
+                && x.trajectory.xd_steps == y.trajectory.xd_steps
+        })
+}
+
+fn main() {
+    banner(
+        "Episode generation scaling — native backend, parallel rollouts",
+        "ISSUE 3 perf target (systems extension; cf. paper §4.3 sampling efficiency)",
+    );
+    let episodes = env_usize("DOPPLER_EPISODE_BENCH_N", 16).max(2);
+    let nodes = env_usize("DOPPLER_EPISODE_BENCH_NODES", 500);
+    let threads_list: Vec<usize> = match std::env::var("DOPPLER_EPISODE_BENCH_THREADS") {
+        Ok(v) if !v.is_empty() => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        _ => vec![1, 2, 4, 8],
+    };
+
+    let nets = NativePolicy::builtin();
+    let g = synthetic_layered(nodes, 7);
+    let topo = doppler::eval::restrict(&DeviceTopology::v100x8(), 4);
+    let feats = static_features(&g, &topo, 1.0);
+    let variant = nets.variant_for_graph(g.n(), g.m()).expect("variant");
+    let enc = GraphEncoding::build(&g, &feats, nets.manifest(), &variant).expect("encoding");
+    let params = PolicyBackend::init_params(&nets).expect("params");
+    let cfg = EpisodeCfg {
+        method: Method::Doppler,
+        epsilon: 0.2,
+        n_devices: 4,
+        per_step_encode: false,
+    };
+
+    let mut table = Table::new(
+        "native episode generation (higher is better)",
+        &["NODES", "THREADS", "EPISODES", "EPISODES/S", "MS/EPISODE", "SPEEDUP"],
+    );
+
+    let mut reference: Option<Vec<EpisodeResult>> = None;
+    let mut base_eps_per_sec = 0.0f64;
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedup_4t = 0.0f64;
+    for &threads in &threads_list {
+        // warmup + determinism check against the 1-thread reference
+        let mut warm_rng = Rng::new(1);
+        let warm = rollout::generate_episodes(
+            &nets, &enc, &g, &topo, &feats, &params, &cfg, &mut warm_rng, episodes, threads,
+        )
+        .expect("episode generation");
+        match &reference {
+            None => reference = Some(warm),
+            Some(r) => assert!(
+                same_episodes(r, &warm),
+                "threads={threads}: episode stream diverged — determinism contract broken"
+            ),
+        }
+
+        let t0 = Instant::now();
+        let mut rng = Rng::new(2);
+        let got = rollout::generate_episodes(
+            &nets, &enc, &g, &topo, &feats, &params, &cfg, &mut rng, episodes, threads,
+        )
+        .expect("episode generation");
+        let secs = t0.elapsed().as_secs_f64().max(1e-12);
+        assert_eq!(got.len(), episodes);
+        let eps_per_sec = episodes as f64 / secs;
+        if threads == threads_list[0] {
+            base_eps_per_sec = eps_per_sec;
+        }
+        let speedup = eps_per_sec / base_eps_per_sec.max(1e-12);
+        if threads == 4 {
+            speedup_4t = speedup;
+        }
+        table.row(vec![
+            g.n().to_string(),
+            threads.to_string(),
+            episodes.to_string(),
+            format!("{eps_per_sec:.2}"),
+            format!("{:.2}", 1e3 * secs / episodes as f64),
+            format!("{speedup:.2}x"),
+        ]);
+        rows.push(json::obj(vec![
+            ("nodes", json::num(g.n() as f64)),
+            ("threads", json::num(threads as f64)),
+            ("episodes", json::num(episodes as f64)),
+            ("episodes_per_sec", json::num(eps_per_sec)),
+            ("ms_per_episode", json::num(1e3 * secs / episodes as f64)),
+            ("speedup_vs_1t", json::num(speedup)),
+        ]));
+    }
+    table.emit(Some(std::path::Path::new("runs/episode_scaling.csv")));
+
+    let doc = json::obj(vec![
+        ("bench", json::s("episode_scaling")),
+        ("source", json::s("cargo bench --bench episode_scaling")),
+        (
+            "config",
+            json::s("native backend, DOPPLER method, eps 0.2, v100x8 restricted to 4 devices"),
+        ),
+        ("workload", json::s(&g.name)),
+        ("nodes", json::num(g.n() as f64)),
+        ("edges", json::num(g.m() as f64)),
+        ("episodes_per_cell", json::num(episodes as f64)),
+        ("host_threads", json::num(rollout::available_threads() as f64)),
+        ("speedup_4t", json::num(speedup_4t)),
+        ("target_speedup_4t", json::num(4.0)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(OUT_JSON, doc.to_string() + "\n").expect("writing BENCH_episode.json");
+    println!("[perf snapshot written to {OUT_JSON}]");
+
+    if threads_list.contains(&4) {
+        println!(
+            "4-thread speedup: {speedup_4t:.2}x {}",
+            if speedup_4t >= 4.0 {
+                "-- meets the >= 4x acceptance target"
+            } else if rollout::available_threads() < 4 {
+                "-- below target, but this host has < 4 cores (target needs >= 4)"
+            } else {
+                "-- BELOW the >= 4x acceptance target"
+            }
+        );
+    }
+}

@@ -10,13 +10,13 @@ use doppler::bench_util::{banner, bench_episodes};
 use doppler::engine::EngineConfig;
 use doppler::eval::restrict;
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::{Method, PolicyNets};
+use doppler::policy::Method;
 use doppler::sim::topology::DeviceTopology;
 use doppler::train::{write_history_csv, Stages, TrainConfig, Trainer};
 
 fn main() {
     banner("Fig. 4 — stage-combination training curves", "Fig. 4, §6.2 Q3");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let workload = std::env::var("DOPPLER_FIG4_WORKLOAD").unwrap_or_else(|_| "llama-layer".into());
     let g = by_name(&workload, Scale::Full);
     let topo = DeviceTopology::p100x4();
@@ -37,7 +37,7 @@ fn main() {
         let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
         cfg.scale_to_budget(b);
         cfg.seed = 4;
-        let trainer = Trainer::new(&nets, &g, topo.clone(), cfg).unwrap();
+        let trainer = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg).unwrap();
         let t0 = std::time::Instant::now();
         let result = trainer.run(stages, &engine_cfg).unwrap();
         let path = format!("runs/fig4_{}.csv", label.replace('+', "_"));

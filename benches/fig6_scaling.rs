@@ -11,14 +11,14 @@ use doppler::engine::EngineConfig;
 use doppler::eval::tables::Table;
 use doppler::features::static_features;
 use doppler::graph::workloads::synthetic_layered;
-use doppler::policy::{run_episode, EpisodeCfg, GraphEncoding, Method, OptState, PolicyNets};
+use doppler::policy::{run_episode, EpisodeCfg, GraphEncoding, Method, OptState};
 use doppler::sim::topology::DeviceTopology;
 use doppler::train::{TrainConfig, Trainer};
 use doppler::util::rng::Rng;
 
 fn main() {
     banner("Fig. 6 — inference & update time vs graph size", "Fig. 6, §6.2 Q6");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let topo = DeviceTopology::p100x4();
     let mut table = Table::new(
         "Fig. 6: per-episode policy cost (ms) vs graph size",
@@ -30,8 +30,8 @@ fn main() {
     for target in [80usize, 220, 340] {
         let g = synthetic_layered(target, 6);
         let feats = static_features(&g, &topo, 1.0);
-        let variant = nets.manifest.variant_for(g.n(), g.m()).unwrap().clone();
-        let enc = GraphEncoding::build(&g, &feats, &nets.manifest, &variant).unwrap();
+        let variant = nets.variant_for_graph(g.n(), g.m()).unwrap();
+        let enc = GraphEncoding::build(&g, &feats, nets.manifest(), &variant).unwrap();
         let params = nets.init_params().unwrap();
 
         let mut infer = |method: Method, per_step: bool| {
@@ -43,7 +43,7 @@ fn main() {
             };
             let mut rng = Rng::new(9);
             time_ms(1, 3, || {
-                let _ = run_episode(&nets, &enc, &g, &topo, &feats, &params, &cfg, &mut rng)
+                let _ = run_episode(nets.as_ref(), &enc, &g, &topo, &feats, &params, &cfg, &mut rng)
                     .unwrap();
             })
         };
@@ -51,10 +51,10 @@ fn main() {
         let gdp = infer(Method::Gdp, false);
         let plc_step = infer(Method::Placeto, true);
 
-        // update time: one REINFORCE train step through PJRT
+        // update time: one REINFORCE train step through the active backend
         let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
         cfg.seed = 1;
-        let mut trainer = Trainer::new(&nets, &g, topo.clone(), cfg).unwrap();
+        let mut trainer = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg).unwrap();
         let engine_cfg = EngineConfig::new(doppler::eval::restrict(&topo, 4));
         // warm up executable compilation outside the timing
         trainer.stage2_sim(1).unwrap();

@@ -13,14 +13,14 @@ use doppler::eval::restrict;
 use doppler::eval::tables::{cell, Table};
 use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::{Method, PolicyNets};
+use doppler::policy::Method;
 use doppler::sim::topology::DeviceTopology;
 use doppler::sim::trace::transfer_locality;
 use doppler::train::{Stages, TrainConfig, Trainer};
 
 fn main() {
     banner("Tables 10/11 — hardware transfer 4 -> 8 devices", "Appendix J");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let b = bench_episodes();
     let p4 = DeviceTopology::p100x4();
     let v8 = DeviceTopology::v100x8();
@@ -41,7 +41,7 @@ fn main() {
         cfg.scale_to_budget(b);
         cfg.seed = 10;
         let e4 = EngineConfig::new(p4.clone());
-        let pre = Trainer::new(&nets, &g, p4.clone(), cfg)
+        let pre = Trainer::new(nets.as_ref(), &g, p4.clone(), cfg)
             .unwrap()
             .run(Stages { imitation: b / 4, sim_rl: b * 3 / 4, real_rl: 0 }, &e4)
             .unwrap();
@@ -51,7 +51,7 @@ fn main() {
         cfg8.scale_to_budget(b);
         cfg8.seed = 11;
         let e8 = EngineConfig::new(v8.clone());
-        let mut tr8 = Trainer::new(&nets, &g, v8.clone(), cfg8.clone())
+        let mut tr8 = Trainer::new(nets.as_ref(), &g, v8.clone(), cfg8.clone())
             .unwrap()
             .with_params(pre.params.clone());
         let zero = tr8.greedy_assignment().unwrap();
@@ -61,7 +61,7 @@ fn main() {
         tr8.stage3_real(b / 6, &e8).unwrap();
         let tuned = tr8.greedy_assignment().unwrap();
 
-        let mut ctx8 = EvalCtx::new(Some(&nets), v8.clone(), 8);
+        let mut ctx8 = EvalCtx::new(Some(nets.as_ref()), v8.clone(), 8);
         ctx8.episodes = b;
         let s_zero = ctx8.evaluate(&g, &zero);
         let s_tuned = ctx8.evaluate(&g, &tuned);

@@ -11,14 +11,13 @@ use doppler::bench_util::{banner, bench_episodes, bench_workloads};
 use doppler::eval::tables::{cell, reduction, Table};
 use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::PolicyNets;
 use doppler::sim::topology::DeviceTopology;
 
 fn main() {
     banner("Table 2 — main comparison, 4 devices", "Table 2, §6.2 Q1");
-    let nets = PolicyNets::load_default()
+    let nets = doppler::policy::load_default_backend()
         .map_err(|e| {
-            eprintln!("artifacts required: {e}");
+            eprintln!("policy backend required: {e}");
             std::process::exit(1);
         })
         .unwrap();
@@ -41,7 +40,7 @@ fn main() {
 
     for name in bench_workloads() {
         let g = by_name(&name, Scale::Full);
-        let mut ctx = EvalCtx::new(Some(&nets), DeviceTopology::p100x4(), 4);
+        let mut ctx = EvalCtx::new(Some(nets.as_ref()), DeviceTopology::p100x4(), 4);
         ctx.episodes = bench_episodes();
         let mut cells = vec![name.to_uppercase()];
         let mut means = Vec::new();

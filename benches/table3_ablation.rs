@@ -10,19 +10,18 @@ use doppler::bench_util::{banner, bench_episodes, bench_workloads};
 use doppler::eval::tables::{cell, Table};
 use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::PolicyNets;
 use doppler::sim::topology::DeviceTopology;
 
 fn main() {
     banner("Table 3 — SEL/PLC ablation", "Table 3, §6.2 Q2");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let mut table = Table::new(
         "Table 3: ablation, real engine time (ms), 4 devices",
         &["MODEL", "SYS", "SEL", "PLC"],
     );
     for name in bench_workloads() {
         let g = by_name(&name, Scale::Full);
-        let mut ctx = EvalCtx::new(Some(&nets), DeviceTopology::p100x4(), 4);
+        let mut ctx = EvalCtx::new(Some(nets.as_ref()), DeviceTopology::p100x4(), 4);
         ctx.episodes = bench_episodes();
         let mut cells = vec![name.to_uppercase()];
         for id in [MethodId::DopplerSys, MethodId::DopplerSel, MethodId::DopplerPlc] {

@@ -11,13 +11,13 @@ use doppler::engine::EngineConfig;
 use doppler::eval::tables::{cell, Table};
 use doppler::eval::{restrict, run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::{Method, PolicyNets};
+use doppler::policy::Method;
 use doppler::sim::topology::DeviceTopology;
 use doppler::train::{Stages, TrainConfig, Trainer};
 
 fn main() {
     banner("Table 4 — few-shot transfer across graphs", "Table 4, §6.2 Q5");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let b = bench_episodes();
     let topo = DeviceTopology::p100x4();
 
@@ -37,21 +37,21 @@ fn main() {
         let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
         cfg.scale_to_budget(b);
         let engine_cfg = EngineConfig::new(restrict(&topo, 4));
-        let pre = Trainer::new(&nets, &src, topo.clone(), cfg.clone())
+        let pre = Trainer::new(nets.as_ref(), &src, topo.clone(), cfg.clone())
             .unwrap()
             .run(Stages { imitation: b / 4, sim_rl: b * 3 / 4, real_rl: 0 }, &engine_cfg)
             .unwrap();
 
         // 2. evaluate on the target graph at increasing shot budgets
         let dst = by_name(dst_name, Scale::Full);
-        let mut ctx = EvalCtx::new(Some(&nets), topo.clone(), 4);
+        let mut ctx = EvalCtx::new(Some(nets.as_ref()), topo.clone(), 4);
         ctx.episodes = b;
         ctx.eval_reps = 10;
         let mut cells = vec![src_name.to_uppercase(), dst_name.to_uppercase()];
         for shots in [0usize, b / 2, b] {
             let mut tcfg = cfg.clone();
             tcfg.scale_to_budget(shots.max(1));
-            let mut tr = Trainer::new(&nets, &dst, topo.clone(), tcfg)
+            let mut tr = Trainer::new(nets.as_ref(), &dst, topo.clone(), tcfg)
                 .unwrap()
                 .with_params(pre.params.clone());
             let a = if shots == 0 {

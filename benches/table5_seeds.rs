@@ -8,12 +8,11 @@ use doppler::bench_util::{banner, bench_episodes};
 use doppler::eval::tables::{cell, Table};
 use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::PolicyNets;
 use doppler::sim::topology::DeviceTopology;
 
 fn main() {
     banner("Table 5 — seed stability", "Appendix G.2");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let g = by_name("chainmm", Scale::Full);
     let mut table = Table::new(
         "Table 5: DOPPLER-SYS across seeds (CHAINMM, ms)",
@@ -21,7 +20,7 @@ fn main() {
     );
     let mut cells = Vec::new();
     for seed in 0..5u64 {
-        let mut ctx = EvalCtx::new(Some(&nets), DeviceTopology::p100x4(), 4);
+        let mut ctx = EvalCtx::new(Some(nets.as_ref()), DeviceTopology::p100x4(), 4);
         ctx.episodes = bench_episodes();
         ctx.seed = seed * 31 + 7;
         let r = run_method(MethodId::DopplerSys, &g, &ctx).unwrap();

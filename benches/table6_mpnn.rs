@@ -9,13 +9,13 @@ use doppler::engine::EngineConfig;
 use doppler::eval::restrict;
 use doppler::eval::tables::Table;
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::{Method, PolicyNets};
+use doppler::policy::Method;
 use doppler::sim::topology::DeviceTopology;
 use doppler::train::{Stages, TrainConfig, Trainer};
 
 fn main() {
     banner("Table 6 — message-passing frequency ablation", "Appendix G.3");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let g = by_name("chainmm", Scale::Full);
     let topo = DeviceTopology::p100x4();
     // per-step encoding is expensive: use a reduced budget for both arms
@@ -31,7 +31,7 @@ fn main() {
         cfg.scale_to_budget(b);
         cfg.per_step_encode = per_step;
         cfg.seed = 6;
-        let trainer = Trainer::new(&nets, &g, topo.clone(), cfg).unwrap();
+        let trainer = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg).unwrap();
         let engine_cfg = EngineConfig::new(restrict(&topo, 4));
         let t0 = std::time::Instant::now();
         let result = trainer

@@ -11,13 +11,13 @@ use doppler::eval::restrict;
 use doppler::eval::tables::{cell, Table};
 use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::{Method, PolicyNets};
+use doppler::policy::Method;
 use doppler::sim::topology::DeviceTopology;
 use doppler::train::{Stages, TrainConfig, Trainer};
 
 fn main() {
     banner("Table 7 — PLACETO pretraining ablation", "Appendix G.4");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let g = by_name("ffnn", Scale::Full);
     let topo = DeviceTopology::p100x4();
     let b = bench_episodes();
@@ -32,7 +32,7 @@ fn main() {
     cfg.scale_to_budget(b);
     cfg.seed = 7;
     let engine_cfg = EngineConfig::new(restrict(&topo, 4));
-    let result = Trainer::new(&nets, &g, topo.clone(), cfg)
+    let result = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg)
         .unwrap()
         .run(Stages { imitation: b / 4, sim_rl: b * 3 / 4, real_rl: 0 }, &engine_cfg)
         .unwrap();
@@ -41,7 +41,7 @@ fn main() {
         .get(&2)
         .map(|(a, _)| a.clone())
         .unwrap_or(result.best_assignment);
-    let mut ctx = EvalCtx::new(Some(&nets), topo.clone(), 4);
+    let mut ctx = EvalCtx::new(Some(nets.as_ref()), topo.clone(), 4);
     ctx.episodes = b;
     let pre = ctx.evaluate(&g, &best);
     eprintln!("placeto-pretrain = {}", cell(&pre));

@@ -9,12 +9,11 @@ use doppler::bench_util::{banner, bench_episodes, bench_workloads};
 use doppler::eval::tables::{cell, reduction, Table};
 use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::PolicyNets;
 use doppler::sim::topology::DeviceTopology;
 
 fn main() {
     banner("Table 8 — restricted GPU memory", "Appendix H.1");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let mut table = Table::new(
         "Table 8: memory-restricted execution (ms), 4 devices @ 50% memory",
         &["MODEL", "1 GPU", "CRIT. PATH", "PLACETO", "ENUMOPT.", "DOPPLER-SYS", "RED. vs BASE"],
@@ -23,7 +22,7 @@ fn main() {
         let g = by_name(&name, Scale::Full);
         // budget = 50% of an even split of the graph's total buffer bytes
         let topo = DeviceTopology::p100x4_restricted(g.total_edge_bytes(), 0.5);
-        let mut ctx = EvalCtx::new(Some(&nets), topo, 4);
+        let mut ctx = EvalCtx::new(Some(nets.as_ref()), topo, 4);
         ctx.episodes = bench_episodes();
         ctx.enforce_memory = true;
         let mut cells = vec![name.to_uppercase()];

@@ -9,19 +9,18 @@ use doppler::bench_util::{banner, bench_episodes, bench_workloads};
 use doppler::eval::tables::{cell, reduction, Table};
 use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::PolicyNets;
 use doppler::sim::topology::DeviceTopology;
 
 fn main() {
     banner("Table 9 — 8x V100 hierarchical topology", "Appendix H.2");
-    let nets = PolicyNets::load_default().expect("artifacts required");
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
     let mut table = Table::new(
         "Table 9: execution time (ms), 8 devices (two NVLink groups)",
         &["MODEL", "1 GPU", "CRIT. PATH", "ENUMOPT.", "DOPPLER-SYS", "RED. vs CP", "RED. vs ENUM"],
     );
     for name in bench_workloads() {
         let g = by_name(&name, Scale::Full);
-        let mut ctx = EvalCtx::new(Some(&nets), DeviceTopology::v100x8(), 8);
+        let mut ctx = EvalCtx::new(Some(nets.as_ref()), DeviceTopology::v100x8(), 8);
         ctx.episodes = bench_episodes();
         let mut cells = vec![name.to_uppercase()];
         let mut means = Vec::new();

@@ -4,19 +4,20 @@
 //! online — each served request's measured runtime doubles as the
 //! REINFORCE reward. Reports per-request latency over time.
 //!
-//!     make artifacts && cargo run --release --example serve_assignments
+//!     cargo run --release --example serve_assignments
+//! (native policy backend by default; `make artifacts` + DOPPLER_POLICY_BACKEND=pjrt for PJRT)
 
 use doppler::engine::{execute, EngineConfig};
 use doppler::graph::workloads::{llama_block, Scale};
-use doppler::policy::{Method, PolicyNets};
+use doppler::policy::Method;
 use doppler::sim::topology::DeviceTopology;
 use doppler::train::{TrainConfig, Trainer};
 use doppler::util::env_usize;
 use doppler::util::stats::{mean, Summary};
 
 fn main() -> anyhow::Result<()> {
-    let nets = PolicyNets::load_default()
-        .map_err(|e| anyhow::anyhow!("run `make artifacts` first: {e}"))?;
+    let nets = doppler::policy::load_default_backend()
+        .map_err(|e| anyhow::anyhow!("loading policy backend: {e}"))?;
     let g = llama_block(Scale::Full);
     let topo = DeviceTopology::p100x4();
     let requests = env_usize("DOPPLER_REQUESTS", 120);
@@ -29,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     cfg.scale_to_budget(requests);
     cfg.seed = 3;
     cfg.epsilon = doppler::train::Schedule { start: 0.1, end: 0.0 }; // gentle online exploration
-    let mut trainer = Trainer::new(&nets, &g, topo.clone(), cfg)?;
+    let mut trainer = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg)?;
     trainer.stage1_imitation(20)?;
     trainer.stage2_sim(40)?;
     println!("warm-start done (20 imitation + 40 sim episodes)\n");

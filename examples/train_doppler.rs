@@ -6,21 +6,22 @@
 //! real engine. This exercises every layer: L1 pallas kernels inside the
 //! L2 policy networks, AOT-loaded and driven by the L3 coordinator.
 //!
-//!     make artifacts && cargo run --release --example train_doppler
+//!     cargo run --release --example train_doppler
+//! (native policy backend by default; `make artifacts` + DOPPLER_POLICY_BACKEND=pjrt for PJRT)
 //!
 //! Recorded run: EXPERIMENTS.md §End-to-end driver.
 
 use doppler::engine::EngineConfig;
 use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{ffnn, Scale};
-use doppler::policy::{Method, PolicyNets};
+use doppler::policy::Method;
 use doppler::sim::topology::DeviceTopology;
 use doppler::train::{write_history_csv, Stages, TrainConfig, Trainer};
 use doppler::util::env_usize;
 
 fn main() -> anyhow::Result<()> {
-    let nets = PolicyNets::load_default()
-        .map_err(|e| anyhow::anyhow!("run `make artifacts` first: {e}"))?;
+    let nets = doppler::policy::load_default_backend()
+        .map_err(|e| anyhow::anyhow!("loading policy backend: {e}"))?;
     let g = ffnn(Scale::Full);
     let topo = DeviceTopology::p100x4();
     let episodes = env_usize("DOPPLER_EPISODES", 300);
@@ -41,7 +42,7 @@ fn main() -> anyhow::Result<()> {
     );
     let engine_cfg = EngineConfig::new(topo.clone());
     let t0 = std::time::Instant::now();
-    let trainer = Trainer::new(&nets, &g, topo.clone(), cfg)?;
+    let trainer = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg)?;
     let result = trainer.run(stages, &engine_cfg)?;
     println!(
         "trained in {:.0}s; best observed {:.1} ms",
@@ -69,7 +70,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- final comparison on the real engine ------------------------
     println!("\n=== real-engine comparison (10 reps each) ===");
-    let mut ctx = EvalCtx::new(Some(&nets), topo.clone(), 4);
+    let mut ctx = EvalCtx::new(Some(nets.as_ref()), topo.clone(), 4);
     ctx.episodes = episodes;
     let trained = ctx.evaluate(&g, &result.best_assignment);
     for id in [MethodId::SingleDevice, MethodId::CriticalPath, MethodId::EnumOpt] {

@@ -7,7 +7,6 @@
 
 use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::graph::workloads::{by_name, Scale};
-use doppler::policy::PolicyNets;
 use doppler::sim::topology::DeviceTopology;
 use doppler::sim::{simulate, trace, SimConfig};
 use doppler::util::rng::Rng;
@@ -16,8 +15,8 @@ fn main() -> anyhow::Result<()> {
     let workload = std::env::args().nth(1).unwrap_or_else(|| "ffnn".into());
     let g = by_name(&workload, Scale::Full);
     let topo = DeviceTopology::p100x4();
-    let nets = PolicyNets::load_default().ok();
-    let mut ctx = EvalCtx::new(nets.as_ref(), topo.clone(), 4);
+    let nets = doppler::policy::load_default_backend().ok();
+    let mut ctx = EvalCtx::new(nets.as_deref(), topo.clone(), 4);
     ctx.episodes = doppler::util::env_usize("DOPPLER_EPISODES", 150);
     ctx.eval_reps = 3;
 

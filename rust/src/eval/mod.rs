@@ -12,7 +12,7 @@ use crate::engine::{execute, EngineConfig};
 use crate::features::static_features;
 use crate::graph::{Assignment, Graph};
 use crate::heuristics::{self, critical_path_once, enumerative_optimizer};
-use crate::policy::{Method, PolicyNets};
+use crate::policy::{Method, PolicyBackend};
 use crate::sim::topology::DeviceTopology;
 use crate::sim::SimConfig;
 use crate::train::{Stages, TrainConfig, Trainer};
@@ -72,7 +72,9 @@ impl MethodId {
 
 /// Everything an experiment needs.
 pub struct EvalCtx<'a> {
-    pub nets: Option<&'a PolicyNets>,
+    /// Policy backend for learned methods (native by default via
+    /// `policy::load_default_backend`; `None` disables them).
+    pub nets: Option<&'a dyn PolicyBackend>,
     pub topo: DeviceTopology,
     pub n_devices: usize,
     /// Total episode budget for learned methods.
@@ -85,6 +87,9 @@ pub struct EvalCtx<'a> {
     /// by simulator-based table generation. Thread count never changes
     /// results (deterministic fan-out; see `rollout`).
     pub rollout: crate::rollout::RolloutCfg,
+    /// Stage II episodes generated per parameter snapshot (semantic
+    /// knob; see `TrainConfig::episode_batch`). Default 1 = sequential.
+    pub episode_batch: usize,
     /// Simulator task-enumeration engine for trained methods' Stage II
     /// rewards. Engines are bitwise-identical (DESIGN.md §10), so this
     /// is a wall-clock knob like `rollout.threads`.
@@ -92,7 +97,11 @@ pub struct EvalCtx<'a> {
 }
 
 impl<'a> EvalCtx<'a> {
-    pub fn new(nets: Option<&'a PolicyNets>, topo: DeviceTopology, n_devices: usize) -> EvalCtx<'a> {
+    pub fn new(
+        nets: Option<&'a dyn PolicyBackend>,
+        topo: DeviceTopology,
+        n_devices: usize,
+    ) -> EvalCtx<'a> {
         EvalCtx {
             nets,
             topo,
@@ -105,6 +114,7 @@ impl<'a> EvalCtx<'a> {
                 threads: crate::bench_util::rollout_threads(),
                 sim_reps: crate::rollout::DEFAULT_SIM_REPS,
             },
+            episode_batch: 1,
             sim_engine: crate::sim::Engine::Incremental,
         }
     }
@@ -160,7 +170,7 @@ pub fn run_method(id: MethodId, g: &Graph, ctx: &EvalCtx) -> Result<MethodResult
         | MethodId::DopplerSel | MethodId::DopplerPlc => {
             let nets = ctx
                 .nets
-                .ok_or_else(|| anyhow::anyhow!("{} requires artifacts", id.name()))?;
+                .ok_or_else(|| anyhow::anyhow!("{} requires a policy backend", id.name()))?;
             train_method(id, g, nets, ctx)?
         }
     };
@@ -175,7 +185,7 @@ pub fn run_method(id: MethodId, g: &Graph, ctx: &EvalCtx) -> Result<MethodResult
 /// Train a learned method per its paper protocol and return the best
 /// assignment (stage-III best re-checked against stage-II best on the
 /// engine, since stage rewards live on different clocks).
-fn train_method(id: MethodId, g: &Graph, nets: &PolicyNets, ctx: &EvalCtx) -> Result<Assignment> {
+fn train_method(id: MethodId, g: &Graph, nets: &dyn PolicyBackend, ctx: &EvalCtx) -> Result<Assignment> {
     let method = match id {
         MethodId::Placeto => Method::Placeto,
         MethodId::Gdp => Method::Gdp,
@@ -186,6 +196,7 @@ fn train_method(id: MethodId, g: &Graph, nets: &PolicyNets, ctx: &EvalCtx) -> Re
     cfg.sim.enforce_memory = ctx.enforce_memory;
     cfg.sim.engine = ctx.sim_engine;
     cfg.rollout = ctx.rollout;
+    cfg.episode_batch = ctx.episode_batch.max(1);
     match id {
         MethodId::DopplerSel => cfg.force_teacher_plc = true, // learned SEL only
         MethodId::DopplerPlc => cfg.force_teacher_sel = true, // learned PLC only

@@ -13,6 +13,13 @@
 //!               --scale {tiny|small|full}   --devices N
 //!               --topology {p100x4|v100x8|single}
 //!               --episodes N   --seed S   --out PATH
+//!               --policy-backend {native|pjrt}  policy implementation
+//!                   (default: DOPPLER_POLICY_BACKEND, else native — the
+//!                   pure-Rust backend needs no artifacts; pjrt loads the
+//!                   AOT HLO executables — DESIGN.md §11)
+//!               --episode-batch B  Stage II episodes sampled per
+//!                   parameter snapshot (semantic knob; batches fan out
+//!                   across workers with the native backend; default 1)
 //!               --rollout-threads N  simulation worker threads
 //!                   (default: DOPPLER_ROLLOUT_THREADS, else all cores;
 //!                   results are identical at any thread count — see
@@ -32,7 +39,7 @@ use doppler::eval::{run_method, EvalCtx, MethodId};
 use doppler::features::static_features;
 use doppler::graph::workloads::{self, Scale};
 use doppler::graph::Graph;
-use doppler::policy::PolicyNets;
+use doppler::policy::{BackendKind, PolicyBackend};
 use doppler::sim::topology::DeviceTopology;
 use doppler::sim::{simulate, trace, SimConfig};
 use doppler::train::{write_history_csv, Stages, TrainConfig, Trainer};
@@ -70,6 +77,12 @@ const HELP: &str = "doppler — dual-policy device assignment (paper reproductio
     --workload {chainmm|ffnn|llama-block|llama-layer}
     --scale {tiny|small|full}  --devices N  --topology {p100x4|v100x8|single}
     --episodes N  --seed S  --out PATH
+    --policy-backend B    {native|pjrt} policy implementation (default:
+                          DOPPLER_POLICY_BACKEND, else native — pure-Rust,
+                          no artifacts needed; pjrt loads AOT HLO)
+    --episode-batch B     Stage II episodes per parameter snapshot
+                          (batches fan out across workers with the native
+                          backend; semantic knob, default 1)
     --rollout-threads N   simulation worker threads (default:
                           DOPPLER_ROLLOUT_THREADS, else all cores;
                           deterministic: any thread count, same results)
@@ -104,6 +117,29 @@ fn sim_engine(args: &Args) -> Result<doppler::sim::Engine> {
         .with_context(|| format!("unknown --sim-engine '{s}' (expected incremental|reference)"))
 }
 
+/// Load the policy backend selected by `--policy-backend` (fallback:
+/// `DOPPLER_POLICY_BACKEND`, then native). The native backend loads in
+/// any container; pjrt requires `make artifacts` + libxla_extension.
+fn load_policy(args: &Args) -> Result<Box<dyn PolicyBackend>> {
+    let fallback = std::env::var("DOPPLER_POLICY_BACKEND").unwrap_or_else(|_| "native".into());
+    let s = args.str_or("policy-backend", &fallback);
+    let kind = BackendKind::parse(&s)
+        .with_context(|| format!("unknown --policy-backend '{s}' (expected native|pjrt)"))?;
+    doppler::policy::load_backend(kind)
+}
+
+/// Like [`load_policy`] but degrades to `None` (heuristics-only mode)
+/// with a notice when the selected backend cannot load.
+fn load_policy_opt(args: &Args) -> Option<Box<dyn PolicyBackend>> {
+    match load_policy(args) {
+        Ok(p) => Some(p),
+        Err(e) => {
+            eprintln!("policy backend unavailable ({e:#}); learned methods disabled");
+            None
+        }
+    }
+}
+
 fn load_graph(args: &Args) -> Result<Graph> {
     let name = args.str_or("workload", "chainmm");
     let scale = Scale::parse(&args.str_or("scale", "full")).context("bad --scale")?;
@@ -136,11 +172,12 @@ fn cmd_compare(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let topo = load_topo(args)?;
     let n_devices = args.usize_or("devices", 4);
-    let nets = PolicyNets::load_default().ok();
-    let mut ctx = EvalCtx::new(nets.as_ref(), topo, n_devices);
+    let policy = load_policy_opt(args);
+    let mut ctx = EvalCtx::new(policy.as_deref(), topo, n_devices);
     ctx.episodes = args.usize_or("episodes", ctx.episodes);
     ctx.seed = args.u64_or("seed", 0);
     ctx.rollout = rollout_cfg(args);
+    ctx.episode_batch = args.usize_or("episode-batch", 1).max(1);
     ctx.sim_engine = sim_engine(args)?;
 
     let methods: Vec<MethodId> = match args.get("methods") {
@@ -186,7 +223,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let topo = load_topo(args)?;
     let n_devices = args.usize_or("devices", 4);
-    let nets = PolicyNets::load_default()?;
+    let policy = load_policy(args)?;
     let method = match args.str_or("method", "doppler").as_str() {
         "doppler" => doppler::policy::Method::Doppler,
         "placeto" => doppler::policy::Method::Placeto,
@@ -197,13 +234,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut cfg = TrainConfig::new(method, sub.clone(), n_devices);
     cfg.seed = args.u64_or("seed", 0);
     cfg.rollout = rollout_cfg(args);
+    cfg.episode_batch = args.usize_or("episode-batch", 1).max(1);
     cfg.sim.engine = sim_engine(args)?;
     cfg.engine_reps = args.usize_or("engine-reps", cfg.engine_reps).max(1);
     let budget = args.usize_or("episodes", 400);
     let stages = Stages::budget(budget);
     let engine_cfg = EngineConfig::new(sub);
 
-    let mut trainer = Trainer::new(&nets, &g, doppler::eval::restrict(&topo, n_devices), cfg)?;
+    let mut trainer =
+        Trainer::new(policy.as_ref(), &g, doppler::eval::restrict(&topo, n_devices), cfg)?;
     if let Some(init) = args.get("init") {
         let p = doppler::runtime::manifest::load_params(std::path::Path::new(init))?;
         trainer = trainer.with_params(p);
@@ -239,11 +278,12 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let topo = load_topo(args)?;
     let n_devices = args.usize_or("devices", 4);
-    let nets = PolicyNets::load_default().ok();
-    let mut ctx = EvalCtx::new(nets.as_ref(), topo, n_devices);
+    let policy = load_policy_opt(args);
+    let mut ctx = EvalCtx::new(policy.as_deref(), topo, n_devices);
     ctx.episodes = args.usize_or("episodes", ctx.episodes);
     ctx.seed = args.u64_or("seed", 0);
     ctx.rollout = rollout_cfg(args);
+    ctx.episode_batch = args.usize_or("episode-batch", 1).max(1);
     ctx.sim_engine = sim_engine(args)?;
     let id = parse_method(&args.str_or("method", "critical-path"))?;
     let r = run_method(id, &g, &ctx)?;
@@ -260,11 +300,12 @@ fn cmd_visualize(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let topo = load_topo(args)?;
     let n_devices = args.usize_or("devices", 4);
-    let nets = PolicyNets::load_default().ok();
-    let mut ctx = EvalCtx::new(nets.as_ref(), topo.clone(), n_devices);
+    let policy = load_policy_opt(args);
+    let mut ctx = EvalCtx::new(policy.as_deref(), topo.clone(), n_devices);
     ctx.episodes = args.usize_or("episodes", 200);
     ctx.eval_reps = 3;
     ctx.rollout = rollout_cfg(args);
+    ctx.episode_batch = args.usize_or("episode-batch", 1).max(1);
     ctx.sim_engine = sim_engine(args)?;
     let id = parse_method(&args.str_or("method", "enum-opt"))?;
     let r = run_method(id, &g, &ctx)?;

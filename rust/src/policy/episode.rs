@@ -7,7 +7,14 @@
 //!   re-encodes per step via `per_step_encode`;
 //! - SEL scores are step-independent given `Hcat` (only the candidate
 //!   mask changes), so they are fetched once and masked rust-side — the
-//!   result is bit-identical to calling the masked executable per step.
+//!   result is bit-identical to calling the masked executable per step;
+//! - the per-step buffers (`v_onehot`, the PLC logits, the row-normalized
+//!   placement matrix) live in a reusable [`EpisodeScratch`], and
+//!   `place_norm` is maintained *incrementally*: placing node `v` on
+//!   device `d` rewrites only row `d` (every entry of a row equals
+//!   `1/count`, so the rewrite is exactly the values the old full O(m·n)
+//!   rebuild produced — bit-identical trajectories, pinned by the
+//!   `scratch_reuse_and_incremental_place_norm_bitwise` test).
 
 use anyhow::Result;
 
@@ -17,10 +24,10 @@ use crate::sim::topology::DeviceTopology;
 use crate::util::rng::Rng;
 
 use super::encoding::GraphEncoding;
-use super::nets::{Method, PolicyNets};
+use super::nets::{Method, PolicyBackend};
 
 /// Recorded episode trajectory, padded to the variant size — exactly the
-/// arrays the `train_*` executables replay.
+/// arrays the train step replays.
 #[derive(Clone, Debug)]
 pub struct Trajectory {
     pub sel_actions: Vec<i32>,
@@ -53,6 +60,62 @@ pub struct EpisodeCfg {
     pub per_step_encode: bool,
 }
 
+/// Reusable per-episode buffers for the MDP hot loop. Construct once and
+/// pass to [`run_episode_with`] to amortize allocations across episodes
+/// (the trainer holds one; each rollout worker holds its own).
+#[derive(Debug, Default)]
+pub struct EpisodeScratch {
+    v_onehot: Vec<f32>,
+    place_norm: Vec<f32>,
+    placed_on: Vec<Vec<usize>>,
+    logits: Vec<f32>,
+    dev_mask: Vec<f32>,
+    devices: Vec<usize>,
+}
+
+impl EpisodeScratch {
+    pub fn new() -> EpisodeScratch {
+        EpisodeScratch::default()
+    }
+
+    /// Size (or re-zero) every buffer for an `n`-node, `m`-device episode.
+    fn reset(&mut self, n: usize, m: usize, n_devices: usize) {
+        self.v_onehot.clear();
+        self.v_onehot.resize(n, 0.0);
+        self.place_norm.clear();
+        self.place_norm.resize(m * n, 0.0);
+        self.placed_on.iter_mut().for_each(|v| v.clear());
+        self.placed_on.resize_with(m, Vec::new);
+        self.logits.clear();
+        self.dev_mask.clear();
+        self.dev_mask.resize(m, 0.0);
+        for d in 0..n_devices.min(m) {
+            self.dev_mask[d] = 1.0;
+        }
+        self.devices.clear();
+        self.devices.extend(0..n_devices.min(m));
+    }
+}
+
+/// Record `v -> d` in the incremental row-normalized placement matrix:
+/// every entry of row `d` equals `1/count`, so only row `d` is rewritten
+/// (O(count), not O(m·n)) and the values are bit-identical to a full
+/// rebuild. Shared by the episode hot loop and the trainer's ablated
+/// episodes so the placement-state encoding cannot silently diverge.
+pub(crate) fn record_placement(
+    place_norm: &mut [f32],
+    placed_on: &mut [Vec<usize>],
+    n: usize,
+    v: usize,
+    d: usize,
+) {
+    placed_on[d].push(v);
+    let w = 1.0 / placed_on[d].len() as f32;
+    for &u in placed_on[d].iter() {
+        place_norm[d * n + u] = w;
+    }
+}
+
 /// Greedy-with-exploration pick over masked logits.
 fn pick(logits: &[f32], allowed: &[usize], epsilon: f64, rng: &mut Rng) -> usize {
     debug_assert!(!allowed.is_empty());
@@ -70,11 +133,11 @@ fn pick(logits: &[f32], allowed: &[usize], epsilon: f64, rng: &mut Rng) -> usize
     best
 }
 
-/// Run one ASSIGN episode. Returns the finished assignment plus the
-/// trajectory for the policy-gradient update.
+/// Run one ASSIGN episode with fresh scratch buffers. See
+/// [`run_episode_with`] for the allocation-amortized variant.
 #[allow(clippy::too_many_arguments)]
-pub fn run_episode(
-    nets: &PolicyNets,
+pub fn run_episode<B: PolicyBackend + ?Sized>(
+    nets: &B,
     enc: &GraphEncoding,
     g: &Graph,
     topo: &DeviceTopology,
@@ -83,24 +146,51 @@ pub fn run_episode(
     cfg: &EpisodeCfg,
     rng: &mut Rng,
 ) -> Result<EpisodeResult> {
+    let mut scratch = EpisodeScratch::new();
+    run_episode_with(nets, enc, g, topo, feats, params, cfg, rng, &mut scratch)
+}
+
+/// Run one ASSIGN episode. Returns the finished assignment plus the
+/// trajectory for the policy-gradient update. `scratch` is reset here;
+/// reusing one scratch across episodes changes no output bit.
+#[allow(clippy::too_many_arguments)]
+pub fn run_episode_with<B: PolicyBackend + ?Sized>(
+    nets: &B,
+    enc: &GraphEncoding,
+    g: &Graph,
+    topo: &DeviceTopology,
+    feats: &StaticFeatures,
+    params: &[f32],
+    cfg: &EpisodeCfg,
+    rng: &mut Rng,
+    scratch: &mut EpisodeScratch,
+) -> Result<EpisodeResult> {
     let variant = nets.variant_for(enc)?;
     let n = enc.n;
-    let m = nets.manifest.max_devices;
+    let m = nets.manifest().max_devices;
     let df = DEVICE_FEATS;
-    debug_assert_eq!(df, nets.manifest.dev_feats);
+    debug_assert_eq!(df, nets.manifest().dev_feats);
+    // normalization constant: the critical-path length (identical to
+    // `enc.norm`, which `GraphEncoding::build` copies from `feats`)
+    let norm = feats.norm;
+    debug_assert_eq!(norm, enc.norm);
 
-    let mut dev_mask = vec![0.0f32; m];
-    for d in 0..cfg.n_devices.min(m) {
-        dev_mask[d] = 1.0;
-    }
-    let devices: Vec<usize> = (0..cfg.n_devices.min(m)).collect();
+    scratch.reset(n, m, cfg.n_devices);
+    let EpisodeScratch {
+        v_onehot,
+        place_norm,
+        placed_on,
+        logits,
+        dev_mask,
+        devices,
+    } = scratch;
 
     // encode once (or lazily per step for the ablation)
     let mut hcat = nets.encode(&variant, enc, params)?;
     let mut encode_calls = 1;
     let mut sel_scores = nets.sel_scores(&variant, enc, params, &hcat)?;
-    // episode-constant literals: marshal params/Hcat once, not per step
-    let mut cache = nets.episode_literals(enc, params, &hcat)?;
+    // per-episode backend state (PJRT: episode-constant literals)
+    let mut cache = nets.begin_episode(enc, params, &hcat)?;
 
     let mut st = AssignState::new(g, topo);
     let mut traj = Trajectory {
@@ -111,17 +201,12 @@ pub fn run_episode(
         xd_steps: vec![0.0; n * m * df],
     };
 
-    // placement counts for the (row-normalizable) device x node matrix
-    let mut place = vec![0.0f32; m * n];
-    let mut place_counts = vec![0usize; m];
-
-    let norm = enc.norm as f32;
     let mut h = 0usize;
     while !st.done() {
         if cfg.per_step_encode && h > 0 {
             hcat = nets.encode(&variant, enc, params)?;
             sel_scores = nets.sel_scores(&variant, enc, params, &hcat)?;
-            cache = nets.episode_literals(enc, params, &hcat)?;
+            cache = nets.begin_episode(enc, params, &hcat)?;
             encode_calls += 1;
         }
 
@@ -143,45 +228,51 @@ pub fn run_episode(
         let xd = st.device_features(v);
         for d in 0..cfg.n_devices.min(m) {
             for k in 0..df {
-                traj.xd_steps[(h * m + d) * df + k] = (xd[d][k] / enc.norm) as f32;
+                traj.xd_steps[(h * m + d) * df + k] = (xd[d][k] / norm) as f32;
             }
         }
 
         // --- PLC ---
-        let mut v_onehot = vec![0.0f32; n];
         v_onehot[v] = 1.0;
         let d = match cfg.method {
             Method::Gdp => {
-                let logits = nets.gdp_logits_cached(&variant, enc, &cache, &v_onehot, &dev_mask)?;
-                pick(&logits, &devices, cfg.epsilon, rng)
+                nets.gdp_logits_step(
+                    &variant,
+                    enc,
+                    &cache,
+                    params,
+                    &hcat,
+                    &v_onehot[..],
+                    &dev_mask[..],
+                    logits,
+                )?;
+                pick(&logits[..], &devices[..], cfg.epsilon, rng)
             }
             _ => {
-                // row-normalized placement matrix
-                let mut place_norm = vec![0.0f32; m * n];
-                for dd in 0..m {
-                    if place_counts[dd] > 0 {
-                        let w = 1.0 / place_counts[dd] as f32;
-                        for vv in 0..n {
-                            place_norm[dd * n + vv] = place[dd * n + vv] * w;
-                        }
-                    }
-                }
                 let xd_slice = &traj.xd_steps[h * m * df..(h + 1) * m * df];
-                let logits = nets.plc_logits_cached(
-                    &variant, enc, &cache, &v_onehot, xd_slice, &place_norm, &dev_mask,
+                nets.plc_logits_step(
+                    &variant,
+                    enc,
+                    &cache,
+                    params,
+                    &hcat,
+                    &v_onehot[..],
+                    xd_slice,
+                    &place_norm[..],
+                    &dev_mask[..],
+                    logits,
                 )?;
-                pick(&logits, &devices, cfg.epsilon, rng)
+                pick(&logits[..], &devices[..], cfg.epsilon, rng)
             }
         };
+        v_onehot[v] = 0.0;
         traj.plc_actions[h] = d as i32;
         traj.step_mask[h] = 1.0;
 
-        place[d * n + v] = 1.0;
-        place_counts[d] += 1;
+        record_placement(place_norm, placed_on, n, v, d);
         st.place(v, d);
         h += 1;
     }
-    let _ = (feats, norm); // feats reserved for future richer features
 
     Ok(EpisodeResult {
         assignment: st.into_assignment(),
@@ -230,5 +321,25 @@ mod tests {
     fn device_mask_shape() {
         let m = device_mask(8, 4);
         assert_eq!(m, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scratch_reset_sizes_buffers() {
+        let mut s = EpisodeScratch::new();
+        s.reset(10, 8, 4);
+        assert_eq!(s.v_onehot.len(), 10);
+        assert_eq!(s.place_norm.len(), 80);
+        assert_eq!(s.placed_on.len(), 8);
+        assert_eq!(s.devices, vec![0, 1, 2, 3]);
+        assert_eq!(s.dev_mask[3], 1.0);
+        assert_eq!(s.dev_mask[4], 0.0);
+        // shrink + dirty, then reset for a smaller episode
+        s.placed_on[2].push(7);
+        s.place_norm[5] = 0.25;
+        s.reset(4, 2, 2);
+        assert_eq!(s.v_onehot.len(), 4);
+        assert_eq!(s.place_norm.len(), 8);
+        assert!(s.place_norm.iter().all(|&x| x == 0.0));
+        assert!(s.placed_on.iter().all(|v| v.is_empty()));
     }
 }

@@ -1,10 +1,19 @@
-//! Policy layer: padded graph encodings, PJRT-backed policy-network call
-//! wrappers, and the ASSIGN episode runner (Algorithm 3).
+//! Policy layer: padded graph encodings, the [`PolicyBackend`] trait with
+//! its two implementations (pure-Rust native and PJRT-backed), and the
+//! ASSIGN episode runner (Algorithm 3).
 
 pub mod encoding;
 pub mod episode;
+pub mod native;
 pub mod nets;
 
 pub use encoding::GraphEncoding;
-pub use episode::{device_mask, run_episode, EpisodeCfg, EpisodeResult, Trajectory};
-pub use nets::{Method, OptState, PolicyNets};
+pub use episode::{
+    device_mask, run_episode, run_episode_with, EpisodeCfg, EpisodeResult, EpisodeScratch,
+    Trajectory,
+};
+pub use native::NativePolicy;
+pub use nets::{
+    load_backend, load_default_backend, BackendKind, EpisodeCache, Method, OptState,
+    PolicyBackend, PolicyNets,
+};

@@ -1,0 +1,1425 @@
+//! Native pure-Rust policy-inference and training backend.
+//!
+//! Reimplements the L2 policy networks (python/compile/model.py) — the
+//! K-round MPNN encoder (eqs. 2-3), the SEL head (eq. 4), the PLC head
+//! (eqs. 5-8), the GDP attention head, and the full REINFORCE/imitation
+//! train step with analytic backprop + Adam — directly over flat `f32`
+//! buffers, with tensor shapes derived from the artifacts manifest
+//! (`ParamLayout` mirrors python/compile/params.py exactly).
+//!
+//! Why: the per-step policy math is a handful of small GEMVs (the paper's
+//! §4.3 sampling-efficiency argument), so dispatching a PJRT executable
+//! per MDP step pays far more in literal marshalling and call overhead
+//! than the arithmetic itself. Running it in-process removes that
+//! overhead, removes the `make artifacts` requirement for learned-policy
+//! paths, and — because [`NativePolicy`] is `Send + Sync` — lets whole
+//! ASSIGN episodes fan out across the deterministic rollout worker pool
+//! (`rollout::generate_episodes`), which the single-threaded PJRT
+//! handles never could.
+//!
+//! Correctness contract:
+//! - forward passes are pinned against the JAX reference within 1e-5 by
+//!   `tests/golden_logits.rs` (fixture from tools/gen_golden_logits.py);
+//! - the analytic gradient was validated against `jax.grad` of
+//!   `model.episode_loss` by tools/check_native_policy.py (rel err
+//!   ~1e-9 in f64) and is continuously checked by the finite-difference
+//!   test in `tests/native_policy.rs`;
+//! - native-vs-PJRT outputs agree to f32 accumulation order only
+//!   (DESIGN.md §11): bit-exactness is guaranteed *within* a backend,
+//!   never across backends.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::manifest::{Manifest, VariantInfo};
+use crate::util::rng::Rng;
+
+use super::encoding::GraphEncoding;
+use super::episode::Trajectory;
+use super::nets::{EpisodeCache, Method, OptState, PolicyBackend};
+
+/// Masked-logit sentinel (model.py `NEG`).
+pub const NEG: f32 = -1e9;
+
+// --------------------------------------------------------------------------
+// flat parameter layout (mirrors python/compile/params.py)
+// --------------------------------------------------------------------------
+
+/// Offsets of one message-passing round's tensors.
+#[derive(Clone, Copy, Debug)]
+pub struct MpnnLayout {
+    pub wsrc: usize,
+    pub wdst: usize,
+    pub we: usize,
+    pub bm: usize,
+    pub wphi: usize,
+    pub bphi: usize,
+}
+
+/// One tensor in the flat blob (for initialization sweeps).
+#[derive(Clone, Copy, Debug)]
+struct Entry {
+    off: usize,
+    rows: usize,
+    cols: usize,
+    /// 1-D tensors are biases: zero-initialized.
+    bias: bool,
+}
+
+struct LayoutBuilder {
+    entries: Vec<Entry>,
+    off: usize,
+}
+
+impl LayoutBuilder {
+    fn mat(&mut self, rows: usize, cols: usize) -> usize {
+        let o = self.off;
+        self.entries.push(Entry { off: o, rows, cols, bias: false });
+        self.off += rows * cols;
+        o
+    }
+    fn vec1(&mut self, len: usize) -> usize {
+        let o = self.off;
+        self.entries.push(Entry { off: o, rows: len, cols: 1, bias: true });
+        self.off += len;
+        o
+    }
+}
+
+/// Named offsets into the flat `f32[P]` parameter blob. The entry order
+/// is the canonical layout of python/compile/params.py — one superset
+/// layout serves all three methods.
+#[derive(Clone, Debug)]
+pub struct ParamLayout {
+    pub h: usize,
+    pub nf: usize,
+    pub df: usize,
+    pub m: usize,
+    pub sel_in: usize,
+    pub plc_in: usize,
+    pub gdp_in: usize,
+    pub enc_w0: usize,
+    pub enc_b0: usize,
+    pub enc_w1: usize,
+    pub enc_b1: usize,
+    pub mpnn: Vec<MpnnLayout>,
+    pub sel_w0: usize,
+    pub sel_b0: usize,
+    pub sel_w1: usize,
+    pub sel_b1: usize,
+    pub dev_w0: usize,
+    pub dev_b0: usize,
+    pub plc_w0: usize,
+    pub plc_b0: usize,
+    pub plc_w1: usize,
+    pub plc_b1: usize,
+    pub gdp_wq: usize,
+    pub gdp_devemb: usize,
+    pub gdp_w0: usize,
+    pub gdp_b0: usize,
+    pub gdp_w1: usize,
+    pub gdp_b1: usize,
+    pub total: usize,
+    entries: Vec<Entry>,
+}
+
+impl ParamLayout {
+    /// Build the layout for the given model dims (EDGE_FEATS is 1).
+    pub fn new(hidden: usize, k_mpnn: usize, node_feats: usize, dev_feats: usize, max_devices: usize) -> ParamLayout {
+        let h = hidden;
+        let (sel_in, plc_in, gdp_in) = (4 * h, 6 * h, 9 * h);
+        let ef = 1usize;
+        let mut b = LayoutBuilder { entries: Vec::new(), off: 0 };
+        let enc_w0 = b.mat(node_feats, h);
+        let enc_b0 = b.vec1(h);
+        let enc_w1 = b.mat(h, h);
+        let enc_b1 = b.vec1(h);
+        let mut mpnn = Vec::with_capacity(k_mpnn);
+        for _ in 0..k_mpnn {
+            mpnn.push(MpnnLayout {
+                wsrc: b.mat(h, h),
+                wdst: b.mat(h, h),
+                we: b.mat(ef, h),
+                bm: b.vec1(h),
+                wphi: b.mat(2 * h, h),
+                bphi: b.vec1(h),
+            });
+        }
+        let sel_w0 = b.mat(sel_in, h);
+        let sel_b0 = b.vec1(h);
+        let sel_w1 = b.mat(h, 1);
+        let sel_b1 = b.vec1(1);
+        let dev_w0 = b.mat(dev_feats, h);
+        let dev_b0 = b.vec1(h);
+        let plc_w0 = b.mat(plc_in, h);
+        let plc_b0 = b.vec1(h);
+        let plc_w1 = b.mat(h, 1);
+        let plc_b1 = b.vec1(1);
+        let gdp_wq = b.mat(sel_in, sel_in);
+        let gdp_devemb = b.mat(max_devices, h);
+        let gdp_w0 = b.mat(gdp_in, h);
+        let gdp_b0 = b.vec1(h);
+        let gdp_w1 = b.mat(h, 1);
+        let gdp_b1 = b.vec1(1);
+        ParamLayout {
+            h,
+            nf: node_feats,
+            df: dev_feats,
+            m: max_devices,
+            sel_in,
+            plc_in,
+            gdp_in,
+            enc_w0,
+            enc_b0,
+            enc_w1,
+            enc_b1,
+            mpnn,
+            sel_w0,
+            sel_b0,
+            sel_w1,
+            sel_b1,
+            dev_w0,
+            dev_b0,
+            plc_w0,
+            plc_b0,
+            plc_w1,
+            plc_b1,
+            gdp_wq,
+            gdp_devemb,
+            gdp_w0,
+            gdp_b0,
+            gdp_w1,
+            gdp_b1,
+            total: b.off,
+            entries: b.entries,
+        }
+    }
+
+    /// He-style initialization (normal with std sqrt(2/fan_in); biases
+    /// zero) — the structural twin of params.py::init_params, seeded by
+    /// the deterministic xoshiro generator instead of numpy.
+    pub fn he_init(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut p = vec![0.0f32; self.total];
+        for e in &self.entries {
+            if e.bias {
+                continue;
+            }
+            let std = (2.0 / e.rows as f64).sqrt();
+            for x in p[e.off..e.off + e.rows * e.cols].iter_mut() {
+                *x = (rng.normal() * std) as f32;
+            }
+        }
+        p
+    }
+}
+
+// --------------------------------------------------------------------------
+// dense helpers (row-major, f32)
+// --------------------------------------------------------------------------
+
+/// `out = a @ b` (row-major; `a: [rows, inner]`, `b: [inner, cols]`).
+/// Zero `a` entries are skipped: harmless for values (adding exact zero
+/// products) and a large win for the one-hot/path/placement operands.
+fn matmul(a: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize, out: &mut [f32]) {
+    for i in 0..rows {
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        orow.fill(0.0);
+        for k in 0..inner {
+            let av = a[i * inner + k];
+            if av != 0.0 {
+                let brow = &b[k * cols..(k + 1) * cols];
+                for j in 0..cols {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// `out += a @ b`.
+fn matmul_acc(a: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize, out: &mut [f32]) {
+    for i in 0..rows {
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        for k in 0..inner {
+            let av = a[i * inner + k];
+            if av != 0.0 {
+                let brow = &b[k * cols..(k + 1) * cols];
+                for j in 0..cols {
+                    orow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+fn add_bias(out: &mut [f32], b: &[f32], rows: usize, cols: usize) {
+    for i in 0..rows {
+        for j in 0..cols {
+            out[i * cols + j] += b[j];
+        }
+    }
+}
+
+fn relu_ip(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn tanh_ip(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        *v = v.tanh();
+    }
+}
+
+/// LeakyReLU with slope 0.01 (model.py `_leaky`: `where(x > 0, x, 0.01x)`).
+fn leaky_ip(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v <= 0.0 {
+            *v *= 0.01;
+        }
+    }
+}
+
+fn mask_rows(x: &mut [f32], mask: &[f32], cols: usize) {
+    for (i, &m) in mask.iter().enumerate() {
+        if m != 1.0 {
+            for v in x[i * cols..(i + 1) * cols].iter_mut() {
+                *v *= m;
+            }
+        }
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// Masked log-softmax into `logp`; returns `sum_k p_k * logp_k`
+/// (= -entropy). Masked entries carry `NEG` and contribute exactly zero:
+/// `exp(NEG - max)` underflows to 0 in f32, matching the JAX model.
+fn log_softmax(logits: &[f32], logp: &mut [f32]) -> f32 {
+    let mut mx = f32::NEG_INFINITY;
+    for &z in logits {
+        if z > mx {
+            mx = z;
+        }
+    }
+    let mut se = 0.0f32;
+    for &z in logits {
+        se += (z - mx).exp();
+    }
+    let lse = mx + se.ln();
+    let mut plogp = 0.0f32;
+    for (o, &z) in logp.iter_mut().zip(logits) {
+        let lp = z - lse;
+        *o = lp;
+        plogp += lp.exp() * lp;
+    }
+    plogp
+}
+
+// --------------------------------------------------------------------------
+// forward traces
+// --------------------------------------------------------------------------
+
+/// Encoder activations kept for the backward pass.
+struct EncodeTrace {
+    /// relu(xv @ enc.w0 + b0), `[n, H]`.
+    a: Vec<f32>,
+    /// `h_0 = Z, h_1, ..., h_K` per round, each `[n, H]` (h_0 doubles as
+    /// the node-feature embedding Z in the Hcat concat).
+    h_list: Vec<Vec<f32>>,
+    /// Edge messages per round, `[e, H]`.
+    msgs: Vec<Vec<f32>>,
+    /// Scatter-sums per round, `[n, H]`.
+    aggs: Vec<Vec<f32>>,
+    /// `[n, 4H]` concatenated embedding.
+    hcat: Vec<f32>,
+}
+
+/// PLC head activations for one step.
+struct PlcAct {
+    y: Vec<f32>,
+    feat: Vec<f32>,
+    x: Vec<f32>,
+    q: Vec<f32>,
+}
+
+/// GDP head activations for one step.
+struct GdpAct {
+    s: Vec<f32>,
+    w: Vec<f32>,
+    feat: Vec<f32>,
+    x: Vec<f32>,
+    q: Vec<f32>,
+}
+
+// --------------------------------------------------------------------------
+// the backend
+// --------------------------------------------------------------------------
+
+/// Pure-Rust policy backend: `Send + Sync`, zero artifacts required.
+pub struct NativePolicy {
+    pub manifest: Manifest,
+    pub layout: ParamLayout,
+    init: Vec<f32>,
+}
+
+impl NativePolicy {
+    /// Load from `$DOPPLER_ARTIFACTS`/`./artifacts` when a manifest is
+    /// present (interoperating with PJRT-trained parameter blobs), else
+    /// fall back to the built-in model dims with He-initialized params.
+    pub fn load_default() -> Result<NativePolicy> {
+        Self::load(&Manifest::default_dir())
+    }
+
+    /// Like [`NativePolicy::load_default`] with an explicit directory.
+    /// A *missing* manifest falls back to the built-in model; a manifest
+    /// that exists but fails to load is an error — silently substituting
+    /// built-in random weights for broken artifacts would change results
+    /// without a trace.
+    pub fn load(dir: &std::path::Path) -> Result<NativePolicy> {
+        if !dir.join("manifest.json").exists() {
+            return Ok(Self::builtin());
+        }
+        Self::from_manifest(Manifest::load(dir)?)
+    }
+
+    /// Built-in model dims (python/compile/config.py): no filesystem
+    /// dependency at all — this is what makes learned-policy paths run
+    /// in any container. The manifest is derived from the layout, so the
+    /// two cannot drift.
+    pub fn builtin() -> NativePolicy {
+        let layout = ParamLayout::new(32, 2, 5, 5, 8);
+        let manifest = Manifest::builtin(
+            layout.h,
+            layout.mpnn.len(),
+            layout.nf,
+            layout.df,
+            layout.m,
+            layout.sel_in,
+            layout.total,
+        );
+        let init = layout.he_init(0x0D09_91EB);
+        NativePolicy { manifest, layout, init }
+    }
+
+    /// Build from a parsed artifacts manifest (dims must match the
+    /// canonical params.py layout or the flat blob is uninterpretable).
+    pub fn from_manifest(m: Manifest) -> Result<NativePolicy> {
+        anyhow::ensure!(
+            m.sel_in == 4 * m.hidden,
+            "manifest sel_in {} != 4*hidden {} — layout drift vs params.py",
+            m.sel_in,
+            4 * m.hidden
+        );
+        let layout = ParamLayout::new(m.hidden, m.k_mpnn, m.node_feats, m.dev_feats, m.max_devices);
+        anyhow::ensure!(
+            layout.total == m.param_count,
+            "native layout has {} params but manifest declares {} — python/compile/params.py layout changed?",
+            layout.total,
+            m.param_count
+        );
+        // the manifest names an init blob: failing to read it is an error
+        // (He-init silently replacing artifact parameters would produce
+        // different, non-PJRT-interoperable training runs with no signal)
+        let init = m.init_params()?;
+        Ok(NativePolicy { manifest: m, layout, init })
+    }
+
+    // ---- forward passes ----
+
+    fn encode_trace(&self, enc: &GraphEncoding, params: &[f32]) -> EncodeTrace {
+        let l = &self.layout;
+        let (h, nf) = (l.h, l.nf);
+        let (n, e) = (enc.n, enc.e);
+        debug_assert_eq!(enc.xv.len(), n * nf);
+
+        // Z = FFNN(X_V), masked
+        let mut a = vec![0.0f32; n * h];
+        matmul(&enc.xv, &params[l.enc_w0..], n, nf, h, &mut a);
+        add_bias(&mut a, &params[l.enc_b0..], n, h);
+        relu_ip(&mut a);
+        let mut z = vec![0.0f32; n * h];
+        matmul(&a, &params[l.enc_w1..], n, h, h, &mut z);
+        add_bias(&mut z, &params[l.enc_b1..], n, h);
+        mask_rows(&mut z, &enc.node_mask, h);
+
+        let mut h_list = vec![z.clone()];
+        let mut msgs = Vec::with_capacity(l.mpnn.len());
+        let mut aggs = Vec::with_capacity(l.mpnn.len());
+        let mut hcur = z.clone();
+        for mp in &l.mpnn {
+            // gather endpoint embeddings (masked edges stay zero)
+            let mut hs = vec![0.0f32; e * h];
+            let mut hd = vec![0.0f32; e * h];
+            for i in 0..e {
+                if enc.edge_mask[i] > 0.0 {
+                    let s = enc.esrc[i] as usize;
+                    let d = enc.edst[i] as usize;
+                    hs[i * h..(i + 1) * h].copy_from_slice(&hcur[s * h..(s + 1) * h]);
+                    hd[i * h..(i + 1) * h].copy_from_slice(&hcur[d * h..(d + 1) * h]);
+                }
+            }
+            // psi (eq. 2): msg = tanh(hs Wsrc + hd Wdst + ef We + bm)
+            let mut msg = vec![0.0f32; e * h];
+            matmul(&hs, &params[mp.wsrc..], e, h, h, &mut msg);
+            matmul_acc(&hd, &params[mp.wdst..], e, h, h, &mut msg);
+            matmul_acc(&enc.efeat, &params[mp.we..], e, 1, h, &mut msg);
+            add_bias(&mut msg, &params[mp.bm..], e, h);
+            tanh_ip(&mut msg);
+            // scatter-sum over destination nodes
+            let mut agg = vec![0.0f32; n * h];
+            for i in 0..e {
+                if enc.edge_mask[i] > 0.0 {
+                    let d = enc.edst[i] as usize;
+                    for j in 0..h {
+                        agg[d * h + j] += msg[i * h + j];
+                    }
+                }
+            }
+            // phi: h' = tanh([h | agg] Wphi + bphi), masked
+            let mut hnext = vec![0.0f32; n * h];
+            matmul(&hcur, &params[mp.wphi..], n, h, h, &mut hnext);
+            matmul_acc(&agg, &params[mp.wphi + h * h..], n, h, h, &mut hnext);
+            add_bias(&mut hnext, &params[mp.bphi..], n, h);
+            tanh_ip(&mut hnext);
+            mask_rows(&mut hnext, &enc.node_mask, h);
+            msgs.push(msg);
+            aggs.push(agg);
+            h_list.push(hnext.clone());
+            hcur = hnext;
+        }
+
+        // critical-path poolings + concat (eq. 3)
+        let mut hb = vec![0.0f32; n * h];
+        matmul(&enc.pb, &hcur, n, n, h, &mut hb);
+        let mut ht = vec![0.0f32; n * h];
+        matmul(&enc.pt, &hcur, n, n, h, &mut ht);
+        let si = l.sel_in;
+        let mut hcat = vec![0.0f32; n * si];
+        for v in 0..n {
+            let nm = enc.node_mask[v];
+            for j in 0..h {
+                hcat[v * si + j] = hcur[v * h + j] * nm;
+                hcat[v * si + h + j] = hb[v * h + j] * nm;
+                hcat[v * si + 2 * h + j] = ht[v * h + j] * nm;
+                hcat[v * si + 3 * h + j] = z[v * h + j] * nm;
+            }
+        }
+        EncodeTrace { a, h_list, msgs, aggs, hcat }
+    }
+
+    /// SEL head: returns (hidden activations `[n, H]`, scores `[n]`).
+    fn sel_forward(&self, params: &[f32], hcat: &[f32], n: usize) -> (Vec<f32>, Vec<f32>) {
+        let l = &self.layout;
+        let (h, si) = (l.h, l.sel_in);
+        let mut x = vec![0.0f32; n * h];
+        matmul(hcat, &params[l.sel_w0..], n, si, h, &mut x);
+        add_bias(&mut x, &params[l.sel_b0..], n, h);
+        relu_ip(&mut x);
+        let mut q = vec![0.0f32; n];
+        for v in 0..n {
+            q[v] = dot(&x[v * h..(v + 1) * h], &params[l.sel_w1..l.sel_w1 + h]) + params[l.sel_b1];
+        }
+        (x, q)
+    }
+
+    /// Per-device aggregate `h_d = place_norm @ H_gnn` (`[m, H]`).
+    fn hd_from_place_norm(&self, place_norm: &[f32], hcat: &[f32], n: usize) -> Vec<f32> {
+        let l = &self.layout;
+        let (h, si, m) = (l.h, l.sel_in, l.m);
+        let mut hd = vec![0.0f32; m * h];
+        for d in 0..m {
+            for u in 0..n {
+                let w = place_norm[d * n + u];
+                if w != 0.0 {
+                    for j in 0..h {
+                        hd[d * h + j] += w * hcat[u * si + j];
+                    }
+                }
+            }
+        }
+        hd
+    }
+
+    /// PLC head (eqs. 5-8) for selected node `v` given `xd [m, df]` and
+    /// the device aggregate `hd [m, H]`.
+    fn plc_forward(&self, params: &[f32], hcat: &[f32], v: usize, xd: &[f32], hd: &[f32]) -> PlcAct {
+        let l = &self.layout;
+        let (h, si, m, df, pin) = (l.h, l.sel_in, l.m, l.df, l.plc_in);
+        let mut y = vec![0.0f32; m * h];
+        matmul(xd, &params[l.dev_w0..], m, df, h, &mut y);
+        add_bias(&mut y, &params[l.dev_b0..], m, h);
+        relu_ip(&mut y);
+        let hv = &hcat[v * si..(v + 1) * si];
+        let mut feat = vec![0.0f32; m * pin];
+        for d in 0..m {
+            feat[d * pin..d * pin + si].copy_from_slice(hv);
+            feat[d * pin + si..d * pin + si + h].copy_from_slice(&hd[d * h..(d + 1) * h]);
+            feat[d * pin + si + h..(d + 1) * pin].copy_from_slice(&y[d * h..(d + 1) * h]);
+        }
+        let mut x = vec![0.0f32; m * h];
+        matmul(&feat, &params[l.plc_w0..], m, pin, h, &mut x);
+        add_bias(&mut x, &params[l.plc_b0..], m, h);
+        leaky_ip(&mut x);
+        let mut q = vec![0.0f32; m];
+        for d in 0..m {
+            q[d] = dot(&x[d * h..(d + 1) * h], &params[l.plc_w1..l.plc_w1 + h]) + params[l.plc_b1];
+        }
+        PlcAct { y, feat, x, q }
+    }
+
+    /// GDP attention head for selected node `v` (placement-state-blind).
+    fn gdp_forward(&self, params: &[f32], hcat: &[f32], n: usize, v: usize, node_mask: &[f32]) -> GdpAct {
+        let l = &self.layout;
+        let (h, si, m, gin) = (l.h, l.sel_in, l.m, l.gdp_in);
+        let hv = &hcat[v * si..(v + 1) * si];
+        // s = Wq @ h_v; att_u = <hcat_u, s> / sqrt(sel_in), masked
+        let mut s = vec![0.0f32; si];
+        for i in 0..si {
+            s[i] = dot(&params[l.gdp_wq + i * si..l.gdp_wq + (i + 1) * si], hv);
+        }
+        let sqrt_si = (si as f32).sqrt();
+        let mut att = vec![NEG; n];
+        for u in 0..n {
+            if node_mask[u] > 0.0 {
+                att[u] = dot(&hcat[u * si..(u + 1) * si], &s) / sqrt_si;
+            }
+        }
+        // softmax -> context (via log-softmax: masked weights underflow
+        // to exactly zero, matching the JAX model)
+        let mut w = vec![0.0f32; n];
+        log_softmax(&att, &mut w);
+        for x in w.iter_mut() {
+            *x = x.exp();
+        }
+        let mut ctx = vec![0.0f32; si];
+        for u in 0..n {
+            let wu = w[u];
+            if wu != 0.0 {
+                for j in 0..si {
+                    ctx[j] += wu * hcat[u * si + j];
+                }
+            }
+        }
+        let mut feat = vec![0.0f32; m * gin];
+        for d in 0..m {
+            feat[d * gin..d * gin + si].copy_from_slice(hv);
+            feat[d * gin + si..d * gin + 2 * si].copy_from_slice(&ctx);
+            feat[d * gin + 2 * si..(d + 1) * gin]
+                .copy_from_slice(&params[l.gdp_devemb + d * h..l.gdp_devemb + (d + 1) * h]);
+        }
+        let mut x = vec![0.0f32; m * h];
+        matmul(&feat, &params[l.gdp_w0..], m, gin, h, &mut x);
+        add_bias(&mut x, &params[l.gdp_b0..], m, h);
+        leaky_ip(&mut x);
+        let mut q = vec![0.0f32; m];
+        for d in 0..m {
+            q[d] = dot(&x[d * h..(d + 1) * h], &params[l.gdp_w1..l.gdp_w1 + h]) + params[l.gdp_b1];
+        }
+        GdpAct { s, w, feat, x, q }
+    }
+
+    // ---- loss + analytic gradient (validated vs jax.grad; see module docs) ----
+
+    /// Episode loss + mean entropy without touching parameters — the
+    /// forward half of [`NativePolicy::train_step`], exposed for the
+    /// finite-difference gradient test.
+    pub fn episode_loss(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &[f32],
+        traj: &Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        entropy_w: f32,
+    ) -> Result<(f32, f32)> {
+        let (loss, ent, _) = self.loss_and_grads(method, enc, params, traj, dev_mask, advantage, entropy_w)?;
+        Ok((loss, ent))
+    }
+
+    /// Loss, mean entropy, and the full analytic parameter gradient
+    /// (pre-clipping). Public so the finite-difference test can check
+    /// `grad · d ≈ (L(p+εd) - L(p-εd)) / 2ε` against [`Self::episode_loss`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn loss_and_grads(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &[f32],
+        traj: &Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        entropy_w: f32,
+    ) -> Result<(f32, f32, Vec<f32>)> {
+        let l = &self.layout;
+        let (h, si, m, df, nf) = (l.h, l.sel_in, l.m, l.df, l.nf);
+        let n = enc.n;
+        anyhow::ensure!(params.len() == l.total, "param blob len {} != layout {}", params.len(), l.total);
+        anyhow::ensure!(traj.sel_actions.len() == n, "trajectory size {} != encoding {}", traj.sel_actions.len(), n);
+
+        let tr = self.encode_trace(enc, params);
+        let hcat = &tr.hcat;
+        // SEL head only contributes for the dual policy; Placeto/GDP
+        // train steps skip the n×sel_in×H pass entirely
+        let (x_sel, q) = if method == Method::Doppler {
+            self.sel_forward(params, hcat, n)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+
+        let steps: f32 = traj.step_mask.iter().sum::<f32>().max(1.0);
+        let dlogp_w = -advantage / steps;
+        let dent_w = -entropy_w / steps;
+
+        let mut grads = vec![0.0f32; l.total];
+        let mut dhcat = vec![0.0f32; n * si];
+        let mut dq = vec![0.0f32; n];
+        let mut logp_total = 0.0f32;
+        let mut ent_total = 0.0f32;
+
+        // exclusive-prefix placement state (the train-time twin of the
+        // episode's incremental place_norm)
+        let mut place_counts = vec![0usize; m];
+        let mut hd_sums = vec![0.0f32; m * h];
+        let mut placed: Vec<Vec<usize>> = vec![Vec::new(); m];
+        let mut hd = vec![0.0f32; m * h];
+
+        let mut logits = vec![0.0f32; n.max(m)];
+        let mut logp = vec![0.0f32; n.max(m)];
+        let mut dqd = vec![0.0f32; m];
+        // per-step backward scratch, hoisted out of the MDP loop
+        // (gdp_in > plc_in, so one dfeat buffer serves both branches)
+        let mut dxpre = vec![0.0f32; m * h];
+        let mut dfeat = vec![0.0f32; m * l.gdp_in.max(l.plc_in)];
+        let mut dhv = vec![0.0f32; si];
+        let mut dctx = vec![0.0f32; si];
+        let mut dattm = vec![0.0f32; n];
+        let mut ds = vec![0.0f32; si];
+        let sqrt_si = (si as f32).sqrt();
+
+        for t in 0..n {
+            if traj.step_mask[t] <= 0.0 {
+                continue;
+            }
+            let a_sel = traj.sel_actions[t] as usize;
+            let a_plc = traj.plc_actions[t] as usize;
+            anyhow::ensure!(a_sel < n && a_plc < m, "step {t}: action out of range");
+
+            // ---- SEL term (dual policy only) ----
+            if method == Method::Doppler {
+                let cand = &traj.cand_masks[t * n..(t + 1) * n];
+                for u in 0..n {
+                    logits[u] = if cand[u] > 0.0 { q[u] } else { NEG };
+                }
+                let plogp_sum = log_softmax(&logits[..n], &mut logp[..n]);
+                logp_total += logp[a_sel];
+                ent_total += -plogp_sum;
+                for u in 0..n {
+                    if cand[u] > 0.0 {
+                        let p = logp[u].exp();
+                        let mut dl = dlogp_w * (-p);
+                        if u == a_sel {
+                            dl += dlogp_w;
+                        }
+                        dl += dent_w * (-(p * (logp[u] - plogp_sum)));
+                        dq[u] += dl;
+                    }
+                }
+            }
+
+            // ---- PLC / GDP term ----
+            if method == Method::Gdp {
+                let act = self.gdp_forward(params, hcat, n, a_sel, &enc.node_mask);
+                for (d, lg) in logits[..m].iter_mut().enumerate() {
+                    *lg = if dev_mask[d] > 0.0 { act.q[d] } else { NEG };
+                }
+                let plogp_sum = log_softmax(&logits[..m], &mut logp[..m]);
+                logp_total += logp[a_plc];
+                ent_total += -plogp_sum;
+                for d in 0..m {
+                    dqd[d] = 0.0;
+                    if dev_mask[d] > 0.0 {
+                        let p = logp[d].exp();
+                        let mut dl = dlogp_w * (-p);
+                        if d == a_plc {
+                            dl += dlogp_w;
+                        }
+                        dl += dent_w * (-(p * (logp[d] - plogp_sum)));
+                        dqd[d] = dl;
+                    }
+                }
+                // head MLP backward
+                let gin = l.gdp_in;
+                for j in 0..h {
+                    let mut s2 = 0.0f32;
+                    for d in 0..m {
+                        s2 += act.x[d * h + j] * dqd[d];
+                    }
+                    grads[l.gdp_w1 + j] += s2;
+                }
+                grads[l.gdp_b1] += dqd.iter().sum::<f32>();
+                // dxpre/dfeat are fully overwritten below; the
+                // accumulators need re-zeroing each step
+                for d in 0..m {
+                    for j in 0..h {
+                        let dx = dqd[d] * params[l.gdp_w1 + j];
+                        dxpre[d * h + j] = if act.x[d * h + j] > 0.0 { dx } else { 0.01 * dx };
+                    }
+                }
+                for d in 0..m {
+                    for i in 0..gin {
+                        let fv = act.feat[d * gin + i];
+                        if fv != 0.0 {
+                            for j in 0..h {
+                                grads[l.gdp_w0 + i * h + j] += fv * dxpre[d * h + j];
+                            }
+                        }
+                    }
+                }
+                for j in 0..h {
+                    let mut s2 = 0.0f32;
+                    for d in 0..m {
+                        s2 += dxpre[d * h + j];
+                    }
+                    grads[l.gdp_b0 + j] += s2;
+                }
+                for d in 0..m {
+                    for i in 0..gin {
+                        dfeat[d * gin + i] = dot(
+                            &dxpre[d * h..(d + 1) * h],
+                            &params[l.gdp_w0 + i * h..l.gdp_w0 + (i + 1) * h],
+                        );
+                    }
+                }
+                dhv.fill(0.0);
+                dctx.fill(0.0);
+                for d in 0..m {
+                    for j in 0..si {
+                        dhv[j] += dfeat[d * gin + j];
+                        dctx[j] += dfeat[d * gin + si + j];
+                    }
+                    for j in 0..h {
+                        grads[l.gdp_devemb + d * h + j] += dfeat[d * gin + 2 * si + j];
+                    }
+                }
+                // ctx = w @ hcat  (softmax attention backward)
+                dattm.fill(0.0);
+                let mut wdw_sum = 0.0f32;
+                for u in 0..n {
+                    if act.w[u] != 0.0 {
+                        let dwu = dot(&hcat[u * si..(u + 1) * si], &dctx);
+                        dattm[u] = dwu;
+                        wdw_sum += act.w[u] * dwu;
+                        for j in 0..si {
+                            dhcat[u * si + j] += act.w[u] * dctx[j];
+                        }
+                    }
+                }
+                ds.fill(0.0);
+                for u in 0..n {
+                    if act.w[u] != 0.0 && enc.node_mask[u] > 0.0 {
+                        let da = act.w[u] * (dattm[u] - wdw_sum) / sqrt_si;
+                        if da != 0.0 {
+                            for j in 0..si {
+                                dhcat[u * si + j] += da * act.s[j];
+                                ds[j] += da * hcat[u * si + j];
+                            }
+                        }
+                    }
+                }
+                let hv = &hcat[a_sel * si..(a_sel + 1) * si];
+                for i in 0..si {
+                    let dsi = ds[i];
+                    if dsi != 0.0 {
+                        for j in 0..si {
+                            grads[l.gdp_wq + i * si + j] += dsi * hv[j];
+                        }
+                    }
+                }
+                for j in 0..si {
+                    let mut s2 = 0.0f32;
+                    for i in 0..si {
+                        s2 += params[l.gdp_wq + i * si + j] * ds[i];
+                    }
+                    dhv[j] += s2;
+                }
+                for j in 0..si {
+                    dhcat[a_sel * si + j] += dhv[j];
+                }
+            } else {
+                // device aggregate from the exclusive prefix
+                for d in 0..m {
+                    let c = place_counts[d];
+                    if c > 0 {
+                        let w = 1.0 / c as f32;
+                        for j in 0..h {
+                            hd[d * h + j] = hd_sums[d * h + j] * w;
+                        }
+                    } else {
+                        for j in 0..h {
+                            hd[d * h + j] = 0.0;
+                        }
+                    }
+                }
+                let xd = &traj.xd_steps[t * m * df..(t + 1) * m * df];
+                let act = self.plc_forward(params, hcat, a_sel, xd, &hd);
+                for (d, lg) in logits[..m].iter_mut().enumerate() {
+                    *lg = if dev_mask[d] > 0.0 { act.q[d] } else { NEG };
+                }
+                let plogp_sum = log_softmax(&logits[..m], &mut logp[..m]);
+                logp_total += logp[a_plc];
+                ent_total += -plogp_sum;
+                for d in 0..m {
+                    dqd[d] = 0.0;
+                    if dev_mask[d] > 0.0 {
+                        let p = logp[d].exp();
+                        let mut dl = dlogp_w * (-p);
+                        if d == a_plc {
+                            dl += dlogp_w;
+                        }
+                        dl += dent_w * (-(p * (logp[d] - plogp_sum)));
+                        dqd[d] = dl;
+                    }
+                }
+                let pin = l.plc_in;
+                for j in 0..h {
+                    let mut s2 = 0.0f32;
+                    for d in 0..m {
+                        s2 += act.x[d * h + j] * dqd[d];
+                    }
+                    grads[l.plc_w1 + j] += s2;
+                }
+                grads[l.plc_b1] += dqd.iter().sum::<f32>();
+                for d in 0..m {
+                    for j in 0..h {
+                        let dx = dqd[d] * params[l.plc_w1 + j];
+                        dxpre[d * h + j] = if act.x[d * h + j] > 0.0 { dx } else { 0.01 * dx };
+                    }
+                }
+                for d in 0..m {
+                    for i in 0..pin {
+                        let fv = act.feat[d * pin + i];
+                        if fv != 0.0 {
+                            for j in 0..h {
+                                grads[l.plc_w0 + i * h + j] += fv * dxpre[d * h + j];
+                            }
+                        }
+                    }
+                }
+                for j in 0..h {
+                    let mut s2 = 0.0f32;
+                    for d in 0..m {
+                        s2 += dxpre[d * h + j];
+                    }
+                    grads[l.plc_b0 + j] += s2;
+                }
+                for d in 0..m {
+                    for i in 0..pin {
+                        dfeat[d * pin + i] = dot(
+                            &dxpre[d * h..(d + 1) * h],
+                            &params[l.plc_w0 + i * h..l.plc_w0 + (i + 1) * h],
+                        );
+                    }
+                }
+                // split dfeat -> dhv | dhd | dy
+                dhv.fill(0.0);
+                for d in 0..m {
+                    for j in 0..si {
+                        dhv[j] += dfeat[d * pin + j];
+                    }
+                }
+                // dy -> device-feature encoder grads (xd is data)
+                for d in 0..m {
+                    for j in 0..h {
+                        let dy = dfeat[d * pin + si + h + j];
+                        let dypre = if act.y[d * h + j] > 0.0 { dy } else { 0.0 };
+                        if dypre != 0.0 {
+                            for i in 0..df {
+                                grads[l.dev_w0 + i * h + j] += xd[d * df + i] * dypre;
+                            }
+                            grads[l.dev_b0 + j] += dypre;
+                        }
+                    }
+                }
+                // dhd -> placed nodes' H_gnn columns
+                for d in 0..m {
+                    let c = place_counts[d];
+                    if c > 0 {
+                        let w = 1.0 / c as f32;
+                        for &u in &placed[d] {
+                            for j in 0..h {
+                                dhcat[u * si + j] += w * dfeat[d * pin + si + j];
+                            }
+                        }
+                    }
+                }
+                for j in 0..si {
+                    dhcat[a_sel * si + j] += dhv[j];
+                }
+            }
+
+            // advance the exclusive placement prefix
+            place_counts[a_plc] += 1;
+            for j in 0..h {
+                hd_sums[a_plc * h + j] += hcat[a_sel * si + j];
+            }
+            placed[a_plc].push(a_sel);
+        }
+
+        let logp_avg = logp_total / steps;
+        let ent_avg = ent_total / steps;
+        let loss = -advantage * logp_avg - entropy_w * ent_avg;
+
+        // ---- SEL head backward (scores are shared across steps) ----
+        if method == Method::Doppler {
+            for j in 0..h {
+                let mut s2 = 0.0f32;
+                for u in 0..n {
+                    s2 += x_sel[u * h + j] * dq[u];
+                }
+                grads[l.sel_w1 + j] += s2;
+            }
+            grads[l.sel_b1] += dq.iter().sum::<f32>();
+            let mut dxs = vec![0.0f32; n * h];
+            for u in 0..n {
+                if dq[u] != 0.0 {
+                    for j in 0..h {
+                        if x_sel[u * h + j] > 0.0 {
+                            dxs[u * h + j] = dq[u] * params[l.sel_w1 + j];
+                        }
+                    }
+                }
+            }
+            for u in 0..n {
+                if dq[u] != 0.0 {
+                    for i in 0..si {
+                        let hv = hcat[u * si + i];
+                        if hv != 0.0 {
+                            for j in 0..h {
+                                grads[l.sel_w0 + i * h + j] += hv * dxs[u * h + j];
+                            }
+                        }
+                    }
+                }
+            }
+            for j in 0..h {
+                let mut s2 = 0.0f32;
+                for u in 0..n {
+                    s2 += dxs[u * h + j];
+                }
+                grads[l.sel_b0 + j] += s2;
+            }
+            for u in 0..n {
+                if dq[u] != 0.0 {
+                    for i in 0..si {
+                        dhcat[u * si + i] +=
+                            dot(&dxs[u * h..(u + 1) * h], &params[l.sel_w0 + i * h..l.sel_w0 + (i + 1) * h]);
+                    }
+                }
+            }
+        }
+
+        // ---- encoder backward ----
+        // dH_K = dHcat[:, :H] + Pb^T dHcat[:, H:2H] + Pt^T dHcat[:, 2H:3H]
+        let mut dh = vec![0.0f32; n * h];
+        for u in 0..n {
+            for j in 0..h {
+                dh[u * h + j] = dhcat[u * si + j];
+            }
+        }
+        for v in 0..n {
+            for u in 0..n {
+                let wb = enc.pb[v * n + u];
+                if wb != 0.0 {
+                    for j in 0..h {
+                        dh[u * h + j] += wb * dhcat[v * si + h + j];
+                    }
+                }
+                let wt = enc.pt[v * n + u];
+                if wt != 0.0 {
+                    for j in 0..h {
+                        dh[u * h + j] += wt * dhcat[v * si + 2 * h + j];
+                    }
+                }
+            }
+        }
+        let mut dz = vec![0.0f32; n * h];
+        for u in 0..n {
+            for j in 0..h {
+                dz[u * h + j] = dhcat[u * si + 3 * h + j];
+            }
+        }
+
+        let e = enc.e;
+        let mut dmpre_row = vec![0.0f32; h];
+        for (k, mp) in l.mpnn.iter().enumerate().rev() {
+            let h_in = &tr.h_list[k];
+            let h_out = &tr.h_list[k + 1];
+            let msg = &tr.msgs[k];
+            let agg = &tr.aggs[k];
+            let mut dcpre = vec![0.0f32; n * h];
+            for v in 0..n {
+                let nm = enc.node_mask[v];
+                for j in 0..h {
+                    let ho = h_out[v * h + j];
+                    dcpre[v * h + j] = dh[v * h + j] * (1.0 - ho * ho) * nm;
+                }
+            }
+            // Wphi / bphi grads over cat = [h_in | agg]
+            for v in 0..n {
+                for i in 0..h {
+                    let a1 = h_in[v * h + i];
+                    if a1 != 0.0 {
+                        for j in 0..h {
+                            grads[mp.wphi + i * h + j] += a1 * dcpre[v * h + j];
+                        }
+                    }
+                    let a2 = agg[v * h + i];
+                    if a2 != 0.0 {
+                        for j in 0..h {
+                            grads[mp.wphi + (h + i) * h + j] += a2 * dcpre[v * h + j];
+                        }
+                    }
+                }
+            }
+            for j in 0..h {
+                let mut s2 = 0.0f32;
+                for v in 0..n {
+                    s2 += dcpre[v * h + j];
+                }
+                grads[mp.bphi + j] += s2;
+            }
+            // dcat = dcpre @ Wphi^T
+            let mut dh_new = vec![0.0f32; n * h];
+            let mut dagg = vec![0.0f32; n * h];
+            for v in 0..n {
+                let drow = &dcpre[v * h..(v + 1) * h];
+                for i in 0..h {
+                    dh_new[v * h + i] = dot(drow, &params[mp.wphi + i * h..mp.wphi + (i + 1) * h]);
+                    dagg[v * h + i] =
+                        dot(drow, &params[mp.wphi + (h + i) * h..mp.wphi + (h + i + 1) * h]);
+                }
+            }
+            // edge-message backward (masked edges contribute nothing)
+            for idx in 0..e {
+                if enc.edge_mask[idx] <= 0.0 {
+                    continue;
+                }
+                let sv = enc.esrc[idx] as usize;
+                let dv = enc.edst[idx] as usize;
+                for j in 0..h {
+                    let ms = msg[idx * h + j];
+                    dmpre_row[j] = dagg[dv * h + j] * (1.0 - ms * ms);
+                }
+                for i in 0..h {
+                    let hs = h_in[sv * h + i];
+                    if hs != 0.0 {
+                        for j in 0..h {
+                            grads[mp.wsrc + i * h + j] += hs * dmpre_row[j];
+                        }
+                    }
+                    let hdv = h_in[dv * h + i];
+                    if hdv != 0.0 {
+                        for j in 0..h {
+                            grads[mp.wdst + i * h + j] += hdv * dmpre_row[j];
+                        }
+                    }
+                }
+                let ev = enc.efeat[idx];
+                if ev != 0.0 {
+                    for j in 0..h {
+                        grads[mp.we + j] += ev * dmpre_row[j];
+                    }
+                }
+                for j in 0..h {
+                    grads[mp.bm + j] += dmpre_row[j];
+                }
+                for i in 0..h {
+                    dh_new[sv * h + i] +=
+                        dot(&dmpre_row, &params[mp.wsrc + i * h..mp.wsrc + (i + 1) * h]);
+                    dh_new[dv * h + i] +=
+                        dot(&dmpre_row, &params[mp.wdst + i * h..mp.wdst + (i + 1) * h]);
+                }
+            }
+            dh = dh_new;
+        }
+
+        // h_0 = Z: fold the MPNN path into dZ, then FFNN backward
+        for v in 0..n {
+            let nm = enc.node_mask[v];
+            for j in 0..h {
+                dz[v * h + j] = (dz[v * h + j] + dh[v * h + j]) * nm;
+            }
+        }
+        for v in 0..n {
+            for i in 0..h {
+                let av = tr.a[v * h + i];
+                if av != 0.0 {
+                    for j in 0..h {
+                        grads[l.enc_w1 + i * h + j] += av * dz[v * h + j];
+                    }
+                }
+            }
+        }
+        for j in 0..h {
+            let mut s2 = 0.0f32;
+            for v in 0..n {
+                s2 += dz[v * h + j];
+            }
+            grads[l.enc_b1 + j] += s2;
+        }
+        let mut da = vec![0.0f32; n * h];
+        for v in 0..n {
+            for i in 0..h {
+                if tr.a[v * h + i] > 0.0 {
+                    da[v * h + i] =
+                        dot(&dz[v * h..(v + 1) * h], &params[l.enc_w1 + i * h..l.enc_w1 + (i + 1) * h]);
+                }
+            }
+        }
+        for v in 0..n {
+            for i in 0..nf {
+                let xvv = enc.xv[v * nf + i];
+                if xvv != 0.0 {
+                    for j in 0..h {
+                        grads[l.enc_w0 + i * h + j] += xvv * da[v * h + j];
+                    }
+                }
+            }
+        }
+        for j in 0..h {
+            let mut s2 = 0.0f32;
+            for v in 0..n {
+                s2 += da[v * h + j];
+            }
+            grads[l.enc_b0 + j] += s2;
+        }
+
+        Ok((loss, ent_avg, grads))
+    }
+
+    /// One train step: loss + analytic gradient, global-norm clip at 1.0,
+    /// Adam update in place (model.py `adam_update` semantics).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_step(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        traj: &Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        lr: f32,
+        entropy_w: f32,
+    ) -> Result<(f32, f32)> {
+        let (loss, ent, grads) =
+            self.loss_and_grads(method, enc, params, traj, dev_mask, advantage, entropy_w)?;
+        anyhow::ensure!(loss.is_finite(), "native train step produced non-finite loss");
+
+        let gnorm = (grads.iter().map(|g| g * g).sum::<f32>() + 1e-12).sqrt();
+        let scale = 1.0f32.min(1.0 / gnorm);
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let t_new = opt.t + 1.0;
+        let bc1 = 1.0 - b1.powf(t_new);
+        let bc2 = 1.0 - b2.powf(t_new);
+        for i in 0..params.len() {
+            let g = grads[i] * scale;
+            opt.m[i] = b1 * opt.m[i] + (1.0 - b1) * g;
+            opt.v[i] = b2 * opt.v[i] + (1.0 - b2) * g * g;
+            let mhat = opt.m[i] / bc1;
+            let vhat = opt.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        opt.t = t_new;
+        Ok((loss, ent))
+    }
+}
+
+impl PolicyBackend for NativePolicy {
+    fn kind(&self) -> &'static str {
+        "native"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn variant_for(&self, enc: &GraphEncoding) -> Result<VariantInfo> {
+        // native executables are shape-polymorphic: the "variant" is the
+        // encoding's own (possibly unpadded) size
+        Ok(VariantInfo { n: enc.n, e: enc.e, artifacts: Default::default() })
+    }
+
+    fn variant_for_graph(&self, n_nodes: usize, n_edges: usize) -> Result<VariantInfo> {
+        // exact fit: no padding needed, and no artifact size ceiling —
+        // graphs beyond the AOT variants (e.g. synthetic 500+) just work
+        Ok(VariantInfo { n: n_nodes, e: n_edges, artifacts: Default::default() })
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        Ok(self.init.clone())
+    }
+
+    fn encode(&self, _variant: &VariantInfo, enc: &GraphEncoding, params: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(params.len() == self.layout.total, "param blob len mismatch");
+        Ok(self.encode_trace(enc, params).hcat)
+    }
+
+    fn sel_scores(
+        &self,
+        _variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+    ) -> Result<Vec<f32>> {
+        Ok(self.sel_forward(params, hcat, enc.n).1)
+    }
+
+    fn begin_episode(&self, _enc: &GraphEncoding, _params: &[f32], _hcat: &[f32]) -> Result<EpisodeCache> {
+        Ok(EpisodeCache::None)
+    }
+
+    fn plc_logits_step(
+        &self,
+        _variant: &VariantInfo,
+        enc: &GraphEncoding,
+        _cache: &EpisodeCache,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        xd: &[f32],
+        place_norm: &[f32],
+        dev_mask: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let v = v_onehot
+            .iter()
+            .position(|&x| x != 0.0)
+            .context("v_onehot selects no node")?;
+        let hd = self.hd_from_place_norm(place_norm, hcat, enc.n);
+        let act = self.plc_forward(params, hcat, v, xd, &hd);
+        let m = self.layout.m;
+        out.clear();
+        out.resize(m, NEG);
+        for d in 0..m {
+            if dev_mask[d] > 0.0 {
+                out[d] = act.q[d];
+            }
+        }
+        Ok(())
+    }
+
+    fn gdp_logits_step(
+        &self,
+        _variant: &VariantInfo,
+        enc: &GraphEncoding,
+        _cache: &EpisodeCache,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        dev_mask: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let v = v_onehot
+            .iter()
+            .position(|&x| x != 0.0)
+            .context("v_onehot selects no node")?;
+        let act = self.gdp_forward(params, hcat, enc.n, v, &enc.node_mask);
+        let m = self.layout.m;
+        out.clear();
+        out.resize(m, NEG);
+        for d in 0..m {
+            if dev_mask[d] > 0.0 {
+                out[d] = act.q[d];
+            }
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train(
+        &self,
+        method: Method,
+        _variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        traj: &Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        lr: f32,
+        entropy_w: f32,
+    ) -> Result<(f32, f32)> {
+        self.train_step(method, enc, params, opt, traj, dev_mask, advantage, lr, entropy_w)
+    }
+
+    fn as_sync(&self) -> Option<&(dyn PolicyBackend + Sync)> {
+        Some(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_matches_canonical_param_count() {
+        // python/compile/params.py: H=32, K=2, NF=5, DF=5, M=8 -> 46115
+        let l = ParamLayout::new(32, 2, 5, 5, 8);
+        assert_eq!(l.total, 46115);
+        assert_eq!(l.sel_in, 128);
+        assert_eq!(l.plc_in, 192);
+        assert_eq!(l.gdp_in, 288);
+        // offsets strictly increasing, last entry ends at total
+        let last = l.entries.last().unwrap();
+        assert_eq!(last.off + last.rows * last.cols, l.total);
+    }
+
+    #[test]
+    fn he_init_deterministic_and_structured() {
+        let l = ParamLayout::new(32, 2, 5, 5, 8);
+        let p1 = l.he_init(7);
+        let p2 = l.he_init(7);
+        assert_eq!(p1, p2);
+        // biases zero, weights not all zero
+        assert!(p1[l.enc_b0..l.enc_b0 + l.h].iter().all(|&x| x == 0.0));
+        assert!(p1[l.enc_w0..l.enc_w0 + 8].iter().any(|&x| x != 0.0));
+        assert_eq!(p1.len(), l.total);
+    }
+
+    #[test]
+    fn log_softmax_masks_exactly() {
+        let logits = [1.0f32, NEG, 2.0, NEG];
+        let mut logp = [0.0f32; 4];
+        let plogp = log_softmax(&logits, &mut logp);
+        // masked probabilities underflow to exactly zero
+        assert_eq!(logp[1].exp(), 0.0);
+        assert_eq!(logp[3].exp(), 0.0);
+        let p0 = logp[0].exp();
+        let p2 = logp[2].exp();
+        assert!((p0 + p2 - 1.0).abs() < 1e-6);
+        assert!(plogp <= 0.0 && plogp.is_finite());
+    }
+
+    #[test]
+    fn builtin_backend_loads_without_artifacts() {
+        let np = NativePolicy::builtin();
+        assert_eq!(np.manifest.param_count, np.layout.total);
+        let p = np.init_params().unwrap();
+        assert_eq!(p.len(), np.layout.total);
+        // Send + Sync by construction (compile-time check)
+        fn assert_sync<T: Send + Sync>(_: &T) {}
+        assert_sync(&np);
+    }
+}

@@ -1,11 +1,23 @@
-//! Policy-network call wrappers: lazily compile the per-variant PJRT
-//! executables and expose typed `encode` / `sel` / `plc` / `gdp` / `train`
-//! calls over flat f32 buffers.
+//! Policy-network backends.
 //!
-//! Single-threaded by design (PJRT handles are not shared across threads
-//! here); the training loop and the serving coordinator both run the
-//! policy from the leader thread, exactly like the paper's Stage III
-//! deployment.
+//! [`PolicyBackend`] is the contract every policy implementation
+//! satisfies: variant selection, the once-per-episode `encode`, the
+//! per-step `sel`/`plc`/`gdp` heads, and the episode train step. Two
+//! implementations exist (DESIGN.md §11):
+//!
+//! - [`super::native::NativePolicy`] (default): pure-Rust forward passes
+//!   and analytic-gradient training over flat f32 buffers. `Send + Sync`,
+//!   so whole episodes fan out across the deterministic rollout pool.
+//! - [`PolicyNets`] (PJRT): lazily compiles the AOT `artifacts/*.hlo.txt`
+//!   executables. Single-threaded by design (PJRT handles are not shared
+//!   across threads here): the training loop and the serving coordinator
+//!   run it from the leader thread, exactly like the paper's Stage III
+//!   deployment — [`PolicyBackend::as_sync`] returns `None`.
+//!
+//! Determinism is owned by the *caller's* RNG plumbing: backends are
+//! pure functions of `(params, inputs)`. Bit-exactness holds within a
+//! backend; across backends the outputs agree only to f32
+//! accumulation-order (the golden-logits test bounds this at 1e-5).
 
 use std::cell::RefCell;
 use std::collections::BTreeMap;
@@ -18,6 +30,7 @@ use crate::runtime::{lit, Executable, Runtime};
 use xla::Literal;
 
 use super::encoding::GraphEncoding;
+use super::episode::Trajectory;
 
 /// Which policy architecture drives an episode (paper §6.1 methods).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,6 +70,152 @@ impl OptState {
             t: 0.0,
         }
     }
+}
+
+/// Per-episode backend state, created once by
+/// [`PolicyBackend::begin_episode`] and threaded through the hot-loop
+/// head calls. PJRT caches episode-constant argument literals (params,
+/// Hcat) so they are marshalled once instead of once per MDP step; the
+/// native backend needs no per-episode state.
+pub enum EpisodeCache {
+    /// Backend keeps no per-episode state.
+    None,
+    /// PJRT episode-constant literals.
+    Pjrt(EpisodeLiterals),
+}
+
+/// The policy-backend contract (DESIGN.md §11). All methods are pure in
+/// `(params, inputs)`; exploration/sampling randomness lives entirely in
+/// the episode runner's `Rng`.
+pub trait PolicyBackend {
+    /// Backend name for logs/CLI ("native" | "pjrt").
+    fn kind(&self) -> &'static str;
+
+    /// Model dims + artifact metadata.
+    fn manifest(&self) -> &Manifest;
+
+    /// Variant matching an already-built encoding (must agree with the
+    /// variant the encoding was built for).
+    fn variant_for(&self, enc: &GraphEncoding) -> Result<VariantInfo>;
+
+    /// Variant for a graph about to be encoded. PJRT picks the smallest
+    /// AOT padded size that fits (and errors beyond the largest); the
+    /// native backend is shape-polymorphic and returns an exact fit.
+    fn variant_for_graph(&self, n_nodes: usize, n_edges: usize) -> Result<VariantInfo>;
+
+    /// Initial parameter blob.
+    fn init_params(&self) -> Result<Vec<f32>>;
+
+    /// Run the encoder once: `Hcat` as a flat `[n * sel_in]` vec.
+    fn encode(&self, variant: &VariantInfo, enc: &GraphEncoding, params: &[f32]) -> Result<Vec<f32>>;
+
+    /// Unmasked SEL scores for all nodes (candidate masking is exact to
+    /// apply caller-side; see `episode.rs`).
+    fn sel_scores(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+    ) -> Result<Vec<f32>>;
+
+    /// Prepare per-episode state for the hot loop.
+    fn begin_episode(&self, enc: &GraphEncoding, params: &[f32], hcat: &[f32]) -> Result<EpisodeCache>;
+
+    /// PLC logits over devices for the one-hot candidate, written into
+    /// `out` (resized to `max_devices`; masked devices get -1e9).
+    #[allow(clippy::too_many_arguments)]
+    fn plc_logits_step(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        cache: &EpisodeCache,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        xd: &[f32],
+        place_norm: &[f32],
+        dev_mask: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// GDP logits over devices, written into `out`.
+    #[allow(clippy::too_many_arguments)]
+    fn gdp_logits_step(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        cache: &EpisodeCache,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        dev_mask: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()>;
+
+    /// One REINFORCE/imitation train step over a whole episode
+    /// trajectory: updates `params` and `opt` in place, returns
+    /// `(loss, entropy)`.
+    #[allow(clippy::too_many_arguments)]
+    fn train(
+        &self,
+        method: Method,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        traj: &Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        lr: f32,
+        entropy_w: f32,
+    ) -> Result<(f32, f32)>;
+
+    /// A `Sync` view of this backend for parallel episode fan-out, or
+    /// `None` when the backend is leader-thread-only (PJRT).
+    fn as_sync(&self) -> Option<&(dyn PolicyBackend + Sync)>;
+}
+
+/// Which backend implementation to load (`--policy-backend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Pure-Rust inference + training (default; zero artifacts needed).
+    Native,
+    /// PJRT CPU client over the AOT HLO artifacts.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "native" => Some(BackendKind::Native),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+/// Load one backend by kind from the default artifacts directory.
+pub fn load_backend(kind: BackendKind) -> Result<Box<dyn PolicyBackend>> {
+    match kind {
+        BackendKind::Native => Ok(Box::new(super::native::NativePolicy::load_default()?)),
+        BackendKind::Pjrt => Ok(Box::new(PolicyNets::load_default()?)),
+    }
+}
+
+/// Default backend: `$DOPPLER_POLICY_BACKEND` (`native`|`pjrt`) or
+/// native. A *set but unrecognized* value is an error — falling back
+/// silently would let a typo run experiments on the wrong backend.
+/// Native loading cannot fail without artifacts (it falls back to
+/// built-in dims), so learned-policy paths run in any container.
+pub fn load_default_backend() -> Result<Box<dyn PolicyBackend>> {
+    let kind = match std::env::var("DOPPLER_POLICY_BACKEND") {
+        Ok(s) => BackendKind::parse(&s).with_context(|| {
+            format!("unrecognized DOPPLER_POLICY_BACKEND '{s}' (expected native|pjrt)")
+        })?,
+        Err(_) => BackendKind::Native,
+    };
+    load_backend(kind)
 }
 
 /// Lazily-compiled executables for all variants.
@@ -320,4 +479,115 @@ pub struct EpisodeLiterals {
     pub params: Literal,
     pub hcat: Literal,
     pub node_mask: Literal,
+}
+
+impl PolicyBackend for PolicyNets {
+    fn kind(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn variant_for(&self, enc: &GraphEncoding) -> Result<VariantInfo> {
+        Ok(self.manifest.variant_for(enc.real_n, enc.real_e)?.clone())
+    }
+
+    fn variant_for_graph(&self, n_nodes: usize, n_edges: usize) -> Result<VariantInfo> {
+        Ok(self.manifest.variant_for(n_nodes, n_edges)?.clone())
+    }
+
+    fn init_params(&self) -> Result<Vec<f32>> {
+        PolicyNets::init_params(self)
+    }
+
+    fn encode(&self, variant: &VariantInfo, enc: &GraphEncoding, params: &[f32]) -> Result<Vec<f32>> {
+        PolicyNets::encode(self, variant, enc, params)
+    }
+
+    fn sel_scores(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+    ) -> Result<Vec<f32>> {
+        PolicyNets::sel_scores(self, variant, enc, params, hcat)
+    }
+
+    fn begin_episode(&self, enc: &GraphEncoding, params: &[f32], hcat: &[f32]) -> Result<EpisodeCache> {
+        Ok(EpisodeCache::Pjrt(self.episode_literals(enc, params, hcat)?))
+    }
+
+    fn plc_logits_step(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        cache: &EpisodeCache,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        xd: &[f32],
+        place_norm: &[f32],
+        dev_mask: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let r = match cache {
+            EpisodeCache::Pjrt(c) => {
+                self.plc_logits_cached(variant, enc, c, v_onehot, xd, place_norm, dev_mask)?
+            }
+            EpisodeCache::None => {
+                self.plc_logits(variant, enc, params, hcat, v_onehot, xd, place_norm, dev_mask)?
+            }
+        };
+        out.clear();
+        out.extend_from_slice(&r);
+        Ok(())
+    }
+
+    fn gdp_logits_step(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        cache: &EpisodeCache,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        dev_mask: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let r = match cache {
+            EpisodeCache::Pjrt(c) => self.gdp_logits_cached(variant, enc, c, v_onehot, dev_mask)?,
+            EpisodeCache::None => {
+                self.gdp_logits(variant, enc, params, hcat, v_onehot, dev_mask)?
+            }
+        };
+        out.clear();
+        out.extend_from_slice(&r);
+        Ok(())
+    }
+
+    fn train(
+        &self,
+        method: Method,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        traj: &Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        lr: f32,
+        entropy_w: f32,
+    ) -> Result<(f32, f32)> {
+        PolicyNets::train(
+            self, method, variant, enc, params, opt, traj, dev_mask, advantage, lr, entropy_w,
+        )
+    }
+
+    fn as_sync(&self) -> Option<&(dyn PolicyBackend + Sync)> {
+        // PJRT handles are leader-thread-only: no parallel episode fan-out
+        None
+    }
 }

@@ -18,11 +18,15 @@
 //!   and means are reduced in the same order as the serial loop
 //!   (floating-point addition is not associative; order matters for
 //!   bit-identity).
-//! - **Leader/actor split.** Policy inference (PJRT handles are
-//!   single-threaded by design, see `policy/nets.rs`) stays on the leader
-//!   thread: the leader materializes each episode's assignment — the
-//!   CPU-side snapshot of all logits/ε-greedy decisions — and workers
-//!   only consume `(&Graph, &Assignment, Rng)` work items.
+//! - **Leader/actor split (PJRT) or whole-episode fan-out (native).**
+//!   With the PJRT backend, policy inference stays on the leader thread
+//!   (PJRT handles are single-threaded by design, see `policy/nets.rs`):
+//!   the leader materializes each episode's assignment and workers only
+//!   consume `(&Graph, &Assignment, Rng)` simulation work items. With
+//!   the `Send + Sync` native backend, [`generate_episodes`] fans out
+//!   *whole ASSIGN episodes* — encode, SEL/PLC heads, ε-greedy draws —
+//!   under the same stream-keyed fork + canonical-merge contract, so
+//!   episode generation itself scales with cores.
 //!
 //! The determinism contract is enforced by
 //! `tests/prop_invariants.rs::prop_rollout_parallel_matches_serial`.
@@ -36,7 +40,14 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use anyhow::Result;
+
+use crate::features::StaticFeatures;
 use crate::graph::{Assignment, Graph};
+use crate::policy::{
+    run_episode_with, EpisodeCfg, EpisodeResult, EpisodeScratch, GraphEncoding, PolicyBackend,
+};
+use crate::sim::topology::DeviceTopology;
 use crate::sim::{simulate, SimConfig, SimResult};
 use crate::util::rng::Rng;
 
@@ -237,6 +248,73 @@ pub fn episode_rewards(
         .chunks(reps)
         .map(|c| c.iter().sum::<f64>() / reps as f64)
         .collect()
+}
+
+/// Parallel whole-episode generation: run `episodes` ASSIGN episodes
+/// with fixed `params`, fanned out across the deterministic worker pool.
+///
+/// Episode `i` draws from the stream-`i` fork of `base` (forked on the
+/// caller thread before any worker starts) and results merge in episode
+/// order, so the output is bit-identical at any thread count — the same
+/// contract as the simulation fan-out, extended to the policies
+/// themselves. This requires a `Send + Sync` backend, i.e. the native
+/// one ([`crate::policy::PolicyBackend::as_sync`]); PJRT episodes must
+/// stay on the leader thread.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_episodes(
+    backend: &(dyn PolicyBackend + Sync),
+    enc: &GraphEncoding,
+    g: &Graph,
+    topo: &DeviceTopology,
+    feats: &StaticFeatures,
+    params: &[f32],
+    cfg: &EpisodeCfg,
+    base: &mut Rng,
+    episodes: usize,
+    threads: usize,
+) -> Result<Vec<EpisodeResult>> {
+    let cfgs = vec![*cfg; episodes];
+    generate_episodes_cfg(backend, enc, g, topo, feats, params, &cfgs, base, threads)
+}
+
+/// [`generate_episodes`] with one [`EpisodeCfg`] per episode — the
+/// trainer uses this to keep the per-episode exploration schedule exact
+/// in batched Stage II (episode `i`'s epsilon is a function of `i`, not
+/// of the batch).
+#[allow(clippy::too_many_arguments)]
+pub fn generate_episodes_cfg(
+    backend: &(dyn PolicyBackend + Sync),
+    enc: &GraphEncoding,
+    g: &Graph,
+    topo: &DeviceTopology,
+    feats: &StaticFeatures,
+    params: &[f32],
+    cfgs: &[EpisodeCfg],
+    base: &mut Rng,
+    threads: usize,
+) -> Result<Vec<EpisodeResult>> {
+    // one scratch per worker thread, reused across that worker's episodes
+    // (scratch reuse is bit-neutral: run_episode_with resets it)
+    std::thread_local! {
+        static SCRATCH: std::cell::RefCell<EpisodeScratch> =
+            std::cell::RefCell::new(EpisodeScratch::new());
+    }
+    let results = parallel_map_rng(threads, base, cfgs.len(), |i, rng| {
+        SCRATCH.with(|s| {
+            run_episode_with(
+                backend,
+                enc,
+                g,
+                topo,
+                feats,
+                params,
+                &cfgs[i],
+                rng,
+                &mut s.borrow_mut(),
+            )
+        })
+    });
+    results.into_iter().collect()
 }
 
 /// Mean real-engine makespan over `reps` executions — always serial.

@@ -114,6 +114,35 @@ impl Manifest {
             .collect())
     }
 
+    /// Built-in manifest with no AOT variants — the zero-artifact
+    /// configuration the native backend runs on. Every dim is supplied
+    /// by the caller (derived from the native `ParamLayout`), so the
+    /// manifest can never describe a different model than the layout
+    /// actually computes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn builtin(
+        hidden: usize,
+        k_mpnn: usize,
+        node_feats: usize,
+        dev_feats: usize,
+        max_devices: usize,
+        sel_in: usize,
+        param_count: usize,
+    ) -> Manifest {
+        Manifest {
+            dir: PathBuf::from("artifacts"),
+            hidden,
+            k_mpnn,
+            node_feats,
+            dev_feats,
+            max_devices,
+            sel_in,
+            param_count,
+            init_params_file: "init_params.bin".into(),
+            variants: Vec::new(),
+        }
+    }
+
     /// Default artifacts directory: `$DOPPLER_ARTIFACTS` or `./artifacts`.
     pub fn default_dir() -> PathBuf {
         std::env::var("DOPPLER_ARTIFACTS")

@@ -18,7 +18,8 @@ use anyhow::Result;
 use crate::features::{static_features, StaticFeatures};
 use crate::graph::{Assignment, Graph};
 use crate::policy::{
-    run_episode, EpisodeCfg, GraphEncoding, Method, OptState, PolicyNets, Trajectory,
+    run_episode_with, EpisodeCfg, EpisodeResult, EpisodeScratch, GraphEncoding, Method, OptState,
+    PolicyBackend, Trajectory,
 };
 use crate::sim::topology::DeviceTopology;
 use crate::sim::SimConfig;
@@ -103,6 +104,15 @@ pub struct TrainConfig {
     /// `sim_reps` does (it defines the reward as a mean over jittered
     /// `ExecTime` draws).
     pub rollout: crate::rollout::RolloutCfg,
+    /// Stage II episodes generated per parameter snapshot (`1` =
+    /// paper-faithful sequential REINFORCE). With a `Send + Sync`
+    /// backend, a batch's episodes fan out across the rollout workers
+    /// and their updates are applied sequentially in episode order —
+    /// batched REINFORCE with slightly stale sampling parameters. Unlike
+    /// `rollout.threads` this is a *semantic* knob (it changes which
+    /// params each episode samples from); results are deterministic in
+    /// `(seed, episode_batch)` and independent of thread count.
+    pub episode_batch: usize,
     /// Real-engine executions averaged per Stage III reward.
     pub engine_reps: usize,
 }
@@ -137,6 +147,7 @@ impl TrainConfig {
             force_teacher_sel: false,
             force_teacher_plc: false,
             rollout: crate::rollout::RolloutCfg::serial(),
+            episode_batch: 1,
             engine_reps: 1,
         }
     }
@@ -168,9 +179,11 @@ pub struct TrainResult {
 }
 
 /// The trainer: owns policy params + optimizer state for one graph
-/// (the paper trains one dual policy per computation graph).
+/// (the paper trains one dual policy per computation graph). Works with
+/// any [`PolicyBackend`]; a `Send + Sync` backend additionally enables
+/// batched Stage II episode generation (`TrainConfig::episode_batch`).
 pub struct Trainer<'a> {
-    pub nets: &'a PolicyNets,
+    pub nets: &'a dyn PolicyBackend,
     pub g: &'a Graph,
     pub topo: DeviceTopology,
     pub feats: StaticFeatures,
@@ -187,21 +200,23 @@ pub struct Trainer<'a> {
     /// Best observed assignment per stage (2 = sim, 3 = real).
     stage_bests: std::collections::BTreeMap<u8, (Assignment, f64)>,
     rng: Rng,
+    /// Reused episode hot-loop buffers (leader-thread episodes).
+    scratch: EpisodeScratch,
 }
 
 impl<'a> Trainer<'a> {
     pub fn new(
-        nets: &'a PolicyNets,
+        nets: &'a dyn PolicyBackend,
         g: &'a Graph,
         topo: DeviceTopology,
         cfg: TrainConfig,
     ) -> Result<Trainer<'a>> {
         let feats = static_features(g, &topo, 1.0);
-        let variant = nets.manifest.variant_for(g.n(), g.m())?.clone();
-        let enc = GraphEncoding::build(g, &feats, &nets.manifest, &variant)?;
+        let variant = nets.variant_for_graph(g.n(), g.m())?;
+        let enc = GraphEncoding::build(g, &feats, nets.manifest(), &variant)?;
         let params = nets.init_params()?;
         let opt = OptState::new(params.len());
-        let dev_mask = crate::policy::device_mask(nets.manifest.max_devices, cfg.n_devices);
+        let dev_mask = crate::policy::device_mask(nets.manifest().max_devices, cfg.n_devices);
         let rng = Rng::new(cfg.seed ^ 0xD0BB1E);
         Ok(Trainer {
             nets,
@@ -220,6 +235,7 @@ impl<'a> Trainer<'a> {
             best: None,
             stage_bests: std::collections::BTreeMap::new(),
             rng,
+            scratch: EpisodeScratch::new(),
         })
     }
 
@@ -242,7 +258,7 @@ impl<'a> Trainer<'a> {
                 &self.topo,
                 &self.feats,
                 &self.enc,
-                self.nets.manifest.max_devices,
+                self.nets.manifest().max_devices,
                 self.cfg.n_devices,
                 sel_mode,
                 0.25,
@@ -292,7 +308,6 @@ impl<'a> Trainer<'a> {
         } else {
             self.cfg.epsilon.at(i, total)
         };
-        let lr = self.cfg.lr.at(i, total) as f32;
         let ep_cfg = EpisodeCfg {
             method: self.cfg.method,
             epsilon,
@@ -304,7 +319,7 @@ impl<'a> Trainer<'a> {
         let ep = if self.cfg.force_teacher_sel || self.cfg.force_teacher_plc {
             self.ablated_episode(&ep_cfg)?
         } else {
-            run_episode(
+            run_episode_with(
                 self.nets,
                 &self.enc,
                 self.g,
@@ -313,10 +328,26 @@ impl<'a> Trainer<'a> {
                 &self.params,
                 &ep_cfg,
                 &mut self.rng,
+                &mut self.scratch,
             )?
         };
 
         let t = exec_time_of(&ep.assignment, &mut self.rng);
+        self.apply_update(i, total, stage, ep, t)
+    }
+
+    /// Shared reward-to-update tail: baseline/advantage bookkeeping,
+    /// best-assignment tracking, one train step, one history row. Used by
+    /// both the sequential episode loop and batched Stage II.
+    fn apply_update(
+        &mut self,
+        i: usize,
+        total: usize,
+        stage: u8,
+        ep: EpisodeResult,
+        t: f64,
+    ) -> Result<()> {
+        let lr = self.cfg.lr.at(i, total) as f32;
         // reward baseline (paper §4.1 uses the mean over past episodes;
         // an exponential moving average tracks the improving policy
         // better on short budgets)
@@ -369,12 +400,13 @@ impl<'a> Trainer<'a> {
         use crate::heuristics::{place_earliest, select_critical_path};
 
         let n = self.enc.n;
-        let m = self.nets.manifest.max_devices;
+        let m = self.nets.manifest().max_devices;
         let df = DEVICE_FEATS;
         let hcat = self.nets.encode(&self.variant, &self.enc, &self.params)?;
         let sel_scores = self
             .nets
             .sel_scores(&self.variant, &self.enc, &self.params, &hcat)?;
+        let cache = self.nets.begin_episode(&self.enc, &self.params, &hcat)?;
         let mut st = AssignState::new(self.g, &self.topo);
         let mut traj = Trajectory {
             sel_actions: vec![0; n],
@@ -383,8 +415,12 @@ impl<'a> Trainer<'a> {
             cand_masks: vec![0.0; n * n],
             xd_steps: vec![0.0; n * m * df],
         };
-        let mut place = vec![0.0f32; m * n];
-        let mut place_counts = vec![0usize; m];
+        // incremental row-normalized placement matrix (same invariant as
+        // the episode hot loop: every entry of row d equals 1/count)
+        let mut place_norm = vec![0.0f32; m * n];
+        let mut placed_on: Vec<Vec<usize>> = vec![Vec::new(); m];
+        let mut v_onehot = vec![0.0f32; n];
+        let mut logits = Vec::new();
         let devices: Vec<usize> = (0..self.cfg.n_devices).collect();
         let mut h = 0;
         while !st.done() {
@@ -419,28 +455,21 @@ impl<'a> Trainer<'a> {
             let d = if self.cfg.force_teacher_plc {
                 place_earliest(&st, v, &mut self.rng)
             } else {
-                let mut v_onehot = vec![0.0f32; n];
                 v_onehot[v] = 1.0;
-                let mut place_norm = vec![0.0f32; m * n];
-                for dd in 0..m {
-                    if place_counts[dd] > 0 {
-                        let w = 1.0 / place_counts[dd] as f32;
-                        for vv in 0..n {
-                            place_norm[dd * n + vv] = place[dd * n + vv] * w;
-                        }
-                    }
-                }
                 let xd_slice = &traj.xd_steps[h * m * df..(h + 1) * m * df];
-                let logits = self.nets.plc_logits(
+                self.nets.plc_logits_step(
                     &self.variant,
                     &self.enc,
+                    &cache,
                     &self.params,
                     &hcat,
                     &v_onehot,
                     xd_slice,
                     &place_norm,
                     &self.dev_mask,
+                    &mut logits,
                 )?;
+                v_onehot[v] = 0.0;
                 if self.rng.chance(ep_cfg.epsilon) {
                     *self.rng.choose(&devices)
                 } else {
@@ -458,8 +487,7 @@ impl<'a> Trainer<'a> {
             traj.sel_actions[h] = v as i32;
             traj.plc_actions[h] = d as i32;
             traj.step_mask[h] = 1.0;
-            place[d * n + v] = 1.0;
-            place_counts[d] += 1;
+            crate::policy::episode::record_placement(&mut place_norm, &mut placed_on, n, v, d);
             st.place(v, d);
             h += 1;
         }
@@ -472,12 +500,24 @@ impl<'a> Trainer<'a> {
 
     /// Stage II: REINFORCE against the WC simulator. The reward is the
     /// mean `ExecTime` over `rollout.sim_reps` jittered replicates,
-    /// fanned out across `rollout.threads` workers — the leader thread
-    /// runs the policy (PJRT is single-threaded by design) and workers
-    /// only consume the finished assignment. Thread count never changes
-    /// the trained policy: replicate RNG streams are forked per
-    /// `(episode, replicate)` on the leader and merged in order.
+    /// fanned out across `rollout.threads` workers. Thread count never
+    /// changes the trained policy: all RNG streams are forked per work
+    /// unit on the leader and merged in canonical order.
+    ///
+    /// With `episode_batch > 1` and a `Send + Sync` backend (native),
+    /// episode *generation* also fans out: each batch samples
+    /// `episode_batch` episodes from the current parameter snapshot in
+    /// parallel, then applies their updates sequentially in episode
+    /// order. `episode_batch = 1` (default) is the paper-faithful
+    /// sequential loop; the PJRT backend always uses it.
     pub fn stage2_sim(&mut self, episodes: usize) -> Result<()> {
+        if self.cfg.episode_batch > 1 && !self.cfg.force_teacher_sel && !self.cfg.force_teacher_plc
+        {
+            let nets = self.nets;
+            if let Some(sync) = nets.as_sync() {
+                return self.stage2_sim_batched(episodes, sync);
+            }
+        }
         let sim_cfg = self.cfg.sim.clone();
         let g = self.g;
         let ro = self.cfg.rollout;
@@ -486,6 +526,63 @@ impl<'a> Trainer<'a> {
                 crate::rollout::mean_exec_time(g, a, &sim_cfg, rng, ro.sim_reps, ro.threads)
             };
             self.rl_episode(i, episodes, 2, &mut f)?;
+        }
+        Ok(())
+    }
+
+    /// Batched Stage II (see [`Trainer::stage2_sim`]): generate a batch
+    /// of episodes from one parameter snapshot across the worker pool,
+    /// score them with the parallel reward evaluator, then apply the
+    /// train steps in episode order.
+    fn stage2_sim_batched(
+        &mut self,
+        episodes: usize,
+        backend: &(dyn PolicyBackend + Sync),
+    ) -> Result<()> {
+        let sim_cfg = self.cfg.sim.clone();
+        let ro = self.cfg.rollout;
+        let mut done = 0;
+        while done < episodes {
+            let bs = self.cfg.episode_batch.min(episodes - done);
+            // per-episode exploration schedule stays exact (including the
+            // every-10th pure-exploitation episode)
+            let cfgs: Vec<EpisodeCfg> = (done..done + bs)
+                .map(|i| EpisodeCfg {
+                    method: self.cfg.method,
+                    epsilon: if i % 10 == 9 {
+                        0.0
+                    } else {
+                        self.cfg.epsilon.at(i, episodes)
+                    },
+                    n_devices: self.cfg.n_devices,
+                    per_step_encode: self.cfg.per_step_encode,
+                })
+                .collect();
+            let eps = crate::rollout::generate_episodes_cfg(
+                backend,
+                &self.enc,
+                self.g,
+                &self.topo,
+                &self.feats,
+                &self.params,
+                &cfgs,
+                &mut self.rng,
+                ro.threads,
+            )?;
+            let assignments: Vec<Assignment> =
+                eps.iter().map(|e| e.assignment.clone()).collect();
+            let rewards = crate::rollout::episode_rewards(
+                self.g,
+                &assignments,
+                &sim_cfg,
+                &mut self.rng,
+                ro.sim_reps,
+                ro.threads,
+            );
+            for (j, ep) in eps.into_iter().enumerate() {
+                self.apply_update(done + j, episodes, 2, ep, rewards[j])?;
+            }
+            done += bs;
         }
         Ok(())
     }
@@ -520,9 +617,9 @@ impl<'a> Trainer<'a> {
                 n_devices: self.cfg.n_devices,
                 per_step_encode: false,
             };
-            let ep = run_episode(
+            let ep = run_episode_with(
                 self.nets, &self.enc, self.g, &self.topo, &self.feats, &self.params, &ep_cfg,
-                &mut self.rng,
+                &mut self.rng, &mut self.scratch,
             )
             .expect("rollout failed");
             let t = crate::engine::execute(self.g, &ep.assignment, engine_cfg).sim.makespan;
@@ -545,7 +642,7 @@ impl<'a> Trainer<'a> {
             n_devices: self.cfg.n_devices,
             per_step_encode: false,
         };
-        Ok(run_episode(
+        Ok(run_episode_with(
             self.nets,
             &self.enc,
             self.g,
@@ -554,6 +651,7 @@ impl<'a> Trainer<'a> {
             &self.params,
             &ep_cfg,
             &mut self.rng,
+            &mut self.scratch,
         )?
         .assignment)
     }

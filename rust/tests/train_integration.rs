@@ -1,11 +1,13 @@
 //! End-to-end training integration: Stage I + II + III on CHAINMM-tiny
 //! with a small budget must produce an assignment no worse than random
-//! and exercise the whole three-layer stack. Requires `make artifacts`.
+//! and exercise the whole stack. Runs on the native policy backend, so
+//! no AOT artifacts (and no PJRT) are required — this is the Stage II
+//! "training smoke" guarantee of ISSUE 3.
 
 use doppler::engine::EngineConfig;
 use doppler::graph::workloads::{chainmm, Scale};
 use doppler::heuristics::random_assignment;
-use doppler::policy::{Method, PolicyNets};
+use doppler::policy::{Method, NativePolicy};
 use doppler::sim::topology::DeviceTopology;
 use doppler::sim::{simulate, SimConfig};
 use doppler::train::{Stages, TrainConfig, Trainer};
@@ -14,10 +16,7 @@ use doppler::util::stats::mean;
 
 #[test]
 fn three_stage_training_improves_over_random() {
-    let Ok(nets) = PolicyNets::load_default() else {
-        eprintln!("SKIP train integration (run `make artifacts`)");
-        return;
-    };
+    let nets = NativePolicy::builtin();
     let g = chainmm(Scale::Tiny);
     let topo = DeviceTopology::p100x4();
     let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
@@ -57,4 +56,36 @@ fn three_stage_training_improves_over_random() {
     assert!(result.history.iter().any(|r| r.stage == 1));
     assert!(result.history.iter().any(|r| r.stage == 2));
     assert!(result.history.iter().any(|r| r.stage == 3));
+}
+
+/// Batched Stage II (episode_batch > 1, native backend) must remain a
+/// pure function of the seed: thread count never changes anything, and
+/// the run completes with finite losses.
+#[test]
+fn batched_stage2_deterministic_across_thread_counts() {
+    let g = chainmm(Scale::Tiny);
+    let topo = DeviceTopology::p100x4();
+    let run = |threads: usize| {
+        let nets = NativePolicy::builtin();
+        let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+        cfg.seed = 9;
+        cfg.episode_batch = 4;
+        cfg.rollout.threads = threads;
+        let mut trainer = Trainer::new(&nets, &g, topo.clone(), cfg).unwrap();
+        trainer.stage2_sim(12).unwrap();
+        assert_eq!(trainer.history.len(), 12);
+        assert!(trainer.history.iter().all(|r| r.loss.is_finite()));
+        (
+            trainer.params.clone(),
+            trainer
+                .history
+                .iter()
+                .map(|r| (r.exec_time, r.loss))
+                .collect::<Vec<_>>(),
+        )
+    };
+    let (p1, h1) = run(1);
+    let (p4, h4) = run(4);
+    assert_eq!(h1, h4, "thread count leaked into batched Stage II history");
+    assert_eq!(p1, p4, "thread count leaked into trained parameters");
 }

@@ -1,0 +1,501 @@
+#!/usr/bin/env python3
+"""Independent oracle for the rust native policy backend
+(rust/src/policy/native.rs).
+
+The native backend reimplements the L2 policy networks — encoder, SEL,
+PLC, GDP heads AND the full REINFORCE train step with analytic
+backprop — in pure Rust. Rust cannot be fuzz-checked against JAX at
+test time (the offline image has no PJRT and CI has no Python), so this
+script pins the *algorithm*: a numpy transliteration of exactly the
+arithmetic the Rust code performs, compared against the ground-truth
+JAX model (`python/compile/model.py`) for
+
+  1. forward passes: encode / sel_scores / plc_logits / gdp_logits,
+  2. episode_loss value + entropy for all three modes,
+  3. the full parameter gradient vs `jax.grad(episode_loss)`.
+
+Run from the repo root:  python3 tools/check_native_policy.py
+Exit code 0 = every check within tolerance.
+
+The numpy code below is deliberately written loop-free where the rust
+code uses loops — the *math* is identical; only the Rust golden-logits
+fixture (tools/gen_golden_logits.py) pins bit-level behavior.
+"""
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", True)  # tight gradient comparison
+
+import jax.numpy as jnp  # noqa: E402
+
+from compile import config as C  # noqa: E402
+from compile import model  # noqa: E402
+from compile import params as P  # noqa: E402
+
+H = C.HIDDEN
+NEG = -1e9
+
+
+# --------------------------------------------------------------------------
+# numpy forward — the algorithm native.rs implements
+# --------------------------------------------------------------------------
+
+def np_unpack(flat):
+    return {k: np.asarray(v) for k, v in P.unpack(jnp.asarray(flat)).items()}
+
+
+def np_encode(d, xv, esrc, edst, efeat, node_mask, edge_mask, pb, pt):
+    """Returns (hcat, trace) where trace holds what the rust backward keeps."""
+    a = np.maximum(xv @ d["enc.w0"] + d["enc.b0"], 0.0)
+    z = (a @ d["enc.w1"] + d["enc.b1"]) * node_mask[:, None]
+
+    h = z
+    h_list = [h]
+    msgs = []
+    aggs = []
+    n = xv.shape[0]
+    for k in range(C.K_MPNN):
+        # gather (masked): padding edges contribute nothing downstream
+        h_src = h[esrc] * edge_mask[:, None]
+        h_dst = h[edst] * edge_mask[:, None]
+        mpre = (
+            h_src @ d[f"mpnn{k}.wsrc"]
+            + h_dst @ d[f"mpnn{k}.wdst"]
+            + efeat @ d[f"mpnn{k}.we"]
+            + d[f"mpnn{k}.bm"]
+        )
+        msg = np.tanh(mpre)
+        # scatter-sum over masked destination edges
+        agg = np.zeros_like(h)
+        for e in range(len(esrc)):
+            if edge_mask[e] > 0:
+                agg[edst[e]] += msg[e]
+        h = np.tanh(np.concatenate([h, agg], axis=1) @ d[f"mpnn{k}.wphi"] + d[f"mpnn{k}.bphi"])
+        h = h * node_mask[:, None]
+        h_list.append(h)
+        msgs.append(msg)
+        aggs.append(agg)
+
+    hb = pb @ h
+    ht = pt @ h
+    hcat = np.concatenate([h, hb, ht, z], axis=1) * node_mask[:, None]
+    trace = {"a": a, "z": z, "h_list": h_list, "msgs": msgs, "aggs": aggs, "hcat": hcat, "n": n}
+    return hcat, trace
+
+
+def np_sel_scores(d, hcat):
+    x = np.maximum(hcat @ d["sel.w0"] + d["sel.b0"], 0.0)
+    return (x @ d["sel.w1"] + d["sel.b1"])[:, 0]
+
+
+def leaky(x):
+    return np.where(x > 0, x, 0.01 * x)
+
+
+def np_plc_logits(d, hcat, v, xd, place_norm, dev_mask):
+    m = xd.shape[0]
+    hv = hcat[v]
+    hgnn = hcat[:, :H]
+    hd = place_norm @ hgnn
+    y = np.maximum(xd @ d["dev.w0"] + d["dev.b0"], 0.0)
+    feat = np.concatenate([np.tile(hv[None, :], (m, 1)), hd, y], axis=1)
+    x = leaky(feat @ d["plc.w0"] + d["plc.b0"])
+    q = (x @ d["plc.w1"] + d["plc.b1"])[:, 0]
+    return np.where(dev_mask > 0, q, NEG)
+
+
+def np_gdp_logits(d, hcat, v, node_mask, dev_mask):
+    m = dev_mask.shape[0]
+    hv = hcat[v]
+    s = d["gdp.wq"] @ hv
+    att = hcat @ s
+    att = np.where(node_mask > 0, att / np.sqrt(float(C.SEL_IN)), NEG)
+    w = np_softmax(att)
+    ctx = w @ hcat
+    feat = np.concatenate(
+        [np.tile(hv[None, :], (m, 1)), np.tile(ctx[None, :], (m, 1)), d["gdp.devemb"][:m]],
+        axis=1,
+    )
+    x = leaky(feat @ d["gdp.w0"] + d["gdp.b0"])
+    q = (x @ d["gdp.w1"] + d["gdp.b1"])[:, 0]
+    return np.where(dev_mask > 0, q, NEG)
+
+
+def np_softmax(z):
+    z = z - z.max()
+    e = np.exp(z)
+    return e / e.sum()
+
+
+def np_log_softmax(z):
+    zs = z - z.max()
+    return zs - np.log(np.exp(zs).sum())
+
+
+# --------------------------------------------------------------------------
+# numpy loss + analytic backward — exactly native.rs::train
+# --------------------------------------------------------------------------
+
+def np_episode_loss_and_grad(mode, flat, xv, esrc, edst, efeat, node_mask, edge_mask,
+                             pb, pt, sel_actions, plc_actions, step_mask, cand_masks,
+                             xd_steps, dev_mask, advantage, entropy_w):
+    d = np_unpack(flat)
+    n = xv.shape[0]
+    m = dev_mask.shape[0]
+    hcat, tr = np_encode(d, xv, esrc, edst, efeat, node_mask, edge_mask, pb, pt)
+    q = np_sel_scores(d, hcat)
+    x_sel = np.maximum(hcat @ d["sel.w0"] + d["sel.b0"], 0.0)
+
+    steps = max(step_mask.sum(), 1.0)
+    dlogp_w = -advantage / steps   # dLoss/d(per-step logp)
+    dent_w = -entropy_w / steps    # dLoss/d(per-step entropy)
+
+    grads = {k: np.zeros_like(v) for k, v in d.items()}
+    dhcat = np.zeros_like(hcat)
+    dq = np.zeros(n)
+
+    # rebuild the exclusive-prefix placement state as the episode replays
+    place_counts = np.zeros(m)
+    hd_sums = np.zeros((m, H))  # sum of hgnn rows placed per device
+    placed = [[] for _ in range(m)]
+
+    logp_total = 0.0
+    ent_total = 0.0
+    hgnn = hcat[:, :H]
+
+    for t in range(n):
+        if step_mask[t] <= 0:
+            # JAX also replays masked steps but multiplies them out; the
+            # placement prefix only advances on real steps in both.
+            continue
+        a_sel = int(sel_actions[t])
+        a_plc = int(plc_actions[t])
+
+        # ---- SEL ----
+        if mode == "dual":
+            logits = np.where(cand_masks[t] > 0, q, NEG)
+            logp = np_log_softmax(logits)
+            p = np.exp(logp)
+            plogp = p * logp          # exact 0 for masked entries
+            ent = -plogp.sum()
+            logp_total += logp[a_sel]
+            ent_total += ent
+            dlogits = dlogp_w * (-p)
+            dlogits[a_sel] += dlogp_w
+            dlogits += dent_w * (-p * (logp - plogp.sum()))
+            # through the where(): only candidate entries reach q, but
+            # non-candidates have p == 0 and are not the action, so the
+            # gate is a no-op — mirror JAX by masking anyway.
+            dq += np.where(cand_masks[t] > 0, dlogits, 0.0)
+
+        # ---- PLC ----
+        if mode == "gdp":
+            hv = hcat[a_sel]
+            s = d["gdp.wq"] @ hv
+            att = hcat @ s
+            attm = np.where(node_mask > 0, att / np.sqrt(float(C.SEL_IN)), NEG)
+            w = np_softmax(attm)
+            ctx = w @ hcat
+            feat = np.concatenate(
+                [np.tile(hv[None, :], (m, 1)), np.tile(ctx[None, :], (m, 1)), d["gdp.devemb"][:m]],
+                axis=1,
+            )
+            xpre = feat @ d["gdp.w0"] + d["gdp.b0"]
+            x = leaky(xpre)
+            qd = (x @ d["gdp.w1"] + d["gdp.b1"])[:, 0]
+            logits = np.where(dev_mask > 0, qd, NEG)
+            logp = np_log_softmax(logits)
+            p = np.exp(logp)
+            plogp = p * logp
+            ent = -plogp.sum()
+            logp_total += logp[a_plc]
+            ent_total += ent
+
+            dlogits = dlogp_w * (-p)
+            dlogits[a_plc] += dlogp_w
+            dlogits += dent_w * (-p * (logp - plogp.sum()))
+            dqd = np.where(dev_mask > 0, dlogits, 0.0)
+            grads["gdp.w1"] += x.T @ dqd[:, None]
+            grads["gdp.b1"] += dqd.sum()
+            dx = dqd[:, None] * d["gdp.w1"][:, 0][None, :]
+            dxpre = np.where(xpre > 0, dx, 0.01 * dx)
+            grads["gdp.w0"] += feat.T @ dxpre
+            grads["gdp.b0"] += dxpre.sum(axis=0)
+            dfeat = dxpre @ d["gdp.w0"].T
+            dhv = dfeat[:, : C.SEL_IN].sum(axis=0)
+            dctx = dfeat[:, C.SEL_IN : 2 * C.SEL_IN].sum(axis=0)
+            grads["gdp.devemb"][:m] += dfeat[:, 2 * C.SEL_IN :]
+            # ctx = w @ hcat
+            dw = hcat @ dctx
+            dhcat += w[:, None] * dctx[None, :]
+            # softmax backward
+            dattm = w * (dw - (w * dw).sum())
+            datt = np.where(node_mask > 0, dattm / np.sqrt(float(C.SEL_IN)), 0.0)
+            # att = hcat @ s
+            dhcat += datt[:, None] * s[None, :]
+            ds = hcat.T @ datt
+            grads["gdp.wq"] += np.outer(ds, hv)
+            dhv += d["gdp.wq"].T @ ds
+            dhcat[a_sel] += dhv
+        else:
+            hv = hcat[a_sel]
+            # place_norm rows: 1/count for placed nodes (exclusive prefix)
+            hd = np.where(place_counts[:, None] > 0,
+                          hd_sums / np.maximum(place_counts[:, None], 1.0), 0.0)
+            xd = xd_steps[t]
+            ypre = xd @ d["dev.w0"] + d["dev.b0"]
+            y = np.maximum(ypre, 0.0)
+            feat = np.concatenate([np.tile(hv[None, :], (m, 1)), hd, y], axis=1)
+            xpre = feat @ d["plc.w0"] + d["plc.b0"]
+            x = leaky(xpre)
+            qd = (x @ d["plc.w1"] + d["plc.b1"])[:, 0]
+            logits = np.where(dev_mask > 0, qd, NEG)
+            logp = np_log_softmax(logits)
+            p = np.exp(logp)
+            plogp = p * logp
+            ent = -plogp.sum()
+            logp_total += logp[a_plc]
+            ent_total += ent
+
+            dlogits = dlogp_w * (-p)
+            dlogits[a_plc] += dlogp_w
+            dlogits += dent_w * (-p * (logp - plogp.sum()))
+            dqd = np.where(dev_mask > 0, dlogits, 0.0)
+            grads["plc.w1"] += x.T @ dqd[:, None]
+            grads["plc.b1"] += dqd.sum()
+            dx = dqd[:, None] * d["plc.w1"][:, 0][None, :]
+            dxpre = np.where(xpre > 0, dx, 0.01 * dx)
+            grads["plc.w0"] += feat.T @ dxpre
+            grads["plc.b0"] += dxpre.sum(axis=0)
+            dfeat = dxpre @ d["plc.w0"].T
+            dhv = dfeat[:, : C.SEL_IN].sum(axis=0)
+            dhd = dfeat[:, C.SEL_IN : C.SEL_IN + H]
+            dy = dfeat[:, C.SEL_IN + H :]
+            dypre = np.where(ypre > 0, dy, 0.0)
+            grads["dev.w0"] += xd.T @ dypre
+            grads["dev.b0"] += dypre.sum(axis=0)
+            # hd[dd] = sum_{u placed on dd} hgnn[u] / count_dd
+            for dd in range(m):
+                if place_counts[dd] > 0:
+                    wdd = 1.0 / place_counts[dd]
+                    for u in placed[dd]:
+                        dhcat[u, :H] += wdd * dhd[dd]
+            dhcat[a_sel] += dhv
+
+        # advance the exclusive placement prefix
+        place_counts[a_plc] += 1
+        hd_sums[a_plc] += hgnn[a_sel]
+        placed[a_plc].append(a_sel)
+
+    logp_total /= steps
+    ent_total /= steps
+    loss = -advantage * logp_total - entropy_w * ent_total
+
+    # ---- SEL head backward (q linear in shared activations) ----
+    if mode == "dual":
+        grads["sel.w1"] += x_sel.T @ dq[:, None]
+        grads["sel.b1"] += dq.sum()
+        dxs = dq[:, None] * d["sel.w1"][:, 0][None, :]
+        dxs = np.where(x_sel > 0, dxs, 0.0)
+        grads["sel.w0"] += hcat.T @ dxs
+        grads["sel.b0"] += dxs.sum(axis=0)
+        dhcat += dxs @ d["sel.w0"].T
+
+    # ---- encoder backward ----
+    h_final = tr["h_list"][-1]
+    dh = dhcat[:, :H].copy()
+    dh += pb.T @ dhcat[:, H : 2 * H]
+    dh += pt.T @ dhcat[:, 2 * H : 3 * H]
+    dz = dhcat[:, 3 * H :].copy()
+    _ = h_final
+    for k in reversed(range(C.K_MPNN)):
+        h_in = tr["h_list"][k]
+        h_out = tr["h_list"][k + 1]
+        msg = tr["msgs"][k]
+        agg = tr["aggs"][k]
+        dcpre = dh * (1.0 - h_out * h_out) * node_mask[:, None]
+        cat = np.concatenate([h_in, agg], axis=1)
+        grads[f"mpnn{k}.wphi"] += cat.T @ dcpre
+        grads[f"mpnn{k}.bphi"] += dcpre.sum(axis=0)
+        dcat = dcpre @ d[f"mpnn{k}.wphi"].T
+        dh_new = dcat[:, :H].copy()
+        dagg = dcat[:, H:]
+        h_src = h_in[esrc] * edge_mask[:, None]
+        h_dst = h_in[edst] * edge_mask[:, None]
+        dmsg = dagg[edst] * edge_mask[:, None]
+        dmpre = dmsg * (1.0 - msg * msg)
+        grads[f"mpnn{k}.wsrc"] += h_src.T @ dmpre
+        grads[f"mpnn{k}.wdst"] += h_dst.T @ dmpre
+        grads[f"mpnn{k}.we"] += efeat.T @ dmpre
+        grads[f"mpnn{k}.bm"] += dmpre.sum(axis=0)
+        dh_src = dmpre @ d[f"mpnn{k}.wsrc"].T
+        dh_dst = dmpre @ d[f"mpnn{k}.wdst"].T
+        for e in range(len(esrc)):
+            if edge_mask[e] > 0:
+                dh_new[esrc[e]] += dh_src[e]
+                dh_new[edst[e]] += dh_dst[e]
+        dh = dh_new
+    dz += dh  # h_0 = z
+
+    # ---- node-feature encoder backward ----
+    dz = dz * node_mask[:, None]
+    grads["enc.w1"] += tr["a"].T @ dz
+    grads["enc.b1"] += dz.sum(axis=0)
+    da = dz @ d["enc.w1"].T
+    da = np.where(tr["a"] > 0, da, 0.0)
+    grads["enc.w0"] += xv.T @ da
+    grads["enc.b0"] += da.sum(axis=0)
+
+    flat_grads = P.pack(grads)
+    return loss, ent_total, np.asarray(flat_grads, np.float64)
+
+
+# --------------------------------------------------------------------------
+# test data
+# --------------------------------------------------------------------------
+
+def make_case(seed, n_real=10, n_pad=2, m_dev=4):
+    rng = np.random.default_rng(seed)
+    n = n_real + n_pad
+    edges = [(u, u + 1) for u in range(n_real - 1)]
+    edges += [(0, 2), (1, 4), (3, 7), (2, 8)]
+    e_real = len(edges)
+    e = e_real + 3
+    esrc = np.zeros(e, np.int32)
+    edst = np.zeros(e, np.int32)
+    edge_mask = np.zeros(e)
+    for i, (u, v) in enumerate(edges):
+        esrc[i], edst[i], edge_mask[i] = u, v, 1.0
+    node_mask = np.zeros(n)
+    node_mask[:n_real] = 1.0
+    xv = rng.normal(0, 0.5, (n, C.NODE_FEATS)) * node_mask[:, None]
+    efeat = rng.normal(0, 0.5, (e, 1)) * edge_mask[:, None]
+    pb = np.zeros((n, n))
+    pt = np.zeros((n, n))
+    for v in range(n_real):
+        bp = list(range(v, max(-1, v - 4), -1))
+        for u in bp:
+            pb[v, u] = 1.0 / len(bp)
+        tp = list(range(v, min(n_real, v + 3)))
+        for u in tp:
+            pt[v, u] = 1.0 / len(tp)
+
+    # a synthetic but structurally valid trajectory
+    perm = rng.permutation(n_real)
+    sel_actions = np.zeros(n, np.int32)
+    plc_actions = np.zeros(n, np.int32)
+    step_mask = np.zeros(n)
+    cand_masks = np.zeros((n, n))
+    xd_steps = rng.normal(0, 0.3, (n, C.MAX_DEVICES, C.DEV_FEATS))
+    for t in range(n_real):
+        sel_actions[t] = perm[t]
+        plc_actions[t] = int(rng.integers(0, m_dev))
+        step_mask[t] = 1.0
+        cand_masks[t, perm[t]] = 1.0
+        extra = rng.integers(0, n_real, 3)
+        for u in extra:
+            cand_masks[t, u] = 1.0
+    xd_steps *= step_mask[:, None, None]
+    dev_mask = np.zeros(C.MAX_DEVICES)
+    dev_mask[:m_dev] = 1.0
+
+    flat = P.init_params(seed=seed).astype(np.float64)
+    return dict(
+        xv=xv, esrc=esrc, edst=edst, efeat=efeat, node_mask=node_mask,
+        edge_mask=edge_mask, pb=pb, pt=pt, sel_actions=sel_actions,
+        plc_actions=plc_actions, step_mask=step_mask, cand_masks=cand_masks,
+        xd_steps=xd_steps, dev_mask=dev_mask, flat=flat,
+    )
+
+
+def rel_err(a, b):
+    return np.abs(a - b).max() / max(1.0, np.abs(b).max())
+
+
+def main():
+    ok = True
+    for seed in (0, 1, 2):
+        c = make_case(seed)
+        d = np_unpack(c["flat"])
+
+        # ---- forward checks ----
+        hcat_np, _ = np_encode(d, c["xv"], c["esrc"], c["edst"], c["efeat"],
+                               c["node_mask"], c["edge_mask"], c["pb"], c["pt"])
+        hcat_jx = np.asarray(model.encode(
+            jnp.asarray(c["flat"]), jnp.asarray(c["xv"]), jnp.asarray(c["esrc"]),
+            jnp.asarray(c["edst"]), jnp.asarray(c["efeat"]), jnp.asarray(c["node_mask"]),
+            jnp.asarray(c["edge_mask"]), jnp.asarray(c["pb"]), jnp.asarray(c["pt"])))
+        e = rel_err(hcat_np, hcat_jx)
+        print(f"seed {seed}: encode rel_err {e:.2e}")
+        ok &= e < 1e-9
+
+        q_np = np_sel_scores(d, hcat_np)
+        q_jx = np.asarray(model.sel_scores(jnp.asarray(c["flat"]), jnp.asarray(hcat_jx)))
+        e = rel_err(q_np, q_jx)
+        print(f"seed {seed}: sel rel_err {e:.2e}")
+        ok &= e < 1e-9
+
+        v = int(c["sel_actions"][0])
+        voh = np.zeros(c["xv"].shape[0])
+        voh[v] = 1.0
+        pn = np.zeros((C.MAX_DEVICES, c["xv"].shape[0]))
+        pn[0, 1] = pn[0, 3] = 0.5
+        pn[1, 2] = 1.0
+        plc_np = np_plc_logits(d, hcat_np, v, c["xd_steps"][0], pn, c["dev_mask"])
+        plc_jx = np.asarray(model.plc_logits(
+            jnp.asarray(c["flat"]), jnp.asarray(hcat_jx), jnp.asarray(voh),
+            jnp.asarray(c["xd_steps"][0]), jnp.asarray(pn), jnp.asarray(c["dev_mask"])))
+        e = rel_err(plc_np, plc_jx)
+        print(f"seed {seed}: plc rel_err {e:.2e}")
+        ok &= e < 1e-9
+
+        gdp_np = np_gdp_logits(d, hcat_np, v, c["node_mask"], c["dev_mask"])
+        gdp_jx = np.asarray(model.gdp_logits(
+            jnp.asarray(c["flat"]), jnp.asarray(hcat_jx), jnp.asarray(voh),
+            jnp.asarray(c["node_mask"]), jnp.asarray(c["dev_mask"])))
+        e = rel_err(gdp_np, gdp_jx)
+        print(f"seed {seed}: gdp rel_err {e:.2e}")
+        ok &= e < 1e-9
+
+        # ---- loss + gradient checks, all three modes ----
+        for mode in ("dual", "plc", "gdp"):
+            adv, entw = 0.7, 1e-2
+
+            def jax_loss(p):
+                loss, (_, ent) = model.episode_loss(
+                    mode, p, jnp.asarray(c["xv"]), jnp.asarray(c["esrc"]),
+                    jnp.asarray(c["edst"]), jnp.asarray(c["efeat"]),
+                    jnp.asarray(c["node_mask"]), jnp.asarray(c["edge_mask"]),
+                    jnp.asarray(c["pb"]), jnp.asarray(c["pt"]),
+                    jnp.asarray(c["sel_actions"]), jnp.asarray(c["plc_actions"]),
+                    jnp.asarray(c["step_mask"]), jnp.asarray(c["cand_masks"]),
+                    jnp.asarray(c["xd_steps"]), jnp.asarray(c["dev_mask"]),
+                    adv, entw)
+                return loss, ent
+
+            (loss_jx, ent_jx), grad_jx = jax.value_and_grad(jax_loss, has_aux=True)(
+                jnp.asarray(c["flat"]))
+            loss_np, ent_np, grad_np = np_episode_loss_and_grad(
+                mode, c["flat"], c["xv"], c["esrc"], c["edst"], c["efeat"],
+                c["node_mask"], c["edge_mask"], c["pb"], c["pt"],
+                c["sel_actions"], c["plc_actions"], c["step_mask"], c["cand_masks"],
+                c["xd_steps"], c["dev_mask"], adv, entw)
+            el = abs(loss_np - float(loss_jx)) / max(1.0, abs(float(loss_jx)))
+            ee = abs(ent_np - float(ent_jx)) / max(1.0, abs(float(ent_jx)))
+            eg = rel_err(grad_np, np.asarray(grad_jx))
+            print(f"seed {seed} mode {mode}: loss {el:.2e} ent {ee:.2e} grad {eg:.2e}")
+            ok &= el < 1e-9 and ee < 1e-9 and eg < 1e-7
+
+    print("OK" if ok else "MISMATCH")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,176 @@
+#!/usr/bin/env python3
+"""Generate tests/fixtures/golden_logits.json — the cross-language pin for
+the rust native policy backend (rust/src/policy/native.rs).
+
+The fixture stores a small padded policy-network input (10 real + 2
+padding nodes, 13 real + 3 padding edges) and the f32 outputs of the
+ground-truth JAX model (python/compile/model.py) for:
+
+  - encode        -> Hcat [n, 4H]
+  - sel_scores    -> q [n]
+  - plc_logits    -> [M] at one representative placement state
+  - gdp_logits    -> [M]
+
+All float inputs (params, xv, efeat, xd) come from an integer-exact
+splitmix64 stream (the same scheme rust/tests/golden_logits.rs
+reimplements), so both languages construct *bitwise identical* inputs
+and the 1e-5 tolerance only absorbs accumulation-order differences.
+
+Regenerate after an intentional model change:
+    python3 tools/gen_golden_logits.py
+(or re-bless the rust side expectations via the #[ignore]d
+`bless_golden_logits` test once a PJRT build exists — this script is the
+authoritative source since it runs the real JAX model.)
+"""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "python"))
+
+import numpy as np  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from compile import config as C  # noqa: E402
+from compile import model  # noqa: E402
+from compile import params as P  # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures",
+                   "golden_logits.json")
+
+MASK = (1 << 64) - 1
+
+
+def splitmix_stream(seed: int, count: int, scale: float) -> np.ndarray:
+    """Integer-exact uniform stream in (-scale/2, scale/2), f32.
+
+    Mirrors rust/src/util/rng.rs::splitmix64; the float conversion uses
+    the top 24 bits so the f64 intermediate is exact and the f32 cast
+    rounds identically in both languages.
+    """
+    state = seed & MASK
+    out = np.empty(count, np.float32)
+    for i in range(count):
+        state = (state + 0x9E3779B97F4A7C15) & MASK
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        z = (z ^ (z >> 31)) & MASK
+        out[i] = np.float32(((z >> 40) / 16777216.0 - 0.5) * scale)
+    return out
+
+
+# ---- fixture geometry (kept tiny: the pin is semantic, not perf) ----
+N_REAL, N_PAD = 10, 2
+EDGES = [(u, u + 1) for u in range(N_REAL - 1)] + [(0, 2), (1, 4), (3, 7), (2, 8)]
+E_PAD = 3
+SEEDS = {"params": 2024, "xv": 11, "efeat": 12, "xd": 13}
+PARAM_SCALE = 0.2
+INPUT_SCALE = 1.0
+# representative PLC step state: node v about to be placed, with a few
+# nodes already placed (exact binary weights 1, 1/2 in place_norm rows)
+PLC_V = 3
+PLACEMENTS = [(0, 0), (1, 1), (2, 2), (4, 0)]  # (node, device)
+N_DEVICES = 4
+
+
+def b_path(v):
+    return list(range(v, max(-1, v - 4), -1))
+
+
+def t_path(v):
+    return list(range(v, min(N_REAL, v + 3)))
+
+
+def main():
+    n = N_REAL + N_PAD
+    e_real = len(EDGES)
+    e = e_real + E_PAD
+
+    esrc = np.zeros(e, np.int32)
+    edst = np.zeros(e, np.int32)
+    edge_mask = np.zeros(e, np.float32)
+    for i, (u, v) in enumerate(EDGES):
+        esrc[i], edst[i], edge_mask[i] = u, v, 1.0
+    node_mask = np.zeros(n, np.float32)
+    node_mask[:N_REAL] = 1.0
+
+    xv = np.zeros((n, C.NODE_FEATS), np.float32)
+    xv[:N_REAL] = splitmix_stream(SEEDS["xv"], N_REAL * C.NODE_FEATS,
+                                  INPUT_SCALE).reshape(N_REAL, C.NODE_FEATS)
+    efeat = np.zeros((e, 1), np.float32)
+    efeat[:e_real, 0] = splitmix_stream(SEEDS["efeat"], e_real, INPUT_SCALE)
+
+    pb = np.zeros((n, n), np.float32)
+    pt = np.zeros((n, n), np.float32)
+    for v in range(N_REAL):
+        bp = b_path(v)
+        for u in bp:
+            pb[v, u] = np.float32(1.0 / len(bp))
+        tp = t_path(v)
+        for u in tp:
+            pt[v, u] = np.float32(1.0 / len(tp))
+
+    params = splitmix_stream(SEEDS["params"], P.param_count(), PARAM_SCALE)
+
+    xd = splitmix_stream(SEEDS["xd"], C.MAX_DEVICES * C.DEV_FEATS,
+                         INPUT_SCALE).reshape(C.MAX_DEVICES, C.DEV_FEATS)
+    place_norm = np.zeros((C.MAX_DEVICES, n), np.float32)
+    counts = np.zeros(C.MAX_DEVICES, np.int64)
+    for _, d in PLACEMENTS:
+        counts[d] += 1
+    for u, d in PLACEMENTS:
+        place_norm[d, u] = np.float32(1.0 / counts[d])
+    dev_mask = np.zeros(C.MAX_DEVICES, np.float32)
+    dev_mask[:N_DEVICES] = 1.0
+    v_onehot = np.zeros(n, np.float32)
+    v_onehot[PLC_V] = 1.0
+
+    # ---- ground-truth f32 forward passes ----
+    hcat = np.asarray(model.encode(
+        jnp.asarray(params), jnp.asarray(xv), jnp.asarray(esrc), jnp.asarray(edst),
+        jnp.asarray(efeat), jnp.asarray(node_mask), jnp.asarray(edge_mask),
+        jnp.asarray(pb), jnp.asarray(pt)), np.float32)
+    sel = np.asarray(model.sel_scores(jnp.asarray(params), jnp.asarray(hcat)), np.float32)
+    plc = np.asarray(model.plc_logits(
+        jnp.asarray(params), jnp.asarray(hcat), jnp.asarray(v_onehot),
+        jnp.asarray(xd), jnp.asarray(place_norm), jnp.asarray(dev_mask)), np.float32)
+    gdp = np.asarray(model.gdp_logits(
+        jnp.asarray(params), jnp.asarray(hcat), jnp.asarray(v_onehot),
+        jnp.asarray(node_mask), jnp.asarray(dev_mask)), np.float32)
+
+    def f32list(a):
+        return [float(np.float32(x)) for x in np.asarray(a, np.float32).reshape(-1)]
+
+    doc = {
+        "source": "tools/gen_golden_logits.py (JAX f32 reference: python/compile/model.py)",
+        "dims": {
+            "hidden": C.HIDDEN, "k_mpnn": C.K_MPNN, "node_feats": C.NODE_FEATS,
+            "dev_feats": C.DEV_FEATS, "max_devices": C.MAX_DEVICES, "sel_in": C.SEL_IN,
+        },
+        "param_count": int(P.param_count()),
+        "param_scale": PARAM_SCALE,
+        "input_scale": INPUT_SCALE,
+        "seeds": SEEDS,
+        "n": n, "n_real": N_REAL, "e": e, "e_real": e_real,
+        "esrc": [int(x) for x in esrc], "edst": [int(x) for x in edst],
+        "pb_paths": [b_path(v) for v in range(N_REAL)],
+        "pt_paths": [t_path(v) for v in range(N_REAL)],
+        "plc": {"v": PLC_V, "placements": [[u, d] for u, d in PLACEMENTS],
+                "n_devices": N_DEVICES},
+        "expected": {
+            "hcat": f32list(hcat), "sel": f32list(sel),
+            "plc": f32list(plc), "gdp": f32list(gdp),
+        },
+    }
+    with open(OUT, "w") as f:
+        json.dump(doc, f)
+        f.write("\n")
+    print(f"wrote {OUT}: hcat[{hcat.shape[0]}x{hcat.shape[1]}] "
+          f"sel[{sel.shape[0]}] plc[{plc.shape[0]}] gdp[{gdp.shape[0]}]")
+    print("sample: sel =", sel[:4], " plc =", plc[:4])
+
+
+if __name__ == "__main__":
+    main()
