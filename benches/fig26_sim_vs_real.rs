@@ -37,9 +37,14 @@ fn main() {
         eng_ms.push(execute(&g, &a, &engine_cfg).sim.makespan * 1e3);
     }
 
-    let mut t = Table::new("Fig. 26: correlation (CHAINMM, 4 devices)", &["METRIC", "OURS", "PAPER"]);
-    t.row(vec!["pearson".into(), format!("{:.3}", pearson(&sim_ms, &eng_ms)), "0.79".into()]);
-    t.row(vec!["spearman".into(), format!("{:.3}", spearman(&sim_ms, &eng_ms)), "0.69".into()]);
+    let mut t = Table::new(
+        "Fig. 26: correlation (CHAINMM, 4 devices)",
+        &["METRIC", "OURS", "PAPER"],
+    );
+    let pe = format!("{:.3}", pearson(&sim_ms, &eng_ms));
+    let sp = format!("{:.3}", spearman(&sim_ms, &eng_ms));
+    t.row(vec!["pearson".into(), pe, "0.79".into()]);
+    t.row(vec!["spearman".into(), sp, "0.69".into()]);
     t.emit(Some(std::path::Path::new("runs/fig26_summary.csv")));
 
     // scatter data for the figure

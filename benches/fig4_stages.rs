@@ -24,11 +24,16 @@ fn main() {
 
     // the Fig. 4 combos; stage III gets the full budget in "III" and the
     // paper's share otherwise
+    let stages = |imitation: usize, sim_rl: usize, real_rl: usize| Stages {
+        imitation,
+        sim_rl,
+        real_rl,
+    };
     let combos: [(&str, Stages); 4] = [
-        ("III", Stages { imitation: 0, sim_rl: 0, real_rl: b }),
-        ("I+III", Stages { imitation: b / 4, sim_rl: 0, real_rl: b * 3 / 4 }),
-        ("II+III", Stages { imitation: 0, sim_rl: b / 2, real_rl: b / 2 }),
-        ("I+II+III", Stages { imitation: b / 4, sim_rl: b / 2, real_rl: b / 4 }),
+        ("III", stages(0, 0, b)),
+        ("I+III", stages(b / 4, 0, b * 3 / 4)),
+        ("II+III", stages(0, b / 2, b / 2)),
+        ("I+II+III", stages(b / 4, b / 2, b / 4)),
     ];
 
     println!("workload={} episodes={} (curves in runs/fig4_*.csv)", g.name, b);

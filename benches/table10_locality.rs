@@ -41,9 +41,14 @@ fn main() {
         cfg.scale_to_budget(b);
         cfg.seed = 10;
         let e4 = EngineConfig::new(p4.clone());
+        let stages = Stages {
+            imitation: b / 4,
+            sim_rl: b * 3 / 4,
+            real_rl: 0,
+        };
         let pre = Trainer::new(nets.as_ref(), &g, p4.clone(), cfg)
             .unwrap()
-            .run(Stages { imitation: b / 4, sim_rl: b * 3 / 4, real_rl: 0 }, &e4)
+            .run(stages, &e4)
             .unwrap();
 
         // 2. zero-shot greedy rollout on 8 devices
@@ -85,7 +90,11 @@ fn main() {
         }
         eprintln!(
             "[{name}] zero {} | tuned {} | scratch {} | cp {} | enum {}",
-            cell(&s_zero), cell(&s_tuned), cell(&scratch.summary), cell(&cp.summary), cell(&eo.summary)
+            cell(&s_zero),
+            cell(&s_tuned),
+            cell(&scratch.summary),
+            cell(&cp.summary),
+            cell(&eo.summary)
         );
         t11.row(vec![
             name.to_uppercase(),

@@ -34,9 +34,12 @@ fn main() {
         let trainer = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg).unwrap();
         let engine_cfg = EngineConfig::new(restrict(&topo, 4));
         let t0 = std::time::Instant::now();
-        let result = trainer
-            .run(Stages { imitation: b / 4, sim_rl: b * 3 / 4, real_rl: 0 }, &engine_cfg)
-            .unwrap();
+        let stages = Stages {
+            imitation: b / 4,
+            sim_rl: b * 3 / 4,
+            real_rl: 0,
+        };
+        let result = trainer.run(stages, &engine_cfg).unwrap();
         let wall = t0.elapsed().as_secs_f64();
         let encode_calls: usize = result.history.iter().map(|r| r.encode_calls).sum();
         // evaluate the stage-2 best on the engine (10 reps)

@@ -32,9 +32,14 @@ fn main() {
     cfg.scale_to_budget(b);
     cfg.seed = 7;
     let engine_cfg = EngineConfig::new(restrict(&topo, 4));
+    let stages = Stages {
+        imitation: b / 4,
+        sim_rl: b * 3 / 4,
+        real_rl: 0,
+    };
     let result = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg)
         .unwrap()
-        .run(Stages { imitation: b / 4, sim_rl: b * 3 / 4, real_rl: 0 }, &engine_cfg)
+        .run(stages, &engine_cfg)
         .unwrap();
     let best = result
         .stage_bests

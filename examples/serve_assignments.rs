@@ -29,7 +29,11 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
     cfg.scale_to_budget(requests);
     cfg.seed = 3;
-    cfg.epsilon = doppler::train::Schedule { start: 0.1, end: 0.0 }; // gentle online exploration
+    // gentle online exploration
+    cfg.epsilon = doppler::train::Schedule {
+        start: 0.1,
+        end: 0.0,
+    };
     let mut trainer = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg)?;
     trainer.stage1_imitation(20)?;
     trainer.stage2_sim(40)?;

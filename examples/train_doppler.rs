@@ -77,6 +77,9 @@ fn main() -> anyhow::Result<()> {
         let r = run_method(id, &g, &ctx)?;
         println!("{:<14} {:>8.1} ± {:>5.1} ms", r.id.name(), r.summary.mean, r.summary.std);
     }
-    println!("{:<14} {:>8.1} ± {:>5.1} ms   <- this training run", "DOPPLER-SYS", trained.mean, trained.std);
+    println!(
+        "{:<14} {:>8.1} ± {:>5.1} ms   <- this training run",
+        "DOPPLER-SYS", trained.mean, trained.std
+    );
     Ok(())
 }

@@ -149,7 +149,10 @@ pub fn run_node(node: &Node, inputs: &[&Tensor]) -> Tensor {
             }
             Tensor::new(a.shape.clone(), data)
         }
-        OpKind::MaxReduction | OpKind::MinReduction | OpKind::SumReduction | OpKind::ProdReduction => {
+        OpKind::MaxReduction
+        | OpKind::MinReduction
+        | OpKind::SumReduction
+        | OpKind::ProdReduction => {
             let a = inputs[0];
             let (r, c) = (a.rows(), a.cols());
             let mut out = Vec::with_capacity(r);

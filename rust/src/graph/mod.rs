@@ -161,7 +161,13 @@ impl Graph {
     }
 
     /// Append a vertex and return its id.
-    pub fn add_node(&mut self, kind: OpKind, shape: Vec<usize>, flops: f64, name: String) -> NodeId {
+    pub fn add_node(
+        &mut self,
+        kind: OpKind,
+        shape: Vec<usize>,
+        flops: f64,
+        name: String,
+    ) -> NodeId {
         let id = self.nodes.len();
         self.nodes.push(Node {
             id,
@@ -270,7 +276,11 @@ impl Graph {
     /// ("b-level path" in the paper's terminology, §4.2 / Appendix E),
     /// counting vertex compute cost plus edge communication cost.
     /// `node_cost`/`edge_cost` map raw flops/bytes to comparable units.
-    pub fn b_level(&self, node_cost: &dyn Fn(&Node) -> f64, edge_cost: &dyn Fn(f64) -> f64) -> Vec<f64> {
+    pub fn b_level(
+        &self,
+        node_cost: &dyn Fn(&Node) -> f64,
+        edge_cost: &dyn Fn(f64) -> f64,
+    ) -> Vec<f64> {
         let order = self.topo_order().expect("DAG");
         let mut level = vec![0.0; self.n()];
         for &v in &order {
@@ -285,7 +295,11 @@ impl Graph {
 
     /// Cost-weighted longest path from each vertex *to* an exit node
     /// ("t-level path"). Includes the vertex's own cost.
-    pub fn t_level(&self, node_cost: &dyn Fn(&Node) -> f64, edge_cost: &dyn Fn(f64) -> f64) -> Vec<f64> {
+    pub fn t_level(
+        &self,
+        node_cost: &dyn Fn(&Node) -> f64,
+        edge_cost: &dyn Fn(f64) -> f64,
+    ) -> Vec<f64> {
         let order = self.topo_order().expect("DAG");
         let mut level = vec![0.0; self.n()];
         for &v in order.iter().rev() {
@@ -300,7 +314,13 @@ impl Graph {
 
     /// The actual longest path (as a node sequence) from `v` back to an
     /// entry node, under the same costs as [`Graph::b_level`].
-    pub fn b_path(&self, v: NodeId, b: &[f64], edge_cost: &dyn Fn(f64) -> f64, node_cost: &dyn Fn(&Node) -> f64) -> Vec<NodeId> {
+    pub fn b_path(
+        &self,
+        v: NodeId,
+        b: &[f64],
+        edge_cost: &dyn Fn(f64) -> f64,
+        node_cost: &dyn Fn(&Node) -> f64,
+    ) -> Vec<NodeId> {
         let mut path = vec![v];
         let mut cur = v;
         while !self.preds[cur].is_empty() {
@@ -314,7 +334,8 @@ impl Graph {
                 }
             }
             // sanity: the b-level recurrence must be consistent
-            debug_assert!((b[cur] - (best_score + node_cost(&self.nodes[cur]))).abs() < 1e-6 * b[cur].abs().max(1.0));
+            let resid = (b[cur] - (best_score + node_cost(&self.nodes[cur]))).abs();
+            debug_assert!(resid < 1e-6 * b[cur].abs().max(1.0));
             path.push(best);
             cur = best;
         }
@@ -366,7 +387,8 @@ impl Graph {
         const COLORS: [&str; 8] = [
             "#e41a1c", "#377eb8", "#4daf4a", "#984ea3", "#ff7f00", "#a65628", "#f781bf", "#999999",
         ];
-        let mut out = String::from("digraph G {\n  rankdir=TB;\n  node [style=filled, fontsize=9];\n");
+        let mut out =
+            String::from("digraph G {\n  rankdir=TB;\n  node [style=filled, fontsize=9];\n");
         for node in &self.nodes {
             let color = match assignment {
                 Some(a) => COLORS[a[node.id] % COLORS.len()],

@@ -224,7 +224,13 @@ impl Sharder {
     }
 
     /// Binary same-shape elementwise op applied blockwise.
-    pub fn binary(&mut self, name: &str, op: ElemOp, a: &ShardedTensor, b: &ShardedTensor) -> ShardedTensor {
+    pub fn binary(
+        &mut self,
+        name: &str,
+        op: ElemOp,
+        a: &ShardedTensor,
+        b: &ShardedTensor,
+    ) -> ShardedTensor {
         assert_eq!((a.gr, a.gc, a.br, a.bc), (b.gr, b.gc, b.br, b.bc), "{name}: shape mismatch");
         let meta = self.begin_meta(&format!("binary.{name}"));
         let mut ids = Vec::with_capacity(a.ids.len());
@@ -248,7 +254,13 @@ impl Sharder {
 
     /// Broadcast a column vector `[R,1]` (grid `gr x 1`) across the columns
     /// of each row of `a`.
-    pub fn bcast_col(&mut self, name: &str, op: ElemOp, a: &ShardedTensor, v: &ShardedTensor) -> ShardedTensor {
+    pub fn bcast_col(
+        &mut self,
+        name: &str,
+        op: ElemOp,
+        a: &ShardedTensor,
+        v: &ShardedTensor,
+    ) -> ShardedTensor {
         assert_eq!(v.gr, a.gr, "{name}: vector grid mismatch");
         assert_eq!(v.gc, 1);
         assert_eq!(v.bc, 1);
@@ -273,7 +285,13 @@ impl Sharder {
     }
 
     /// Broadcast a row vector `[1,C]` (grid `1 x gc`) across the rows of `a`.
-    pub fn bcast_row(&mut self, name: &str, op: ElemOp, a: &ShardedTensor, v: &ShardedTensor) -> ShardedTensor {
+    pub fn bcast_row(
+        &mut self,
+        name: &str,
+        op: ElemOp,
+        a: &ShardedTensor,
+        v: &ShardedTensor,
+    ) -> ShardedTensor {
         assert_eq!(v.gc, a.gc, "{name}: vector grid mismatch");
         assert_eq!(v.gr, 1);
         assert_eq!(v.br, 1);
@@ -452,7 +470,13 @@ impl Sharder {
 
     /// Select a column slice (e.g. extracting Q/K/V from a fused
     /// projection): Selec vertices copying a block subset.
-    pub fn selec_cols(&mut self, name: &str, a: &ShardedTensor, j0: usize, j1: usize) -> ShardedTensor {
+    pub fn selec_cols(
+        &mut self,
+        name: &str,
+        a: &ShardedTensor,
+        j0: usize,
+        j1: usize,
+    ) -> ShardedTensor {
         assert!(j0 < j1 && j1 <= a.gc);
         let meta = self.begin_meta(&format!("selec.{name}"));
         let mut ids = Vec::with_capacity(a.gr * (j1 - j0));

@@ -78,7 +78,9 @@ mod tests {
         assert_eq!(de_forms.len(), 4);
         assert_eq!(cde_mms.len(), 8);
         for &mm in &cde_mms {
-            assert!(g.preds[mm].iter().any(|p| de_forms.contains(p) || g.nodes[*p].name.starts_with('C')));
+            assert!(g.preds[mm]
+                .iter()
+                .any(|p| de_forms.contains(p) || g.nodes[*p].name.starts_with('C')));
         }
     }
 

@@ -73,13 +73,23 @@ struct LayoutBuilder {
 impl LayoutBuilder {
     fn mat(&mut self, rows: usize, cols: usize) -> usize {
         let o = self.off;
-        self.entries.push(Entry { off: o, rows, cols, bias: false });
+        self.entries.push(Entry {
+            off: o,
+            rows,
+            cols,
+            bias: false,
+        });
         self.off += rows * cols;
         o
     }
     fn vec1(&mut self, len: usize) -> usize {
         let o = self.off;
-        self.entries.push(Entry { off: o, rows: len, cols: 1, bias: true });
+        self.entries.push(Entry {
+            off: o,
+            rows: len,
+            cols: 1,
+            bias: true,
+        });
         self.off += len;
         o
     }
@@ -124,11 +134,20 @@ pub struct ParamLayout {
 
 impl ParamLayout {
     /// Build the layout for the given model dims (EDGE_FEATS is 1).
-    pub fn new(hidden: usize, k_mpnn: usize, node_feats: usize, dev_feats: usize, max_devices: usize) -> ParamLayout {
+    pub fn new(
+        hidden: usize,
+        k_mpnn: usize,
+        node_feats: usize,
+        dev_feats: usize,
+        max_devices: usize,
+    ) -> ParamLayout {
         let h = hidden;
         let (sel_in, plc_in, gdp_in) = (4 * h, 6 * h, 9 * h);
         let ef = 1usize;
-        let mut b = LayoutBuilder { entries: Vec::new(), off: 0 };
+        let mut b = LayoutBuilder {
+            entries: Vec::new(),
+            off: 0,
+        };
         let enc_w0 = b.mat(node_feats, h);
         let enc_b0 = b.vec1(h);
         let enc_w1 = b.mat(h, h);
@@ -423,7 +442,8 @@ impl NativePolicy {
         let layout = ParamLayout::new(m.hidden, m.k_mpnn, m.node_feats, m.dev_feats, m.max_devices);
         anyhow::ensure!(
             layout.total == m.param_count,
-            "native layout has {} params but manifest declares {} — python/compile/params.py layout changed?",
+            "native layout has {} params but manifest declares {} — \
+             python/compile/params.py layout changed?",
             layout.total,
             m.param_count
         );
@@ -431,7 +451,11 @@ impl NativePolicy {
         // (He-init silently replacing artifact parameters would produce
         // different, non-PJRT-interoperable training runs with no signal)
         let init = m.init_params()?;
-        Ok(NativePolicy { manifest: m, layout, init })
+        Ok(NativePolicy {
+            manifest: m,
+            layout,
+            init,
+        })
     }
 
     // ---- forward passes ----
@@ -552,7 +576,14 @@ impl NativePolicy {
 
     /// PLC head (eqs. 5-8) for selected node `v` given `xd [m, df]` and
     /// the device aggregate `hd [m, H]`.
-    fn plc_forward(&self, params: &[f32], hcat: &[f32], v: usize, xd: &[f32], hd: &[f32]) -> PlcAct {
+    fn plc_forward(
+        &self,
+        params: &[f32],
+        hcat: &[f32],
+        v: usize,
+        xd: &[f32],
+        hd: &[f32],
+    ) -> PlcAct {
         let l = &self.layout;
         let (h, si, m, df, pin) = (l.h, l.sel_in, l.m, l.df, l.plc_in);
         let mut y = vec![0.0f32; m * h];
@@ -578,7 +609,14 @@ impl NativePolicy {
     }
 
     /// GDP attention head for selected node `v` (placement-state-blind).
-    fn gdp_forward(&self, params: &[f32], hcat: &[f32], n: usize, v: usize, node_mask: &[f32]) -> GdpAct {
+    fn gdp_forward(
+        &self,
+        params: &[f32],
+        hcat: &[f32],
+        n: usize,
+        v: usize,
+        node_mask: &[f32],
+    ) -> GdpAct {
         let l = &self.layout;
         let (h, si, m, gin) = (l.h, l.sel_in, l.m, l.gdp_in);
         let hv = &hcat[v * si..(v + 1) * si];
@@ -643,7 +681,8 @@ impl NativePolicy {
         advantage: f32,
         entropy_w: f32,
     ) -> Result<(f32, f32)> {
-        let (loss, ent, _) = self.loss_and_grads(method, enc, params, traj, dev_mask, advantage, entropy_w)?;
+        let (loss, ent, _) =
+            self.loss_and_grads(method, enc, params, traj, dev_mask, advantage, entropy_w)?;
         Ok((loss, ent))
     }
 
@@ -664,8 +703,18 @@ impl NativePolicy {
         let l = &self.layout;
         let (h, si, m, df, nf) = (l.h, l.sel_in, l.m, l.df, l.nf);
         let n = enc.n;
-        anyhow::ensure!(params.len() == l.total, "param blob len {} != layout {}", params.len(), l.total);
-        anyhow::ensure!(traj.sel_actions.len() == n, "trajectory size {} != encoding {}", traj.sel_actions.len(), n);
+        anyhow::ensure!(
+            params.len() == l.total,
+            "param blob len {} != layout {}",
+            params.len(),
+            l.total
+        );
+        anyhow::ensure!(
+            traj.sel_actions.len() == n,
+            "trajectory size {} != encoding {}",
+            traj.sel_actions.len(),
+            n
+        );
 
         let tr = self.encode_trace(enc, params);
         let hcat = &tr.hcat;
@@ -1022,8 +1071,8 @@ impl NativePolicy {
             for u in 0..n {
                 if dq[u] != 0.0 {
                     for i in 0..si {
-                        dhcat[u * si + i] +=
-                            dot(&dxs[u * h..(u + 1) * h], &params[l.sel_w0 + i * h..l.sel_w0 + (i + 1) * h]);
+                        let w0_row = &params[l.sel_w0 + i * h..l.sel_w0 + (i + 1) * h];
+                        dhcat[u * si + i] += dot(&dxs[u * h..(u + 1) * h], w0_row);
                     }
                 }
             }
@@ -1182,8 +1231,8 @@ impl NativePolicy {
         for v in 0..n {
             for i in 0..h {
                 if tr.a[v * h + i] > 0.0 {
-                    da[v * h + i] =
-                        dot(&dz[v * h..(v + 1) * h], &params[l.enc_w1 + i * h..l.enc_w1 + (i + 1) * h]);
+                    let w1_row = &params[l.enc_w1 + i * h..l.enc_w1 + (i + 1) * h];
+                    da[v * h + i] = dot(&dz[v * h..(v + 1) * h], w1_row);
                 }
             }
         }
@@ -1258,20 +1307,33 @@ impl PolicyBackend for NativePolicy {
     fn variant_for(&self, enc: &GraphEncoding) -> Result<VariantInfo> {
         // native executables are shape-polymorphic: the "variant" is the
         // encoding's own (possibly unpadded) size
-        Ok(VariantInfo { n: enc.n, e: enc.e, artifacts: Default::default() })
+        Ok(VariantInfo {
+            n: enc.n,
+            e: enc.e,
+            artifacts: Default::default(),
+        })
     }
 
     fn variant_for_graph(&self, n_nodes: usize, n_edges: usize) -> Result<VariantInfo> {
         // exact fit: no padding needed, and no artifact size ceiling —
         // graphs beyond the AOT variants (e.g. synthetic 500+) just work
-        Ok(VariantInfo { n: n_nodes, e: n_edges, artifacts: Default::default() })
+        Ok(VariantInfo {
+            n: n_nodes,
+            e: n_edges,
+            artifacts: Default::default(),
+        })
     }
 
     fn init_params(&self) -> Result<Vec<f32>> {
         Ok(self.init.clone())
     }
 
-    fn encode(&self, _variant: &VariantInfo, enc: &GraphEncoding, params: &[f32]) -> Result<Vec<f32>> {
+    fn encode(
+        &self,
+        _variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+    ) -> Result<Vec<f32>> {
         anyhow::ensure!(params.len() == self.layout.total, "param blob len mismatch");
         Ok(self.encode_trace(enc, params).hcat)
     }
@@ -1286,7 +1348,12 @@ impl PolicyBackend for NativePolicy {
         Ok(self.sel_forward(params, hcat, enc.n).1)
     }
 
-    fn begin_episode(&self, _enc: &GraphEncoding, _params: &[f32], _hcat: &[f32]) -> Result<EpisodeCache> {
+    fn begin_episode(
+        &self,
+        _enc: &GraphEncoding,
+        _params: &[f32],
+        _hcat: &[f32],
+    ) -> Result<EpisodeCache> {
         Ok(EpisodeCache::None)
     }
 

@@ -107,7 +107,12 @@ pub trait PolicyBackend {
     fn init_params(&self) -> Result<Vec<f32>>;
 
     /// Run the encoder once: `Hcat` as a flat `[n * sel_in]` vec.
-    fn encode(&self, variant: &VariantInfo, enc: &GraphEncoding, params: &[f32]) -> Result<Vec<f32>>;
+    fn encode(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+    ) -> Result<Vec<f32>>;
 
     /// Unmasked SEL scores for all nodes (candidate masking is exact to
     /// apply caller-side; see `episode.rs`).
@@ -120,7 +125,12 @@ pub trait PolicyBackend {
     ) -> Result<Vec<f32>>;
 
     /// Prepare per-episode state for the hot loop.
-    fn begin_episode(&self, enc: &GraphEncoding, params: &[f32], hcat: &[f32]) -> Result<EpisodeCache>;
+    fn begin_episode(
+        &self,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+    ) -> Result<EpisodeCache>;
 
     /// PLC logits over devices for the one-hot candidate, written into
     /// `out` (resized to `max_devices`; masked devices get -1e9).
@@ -260,7 +270,12 @@ impl PolicyNets {
     }
 
     /// Run the encoder once: returns `Hcat` as a flat `[n * sel_in]` vec.
-    pub fn encode(&self, variant: &VariantInfo, enc: &GraphEncoding, params: &[f32]) -> Result<Vec<f32>> {
+    pub fn encode(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+    ) -> Result<Vec<f32>> {
         let exe = self.exec(variant, "encode")?;
         let (n, e) = (enc.n as i64, enc.e as i64);
         let nf = self.manifest.node_feats as i64;
@@ -502,7 +517,12 @@ impl PolicyBackend for PolicyNets {
         PolicyNets::init_params(self)
     }
 
-    fn encode(&self, variant: &VariantInfo, enc: &GraphEncoding, params: &[f32]) -> Result<Vec<f32>> {
+    fn encode(
+        &self,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+    ) -> Result<Vec<f32>> {
         PolicyNets::encode(self, variant, enc, params)
     }
 
@@ -516,7 +536,12 @@ impl PolicyBackend for PolicyNets {
         PolicyNets::sel_scores(self, variant, enc, params, hcat)
     }
 
-    fn begin_episode(&self, enc: &GraphEncoding, params: &[f32], hcat: &[f32]) -> Result<EpisodeCache> {
+    fn begin_episode(
+        &self,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+    ) -> Result<EpisodeCache> {
         Ok(EpisodeCache::Pjrt(self.episode_literals(enc, params, hcat)?))
     }
 

@@ -439,7 +439,13 @@ pub fn simulate(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng) -> Si
 /// [`crate::rollout::mean_exec_time`]: the parallel version distributes
 /// the same forked streams over workers and reduces in replicate order,
 /// so both are bit-identical for any worker count.
-pub fn mean_exec_time(g: &Graph, a: &Assignment, cfg: &SimConfig, rng: &mut Rng, reps: usize) -> f64 {
+pub fn mean_exec_time(
+    g: &Graph,
+    a: &Assignment,
+    cfg: &SimConfig,
+    rng: &mut Rng,
+    reps: usize,
+) -> f64 {
     let total: f64 = (0..reps)
         .map(|r| {
             let mut child = rng.fork(r as u64);
@@ -631,7 +637,8 @@ mod tests {
                 let mut cfg = SimConfig::new(topology::DeviceTopology::p100x4());
                 cfg.choose = choose;
                 cfg.jitter_sigma = jitter;
-                let inc = simulate(&g, &a, &cfg.clone().with_engine(Engine::Incremental), &mut Rng::new(9));
+                let inc_cfg = cfg.clone().with_engine(Engine::Incremental);
+                let inc = simulate(&g, &a, &inc_cfg, &mut Rng::new(9));
                 let refr = simulate(&g, &a, &cfg.with_engine(Engine::Reference), &mut Rng::new(9));
                 assert_eq!(inc.makespan, refr.makespan, "{choose:?} jitter={jitter}");
                 assert_eq!(inc.bytes_moved, refr.bytes_moved);

@@ -139,8 +139,17 @@ mod tests {
         };
         let enc = GraphEncoding::build(&g, &feats, &fake_manifest(), &variant).unwrap();
         let mut rng = Rng::new(2);
-        let (_, traj) =
-            run_teacher_episode(&g, &topo, &feats, &enc, 8, 4, TeacherSel::TopoOrder, 0.0, &mut rng);
+        let (_, traj) = run_teacher_episode(
+            &g,
+            &topo,
+            &feats,
+            &enc,
+            8,
+            4,
+            TeacherSel::TopoOrder,
+            0.0,
+            &mut rng,
+        );
         // selection sequence must respect dependencies
         let mut seen = vec![false; g.n()];
         for h in 0..g.n() {

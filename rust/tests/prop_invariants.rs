@@ -423,7 +423,8 @@ fn prop_rollout_parallel_matches_serial() {
         // replicate traces: serial reference vs every worker count
         let serial = rollout::simulate_replicates(&g, &a, &cfg, &mut Rng::new(seed), reps, 1);
         for threads in [2usize, 4, 8] {
-            let par = rollout::simulate_replicates(&g, &a, &cfg, &mut Rng::new(seed), reps, threads);
+            let par =
+                rollout::simulate_replicates(&g, &a, &cfg, &mut Rng::new(seed), reps, threads);
             assert_eq!(serial.len(), par.len());
             for (r, (x, y)) in serial.iter().zip(&par).enumerate() {
                 assert_same_trace(x, y, &format!("seed {seed} threads {threads} rep {r}"));
@@ -445,8 +446,14 @@ fn prop_rollout_parallel_matches_serial() {
         let serial_r =
             rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(seed), reps, 1);
         for threads in [2usize, 8] {
-            let par_r =
-                rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(seed), reps, threads);
+            let par_r = rollout::episode_rewards(
+                &g,
+                &assignments,
+                &cfg,
+                &mut Rng::new(seed),
+                reps,
+                threads,
+            );
             assert_eq!(serial_r, par_r, "seed {seed} threads {threads}: batch rewards");
         }
     }
