@@ -18,15 +18,18 @@
 //! Writes BENCH_episode.json at the repo root (same shape as
 //! BENCH_sim.json). Knobs: DOPPLER_EPISODE_BENCH_N (episodes per cell,
 //! default 16), DOPPLER_EPISODE_BENCH_NODES (default 500),
-//! DOPPLER_EPISODE_BENCH_THREADS (default 1,2,4,8).
+//! DOPPLER_EPISODE_BENCH_THREADS (default 1,2,4,8);
+//! DOPPLER_BENCH_SMOKE / --smoke shrinks all three for CI.
 
 use std::time::Instant;
 
-use doppler::bench_util::banner;
+use doppler::bench_util::{banner, smoke_mode};
 use doppler::eval::tables::Table;
 use doppler::features::static_features;
 use doppler::graph::workloads::synthetic_layered;
-use doppler::policy::{EpisodeCfg, EpisodeResult, GraphEncoding, Method, NativePolicy, PolicyBackend};
+use doppler::policy::{
+    EpisodeCfg, EpisodeResult, GraphEncoding, Method, NativePolicy, PolicyBackend,
+};
 use doppler::rollout;
 use doppler::sim::topology::DeviceTopology;
 use doppler::util::json::{self, Json};
@@ -49,10 +52,12 @@ fn main() {
         "Episode generation scaling — native backend, parallel rollouts",
         "ISSUE 3 perf target (systems extension; cf. paper §4.3 sampling efficiency)",
     );
-    let episodes = env_usize("DOPPLER_EPISODE_BENCH_N", 16).max(2);
-    let nodes = env_usize("DOPPLER_EPISODE_BENCH_NODES", 500);
+    let smoke = smoke_mode();
+    let episodes = env_usize("DOPPLER_EPISODE_BENCH_N", if smoke { 4 } else { 16 }).max(2);
+    let nodes = env_usize("DOPPLER_EPISODE_BENCH_NODES", if smoke { 80 } else { 500 });
     let threads_list: Vec<usize> = match std::env::var("DOPPLER_EPISODE_BENCH_THREADS") {
         Ok(v) if !v.is_empty() => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        _ if smoke => vec![1, 2],
         _ => vec![1, 2, 4, 8],
     };
 
@@ -132,6 +137,7 @@ fn main() {
     let doc = json::obj(vec![
         ("bench", json::s("episode_scaling")),
         ("source", json::s("cargo bench --bench episode_scaling")),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
         (
             "config",
             json::s("native backend, DOPPLER method, eps 0.2, v100x8 restricted to 4 devices"),
@@ -141,7 +147,15 @@ fn main() {
         ("edges", json::num(g.m() as f64)),
         ("episodes_per_cell", json::num(episodes as f64)),
         ("host_threads", json::num(rollout::available_threads() as f64)),
-        ("speedup_4t", json::num(speedup_4t)),
+        // null when the 4-thread cell was not measured (smoke mode)
+        (
+            "speedup_4t",
+            if threads_list.contains(&4) {
+                json::num(speedup_4t)
+            } else {
+                Json::Null
+            },
+        ),
         ("target_speedup_4t", json::num(4.0)),
         ("rows", Json::Arr(rows)),
     ]);

@@ -10,13 +10,15 @@
 //! see DESIGN.md §9 "Parallelism bounds".
 //!
 //! Acceptance target: >= 2x episodes/sec at 4 threads vs 1 thread on a
-//! machine with >= 4 cores. Knobs: DOPPLER_ROLLOUT_EPISODES (batch size,
-//! default 48), DOPPLER_SIM_REPS (replicates per episode reward, default
-//! 4), DOPPLER_ROLLOUT_NODES (graph size, default 600).
+//! machine with >= 4 cores. Writes BENCH_rollout.json at the repo root.
+//! Knobs: DOPPLER_ROLLOUT_EPISODES (batch size, default 48),
+//! DOPPLER_SIM_REPS (replicates per episode reward, default 4),
+//! DOPPLER_ROLLOUT_NODES (graph size, default 600);
+//! DOPPLER_BENCH_SMOKE / --smoke shrinks all three for CI.
 
 use std::time::Instant;
 
-use doppler::bench_util::banner;
+use doppler::bench_util::{banner, smoke_mode};
 use doppler::eval::tables::Table;
 use doppler::graph::workloads::synthetic_layered;
 use doppler::graph::Assignment;
@@ -25,16 +27,25 @@ use doppler::rollout;
 use doppler::sim::topology::DeviceTopology;
 use doppler::sim::SimConfig;
 use doppler::util::env_usize;
+use doppler::util::json::{self, Json};
 use doppler::util::rng::Rng;
+
+const OUT_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_rollout.json");
 
 fn main() {
     banner(
         "Rollout scaling — parallel Stage II simulation throughput",
         "DESIGN.md §Rollout (systems extension; no paper analog)",
     );
-    let episodes = env_usize("DOPPLER_ROLLOUT_EPISODES", 48);
-    let reps = env_usize("DOPPLER_SIM_REPS", rollout::DEFAULT_SIM_REPS).max(1);
-    let nodes = env_usize("DOPPLER_ROLLOUT_NODES", 600);
+    let smoke = smoke_mode();
+    let episodes = env_usize("DOPPLER_ROLLOUT_EPISODES", if smoke { 8 } else { 48 });
+    let reps = env_usize(
+        "DOPPLER_SIM_REPS",
+        if smoke { 2 } else { rollout::DEFAULT_SIM_REPS },
+    )
+    .max(1);
+    let nodes = env_usize("DOPPLER_ROLLOUT_NODES", if smoke { 150 } else { 600 });
+    let threads_list: Vec<usize> = if smoke { vec![1, 2] } else { vec![1, 2, 4, 8] };
     let cores = rollout::available_threads();
 
     let g = synthetic_layered(nodes, 7);
@@ -63,19 +74,21 @@ fn main() {
     );
     let mut base_eps = 0.0f64;
     let mut eps_at = std::collections::BTreeMap::new();
-    for threads in [1usize, 2, 4, 8] {
+    let mut rows: Vec<Json> = Vec::new();
+    for &threads in &threads_list {
         // warmup + best-of-3 wall clock
         let _ = rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, threads);
         let mut best = f64::INFINITY;
         let mut rewards = Vec::new();
         for _ in 0..3 {
             let t0 = Instant::now();
-            rewards = rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, threads);
+            rewards =
+                rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, threads);
             best = best.min(t0.elapsed().as_secs_f64());
         }
         let eps = episodes as f64 / best;
         eps_at.insert(threads, eps);
-        if threads == 1 {
+        if threads == threads_list[0] {
             base_eps = eps;
         }
         let bitwise = rewards == reference;
@@ -86,19 +99,50 @@ fn main() {
             format!("{:.2}x", eps / base_eps),
             "yes (bitwise)".to_string(),
         ]);
+        rows.push(json::obj(vec![
+            ("threads", json::num(threads as f64)),
+            ("episodes_per_sec", json::num(eps)),
+            ("speedup_vs_1t", json::num(eps / base_eps)),
+        ]));
     }
     table.emit(Some(std::path::Path::new("runs/rollout_scaling.csv")));
 
-    let four = eps_at.get(&4).copied().unwrap_or(0.0);
-    println!(
-        "4-thread speedup: {:.2}x {}",
-        four / base_eps,
-        if cores < 4 {
-            "(machine has < 4 cores; target >= 2x needs >= 4)"
-        } else if four / base_eps >= 2.0 {
-            "-- meets the >= 2x acceptance target"
-        } else {
-            "-- BELOW the >= 2x acceptance target"
-        }
-    );
+    // null (not 0.0) when the 4-thread cell was not measured: a smoke
+    // run must never look like a catastrophic speedup regression
+    let speedup_4t = eps_at
+        .get(&4)
+        .map_or(Json::Null, |eps| json::num(eps / base_eps));
+    let doc = json::obj(vec![
+        ("bench", json::s("rollout_scaling")),
+        ("source", json::s("cargo bench --bench rollout_scaling")),
+        (
+            "config",
+            json::s("p100x4, random assignments, episode_rewards fan-out"),
+        ),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        ("workload", json::s(&g.name)),
+        ("nodes", json::num(g.n() as f64)),
+        ("episodes", json::num(episodes as f64)),
+        ("sim_reps", json::num(reps as f64)),
+        ("host_threads", json::num(cores as f64)),
+        ("speedup_4t", speedup_4t),
+        ("target_speedup_4t", json::num(2.0)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(OUT_JSON, doc.to_string() + "\n").expect("writing BENCH_rollout.json");
+    println!("[perf snapshot written to {OUT_JSON}]");
+
+    if let Some(four) = eps_at.get(&4).copied() {
+        println!(
+            "4-thread speedup: {:.2}x {}",
+            four / base_eps,
+            if cores < 4 {
+                "(machine has < 4 cores; target >= 2x needs >= 4)"
+            } else if four / base_eps >= 2.0 {
+                "-- meets the >= 2x acceptance target"
+            } else {
+                "-- BELOW the >= 2x acceptance target"
+            }
+        );
+    }
 }

@@ -13,11 +13,12 @@
 //! Writes BENCH_sim.json at the repo root so future PRs can track the
 //! perf trajectory. Knobs: DOPPLER_SIM_BENCH_REPS (timed repetitions
 //! per cell, default 5), DOPPLER_SIM_BENCH_NODES (comma-separated
-//! synthetic sizes, default 150,400,1000,2500).
+//! synthetic sizes, default 150,400,1000,2500);
+//! DOPPLER_BENCH_SMOKE / --smoke shrinks both for CI.
 
 use std::time::Instant;
 
-use doppler::bench_util::banner;
+use doppler::bench_util::{banner, smoke_mode};
 use doppler::eval::tables::Table;
 use doppler::graph::workloads::{chainmm, synthetic_layered, Scale};
 use doppler::graph::{Assignment, Graph};
@@ -82,12 +83,14 @@ fn main() {
         "Simulator scaling — incremental vs reference ExecTime(A) throughput",
         "ISSUE 2 perf target (systems extension; no paper analog)",
     );
-    let reps = env_usize("DOPPLER_SIM_BENCH_REPS", 5).max(1);
+    let smoke = smoke_mode();
+    let reps = env_usize("DOPPLER_SIM_BENCH_REPS", if smoke { 2 } else { 5 }).max(1);
     let sizes: Vec<usize> = match std::env::var("DOPPLER_SIM_BENCH_NODES") {
         Ok(v) if !v.is_empty() => v
             .split(',')
             .filter_map(|s| s.trim().parse().ok())
             .collect(),
+        _ if smoke => vec![150],
         _ => vec![150, 400, 1000, 2500],
     };
 
@@ -156,6 +159,7 @@ fn main() {
         ("bench", json::s("sim_scaling")),
         ("source", json::s("cargo bench --bench sim_scaling")),
         ("config", json::s("p100x4, jitter 0.08, Choose::Fifo, random assignment")),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
         ("reps_per_cell", json::num(reps as f64)),
         ("largest_nodes", json::num(largest_nodes as f64)),
         ("speedup_largest", json::num(largest_speedup)),

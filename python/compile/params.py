@@ -11,7 +11,11 @@ each method simply leaves the heads it does not use untouched.
 """
 
 import numpy as np
-import jax.numpy as jnp
+
+try:  # layout/pack/unpack are numpy-only; jax is needed only for as_jnp
+    import jax.numpy as jnp
+except ImportError:  # pragma: no cover - numpy-only oracles (CI bench job)
+    jnp = None
 
 from . import config as C
 
@@ -113,5 +117,7 @@ def zeros_like_params() -> np.ndarray:
     return np.zeros(param_count(), np.float32)
 
 
-def as_jnp(flat) -> jnp.ndarray:
+def as_jnp(flat):
+    if jnp is None:
+        raise ImportError("jax is not installed (numpy-only environment)")
     return jnp.asarray(flat, jnp.float32)

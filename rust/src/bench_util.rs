@@ -41,6 +41,17 @@ pub fn rollout_threads() -> usize {
     .max(1)
 }
 
+/// Bench smoke mode (`DOPPLER_BENCH_SMOKE=1` or a `--smoke` argv flag):
+/// CI shrinks every bench harness to a seconds-scale run that still
+/// *executes* the full code path and emits its `BENCH_*.json` snapshot
+/// (validated by `tools/check_bench_json.py`), instead of merely
+/// compiling the harness. Explicit `DOPPLER_*` knobs still override the
+/// smoke defaults.
+pub fn smoke_mode() -> bool {
+    std::env::var("DOPPLER_BENCH_SMOKE").map_or(false, |v| !v.is_empty() && v != "0")
+        || std::env::args().any(|a| a == "--smoke")
+}
+
 /// Workload filter: `DOPPLER_WORKLOADS=chainmm,ffnn` restricts the
 /// per-table workload sweeps.
 pub fn bench_workloads() -> Vec<String> {

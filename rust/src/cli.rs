@@ -56,6 +56,19 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// Comma-separated list flag: `--workloads a,b,c` -> `["a","b","c"]`
+    /// (missing flag or empty items -> empty vec).
+    pub fn csv(&self, key: &str) -> Vec<String> {
+        self.get(key)
+            .map(|v| {
+                v.split(',')
+                    .map(|s| s.trim().to_string())
+                    .filter(|s| !s.is_empty())
+                    .collect()
+            })
+            .unwrap_or_default()
+    }
 }
 
 #[cfg(test)]
@@ -82,5 +95,15 @@ mod tests {
         assert_eq!(a.usize_or("episodes", 7), 7);
         assert_eq!(a.f64_or("lr", 0.5), 0.5);
         assert!(!a.has("x"));
+    }
+
+    #[test]
+    fn csv_lists_parse() {
+        let a = args("train --workloads chainmm,ffnn,llama-block --holdout llama-layer");
+        assert_eq!(a.csv("workloads"), vec!["chainmm", "ffnn", "llama-block"]);
+        assert_eq!(a.csv("holdout"), vec!["llama-layer"]);
+        assert!(a.csv("missing").is_empty());
+        let b = Args::from_iter(["x".to_string(), "--l".to_string(), "a, b ,,c".to_string()]);
+        assert_eq!(b.csv("l"), vec!["a", "b", "c"]);
     }
 }

@@ -185,7 +185,12 @@ pub fn run_method(id: MethodId, g: &Graph, ctx: &EvalCtx) -> Result<MethodResult
 /// Train a learned method per its paper protocol and return the best
 /// assignment (stage-III best re-checked against stage-II best on the
 /// engine, since stage rewards live on different clocks).
-fn train_method(id: MethodId, g: &Graph, nets: &dyn PolicyBackend, ctx: &EvalCtx) -> Result<Assignment> {
+fn train_method(
+    id: MethodId,
+    g: &Graph,
+    nets: &dyn PolicyBackend,
+    ctx: &EvalCtx,
+) -> Result<Assignment> {
     let method = match id {
         MethodId::Placeto => Method::Placeto,
         MethodId::Gdp => Method::Gdp,
@@ -207,8 +212,16 @@ fn train_method(id: MethodId, g: &Graph, nets: &dyn PolicyBackend, ctx: &EvalCtx
     let b = ctx.episodes;
     let stages = match id {
         // sim-trained baselines (§6.1: PLACETO/GDP trained in simulation)
-        MethodId::Placeto | MethodId::Gdp => Stages { imitation: 0, sim_rl: b, real_rl: 0 },
-        MethodId::DopplerSim => Stages { imitation: b / 10, sim_rl: b * 9 / 10, real_rl: 0 },
+        MethodId::Placeto | MethodId::Gdp => Stages {
+            imitation: 0,
+            sim_rl: b,
+            real_rl: 0,
+        },
+        MethodId::DopplerSim => Stages {
+            imitation: b / 10,
+            sim_rl: b * 9 / 10,
+            real_rl: 0,
+        },
         _ => Stages::budget(b),
     };
 
@@ -233,6 +246,34 @@ fn train_method(id: MethodId, g: &Graph, nets: &dyn PolicyBackend, ctx: &EvalCtx
         .unwrap_or(result.best_assignment))
 }
 
+/// Zero-shot evaluation of a (shared or pretrained) parameter blob on a
+/// graph — the Table 4 transfer protocol: greedy rollout with `params`
+/// (no per-graph retraining), then the standard engine evaluation.
+/// Returns the deployed assignment and its engine summary.
+pub fn eval_params_zero_shot(
+    g: &Graph,
+    ctx: &EvalCtx,
+    method: Method,
+    params: &[f32],
+    scratch: &mut crate::policy::EpisodeScratch,
+) -> Result<(Assignment, Summary)> {
+    let nets = ctx
+        .nets
+        .ok_or_else(|| anyhow::anyhow!("zero-shot evaluation requires a policy backend"))?;
+    let sub = restrict(&ctx.topo, ctx.n_devices);
+    let a = crate::train::multi::zero_shot_assignment(
+        nets,
+        g,
+        &sub,
+        ctx.n_devices,
+        method,
+        params,
+        scratch,
+    )?;
+    let summary = ctx.evaluate(g, &a);
+    Ok((a, summary))
+}
+
 /// Restrict a topology to its first `n` devices.
 pub fn restrict(topo: &DeviceTopology, n: usize) -> DeviceTopology {
     if n >= topo.n() {
@@ -255,7 +296,13 @@ pub fn restrict(topo: &DeviceTopology, n: usize) -> DeviceTopology {
 /// over the default rollout thread pool with the default (incremental)
 /// engine; the result is deterministic in `seed` regardless of either
 /// knob.
-pub fn sim_time_ms(g: &Graph, a: &Assignment, topo: &DeviceTopology, seed: u64, reps: usize) -> f64 {
+pub fn sim_time_ms(
+    g: &Graph,
+    a: &Assignment,
+    topo: &DeviceTopology,
+    seed: u64,
+    reps: usize,
+) -> f64 {
     sim_time_ms_par(
         g,
         a,

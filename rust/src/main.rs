@@ -30,6 +30,18 @@
 //!                   enumeration engine (bitwise-identical results; the
 //!                   incremental default is the fast path — DESIGN.md §10)
 //!               --engine-reps R  engine executions per Stage III reward
+//!
+//! Multi-graph transfer training (train; DESIGN.md §12):
+//!               --transfer-suite S   built-in suite (transfer-block |
+//!                   transfer-layer | tiny): train ONE shared parameter
+//!                   blob across the suite's workloads, then zero-shot
+//!                   evaluate the held-out graph (Table 4 protocol)
+//!               --workloads a,b,c    explicit member list (same shared-
+//!                   blob training; combine with --holdout x,y)
+//!               --workload-set F     JSON manifest of members/weights
+//!                   (see runtime/manifest.rs::WorkloadSetManifest)
+//!               evaluate --params blob.bin   zero-shot deployment of a
+//!                   saved checkpoint, no per-graph retraining
 
 use anyhow::{bail, Context, Result};
 
@@ -91,6 +103,9 @@ const HELP: &str = "doppler — dual-policy device assignment (paper reproductio
     --sim-engine E        {incremental|reference} task enumeration engine
                           (bitwise-identical results; default incremental)
     --engine-reps R       engine executions per Stage III reward (train)
+  multi-graph transfer (train): --transfer-suite S | --workloads a,b,c
+    [--holdout x,y] | --workload-set f.json  -> one shared blob + zero-shot
+    held-out eval; evaluate --params blob.bin deploys a checkpoint zero-shot
   see rust/src/main.rs header for the full flag list";
 
 /// Parse the shared `--rollout-threads` / `--sim-reps` flags. The
@@ -149,6 +164,17 @@ fn load_graph(args: &Args) -> Result<Graph> {
 fn load_topo(args: &Args) -> Result<DeviceTopology> {
     let name = args.str_or("topology", "p100x4");
     DeviceTopology::by_name(&name).with_context(|| format!("unknown topology {name}"))
+}
+
+/// Parse `--method` for the train paths (policy architecture, not the
+/// eval-table MethodId) — shared by single- and multi-graph training.
+fn parse_train_method(args: &Args) -> Result<doppler::policy::Method> {
+    Ok(match args.str_or("method", "doppler").as_str() {
+        "doppler" => doppler::policy::Method::Doppler,
+        "placeto" => doppler::policy::Method::Placeto,
+        "gdp" => doppler::policy::Method::Gdp,
+        other => bail!("unknown method {other}"),
+    })
 }
 
 fn parse_method(s: &str) -> Result<MethodId> {
@@ -220,16 +246,14 @@ fn cmd_compare(args: &Args) -> Result<()> {
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    if args.has("workloads") || args.has("transfer-suite") || args.has("workload-set") {
+        return cmd_train_multi(args);
+    }
     let g = load_graph(args)?;
     let topo = load_topo(args)?;
     let n_devices = args.usize_or("devices", 4);
     let policy = load_policy(args)?;
-    let method = match args.str_or("method", "doppler").as_str() {
-        "doppler" => doppler::policy::Method::Doppler,
-        "placeto" => doppler::policy::Method::Placeto,
-        "gdp" => doppler::policy::Method::Gdp,
-        other => bail!("unknown method {other}"),
-    };
+    let method = parse_train_method(args)?;
     let sub = doppler::eval::restrict(&topo, n_devices);
     let mut cfg = TrainConfig::new(method, sub.clone(), n_devices);
     cfg.seed = args.u64_or("seed", 0);
@@ -274,6 +298,120 @@ fn cmd_train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Multi-graph transfer training (DESIGN.md §12): one shared parameter
+/// blob trained across every member workload (Stage I/II interleaved),
+/// then zero-shot held-out evaluation — the paper's Table 4 protocol
+/// with no per-graph retraining. Selected by `--transfer-suite S`,
+/// `--workloads a,b,c [--holdout x,y]`, or `--workload-set file.json`.
+fn cmd_train_multi(args: &Args) -> Result<()> {
+    use doppler::train::multi::{MultiGraphTrainer, MultiTrainCfg, WorkloadSet};
+
+    let set = if let Some(suite) = args.get("transfer-suite") {
+        WorkloadSet::builtin(suite)?
+    } else if let Some(path) = args.get("workload-set") {
+        WorkloadSet::load(std::path::Path::new(path))?
+    } else {
+        let train = args.csv("workloads");
+        let holdout = args.csv("holdout");
+        let scale = Scale::parse(&args.str_or("scale", "full")).context("bad --scale")?;
+        WorkloadSet::from_names(
+            "cli",
+            &train.iter().map(String::as_str).collect::<Vec<_>>(),
+            &holdout.iter().map(String::as_str).collect::<Vec<_>>(),
+            scale,
+            &args.str_or("topology", "p100x4"),
+            args.usize_or("devices", 4),
+        )?
+    };
+
+    let policy = load_policy(args)?;
+    let method = parse_train_method(args)?;
+    let first = &set.train[0];
+    let mut base = TrainConfig::new(method, first.build_topology()?, first.n_devices);
+    base.seed = args.u64_or("seed", 0);
+    base.rollout = rollout_cfg(args);
+    // batched Stage II is the multi-graph default: one batch per
+    // workload per round keeps the interleave coarse enough to amortize
+    base.episode_batch = args.usize_or("episode-batch", 4).max(1);
+    base.sim.engine = sim_engine(args)?;
+    let budget = args.usize_or("episodes", 400);
+    base.scale_to_budget(budget);
+    let stages = Stages {
+        imitation: budget / 4,
+        sim_rl: budget - budget / 4,
+        real_rl: 0,
+    };
+
+    println!(
+        "multi-graph training '{}': {method:?}, {} episodes (I={} II={}) over {} workloads",
+        set.name,
+        stages.total(),
+        stages.imitation,
+        stages.sim_rl,
+        set.train.len()
+    );
+    for w in &set.train {
+        println!(
+            "  train   {:<14} scale {:?}, weight {}, {} devices on {}",
+            w.name, w.scale, w.weight, w.n_devices, w.topology
+        );
+    }
+    for w in &set.holdout {
+        println!("  holdout {:<14} (zero-shot deployment target)", w.name);
+    }
+
+    let t0 = std::time::Instant::now();
+    let trainer = MultiGraphTrainer::new(policy.as_ref(), &set, MultiTrainCfg { base, stages });
+    let result = trainer.run()?;
+    println!(
+        "done in {:.1}s: one shared blob ({} params) from {} episodes",
+        t0.elapsed().as_secs_f64(),
+        result.params.len(),
+        result.total_episodes
+    );
+    for r in &result.reports {
+        println!(
+            "  {:<14} {:>4} episodes, best sim {:.1} ms",
+            r.name, r.episodes, r.best_sim_ms
+        );
+    }
+
+    if let Some(out) = args.get("out") {
+        doppler::runtime::manifest::save_params(std::path::Path::new(out), &result.params)?;
+        println!("shared checkpoint -> {out}");
+    }
+    if let Some(csv) = args.get("csv") {
+        let mut all: Vec<doppler::train::LogRow> = Vec::new();
+        for r in &result.reports {
+            all.extend(r.history.iter().cloned());
+        }
+        write_history_csv(std::path::Path::new(csv), &all)?;
+        println!("history -> {csv} (per-workload rows concatenated)");
+    }
+
+    // held-out zero-shot evaluation (Table 4 protocol)
+    let mut pool = doppler::policy::ScratchPool::new();
+    for w in &set.holdout {
+        let g = w.build_graph()?;
+        let topo = DeviceTopology::by_name(&w.topology)
+            .with_context(|| format!("unknown topology {}", w.topology))?;
+        let mut ctx = EvalCtx::new(Some(policy.as_ref()), topo, w.n_devices);
+        ctx.seed = args.u64_or("seed", 0);
+        let (_, s) = doppler::eval::eval_params_zero_shot(
+            &g,
+            &ctx,
+            method,
+            &result.params,
+            pool.get(&w.name),
+        )?;
+        println!(
+            "  zero-shot {:<14} {:>8.1} ± {:>5.1} ms (no per-graph retraining)",
+            w.name, s.mean, s.std
+        );
+    }
+    Ok(())
+}
+
 fn cmd_evaluate(args: &Args) -> Result<()> {
     let g = load_graph(args)?;
     let topo = load_topo(args)?;
@@ -286,6 +424,28 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
     ctx.episode_batch = args.usize_or("episode-batch", 1).max(1);
     ctx.sim_engine = sim_engine(args)?;
     let id = parse_method(&args.str_or("method", "critical-path"))?;
+    // `--params blob.bin`: zero-shot deployment of a saved (e.g. shared
+    // multi-graph) checkpoint — greedy rollout, no per-graph retraining
+    // (Table 4 protocol).
+    if let Some(path) = args.get("params") {
+        if !id.needs_nets() {
+            bail!(
+                "--params only applies to learned methods, got {}",
+                id.name()
+            );
+        }
+        let method = match id {
+            MethodId::Placeto => doppler::policy::Method::Placeto,
+            MethodId::Gdp => doppler::policy::Method::Gdp,
+            _ => doppler::policy::Method::Doppler,
+        };
+        let params = doppler::runtime::manifest::load_params(std::path::Path::new(path))?;
+        let mut scratch = doppler::policy::EpisodeScratch::new();
+        let (_, s) =
+            doppler::eval::eval_params_zero_shot(&g, &ctx, method, &params, &mut scratch)?;
+        println!("{} (zero-shot from {path}): {:.1} ± {:.1} ms", id.name(), s.mean, s.std);
+        return Ok(());
+    }
     let r = run_method(id, &g, &ctx)?;
     println!(
         "{}: {:.1} ± {:.1} ms",

@@ -97,6 +97,28 @@ impl EpisodeScratch {
     }
 }
 
+/// Per-workload scratch reuse for multi-graph loops: one
+/// [`EpisodeScratch`] per workload key, created on first use. Episode
+/// buffers are sized per graph, so a multi-graph sweep that round-robins
+/// between differently-sized graphs would otherwise re-grow one scratch
+/// every switch; keying by workload keeps each one warm. (Reuse is
+/// bit-neutral either way — `run_episode_with` resets the scratch.)
+#[derive(Debug, Default)]
+pub struct ScratchPool {
+    pool: std::collections::BTreeMap<String, EpisodeScratch>,
+}
+
+impl ScratchPool {
+    pub fn new() -> ScratchPool {
+        ScratchPool::default()
+    }
+
+    /// The scratch for `key`, created on first use.
+    pub fn get(&mut self, key: &str) -> &mut EpisodeScratch {
+        self.pool.entry(key.to_string()).or_default()
+    }
+}
+
 /// Record `v -> d` in the incremental row-normalized placement matrix:
 /// every entry of row `d` equals `1/count`, so only row `d` is rewritten
 /// (O(count), not O(m·n)) and the values are bit-identical to a full
@@ -321,6 +343,16 @@ mod tests {
     fn device_mask_shape() {
         let m = device_mask(8, 4);
         assert_eq!(m, vec![1.0, 1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn scratch_pool_keys_by_workload() {
+        let mut pool = ScratchPool::new();
+        pool.get("a").reset(10, 8, 4);
+        pool.get("b").reset(4, 2, 2);
+        // re-fetching returns the same (already sized) scratch
+        assert_eq!(pool.get("a").v_onehot.len(), 10);
+        assert_eq!(pool.get("b").v_onehot.len(), 4);
     }
 
     #[test]

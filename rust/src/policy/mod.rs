@@ -10,7 +10,7 @@ pub mod nets;
 pub use encoding::GraphEncoding;
 pub use episode::{
     device_mask, run_episode, run_episode_with, EpisodeCfg, EpisodeResult, EpisodeScratch,
-    Trajectory,
+    ScratchPool, Trajectory,
 };
 pub use native::NativePolicy;
 pub use nets::{

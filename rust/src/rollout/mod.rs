@@ -31,6 +31,12 @@
 //! The determinism contract is enforced by
 //! `tests/prop_invariants.rs::prop_rollout_parallel_matches_serial`.
 //!
+//! Multi-graph training (`train::multi`, DESIGN.md §12) composes these
+//! primitives unchanged: each member workload's batches flow through
+//! [`generate_episodes_cfg`] + [`episode_rewards`] with that workload's
+//! own leader RNG, so the per-(workload, episode) stream keying and the
+//! canonical-order merge extend across graphs for free.
+//!
 //! Both simulator engines ([`crate::sim::Engine`]) honor this contract:
 //! the incremental ready-set engine (default) and the reference rescan
 //! loop are bitwise-identical per simulation, so `SimConfig::engine` —

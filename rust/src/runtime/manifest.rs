@@ -1,6 +1,9 @@
 //! Parser for `artifacts/manifest.json` (written by `python -m
 //! compile.aot`): model dims, the flat parameter-blob length, and the
-//! per-variant artifact file names.
+//! per-variant artifact file names. Also owns the *workload-set*
+//! manifest format (`doppler train --workload-set f.json`) describing a
+//! multi-graph training collection — `train/multi.rs` resolves its
+//! entries into built graphs and topologies.
 
 use std::path::{Path, PathBuf};
 
@@ -51,7 +54,8 @@ impl Manifest {
             let mut artifacts = std::collections::BTreeMap::new();
             if let Some(obj) = v.get("artifacts").as_obj() {
                 for (k, f) in obj {
-                    artifacts.insert(k.clone(), f.as_str().context("bad artifact name")?.to_string());
+                    let name = f.as_str().context("bad artifact name")?.to_string();
+                    artifacts.insert(k.clone(), name);
                 }
             }
             variants.push(VariantInfo {
@@ -85,7 +89,10 @@ impl Manifest {
             .iter()
             .find(|v| n_nodes <= v.n && n_edges <= v.e)
             .with_context(|| {
-                format!("no artifact variant fits {n_nodes} nodes / {n_edges} edges — re-run aot with a larger size")
+                format!(
+                    "no artifact variant fits {n_nodes} nodes / {n_edges} edges — \
+                     re-run aot with a larger size"
+                )
             })
     }
 
@@ -151,6 +158,81 @@ impl Manifest {
     }
 }
 
+/// One member of a workload-set manifest (multi-graph training): a
+/// workload name plus optional scale (default "full") and episode-budget
+/// weight (default 1.0).
+#[derive(Clone, Debug)]
+pub struct WorkloadEntry {
+    pub workload: String,
+    pub scale: String,
+    pub weight: f64,
+}
+
+/// Parsed workload-set manifest — the manifest-driven description of a
+/// multi-graph training collection (ISSUE 4 / DESIGN.md §12). This type
+/// owns only the file format; `train::multi::WorkloadSet` resolves it.
+///
+/// ```json
+/// { "name": "custom", "topology": "p100x4", "devices": 4,
+///   "train":   [{"workload": "ffnn", "weight": 2.0},
+///               {"workload": "synthetic-80"}],
+///   "holdout": [{"workload": "llama-block", "scale": "small"}] }
+/// ```
+#[derive(Clone, Debug)]
+pub struct WorkloadSetManifest {
+    pub name: String,
+    pub topology: String,
+    pub n_devices: usize,
+    pub train: Vec<WorkloadEntry>,
+    pub holdout: Vec<WorkloadEntry>,
+}
+
+impl WorkloadSetManifest {
+    /// Load a workload-set manifest from a JSON file.
+    pub fn load(path: &Path) -> Result<WorkloadSetManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading workload set {path:?}"))?;
+        Self::parse_str(&text).with_context(|| format!("parsing workload set {path:?}"))
+    }
+
+    /// Parse a workload-set manifest from JSON text.
+    pub fn parse_str(text: &str) -> Result<WorkloadSetManifest> {
+        let j = parse(text).map_err(|e| anyhow::anyhow!("workload-set parse error: {e}"))?;
+        let entries = |key: &str| -> Result<Vec<WorkloadEntry>> {
+            let mut out = Vec::new();
+            if let Some(arr) = j.get(key).as_arr() {
+                for v in arr {
+                    let workload = v
+                        .get("workload")
+                        .as_str()
+                        .with_context(|| format!("'{key}' entry missing 'workload'"))?
+                        .to_string();
+                    let weight = v.get("weight").as_f64().unwrap_or(1.0);
+                    anyhow::ensure!(
+                        weight.is_finite() && weight > 0.0,
+                        "workload '{workload}': weight must be a positive number"
+                    );
+                    out.push(WorkloadEntry {
+                        workload,
+                        scale: v.get("scale").as_str().unwrap_or("full").to_string(),
+                        weight,
+                    });
+                }
+            }
+            Ok(out)
+        };
+        let train = entries("train")?;
+        anyhow::ensure!(!train.is_empty(), "workload set has no 'train' entries");
+        Ok(WorkloadSetManifest {
+            name: j.get("name").as_str().unwrap_or("custom").to_string(),
+            topology: j.get("topology").as_str().unwrap_or("p100x4").to_string(),
+            n_devices: j.get("devices").as_usize().unwrap_or(4),
+            train,
+            holdout: entries("holdout")?,
+        })
+    }
+}
+
 /// Parameter blob I/O (checkpoints).
 pub fn save_params(path: &Path, params: &[f32]) -> Result<()> {
     let mut bytes = Vec::with_capacity(params.len() * 4);
@@ -213,5 +295,42 @@ mod tests {
             .unwrap();
         assert!(p.ends_with("encode_n96.hlo.txt"));
         assert!(m.artifact_path(&m.variants[0], "nope").is_err());
+    }
+
+    #[test]
+    fn workload_set_manifest_parses_with_defaults() {
+        let text = r#"{
+          "name": "custom",
+          "train": [
+            {"workload": "ffnn", "weight": 2.0},
+            {"workload": "chainmm", "scale": "tiny"}
+          ],
+          "holdout": [{"workload": "llama-block", "scale": "small"}]
+        }"#;
+        let m = WorkloadSetManifest::parse_str(text).unwrap();
+        assert_eq!(m.name, "custom");
+        assert_eq!(m.topology, "p100x4"); // default
+        assert_eq!(m.n_devices, 4); // default
+        assert_eq!(m.train.len(), 2);
+        assert_eq!(m.train[0].workload, "ffnn");
+        assert_eq!(m.train[0].scale, "full"); // default
+        assert_eq!(m.train[0].weight, 2.0);
+        assert_eq!(m.train[1].scale, "tiny");
+        assert_eq!(m.train[1].weight, 1.0); // default
+        assert_eq!(m.holdout.len(), 1);
+        assert_eq!(m.holdout[0].scale, "small");
+    }
+
+    #[test]
+    fn workload_set_manifest_rejects_bad_input() {
+        // no train entries
+        assert!(WorkloadSetManifest::parse_str(r#"{"holdout": []}"#).is_err());
+        // entry without a workload name
+        assert!(WorkloadSetManifest::parse_str(r#"{"train": [{"weight": 1.0}]}"#).is_err());
+        // non-positive weight
+        assert!(WorkloadSetManifest::parse_str(
+            r#"{"train": [{"workload": "ffnn", "weight": 0.0}]}"#
+        )
+        .is_err());
     }
 }

@@ -11,6 +11,7 @@
 //! Hyperparameters follow §6.1: linearly decaying learning rate and
 //! exploration, entropy weight 1e-2, and a running-mean reward baseline.
 
+pub mod multi;
 pub mod teacher;
 
 use anyhow::Result;
@@ -71,7 +72,11 @@ impl Stages {
         }
     }
     pub fn none() -> Stages {
-        Stages { imitation: 0, sim_rl: 0, real_rl: 0 }
+        Stages {
+            imitation: 0,
+            sim_rl: 0,
+            real_rl: 0,
+        }
     }
     pub fn total(&self) -> usize {
         self.imitation + self.sim_rl + self.real_rl
@@ -122,7 +127,10 @@ impl TrainConfig {
     /// budget: small-budget runs need a hotter, shorter decay.
     pub fn scale_to_budget(&mut self, episodes: usize) {
         if episodes < 2000 {
-            self.lr = Schedule { start: 1.5e-3, end: 1e-5 };
+            self.lr = Schedule {
+                start: 1.5e-3,
+                end: 1e-5,
+            };
         }
     }
 
@@ -132,13 +140,25 @@ impl TrainConfig {
             n_devices,
             // §6.1: 1e-4 -> 1e-7 for DOPPLER/GDP (PLACETO uses 1e-3 -> 1e-6)
             lr: match method {
-                Method::Placeto => Schedule { start: 1e-3, end: 1e-6 },
-                _ => Schedule { start: 1e-4, end: 1e-7 },
+                Method::Placeto => Schedule {
+                    start: 1e-3,
+                    end: 1e-6,
+                },
+                _ => Schedule {
+                    start: 1e-4,
+                    end: 1e-7,
+                },
             },
             // §6.1: 0.2 -> 0.0 (PLACETO 0.5 -> 0.0)
             epsilon: match method {
-                Method::Placeto => Schedule { start: 0.5, end: 0.0 },
-                _ => Schedule { start: 0.2, end: 0.0 },
+                Method::Placeto => Schedule {
+                    start: 0.5,
+                    end: 0.0,
+                },
+                _ => Schedule {
+                    start: 0.2,
+                    end: 0.0,
+                },
             },
             entropy_w: 1e-2,
             seed: 0,
@@ -515,7 +535,13 @@ impl<'a> Trainer<'a> {
         {
             let nets = self.nets;
             if let Some(sync) = nets.as_sync() {
-                return self.stage2_sim_batched(episodes, sync);
+                let mut done = 0;
+                while done < episodes {
+                    let bs = self.cfg.episode_batch.min(episodes - done);
+                    self.stage2_sim_batch(sync, done, bs, episodes, done)?;
+                    done += bs;
+                }
+                return Ok(());
             }
         }
         let sim_cfg = self.cfg.sim.clone();
@@ -530,59 +556,65 @@ impl<'a> Trainer<'a> {
         Ok(())
     }
 
-    /// Batched Stage II (see [`Trainer::stage2_sim`]): generate a batch
-    /// of episodes from one parameter snapshot across the worker pool,
-    /// score them with the parallel reward evaluator, then apply the
-    /// train steps in episode order.
-    fn stage2_sim_batched(
+    /// One batched Stage II round — THE batched entry point, shared by
+    /// [`Trainer::stage2_sim`] (single-graph loop) and
+    /// [`multi::MultiGraphTrainer`] (multi-graph interleaving): generate
+    /// `bs` episodes for global schedule indices `start..start + bs` of
+    /// `total` from the current parameter snapshot across the worker
+    /// pool, score them with the parallel reward evaluator, then apply
+    /// the train steps in episode order. Schedule indices are explicit
+    /// so an interleaved multi-graph run decays lr/epsilon over the
+    /// *global* episode count, not per workload.
+    ///
+    /// `exploit_start` indexes the every-10th pure-exploitation rule and
+    /// is counted **per trainer** (equal to `start` in single-graph
+    /// training, where the two coincide): if it followed the global
+    /// index, a fixed interleave period that divides 10 would alias and
+    /// starve some workloads of exploitation episodes entirely.
+    pub fn stage2_sim_batch(
         &mut self,
-        episodes: usize,
         backend: &(dyn PolicyBackend + Sync),
+        start: usize,
+        bs: usize,
+        total: usize,
+        exploit_start: usize,
     ) -> Result<()> {
         let sim_cfg = self.cfg.sim.clone();
         let ro = self.cfg.rollout;
-        let mut done = 0;
-        while done < episodes {
-            let bs = self.cfg.episode_batch.min(episodes - done);
-            // per-episode exploration schedule stays exact (including the
-            // every-10th pure-exploitation episode)
-            let cfgs: Vec<EpisodeCfg> = (done..done + bs)
-                .map(|i| EpisodeCfg {
-                    method: self.cfg.method,
-                    epsilon: if i % 10 == 9 {
-                        0.0
-                    } else {
-                        self.cfg.epsilon.at(i, episodes)
-                    },
-                    n_devices: self.cfg.n_devices,
-                    per_step_encode: self.cfg.per_step_encode,
-                })
-                .collect();
-            let eps = crate::rollout::generate_episodes_cfg(
-                backend,
-                &self.enc,
-                self.g,
-                &self.topo,
-                &self.feats,
-                &self.params,
-                &cfgs,
-                &mut self.rng,
-                ro.threads,
-            )?;
-            let assignments: Vec<Assignment> =
-                eps.iter().map(|e| e.assignment.clone()).collect();
-            let rewards = crate::rollout::episode_rewards(
-                self.g,
-                &assignments,
-                &sim_cfg,
-                &mut self.rng,
-                ro.sim_reps,
-                ro.threads,
-            );
-            for (j, ep) in eps.into_iter().enumerate() {
-                self.apply_update(done + j, episodes, 2, ep, rewards[j])?;
-            }
-            done += bs;
+        let cfgs: Vec<EpisodeCfg> = (0..bs)
+            .map(|j| EpisodeCfg {
+                method: self.cfg.method,
+                epsilon: if (exploit_start + j) % 10 == 9 {
+                    0.0
+                } else {
+                    self.cfg.epsilon.at(start + j, total)
+                },
+                n_devices: self.cfg.n_devices,
+                per_step_encode: self.cfg.per_step_encode,
+            })
+            .collect();
+        let eps = crate::rollout::generate_episodes_cfg(
+            backend,
+            &self.enc,
+            self.g,
+            &self.topo,
+            &self.feats,
+            &self.params,
+            &cfgs,
+            &mut self.rng,
+            ro.threads,
+        )?;
+        let assignments: Vec<Assignment> = eps.iter().map(|e| e.assignment.clone()).collect();
+        let rewards = crate::rollout::episode_rewards(
+            self.g,
+            &assignments,
+            &sim_cfg,
+            &mut self.rng,
+            ro.sim_reps,
+            ro.threads,
+        );
+        for (j, ep) in eps.into_iter().enumerate() {
+            self.apply_update(start + j, total, 2, ep, rewards[j])?;
         }
         Ok(())
     }
@@ -591,7 +623,11 @@ impl<'a> Trainer<'a> {
     /// `engine_reps` executions; 1 by default). Engine rewards are
     /// measured wall clock, so replicates run serially — rollout
     /// threads never touch engine timing (see `rollout::mean_engine_time`).
-    pub fn stage3_real(&mut self, episodes: usize, engine_cfg: &crate::engine::EngineConfig) -> Result<()> {
+    pub fn stage3_real(
+        &mut self,
+        episodes: usize,
+        engine_cfg: &crate::engine::EngineConfig,
+    ) -> Result<()> {
         let g = self.g;
         let reps = self.cfg.engine_reps;
         for i in 0..episodes {
@@ -604,7 +640,11 @@ impl<'a> Trainer<'a> {
     }
 
     /// Run the requested stage combination and return the result.
-    pub fn run(mut self, stages: Stages, engine_cfg: &crate::engine::EngineConfig) -> Result<TrainResult> {
+    pub fn run(
+        mut self,
+        stages: Stages,
+        engine_cfg: &crate::engine::EngineConfig,
+    ) -> Result<TrainResult> {
         self.stage1_imitation(stages.imitation)?;
         self.stage2_sim(stages.sim_rl)?;
         self.stage3_real(stages.real_rl, engine_cfg)?;
@@ -659,7 +699,8 @@ impl<'a> Trainer<'a> {
 
 /// Write a training history to CSV (for the Fig. 4 curves).
 pub fn write_history_csv(path: &std::path::Path, history: &[LogRow]) -> Result<()> {
-    let mut out = String::from("episode,stage,exec_time_ms,best_time_ms,loss,entropy,encode_calls\n");
+    let mut out =
+        String::from("episode,stage,exec_time_ms,best_time_ms,loss,entropy,encode_calls\n");
     for r in history {
         out.push_str(&format!(
             "{},{},{:.4},{:.4},{:.5},{:.4},{}\n",
@@ -682,7 +723,10 @@ mod tests {
 
     #[test]
     fn schedule_interpolates() {
-        let s = Schedule { start: 1.0, end: 0.0 };
+        let s = Schedule {
+            start: 1.0,
+            end: 0.0,
+        };
         assert_eq!(s.at(0, 11), 1.0);
         assert_eq!(s.at(10, 11), 0.0);
         assert!((s.at(5, 11) - 0.5).abs() < 1e-12);

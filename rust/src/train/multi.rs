@@ -1,0 +1,590 @@
+//! Multi-graph transfer training over one shared parameter blob
+//! (ISSUE 4 / DESIGN.md §12; paper Table 4/11, GDP's generalized
+//! placement setting).
+//!
+//! The paper's transfer results come from training a *single* dual
+//! policy across several workloads and deploying it on unseen graphs
+//! with no per-graph retraining. The native backend makes this a direct
+//! extension of batched Stage II: parameters are shape-polymorphic (the
+//! blob length is graph-size-independent — exact-fit variants change
+//! only encodings, never the layout), so one `params`/`OptState` pair
+//! can serve every member workload while each workload keeps its own
+//! graph encoding, reward baseline, and episode scratch.
+//!
+//! Determinism contract (the PR-1 contract, extended across graphs):
+//!
+//! - **Canonical workload order.** A [`WorkloadSet`] sorts its members
+//!   by name at construction, so the interleave schedule — and therefore
+//!   the order gradient updates hit the shared blob — is invariant under
+//!   permutation of the input manifest.
+//! - **Per-(workload, episode) RNG streams.** Every member trainer seeds
+//!   its own generator from `(base seed, workload name)` (an FNV-1a
+//!   hash, not a list index), and episode-level forks inside a batch
+//!   come from `Rng::fork` exactly as in single-graph training.
+//! - **Canonical-order gradient reduction.** Episode generation fans out
+//!   across the worker pool, but train steps are applied sequentially in
+//!   (round, workload, episode) order — bit-identical at any thread
+//!   count (`tests/multi_graph.rs`).
+
+use anyhow::{Context, Result};
+
+use crate::features::static_features;
+use crate::graph::workloads::{by_name, synthetic_layered, Scale, WORKLOADS};
+use crate::graph::{Assignment, Graph};
+use crate::policy::{
+    run_episode_with, EpisodeCfg, EpisodeScratch, GraphEncoding, Method, OptState, PolicyBackend,
+};
+use crate::runtime::manifest::WorkloadSetManifest;
+use crate::sim::topology::DeviceTopology;
+use crate::util::rng::Rng;
+
+use super::{LogRow, Stages, TrainConfig, Trainer};
+
+/// One member workload of a [`WorkloadSet`]: a graph source plus the
+/// device topology it trains/deploys against and its share of the
+/// episode budget.
+#[derive(Clone, Debug)]
+pub struct WorkloadSpec {
+    /// Graph source: a paper workload name (`chainmm` | `ffnn` |
+    /// `llama-block` | `llama-layer`) or `synthetic-<nodes>` (the
+    /// layered generator, fixed seed 7 like the benches).
+    pub name: String,
+    /// Tensor-dimension scale (ignored by synthetic workloads).
+    pub scale: Scale,
+    /// Topology name (`DeviceTopology::by_name`).
+    pub topology: String,
+    /// Devices actually used (the topology is restricted to this many).
+    pub n_devices: usize,
+    /// Relative share of the episode budget (> 0; 1.0 = equal share).
+    pub weight: f64,
+}
+
+impl WorkloadSpec {
+    /// Spec with the default p100x4 / 4-device / weight-1 configuration.
+    pub fn new(name: &str, scale: Scale) -> WorkloadSpec {
+        WorkloadSpec {
+            name: name.to_string(),
+            scale,
+            topology: "p100x4".to_string(),
+            n_devices: 4,
+            weight: 1.0,
+        }
+    }
+
+    /// Validate without building (cheap; run at set construction so a
+    /// typo fails before any training happens).
+    pub fn validate(&self) -> Result<()> {
+        if let Some(n) = self.name.strip_prefix("synthetic-") {
+            let n: usize = n
+                .parse()
+                .with_context(|| format!("bad synthetic workload '{}'", self.name))?;
+            anyhow::ensure!(n >= 10, "synthetic workload needs >= 10 nodes, got {n}");
+        } else {
+            anyhow::ensure!(
+                WORKLOADS.contains(&self.name.as_str()),
+                "unknown workload '{}' (expected one of {WORKLOADS:?} or synthetic-<nodes>)",
+                self.name
+            );
+        }
+        let topo = DeviceTopology::by_name(&self.topology).with_context(|| {
+            format!("workload '{}': unknown topology '{}'", self.name, self.topology)
+        })?;
+        anyhow::ensure!(
+            self.n_devices >= 1 && self.n_devices <= topo.n(),
+            "workload '{}': n_devices {} outside 1..={}",
+            self.name,
+            self.n_devices,
+            topo.n()
+        );
+        anyhow::ensure!(
+            self.weight.is_finite() && self.weight > 0.0,
+            "workload '{}': weight must be positive",
+            self.name
+        );
+        Ok(())
+    }
+
+    /// Build the workload graph.
+    pub fn build_graph(&self) -> Result<Graph> {
+        self.validate()?;
+        if let Some(n) = self.name.strip_prefix("synthetic-") {
+            let n: usize = n.parse().expect("validated");
+            return Ok(synthetic_layered(n, 7));
+        }
+        Ok(by_name(&self.name, self.scale))
+    }
+
+    /// Build the (restricted) device topology this workload runs on.
+    pub fn build_topology(&self) -> Result<DeviceTopology> {
+        self.validate()?;
+        let topo = DeviceTopology::by_name(&self.topology).expect("validated");
+        Ok(crate::eval::restrict(&topo, self.n_devices))
+    }
+}
+
+/// A named collection of workloads for multi-graph training: the
+/// `train` members share one parameter blob; the `holdout` members are
+/// the zero-shot deployment targets (Table 4 protocol). Members are
+/// kept in canonical (name-sorted) order so training is invariant under
+/// permutation of the input list/manifest.
+#[derive(Clone, Debug)]
+pub struct WorkloadSet {
+    pub name: String,
+    pub train: Vec<WorkloadSpec>,
+    pub holdout: Vec<WorkloadSpec>,
+}
+
+impl WorkloadSet {
+    /// Built-in suite names (`--transfer-suite`).
+    pub const BUILTIN_SUITES: [&'static str; 3] = ["transfer-block", "transfer-layer", "tiny"];
+
+    /// Canonicalize + validate: sort members by name, reject duplicates,
+    /// empty train lists, and unresolvable specs.
+    fn normalized(mut self) -> Result<WorkloadSet> {
+        anyhow::ensure!(
+            !self.train.is_empty(),
+            "workload set '{}' has no train members",
+            self.name
+        );
+        self.train.sort_by(|a, b| a.name.cmp(&b.name));
+        self.holdout.sort_by(|a, b| a.name.cmp(&b.name));
+        let mut seen = std::collections::BTreeSet::new();
+        for w in &self.train {
+            w.validate()?;
+            anyhow::ensure!(
+                seen.insert(w.name.clone()),
+                "workload set '{}': duplicate train member '{}'",
+                self.name,
+                w.name
+            );
+        }
+        let mut seen_holdout = std::collections::BTreeSet::new();
+        for w in &self.holdout {
+            w.validate()?;
+            anyhow::ensure!(
+                !seen.contains(&w.name),
+                "workload set '{}': holdout member '{}' also appears in train",
+                self.name,
+                w.name
+            );
+            anyhow::ensure!(
+                seen_holdout.insert(w.name.clone()),
+                "workload set '{}': duplicate holdout member '{}'",
+                self.name,
+                w.name
+            );
+        }
+        Ok(self)
+    }
+
+    /// Built-in suites for the transfer split. `transfer-block` /
+    /// `transfer-layer` hold out one LLAMA graph each (the Table 4
+    /// targets); `tiny` is the fast suite the property tests and smoke
+    /// benches use (tiny dims + small synthetic graphs).
+    pub fn builtin(name: &str) -> Result<WorkloadSet> {
+        let full = |n: &str| WorkloadSpec::new(n, Scale::Full);
+        let tiny = |n: &str| WorkloadSpec::new(n, Scale::Tiny);
+        let set = match name {
+            "transfer-block" => WorkloadSet {
+                name: name.to_string(),
+                train: vec![full("chainmm"), full("ffnn"), full("llama-layer")],
+                holdout: vec![full("llama-block")],
+            },
+            "transfer-layer" => WorkloadSet {
+                name: name.to_string(),
+                train: vec![full("chainmm"), full("ffnn"), full("llama-block")],
+                holdout: vec![full("llama-layer")],
+            },
+            "tiny" => WorkloadSet {
+                name: name.to_string(),
+                train: vec![tiny("chainmm"), tiny("synthetic-40"), tiny("synthetic-60")],
+                holdout: vec![tiny("synthetic-50")],
+            },
+            other => anyhow::bail!(
+                "unknown transfer suite '{other}' (expected one of {:?})",
+                Self::BUILTIN_SUITES
+            ),
+        };
+        set.normalized()
+    }
+
+    /// Build a set from plain workload name lists (`--workloads a,b,c
+    /// [--holdout x]`) sharing one scale/topology/device count.
+    pub fn from_names(
+        name: &str,
+        train: &[&str],
+        holdout: &[&str],
+        scale: Scale,
+        topology: &str,
+        n_devices: usize,
+    ) -> Result<WorkloadSet> {
+        let spec = |n: &str| WorkloadSpec {
+            name: n.to_string(),
+            scale,
+            topology: topology.to_string(),
+            n_devices,
+            weight: 1.0,
+        };
+        WorkloadSet {
+            name: name.to_string(),
+            train: train.iter().map(|&n| spec(n)).collect(),
+            holdout: holdout.iter().map(|&n| spec(n)).collect(),
+        }
+        .normalized()
+    }
+
+    /// Resolve a parsed workload-set manifest (scale strings, shared
+    /// topology/devices) into a validated set.
+    pub fn from_manifest(m: &WorkloadSetManifest) -> Result<WorkloadSet> {
+        let resolve = |e: &crate::runtime::manifest::WorkloadEntry| -> Result<WorkloadSpec> {
+            Ok(WorkloadSpec {
+                name: e.workload.clone(),
+                scale: Scale::parse(&e.scale).with_context(|| {
+                    format!("workload '{}': bad scale '{}'", e.workload, e.scale)
+                })?,
+                topology: m.topology.clone(),
+                n_devices: m.n_devices,
+                weight: e.weight,
+            })
+        };
+        WorkloadSet {
+            name: m.name.clone(),
+            train: m.train.iter().map(&resolve).collect::<Result<_>>()?,
+            holdout: m.holdout.iter().map(&resolve).collect::<Result<_>>()?,
+        }
+        .normalized()
+    }
+
+    /// Load a workload-set manifest file (`--workload-set f.json`).
+    pub fn load(path: &std::path::Path) -> Result<WorkloadSet> {
+        Self::from_manifest(&WorkloadSetManifest::load(path)?)
+    }
+}
+
+/// Multi-graph training configuration: the per-workload [`TrainConfig`]
+/// template (topology/devices/seed are re-derived per member) plus the
+/// global Stage I/II budget. Stage III is per-deployment and not part
+/// of multi-graph pretraining (`stages.real_rl` must be 0).
+#[derive(Clone, Debug)]
+pub struct MultiTrainCfg {
+    pub base: TrainConfig,
+    pub stages: Stages,
+}
+
+/// Per-workload training report.
+#[derive(Clone, Debug)]
+pub struct WorkloadReport {
+    pub name: String,
+    /// Episodes this workload contributed (Stage I + Stage II).
+    pub episodes: usize,
+    /// Best simulator `ExecTime` observed in this workload's Stage II
+    /// episodes, in ms (NaN if it ran no Stage II episodes).
+    pub best_sim_ms: f64,
+    pub history: Vec<LogRow>,
+}
+
+/// Multi-graph training output: the shared blob plus per-workload
+/// reports (histories are per-workload; concatenate for a global CSV).
+pub struct MultiTrainResult {
+    pub params: Vec<f32>,
+    pub total_episodes: usize,
+    pub reports: Vec<WorkloadReport>,
+}
+
+/// Trains ONE shared parameter blob across every `set.train` member by
+/// interleaving Stage I/II episode batches round-robin (weighted) over
+/// the members, reusing [`Trainer::stage2_sim_batch`] per graph. See
+/// the module docs for the determinism contract.
+pub struct MultiGraphTrainer<'a> {
+    pub nets: &'a dyn PolicyBackend,
+    pub set: &'a WorkloadSet,
+    pub cfg: MultiTrainCfg,
+}
+
+impl<'a> MultiGraphTrainer<'a> {
+    pub fn new(
+        nets: &'a dyn PolicyBackend,
+        set: &'a WorkloadSet,
+        cfg: MultiTrainCfg,
+    ) -> MultiGraphTrainer<'a> {
+        MultiGraphTrainer { nets, set, cfg }
+    }
+
+    pub fn run(&self) -> Result<MultiTrainResult> {
+        anyhow::ensure!(
+            self.cfg.stages.real_rl == 0,
+            "multi-graph training is Stage I/II only (Stage III rewards are per-deployment)"
+        );
+        anyhow::ensure!(
+            !self.cfg.base.force_teacher_sel && !self.cfg.base.force_teacher_plc,
+            "teacher-forcing ablations are single-graph only"
+        );
+        let nets = self.nets;
+        let sync = nets.as_sync().ok_or_else(|| {
+            anyhow::anyhow!(
+                "multi-graph training requires a Send + Sync policy backend \
+                 (native; PJRT is leader-thread-only)"
+            )
+        })?;
+        let members = &self.set.train;
+
+        // graphs + topologies outlive the trainers that borrow them
+        let graphs: Vec<Graph> = members
+            .iter()
+            .map(|w| w.build_graph())
+            .collect::<Result<_>>()?;
+        let topos: Vec<DeviceTopology> = members
+            .iter()
+            .map(|w| w.build_topology())
+            .collect::<Result<_>>()?;
+        let mut trainers: Vec<Trainer> = Vec::with_capacity(members.len());
+        for ((w, g), topo) in members.iter().zip(&graphs).zip(&topos) {
+            let mut cfg = self.cfg.base.clone();
+            cfg.n_devices = w.n_devices;
+            // per-(seed, workload-name) seed: stable under permutation
+            cfg.seed = per_workload_seed(self.cfg.base.seed, &w.name);
+            // per-workload simulator topology; every other sim knob
+            // (engine, jitter, choose, enforce_memory) stays as configured
+            cfg.sim.topology = topo.clone();
+            trainers.push(Trainer::new(self.nets, g, topo.clone(), cfg)?);
+        }
+
+        // ONE shared blob + optimizer state for every member
+        let mut params = self.nets.init_params()?;
+        let mut opt = OptState::new(params.len());
+        for (w, tr) in members.iter().zip(&trainers) {
+            anyhow::ensure!(
+                tr.params.len() == params.len(),
+                "workload '{}' resolved a different parameter layout ({} vs {}) — \
+                 the shared blob requires a shape-polymorphic backend",
+                w.name,
+                tr.params.len(),
+                params.len()
+            );
+        }
+
+        let weights: Vec<f64> = members.iter().map(|w| w.weight).collect();
+        let chunk = self.cfg.base.episode_batch.max(1);
+
+        // Stage I: weighted round-robin imitation chunks. The swap dance
+        // moves the shared blob into the member trainer for the chunk and
+        // back out — updates land on the one shared blob, in canonical
+        // member order.
+        let im = split_budget(self.cfg.stages.imitation, &weights);
+        let mut rem = im.clone();
+        while rem.iter().any(|&r| r > 0) {
+            for (i, tr) in trainers.iter_mut().enumerate() {
+                if rem[i] == 0 {
+                    continue;
+                }
+                let k = chunk.min(rem[i]);
+                std::mem::swap(&mut tr.params, &mut params);
+                std::mem::swap(&mut tr.opt, &mut opt);
+                let r = tr.stage1_imitation(k);
+                std::mem::swap(&mut tr.params, &mut params);
+                std::mem::swap(&mut tr.opt, &mut opt);
+                r?;
+                rem[i] -= k;
+            }
+        }
+
+        // Stage II: weighted round-robin batches through the shared
+        // batched entry point, against ONE global lr/epsilon schedule
+        // (`start`/`total` are global episode indices).
+        let sim = split_budget(self.cfg.stages.sim_rl, &weights);
+        let total: usize = sim.iter().sum();
+        let mut rem = sim.clone();
+        // per-workload episode counts drive the every-10th exploitation
+        // rule (a global index would alias with the interleave period
+        // and starve some members of exploitation episodes)
+        let mut spent = vec![0usize; trainers.len()];
+        let mut done = 0usize;
+        while done < total {
+            for (i, tr) in trainers.iter_mut().enumerate() {
+                if rem[i] == 0 {
+                    continue;
+                }
+                let bs = chunk.min(rem[i]);
+                std::mem::swap(&mut tr.params, &mut params);
+                std::mem::swap(&mut tr.opt, &mut opt);
+                let r = tr.stage2_sim_batch(sync, done, bs, total, spent[i]);
+                std::mem::swap(&mut tr.params, &mut params);
+                std::mem::swap(&mut tr.opt, &mut opt);
+                r?;
+                rem[i] -= bs;
+                spent[i] += bs;
+                done += bs;
+            }
+        }
+
+        let mut reports = Vec::with_capacity(members.len());
+        for (w, tr) in members.iter().zip(trainers.into_iter()) {
+            let best = tr
+                .history
+                .iter()
+                .filter(|r| r.stage == 2)
+                .map(|r| r.exec_time)
+                .fold(f64::INFINITY, f64::min);
+            reports.push(WorkloadReport {
+                name: w.name.clone(),
+                episodes: tr.history.len(),
+                best_sim_ms: if best.is_finite() { best * 1e3 } else { f64::NAN },
+                history: tr.history,
+            });
+        }
+        Ok(MultiTrainResult {
+            params,
+            total_episodes: self.cfg.stages.imitation + total,
+            reports,
+        })
+    }
+}
+
+/// Greedy zero-shot deployment of a parameter blob on one graph — the
+/// Table 4 protocol: epsilon = 0, no per-graph retraining, no optimizer
+/// state. `scratch` is caller-owned so multi-workload sweeps can reuse
+/// buffers per workload (see `policy::ScratchPool`).
+pub fn zero_shot_assignment(
+    nets: &dyn PolicyBackend,
+    g: &Graph,
+    topo: &DeviceTopology,
+    n_devices: usize,
+    method: Method,
+    params: &[f32],
+    scratch: &mut EpisodeScratch,
+) -> Result<Assignment> {
+    let feats = static_features(g, topo, 1.0);
+    let variant = nets.variant_for_graph(g.n(), g.m())?;
+    let enc = GraphEncoding::build(g, &feats, nets.manifest(), &variant)?;
+    let cfg = EpisodeCfg {
+        method,
+        epsilon: 0.0,
+        n_devices,
+        per_step_encode: false,
+    };
+    // epsilon = 0 never takes the exploration branch; the stream only
+    // feeds the (deterministic) chance() draws, so any fixed seed gives
+    // the same greedy assignment
+    let mut rng = Rng::new(0x5EED);
+    Ok(run_episode_with(nets, &enc, g, topo, &feats, params, &cfg, &mut rng, scratch)?.assignment)
+}
+
+/// FNV-1a of the workload name, mixed into the base seed: per-workload
+/// RNG streams that are stable under member-list permutation (keyed by
+/// identity, not index).
+fn per_workload_seed(base: u64, name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    base ^ h
+}
+
+/// Split `total` episodes across members proportionally to `weights`:
+/// floor shares first, remainders to the largest fractional parts (ties
+/// to the lowest canonical index). Exact — the result always sums to
+/// `total` — and deterministic.
+fn split_budget(total: usize, weights: &[f64]) -> Vec<usize> {
+    let sum: f64 = weights.iter().sum();
+    if total == 0 || weights.is_empty() || sum <= 0.0 {
+        return vec![0; weights.len()];
+    }
+    let shares: Vec<f64> = weights.iter().map(|w| total as f64 * w / sum).collect();
+    let mut out: Vec<usize> = shares.iter().map(|s| s.floor() as usize).collect();
+    let mut order: Vec<usize> = (0..weights.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = shares[a] - out[a] as f64;
+        let fb = shares[b] - out[b] as f64;
+        fb.partial_cmp(&fa)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    let mut used: usize = out.iter().sum();
+    let mut k = 0;
+    while used < total {
+        out[order[k % order.len()]] += 1;
+        used += 1;
+        k += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_budget_is_exact_and_weighted() {
+        assert_eq!(split_budget(10, &[1.0, 1.0]), vec![5, 5]);
+        assert_eq!(split_budget(9, &[1.0, 1.0, 1.0]), vec![3, 3, 3]);
+        let s = split_budget(10, &[2.0, 1.0, 1.0]);
+        assert_eq!(s.iter().sum::<usize>(), 10);
+        assert_eq!(s[0], 5);
+        // remainder lands deterministically
+        let s = split_budget(7, &[1.0, 1.0, 1.0]);
+        assert_eq!(s.iter().sum::<usize>(), 7);
+        assert_eq!(s, split_budget(7, &[1.0, 1.0, 1.0]));
+        assert_eq!(split_budget(0, &[1.0, 2.0]), vec![0, 0]);
+        assert_eq!(split_budget(5, &[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn per_workload_seed_is_name_keyed() {
+        let a = per_workload_seed(7, "chainmm");
+        let b = per_workload_seed(7, "ffnn");
+        assert_ne!(a, b);
+        assert_eq!(a, per_workload_seed(7, "chainmm"));
+        assert_ne!(a, per_workload_seed(8, "chainmm"));
+    }
+
+    #[test]
+    fn workload_spec_validation() {
+        assert!(WorkloadSpec::new("chainmm", Scale::Tiny).validate().is_ok());
+        assert!(WorkloadSpec::new("synthetic-40", Scale::Tiny).validate().is_ok());
+        assert!(WorkloadSpec::new("nope", Scale::Tiny).validate().is_err());
+        assert!(WorkloadSpec::new("synthetic-3", Scale::Tiny).validate().is_err());
+        let mut w = WorkloadSpec::new("chainmm", Scale::Tiny);
+        w.topology = "nope".into();
+        assert!(w.validate().is_err());
+        let mut w = WorkloadSpec::new("chainmm", Scale::Tiny);
+        w.n_devices = 9; // p100x4 has 4
+        assert!(w.validate().is_err());
+        let mut w = WorkloadSpec::new("chainmm", Scale::Tiny);
+        w.weight = 0.0;
+        assert!(w.validate().is_err());
+    }
+
+    #[test]
+    fn workload_set_rejects_duplicates_and_leaks() {
+        assert!(WorkloadSet::from_names(
+            "dup",
+            &["chainmm", "chainmm"],
+            &[],
+            Scale::Tiny,
+            "p100x4",
+            4
+        )
+        .is_err());
+        assert!(WorkloadSet::from_names(
+            "leak",
+            &["chainmm", "ffnn"],
+            &["chainmm"],
+            Scale::Tiny,
+            "p100x4",
+            4
+        )
+        .is_err());
+        assert!(WorkloadSet::from_names("empty", &[], &[], Scale::Tiny, "p100x4", 4).is_err());
+        // duplicate *holdout* members are rejected too
+        assert!(WorkloadSet::from_names(
+            "dup-holdout",
+            &["chainmm"],
+            &["ffnn", "ffnn"],
+            Scale::Tiny,
+            "p100x4",
+            4
+        )
+        .is_err());
+    }
+}

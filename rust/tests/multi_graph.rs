@@ -1,0 +1,184 @@
+//! Multi-graph transfer training invariants (ISSUE 4 / DESIGN.md §12).
+//!
+//! The shared parameter blob must be a pure function of
+//! `(seed, workload set, budget, episode_batch)`:
+//!
+//! - **thread counts never leak** — episode generation fans out across
+//!   the rollout pool but gradient reduction happens in canonical
+//!   (round, workload, episode) order, so 1/2/4 threads produce
+//!   bit-identical params;
+//! - **member-list order never leaks** — `WorkloadSet` canonicalizes to
+//!   name-sorted order and RNG streams are keyed by workload *name*, so
+//!   permuting the manifest changes nothing.
+//!
+//! Runs entirely on the native backend: zero artifacts required.
+
+use doppler::graph::workloads::Scale;
+use doppler::policy::{Method, NativePolicy};
+use doppler::train::multi::{MultiGraphTrainer, MultiTrainCfg, WorkloadSet};
+use doppler::train::{Schedule, Stages, TrainConfig};
+
+/// Small multi-graph run on an already-built set; returns the shared
+/// blob and the per-workload episode counts.
+fn run_shared(set: &WorkloadSet, threads: usize, batch: usize) -> (Vec<f32>, Vec<usize>) {
+    let nets = NativePolicy::builtin();
+    let first = &set.train[0];
+    let mut base = TrainConfig::new(
+        Method::Doppler,
+        first.build_topology().unwrap(),
+        first.n_devices,
+    );
+    base.seed = 7;
+    base.episode_batch = batch;
+    base.rollout.threads = threads;
+    base.rollout.sim_reps = 2;
+    base.lr = Schedule {
+        start: 1e-3,
+        end: 1e-4,
+    };
+    base.epsilon = Schedule {
+        start: 0.3,
+        end: 0.05,
+    };
+    let stages = Stages {
+        imitation: 4,
+        sim_rl: 12,
+        real_rl: 0,
+    };
+    let result = MultiGraphTrainer::new(&nets, set, MultiTrainCfg { base, stages })
+        .run()
+        .unwrap();
+    let episodes = result.reports.iter().map(|r| r.episodes).collect();
+    (result.params, episodes)
+}
+
+#[test]
+fn shared_params_bit_identical_across_thread_counts() {
+    let set = WorkloadSet::builtin("tiny").unwrap();
+    let (p1, e1) = run_shared(&set, 1, 3);
+    assert_eq!(e1.iter().sum::<usize>(), 16, "budget fully spent");
+    for threads in [2usize, 4] {
+        let (p, e) = run_shared(&set, threads, 3);
+        assert_eq!(e, e1, "threads={threads}: episode split changed");
+        assert_eq!(p, p1, "threads={threads}: thread count leaked into shared params");
+    }
+}
+
+#[test]
+fn shared_params_invariant_under_workload_order_permutation() {
+    let a = WorkloadSet::from_names(
+        "a",
+        &["chainmm", "synthetic-40", "synthetic-60"],
+        &[],
+        Scale::Tiny,
+        "p100x4",
+        4,
+    )
+    .unwrap();
+    let b = WorkloadSet::from_names(
+        "b",
+        &["synthetic-60", "chainmm", "synthetic-40"],
+        &[],
+        Scale::Tiny,
+        "p100x4",
+        4,
+    )
+    .unwrap();
+    // canonical order is identical regardless of input order ...
+    let names = |s: &WorkloadSet| s.train.iter().map(|w| w.name.clone()).collect::<Vec<_>>();
+    assert_eq!(names(&a), names(&b));
+    // ... and so is the trained shared blob, bit for bit
+    let (pa, _) = run_shared(&a, 2, 2);
+    let (pb, _) = run_shared(&b, 2, 2);
+    assert_eq!(pa, pb, "workload-list permutation leaked into shared params");
+}
+
+#[test]
+fn builtin_suites_resolve_and_are_canonical() {
+    for name in WorkloadSet::BUILTIN_SUITES {
+        let s = WorkloadSet::builtin(name).unwrap();
+        assert!(s.train.len() >= 3, "{name}: needs >= 3 train workloads");
+        assert!(!s.holdout.is_empty(), "{name}: needs a holdout target");
+        let names: Vec<_> = s.train.iter().map(|w| w.name.clone()).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted, "{name}: members not in canonical order");
+        for w in s.train.iter().chain(&s.holdout) {
+            let g = w.build_graph().unwrap_or_else(|e| panic!("{name}/{}: {e}", w.name));
+            assert!(g.n() > 10, "{name}/{}", w.name);
+            let t = w.build_topology().unwrap();
+            assert_eq!(t.n(), w.n_devices, "{name}/{}", w.name);
+        }
+        // the whole point of the split: the holdout is unseen in training
+        for h in &s.holdout {
+            assert!(
+                s.train.iter().all(|w| w.name != h.name),
+                "{name}: holdout '{}' leaked into train",
+                h.name
+            );
+        }
+    }
+    assert!(WorkloadSet::builtin("nope").is_err());
+}
+
+#[test]
+fn workload_set_manifest_roundtrip() {
+    let dir = std::env::temp_dir().join("doppler_test_wset");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("workloads.json");
+    std::fs::write(
+        &path,
+        r#"{
+          "name": "custom", "topology": "p100x4", "devices": 4,
+          "train": [
+            {"workload": "ffnn", "weight": 2.0},
+            {"workload": "chainmm", "scale": "tiny"},
+            {"workload": "synthetic-80"}
+          ],
+          "holdout": [{"workload": "llama-block", "scale": "small"}]
+        }"#,
+    )
+    .unwrap();
+    let s = WorkloadSet::load(&path).unwrap();
+    assert_eq!(s.name, "custom");
+    assert_eq!(s.train.len(), 3);
+    // canonical (name-sorted) order with per-entry scale/weight applied
+    assert_eq!(s.train[0].name, "chainmm");
+    assert_eq!(s.train[0].scale, Scale::Tiny);
+    assert_eq!(s.train[1].name, "ffnn");
+    assert_eq!(s.train[1].scale, Scale::Full);
+    assert_eq!(s.train[1].weight, 2.0);
+    assert_eq!(s.train[2].name, "synthetic-80");
+    assert_eq!(s.holdout.len(), 1);
+    assert_eq!(s.holdout[0].name, "llama-block");
+    assert_eq!(s.holdout[0].scale, Scale::Small);
+    // a manifest with an unknown scale fails to resolve
+    std::fs::write(
+        &path,
+        r#"{"train": [{"workload": "ffnn", "scale": "huge"}]}"#,
+    )
+    .unwrap();
+    assert!(WorkloadSet::load(&path).is_err());
+}
+
+#[test]
+fn multi_graph_requires_sync_backend_and_no_stage3() {
+    let nets = NativePolicy::builtin();
+    let set = WorkloadSet::builtin("tiny").unwrap();
+    let first = &set.train[0];
+    let base = TrainConfig::new(
+        Method::Doppler,
+        first.build_topology().unwrap(),
+        first.n_devices,
+    );
+    // stage III in the multi budget is a config error
+    let bad = MultiTrainCfg {
+        base,
+        stages: Stages {
+            imitation: 1,
+            sim_rl: 1,
+            real_rl: 1,
+        },
+    };
+    assert!(MultiGraphTrainer::new(&nets, &set, bad).run().is_err());
+}

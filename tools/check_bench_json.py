@@ -1,0 +1,127 @@
+#!/usr/bin/env python3
+"""Schema check for the BENCH_*.json perf snapshots (ISSUE 4).
+
+The bench harnesses (benches/rollout_scaling.rs, sim_scaling.rs,
+episode_scaling.rs, table4_transfer.rs) each write a JSON snapshot at
+the repo root. CI *executes* them in smoke mode and then runs this
+check, so a harness that silently stops emitting (or emits garbage —
+NaN throughput, empty row sets, renamed keys) fails loudly instead of
+rotting.
+
+Stdlib-only (no numpy). Usage:
+
+    python3 tools/check_bench_json.py BENCH_rollout.json BENCH_sim.json ...
+
+Exit code 0 = every file matches its schema.
+"""
+
+import json
+import math
+import sys
+
+# per-bench row schema: key -> "str" | "num" | "pos" (number > 0)
+# | "num?" (number or null)
+ROW_KEYS = {
+    "rollout_scaling": {
+        "threads": "pos",
+        "episodes_per_sec": "pos",
+        "speedup_vs_1t": "pos",
+    },
+    "sim_scaling": {
+        "workload": "str",
+        "nodes": "pos",
+        "edges": "pos",
+        "engine": "str",
+        "graphs_per_sec": "pos",
+        "tasks_per_sec": "pos",
+        "ms_per_sim": "pos",
+    },
+    "episode_scaling": {
+        "nodes": "pos",
+        "threads": "pos",
+        "episodes": "pos",
+        "episodes_per_sec": "pos",
+        "ms_per_episode": "pos",
+        "speedup_vs_1t": "pos",
+    },
+    "table4_transfer": {
+        "suite": "str",
+        "holdout": "str",
+        "train_workloads": "pos",
+        "episodes": "pos",
+        "init_zero_shot_ms": "pos",
+        "shared_zero_shot_ms": "pos",
+        "full_train_ms": "num?",
+    },
+}
+
+TOP_KEYS = {"bench": "str", "source": "str"}
+
+
+def type_ok(value, kind):
+    if kind == "str":
+        return isinstance(value, str) and value != ""
+    if kind == "num?":
+        if value is None:
+            return True
+        kind = "num"
+    if not isinstance(value, (int, float)) or isinstance(value, bool):
+        return False
+    if math.isnan(value) or math.isinf(value):
+        return False
+    return value > 0 if kind == "pos" else True
+
+
+def check(path):
+    errors = []
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(doc, dict):
+        return [f"{path}: top level is not an object"]
+    for key, kind in TOP_KEYS.items():
+        if not type_ok(doc.get(key), kind):
+            errors.append(f"{path}: bad or missing top-level '{key}'")
+    bench = doc.get("bench")
+    schema = ROW_KEYS.get(bench)
+    if schema is None:
+        errors.append(f"{path}: unknown bench '{bench}' (expected {sorted(ROW_KEYS)})")
+        return errors
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        errors.append(f"{path}: 'rows' must be a non-empty list")
+        return errors
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            errors.append(f"{path}: rows[{i}] is not an object")
+            continue
+        for key, kind in schema.items():
+            if key not in row:
+                errors.append(f"{path}: rows[{i}] missing '{key}'")
+            elif not type_ok(row[key], kind):
+                errors.append(f"{path}: rows[{i}].{key} = {row[key]!r} fails '{kind}'")
+    return errors
+
+
+def main(argv):
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    failed = False
+    for path in argv[1:]:
+        errors = check(path)
+        if errors:
+            failed = True
+            for e in errors:
+                print(f"FAIL  {e}")
+        else:
+            with open(path) as f:
+                n = len(json.load(f)["rows"])
+            print(f"ok    {path} ({n} rows)")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
