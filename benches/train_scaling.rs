@@ -1,0 +1,187 @@
+//! Native train-step throughput: Stage II updates/sec as rollout worker
+//! threads grow, sequential vs accumulate update mode (ISSUE 5 /
+//! DESIGN.md §13).
+//!
+//! Since PR 3/4 episode *generation* scales with cores but every
+//! sequential `loss_and_grads` + Adam step runs on the leader thread —
+//! the ROADMAP's top perf item. Accumulate mode computes per-episode
+//! gradients in parallel from one parameter snapshot (sharing the
+//! batch-invariant encoder forward), reduces them order-canonically,
+//! and applies ONE clipped Adam step per batch. An "update" here is one
+//! episode's trajectory applied to the optimizer, so the two modes are
+//! directly comparable; the whole Stage II loop (generation + rewards +
+//! updates) is timed, because that is the wall clock training actually
+//! pays.
+//!
+//! Acceptance target: accumulate >= 2x updates/sec at 4 threads vs
+//! sequential at 4 threads (needs >= 4 physical cores; smoke mode
+//! merely validates the harness + schema).
+//!
+//! The bench also *asserts* the determinism contract: accumulate-mode
+//! parameters must be bit-identical at every measured thread count.
+//!
+//! Writes BENCH_train.json at the repo root. Knobs:
+//! DOPPLER_TRAIN_BENCH_EPISODES (per cell, default 24),
+//! DOPPLER_TRAIN_BENCH_NODES (default 300), DOPPLER_TRAIN_BENCH_BATCH
+//! (default 8), DOPPLER_TRAIN_BENCH_THREADS (default 1,2,4,8);
+//! DOPPLER_BENCH_SMOKE / --smoke shrinks everything for CI.
+
+use std::time::Instant;
+
+use doppler::bench_util::{banner, smoke_mode};
+use doppler::eval::tables::Table;
+use doppler::graph::workloads::synthetic_layered;
+use doppler::policy::{Method, NativePolicy};
+use doppler::rollout;
+use doppler::sim::topology::DeviceTopology;
+use doppler::train::{Schedule, TrainConfig, Trainer, UpdateMode};
+use doppler::util::json::{self, Json};
+use doppler::util::env_usize;
+
+const OUT_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_train.json");
+
+fn main() {
+    banner(
+        "Train-step scaling — sequential vs accumulate update mode",
+        "ISSUE 5 perf target (batched policy-gradient updates; cf. Mirhoseini et al. / GDP)",
+    );
+    let smoke = smoke_mode();
+    let episodes = env_usize("DOPPLER_TRAIN_BENCH_EPISODES", if smoke { 8 } else { 24 }).max(2);
+    let nodes = env_usize("DOPPLER_TRAIN_BENCH_NODES", if smoke { 60 } else { 300 });
+    let batch = env_usize("DOPPLER_TRAIN_BENCH_BATCH", if smoke { 4 } else { 8 }).max(1);
+    let threads_list: Vec<usize> = match std::env::var("DOPPLER_TRAIN_BENCH_THREADS") {
+        Ok(v) if !v.is_empty() => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        _ if smoke => vec![1, 2],
+        _ => vec![1, 2, 4, 8],
+    };
+
+    let nets = NativePolicy::builtin();
+    let g = synthetic_layered(nodes, 7);
+    let topo = doppler::eval::restrict(&DeviceTopology::v100x8(), 4);
+
+    let run = |mode: UpdateMode, threads: usize| -> (f64, Vec<f32>) {
+        let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+        cfg.seed = 1;
+        cfg.episode_batch = batch;
+        cfg.update_mode = mode;
+        cfg.rollout.threads = threads;
+        cfg.rollout.sim_reps = 2;
+        cfg.lr = Schedule {
+            start: 1e-3,
+            end: 1e-4,
+        };
+        let mut trainer = Trainer::new(&nets, &g, topo.clone(), cfg).expect("trainer");
+        let t0 = Instant::now();
+        trainer.stage2_sim(episodes).expect("stage2");
+        let secs = t0.elapsed().as_secs_f64().max(1e-12);
+        assert_eq!(trainer.history.len(), episodes);
+        (episodes as f64 / secs, trainer.params.clone())
+    };
+
+    let mut table = Table::new(
+        "native Stage II update throughput (higher is better)",
+        &["MODE", "THREADS", "EPISODES", "BATCH", "UPDATES/S", "MS/UPDATE", "SPEEDUP"],
+    );
+
+    let mut rows: Vec<Json> = Vec::new();
+    // speedup baseline: the sequential run at the FIRST measured thread
+    // count (1 under the default thread list; DOPPLER_TRAIN_BENCH_THREADS
+    // can start elsewhere, hence "base", not "1t")
+    let mut seq_base = 0.0f64;
+    let mut seq_4t: Option<f64> = None;
+    let mut acc_4t: Option<f64> = None;
+    for mode in [UpdateMode::Sequential, UpdateMode::Accumulate] {
+        let mode_name = match mode {
+            UpdateMode::Sequential => "sequential",
+            UpdateMode::Accumulate => "accumulate",
+        };
+        // warmup + determinism pin: the trained parameters are a pure
+        // function of (seed, batch, mode) — never of the thread count
+        let mut reference: Option<Vec<f32>> = None;
+        for &threads in &threads_list {
+            let (_, params) = run(mode, threads);
+            match &reference {
+                None => reference = Some(params),
+                Some(r) => assert_eq!(
+                    r, &params,
+                    "{mode_name}: thread count {threads} leaked into trained params"
+                ),
+            }
+        }
+        for &threads in &threads_list {
+            let (ups, _) = run(mode, threads);
+            if mode == UpdateMode::Sequential && threads == threads_list[0] {
+                seq_base = ups;
+            }
+            if threads == 4 {
+                match mode {
+                    UpdateMode::Sequential => seq_4t = Some(ups),
+                    UpdateMode::Accumulate => acc_4t = Some(ups),
+                }
+            }
+            let speedup = ups / seq_base.max(1e-12);
+            table.row(vec![
+                mode_name.to_string(),
+                threads.to_string(),
+                episodes.to_string(),
+                batch.to_string(),
+                format!("{ups:.2}"),
+                format!("{:.2}", 1e3 / ups),
+                format!("{speedup:.2}x"),
+            ]);
+            rows.push(json::obj(vec![
+                ("mode", json::s(mode_name)),
+                ("threads", json::num(threads as f64)),
+                ("episodes", json::num(episodes as f64)),
+                ("episode_batch", json::num(batch as f64)),
+                ("updates_per_sec", json::num(ups)),
+                ("ms_per_update", json::num(1e3 / ups)),
+                ("speedup_vs_seq_base", json::num(speedup)),
+            ]));
+        }
+    }
+    table.emit(Some(std::path::Path::new("runs/train_scaling.csv")));
+
+    // null (not 0.0) when the 4-thread cells were not measured (smoke)
+    let speedup_4t = match (acc_4t, seq_4t) {
+        (Some(a), Some(s)) if s > 0.0 => json::num(a / s),
+        _ => Json::Null,
+    };
+    let doc = json::obj(vec![
+        ("bench", json::s("train_scaling")),
+        ("source", json::s("cargo bench --bench train_scaling")),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        (
+            "config",
+            json::s(
+                "native backend, DOPPLER method, Stage II loop (generation + rewards + \
+                 updates), v100x8 restricted to 4 devices",
+            ),
+        ),
+        ("workload", json::s(&g.name)),
+        ("nodes", json::num(g.n() as f64)),
+        ("edges", json::num(g.m() as f64)),
+        ("episodes_per_cell", json::num(episodes as f64)),
+        ("episode_batch", json::num(batch as f64)),
+        ("host_threads", json::num(rollout::available_threads() as f64)),
+        ("speedup_accumulate_vs_sequential_4t", speedup_4t),
+        ("target_speedup_4t", json::num(2.0)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(OUT_JSON, doc.to_string() + "\n").expect("writing BENCH_train.json");
+    println!("[perf snapshot written to {OUT_JSON}]");
+
+    if let (Some(a), Some(s)) = (acc_4t, seq_4t) {
+        let x = a / s;
+        println!(
+            "accumulate vs sequential at 4 threads: {x:.2}x {}",
+            if x >= 2.0 {
+                "-- meets the >= 2x acceptance target"
+            } else if rollout::available_threads() < 4 {
+                "-- below target, but this host has < 4 cores (target needs >= 4)"
+            } else {
+                "-- BELOW the >= 2x acceptance target"
+            }
+        );
+    }
+}

@@ -20,6 +20,14 @@
 //!               --episode-batch B  Stage II episodes sampled per
 //!                   parameter snapshot (semantic knob; batches fan out
 //!                   across workers with the native backend; default 1)
+//!               --update-mode {sequential|accumulate}  how a Stage II
+//!                   batch's updates hit the optimizer (DESIGN.md §13):
+//!                   sequential (default) applies one clipped Adam step
+//!                   per episode; accumulate fans per-episode gradients
+//!                   across the worker pool from one parameter snapshot,
+//!                   reduces them order-canonically, and applies ONE
+//!                   Adam step per batch (native backend; PJRT keeps the
+//!                   sequential leader-thread fallback)
 //!               --rollout-threads N  simulation worker threads
 //!                   (default: DOPPLER_ROLLOUT_THREADS, else all cores;
 //!                   results are identical at any thread count — see
@@ -95,6 +103,10 @@ const HELP: &str = "doppler — dual-policy device assignment (paper reproductio
     --episode-batch B     Stage II episodes per parameter snapshot
                           (batches fan out across workers with the native
                           backend; semantic knob, default 1)
+    --update-mode M       {sequential|accumulate} optimizer stepping:
+                          per episode (default) or one accumulated step
+                          per batch (parallel gradient accumulation on
+                          the native backend — DESIGN.md §13)
     --rollout-threads N   simulation worker threads (default:
                           DOPPLER_ROLLOUT_THREADS, else all cores;
                           deterministic: any thread count, same results)
@@ -122,6 +134,16 @@ fn rollout_cfg(args: &Args) -> doppler::rollout::RolloutCfg {
         .usize_or("sim-reps", doppler::rollout::DEFAULT_SIM_REPS)
         .max(1);
     ro
+}
+
+/// Parse `--update-mode` (default: the paper-faithful sequential loop;
+/// accumulate is a semantic knob — one optimizer step per batch — with
+/// its own determinism pins, DESIGN.md §13).
+fn update_mode(args: &Args) -> Result<doppler::train::UpdateMode> {
+    let s = args.str_or("update-mode", "sequential");
+    doppler::train::UpdateMode::parse(&s).with_context(|| {
+        format!("unknown --update-mode '{s}' (expected sequential|accumulate)")
+    })
 }
 
 /// Parse `--sim-engine` (default: the incremental fast path; results are
@@ -259,6 +281,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.seed = args.u64_or("seed", 0);
     cfg.rollout = rollout_cfg(args);
     cfg.episode_batch = args.usize_or("episode-batch", 1).max(1);
+    cfg.update_mode = update_mode(args)?;
     cfg.sim.engine = sim_engine(args)?;
     cfg.engine_reps = args.usize_or("engine-reps", cfg.engine_reps).max(1);
     let budget = args.usize_or("episodes", 400);
@@ -333,6 +356,7 @@ fn cmd_train_multi(args: &Args) -> Result<()> {
     // batched Stage II is the multi-graph default: one batch per
     // workload per round keeps the interleave coarse enough to amortize
     base.episode_batch = args.usize_or("episode-batch", 4).max(1);
+    base.update_mode = update_mode(args)?;
     base.sim.engine = sim_engine(args)?;
     let budget = args.usize_or("episodes", 400);
     base.scale_to_budget(budget);

@@ -15,5 +15,5 @@ pub use episode::{
 pub use native::NativePolicy;
 pub use nets::{
     load_backend, load_default_backend, BackendKind, EpisodeCache, Method, OptState,
-    PolicyBackend, PolicyNets,
+    PolicyBackend, PolicyNets, TrainItem,
 };

@@ -35,7 +35,7 @@ use crate::util::rng::Rng;
 
 use super::encoding::GraphEncoding;
 use super::episode::Trajectory;
-use super::nets::{EpisodeCache, Method, OptState, PolicyBackend};
+use super::nets::{EpisodeCache, Method, OptState, PolicyBackend, TrainItem};
 
 /// Masked-logit sentinel (model.py `NEG`).
 pub const NEG: f32 = -1e9;
@@ -700,13 +700,91 @@ impl NativePolicy {
         advantage: f32,
         entropy_w: f32,
     ) -> Result<(f32, f32, Vec<f32>)> {
+        let mut grads = vec![0.0f32; self.layout.total];
+        let (loss, ent) = self.loss_and_grads_into(
+            method, enc, params, traj, dev_mask, advantage, entropy_w, &mut grads,
+        )?;
+        Ok((loss, ent, grads))
+    }
+
+    /// [`Self::loss_and_grads`] writing into a caller-owned gradient
+    /// buffer (`grads` is zeroed inside, then accumulated into). This is
+    /// the allocation-lean hot path of the batched train step: each
+    /// rollout worker reuses one row of the per-batch gradient matrix
+    /// instead of allocating a fresh `vec![0.0; layout.total]` per
+    /// episode.
+    #[allow(clippy::too_many_arguments)]
+    pub fn loss_and_grads_into(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &[f32],
+        traj: &Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        entropy_w: f32,
+        grads: &mut [f32],
+    ) -> Result<(f32, f32)> {
+        anyhow::ensure!(
+            params.len() == self.layout.total,
+            "param blob len {} != layout {}",
+            params.len(),
+            self.layout.total
+        );
+        let (tr, x_sel, q) = self.episode_forward(method, enc, params);
+        self.backward_from_forward(
+            method, enc, params, &tr, &x_sel, &q, traj, dev_mask, advantage, entropy_w, grads,
+        )
+    }
+
+    /// The trajectory-independent forward half of an episode's train
+    /// step: encoder trace plus (for the dual policy) SEL activations
+    /// and scores. Pure in `(params, enc)`, so a batch sampling from one
+    /// parameter snapshot computes it ONCE and shares it across every
+    /// episode's backward ([`Self::train_batch_step`]) — the SEL head
+    /// only contributes for the dual policy; Placeto/GDP skip the
+    /// n×sel_in×H pass entirely.
+    fn episode_forward(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &[f32],
+    ) -> (EncodeTrace, Vec<f32>, Vec<f32>) {
+        let tr = self.encode_trace(enc, params);
+        let (x_sel, q) = if method == Method::Doppler {
+            self.sel_forward(params, &tr.hcat, enc.n)
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        (tr, x_sel, q)
+    }
+
+    /// Replay one trajectory through the heads and accumulate the full
+    /// analytic parameter gradient into `grads` (zeroed here), given the
+    /// precomputed [`Self::episode_forward`] activations. Returns
+    /// `(loss, mean entropy)`.
+    #[allow(clippy::too_many_arguments)]
+    fn backward_from_forward(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &[f32],
+        tr: &EncodeTrace,
+        x_sel: &[f32],
+        q: &[f32],
+        traj: &Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        entropy_w: f32,
+        grads: &mut [f32],
+    ) -> Result<(f32, f32)> {
         let l = &self.layout;
         let (h, si, m, df, nf) = (l.h, l.sel_in, l.m, l.df, l.nf);
         let n = enc.n;
         anyhow::ensure!(
-            params.len() == l.total,
-            "param blob len {} != layout {}",
-            params.len(),
+            grads.len() == l.total,
+            "grad buffer len {} != layout {}",
+            grads.len(),
             l.total
         );
         anyhow::ensure!(
@@ -715,22 +793,13 @@ impl NativePolicy {
             traj.sel_actions.len(),
             n
         );
-
-        let tr = self.encode_trace(enc, params);
+        grads.fill(0.0);
         let hcat = &tr.hcat;
-        // SEL head only contributes for the dual policy; Placeto/GDP
-        // train steps skip the n×sel_in×H pass entirely
-        let (x_sel, q) = if method == Method::Doppler {
-            self.sel_forward(params, hcat, n)
-        } else {
-            (Vec::new(), Vec::new())
-        };
 
         let steps: f32 = traj.step_mask.iter().sum::<f32>().max(1.0);
         let dlogp_w = -advantage / steps;
         let dent_w = -entropy_w / steps;
 
-        let mut grads = vec![0.0f32; l.total];
         let mut dhcat = vec![0.0f32; n * si];
         let mut dq = vec![0.0f32; n];
         let mut logp_total = 0.0f32;
@@ -1254,7 +1323,30 @@ impl NativePolicy {
             grads[l.enc_b0 + j] += s2;
         }
 
-        Ok((loss, ent_avg, grads))
+        Ok((loss, ent_avg))
+    }
+
+    /// Global-norm clip at 1.0 + one Adam update in place (model.py
+    /// `adam_update` semantics) — the shared tail of the per-episode
+    /// [`Self::train_step`] and the batched [`Self::train_batch_step`];
+    /// the only difference between the two modes is what gradient
+    /// reaches this step.
+    fn clipped_adam_step(&self, params: &mut [f32], opt: &mut OptState, grads: &[f32], lr: f32) {
+        let gnorm = (grads.iter().map(|g| g * g).sum::<f32>() + 1e-12).sqrt();
+        let scale = 1.0f32.min(1.0 / gnorm);
+        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
+        let t_new = opt.t + 1.0;
+        let bc1 = 1.0 - b1.powf(t_new);
+        let bc2 = 1.0 - b2.powf(t_new);
+        for i in 0..params.len() {
+            let g = grads[i] * scale;
+            opt.m[i] = b1 * opt.m[i] + (1.0 - b1) * g;
+            opt.v[i] = b2 * opt.v[i] + (1.0 - b2) * g * g;
+            let mhat = opt.m[i] / bc1;
+            let vhat = opt.v[i] / bc2;
+            params[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+        opt.t = t_new;
     }
 
     /// One train step: loss + analytic gradient, global-norm clip at 1.0,
@@ -1275,23 +1367,118 @@ impl NativePolicy {
         let (loss, ent, grads) =
             self.loss_and_grads(method, enc, params, traj, dev_mask, advantage, entropy_w)?;
         anyhow::ensure!(loss.is_finite(), "native train step produced non-finite loss");
-
-        let gnorm = (grads.iter().map(|g| g * g).sum::<f32>() + 1e-12).sqrt();
-        let scale = 1.0f32.min(1.0 / gnorm);
-        let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
-        let t_new = opt.t + 1.0;
-        let bc1 = 1.0 - b1.powf(t_new);
-        let bc2 = 1.0 - b2.powf(t_new);
-        for i in 0..params.len() {
-            let g = grads[i] * scale;
-            opt.m[i] = b1 * opt.m[i] + (1.0 - b1) * g;
-            opt.v[i] = b2 * opt.v[i] + (1.0 - b2) * g * g;
-            let mhat = opt.m[i] / bc1;
-            let vhat = opt.v[i] / bc2;
-            params[i] -= lr * mhat / (vhat.sqrt() + eps);
-        }
-        opt.t = t_new;
+        self.clipped_adam_step(params, opt, &grads, lr);
         Ok((loss, ent))
+    }
+
+    /// Batched REINFORCE update — accumulate mode (DESIGN.md §13): every
+    /// item's `loss_and_grads` runs against the SAME parameter snapshot,
+    /// fanned across the deterministic worker pool
+    /// (`rollout::parallel_map`) into its own row of one per-batch
+    /// gradient matrix (one allocation per batch, not per episode); the
+    /// rows are then reduced by [`reduce_gradients`] and ONE clipped
+    /// Adam step is applied for the whole batch.
+    ///
+    /// Determinism: row `i` is written only by whichever worker pulls
+    /// index `i`, and the reduction is a pure function of the multiset
+    /// of per-episode gradients, so the updated `params`/`opt` are
+    /// bit-identical at any thread count AND under any permutation of
+    /// `items` (pinned by `tests/train_accumulate.rs`).
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_batch_step(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        items: &[TrainItem<'_>],
+        dev_mask: &[f32],
+        lr: f32,
+        entropy_w: f32,
+        threads: usize,
+    ) -> Result<Vec<(f32, f32)>> {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let total = self.layout.total;
+        let bs = items.len();
+        let snapshot: &[f32] = &params[..];
+        anyhow::ensure!(
+            snapshot.len() == total,
+            "param blob len {} != layout {}",
+            snapshot.len(),
+            total
+        );
+        // the whole batch samples from one snapshot, so the encoder
+        // trace and SEL scores are batch-invariant: run that forward
+        // ONCE and share it across every episode's backward (sequential
+        // mode replays it per episode)
+        let (tr, x_sel, q) = self.episode_forward(method, enc, snapshot);
+        let mut grad_mat = vec![0.0f32; bs * total];
+        let stats: Vec<Result<(f32, f32)>> = {
+            let rows: Vec<std::sync::Mutex<&mut [f32]>> =
+                grad_mat.chunks_mut(total).map(std::sync::Mutex::new).collect();
+            crate::rollout::parallel_map(threads, bs, |i| {
+                // uncontended by construction: each index is pulled once
+                let mut row = rows[i].lock().expect("gradient row lock poisoned");
+                self.backward_from_forward(
+                    method,
+                    enc,
+                    snapshot,
+                    &tr,
+                    &x_sel,
+                    &q,
+                    items[i].traj,
+                    dev_mask,
+                    items[i].advantage,
+                    entropy_w,
+                    &mut **row,
+                )
+            })
+        };
+        let mut out = Vec::with_capacity(bs);
+        for (i, s) in stats.into_iter().enumerate() {
+            let (loss, ent) = s?;
+            anyhow::ensure!(
+                loss.is_finite(),
+                "batched train step: episode {i} produced non-finite loss"
+            );
+            out.push((loss, ent));
+        }
+        let mut reduced = vec![0.0f32; total];
+        reduce_gradients(&grad_mat, bs, total, &mut reduced);
+        self.clipped_adam_step(params, opt, &reduced, lr);
+        Ok(out)
+    }
+}
+
+/// Reduce `bs` per-episode gradient rows into `out`: for every parameter
+/// the contributions are sorted by IEEE 754 total order
+/// (`f32::total_cmp`) and summed in that order. f32 addition is not
+/// associative, so a fixed *positional* order would be thread-invariant
+/// but not permutation-invariant; sorting by value first makes the
+/// reduction a pure function of the **multiset** of per-episode
+/// gradients — the accumulate-mode determinism contract (DESIGN.md §13)
+/// covers both. Cost is `total · bs log bs` comparisons on an
+/// L2-resident matrix, noise next to one backward pass.
+fn reduce_gradients(grad_mat: &[f32], bs: usize, total: usize, out: &mut [f32]) {
+    debug_assert_eq!(grad_mat.len(), bs * total);
+    debug_assert_eq!(out.len(), total);
+    if bs == 1 {
+        out.copy_from_slice(grad_mat);
+        return;
+    }
+    let mut buf = vec![0.0f32; bs];
+    for (k, o) in out.iter_mut().enumerate() {
+        for (i, b) in buf.iter_mut().enumerate() {
+            *b = grad_mat[i * total + k];
+        }
+        buf.sort_by(f32::total_cmp);
+        let mut s = 0.0f32;
+        for v in &buf {
+            s += v;
+        }
+        *o = s;
     }
 }
 
@@ -1431,6 +1618,23 @@ impl PolicyBackend for NativePolicy {
         self.train_step(method, enc, params, opt, traj, dev_mask, advantage, lr, entropy_w)
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn train_batch(
+        &self,
+        method: Method,
+        _variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        items: &[TrainItem<'_>],
+        dev_mask: &[f32],
+        lr: f32,
+        entropy_w: f32,
+        threads: usize,
+    ) -> Result<Vec<(f32, f32)>> {
+        self.train_batch_step(method, enc, params, opt, items, dev_mask, lr, entropy_w, threads)
+    }
+
     fn as_sync(&self) -> Option<&(dyn PolicyBackend + Sync)> {
         Some(self)
     }
@@ -1477,6 +1681,44 @@ mod tests {
         let p2 = logp[2].exp();
         assert!((p0 + p2 - 1.0).abs() < 1e-6);
         assert!(plogp <= 0.0 && plogp.is_finite());
+    }
+
+    #[test]
+    fn reduce_gradients_is_permutation_invariant() {
+        // three "episodes" of four parameters each, values chosen so a
+        // positional f32 sum differs across orders (catastrophic
+        // cancellation + a tiny term)
+        let total = 4;
+        let rows = [
+            [1.0e8f32, 1.0, -0.0, 3.5],
+            [1.0f32, -1.0e8, 0.0, -2.5],
+            [-1.0e8f32, 1.0e-3, 42.0, 0.25],
+        ];
+        let flat = |order: &[usize]| -> Vec<f32> {
+            order.iter().flat_map(|&i| rows[i]).collect()
+        };
+        let mut want = vec![0.0f32; total];
+        reduce_gradients(&flat(&[0, 1, 2]), 3, total, &mut want);
+        for order in [[1, 0, 2], [2, 1, 0], [0, 2, 1], [2, 0, 1], [1, 2, 0]] {
+            let mut got = vec![0.0f32; total];
+            reduce_gradients(&flat(&order), 3, total, &mut got);
+            let (wb, gb): (Vec<u32>, Vec<u32>) = (
+                want.iter().map(|v| v.to_bits()).collect(),
+                got.iter().map(|v| v.to_bits()).collect(),
+            );
+            assert_eq!(gb, wb, "order {order:?} changed the reduced gradient bits");
+        }
+        // and the value is the actual sum where it is exact
+        assert_eq!(want[2], 42.0);
+        assert_eq!(want[3], 1.25);
+    }
+
+    #[test]
+    fn reduce_gradients_single_row_is_identity() {
+        let row = [0.5f32, -1.25, 0.0, 7.0];
+        let mut out = vec![0.0f32; 4];
+        reduce_gradients(&row, 1, 4, &mut out);
+        assert_eq!(out, row);
     }
 
     #[test]

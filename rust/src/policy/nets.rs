@@ -72,6 +72,14 @@ impl OptState {
     }
 }
 
+/// One episode's contribution to a batched update
+/// ([`PolicyBackend::train_batch`]): the recorded trajectory plus the
+/// advantage the caller computed for it (baselines live in the trainer).
+pub struct TrainItem<'a> {
+    pub traj: &'a Trajectory,
+    pub advantage: f32,
+}
+
 /// Per-episode backend state, created once by
 /// [`PolicyBackend::begin_episode`] and threaded through the hot-loop
 /// head calls. PJRT caches episode-constant argument literals (params,
@@ -180,6 +188,53 @@ pub trait PolicyBackend {
         lr: f32,
         entropy_w: f32,
     ) -> Result<(f32, f32)>;
+
+    /// One batched update over a whole episode batch: ONE optimizer step
+    /// for all `items`, with per-episode gradients computed from the
+    /// same `params` snapshot and reduced order-canonically (accumulate
+    /// mode, DESIGN.md §13). Returns per-item `(loss, entropy)`.
+    ///
+    /// The default implementation is the leader-thread fallback for
+    /// backends without gradient access (PJRT): sequential per-item
+    /// [`PolicyBackend::train`] calls — one optimizer step per
+    /// *episode*, each at the single `lr` passed for the batch. That is
+    /// neither pinned mode: sequential-mode training decays lr per
+    /// episode (`lr.at(start + j)`), accumulate-mode steps once per
+    /// batch. It coincides with both only for single-item batches. The
+    /// native backend overrides this with the parallel
+    /// gradient-accumulation path.
+    #[allow(clippy::too_many_arguments)]
+    fn train_batch(
+        &self,
+        method: Method,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        items: &[TrainItem<'_>],
+        dev_mask: &[f32],
+        lr: f32,
+        entropy_w: f32,
+        threads: usize,
+    ) -> Result<Vec<(f32, f32)>> {
+        let _ = threads; // fallback is leader-thread-only by definition
+        let mut out = Vec::with_capacity(items.len());
+        for it in items {
+            out.push(self.train(
+                method,
+                variant,
+                enc,
+                params,
+                opt,
+                it.traj,
+                dev_mask,
+                it.advantage,
+                lr,
+                entropy_w,
+            )?);
+        }
+        Ok(out)
+    }
 
     /// A `Sync` view of this backend for parallel episode fan-out, or
     /// `None` when the backend is leader-thread-only (PJRT).

@@ -237,18 +237,26 @@ pub fn mean_exec_time(
 /// replicate)` simulation as one work unit — stream key `e * reps + r` —
 /// and reduce each episode's replicates in order. Returns one mean
 /// `ExecTime` reward per episode.
-pub fn episode_rewards(
+///
+/// Generic over `Borrow<Assignment>` so callers can pass either owned
+/// assignments (`&[Assignment]`) or borrowed ones (`&[&Assignment]`,
+/// what the trainer's batched path does) without cloning a batch of
+/// `Vec<DeviceId>` per round.
+pub fn episode_rewards<A>(
     g: &Graph,
-    assignments: &[Assignment],
+    assignments: &[A],
     cfg: &SimConfig,
     base: &mut Rng,
     reps: usize,
     threads: usize,
-) -> Vec<f64> {
+) -> Vec<f64>
+where
+    A: std::borrow::Borrow<Assignment> + Sync,
+{
     let reps = reps.max(1);
     let makespans = parallel_map_rng(threads, base, assignments.len() * reps, |u, rng| {
         let e = u / reps;
-        simulate(g, &assignments[e], cfg, rng).makespan
+        simulate(g, assignments[e].borrow(), cfg, rng).makespan
     });
     makespans
         .chunks(reps)

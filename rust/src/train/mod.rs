@@ -20,7 +20,7 @@ use crate::features::{static_features, StaticFeatures};
 use crate::graph::{Assignment, Graph};
 use crate::policy::{
     run_episode_with, EpisodeCfg, EpisodeResult, EpisodeScratch, GraphEncoding, Method, OptState,
-    PolicyBackend, Trajectory,
+    PolicyBackend, TrainItem, Trajectory,
 };
 use crate::sim::topology::DeviceTopology;
 use crate::sim::SimConfig;
@@ -40,6 +40,36 @@ impl Schedule {
         }
         let f = i as f64 / (total - 1) as f64;
         self.start + (self.end - self.start) * f
+    }
+}
+
+/// How Stage II episode updates reach the optimizer
+/// (`--update-mode`, DESIGN.md §13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UpdateMode {
+    /// One clipped Adam step per episode, applied in episode order —
+    /// the paper-faithful REINFORCE loop and the default, so every
+    /// existing golden pin stays byte-stable.
+    Sequential,
+    /// One clipped Adam step per `episode_batch`: per-episode gradients
+    /// are computed in parallel from one parameter snapshot and reduced
+    /// order-canonically before a single optimizer step
+    /// ([`PolicyBackend::train_batch`]). **Intentionally different
+    /// numerics** from `Sequential` (fewer, larger steps; `opt.t` counts
+    /// batches, not episodes) — but deterministic in `(seed,
+    /// episode_batch)` and invariant under thread count and within-batch
+    /// episode permutation. Requires a backend with gradient access
+    /// (native); PJRT keeps its leader-thread sequential fallback.
+    Accumulate,
+}
+
+impl UpdateMode {
+    pub fn parse(s: &str) -> Option<UpdateMode> {
+        match s {
+            "sequential" => Some(UpdateMode::Sequential),
+            "accumulate" => Some(UpdateMode::Accumulate),
+            _ => None,
+        }
     }
 }
 
@@ -118,6 +148,10 @@ pub struct TrainConfig {
     /// params each episode samples from); results are deterministic in
     /// `(seed, episode_batch)` and independent of thread count.
     pub episode_batch: usize,
+    /// How a Stage II batch's updates hit the optimizer: one Adam step
+    /// per episode (`Sequential`, default) or one per batch
+    /// (`Accumulate` — parallel gradient accumulation, DESIGN.md §13).
+    pub update_mode: UpdateMode,
     /// Real-engine executions averaged per Stage III reward.
     pub engine_reps: usize,
 }
@@ -168,6 +202,7 @@ impl TrainConfig {
             force_teacher_plc: false,
             rollout: crate::rollout::RolloutCfg::serial(),
             episode_batch: 1,
+            update_mode: UpdateMode::Sequential,
             engine_reps: 1,
         }
     }
@@ -356,6 +391,33 @@ impl<'a> Trainer<'a> {
         self.apply_update(i, total, stage, ep, t)
     }
 
+    /// Baseline/advantage bookkeeping plus best-assignment tracking for
+    /// one observed episode reward; returns the advantage. Shared by the
+    /// sequential per-episode update and the accumulate-mode batch so
+    /// the two modes see bit-identical advantages for identical episode
+    /// streams — they differ only in how gradients reach the optimizer.
+    fn observe_reward(&mut self, stage: u8, assignment: &Assignment, t: f64) -> f32 {
+        // reward baseline (paper §4.1 uses the mean over past episodes;
+        // an exponential moving average tracks the improving policy
+        // better on short budgets)
+        self.baseline_n += 1;
+        if self.baseline_n == 1 {
+            self.baseline = t;
+        } else {
+            let alpha = 0.05f64.max(1.0 / self.baseline_n as f64);
+            self.baseline += alpha * (t - self.baseline);
+        }
+        if self.best.as_ref().map_or(true, |(_, bt)| t < *bt) {
+            self.best = Some((assignment.clone(), t));
+        }
+        let sb = self.stage_bests.entry(stage).or_insert_with(|| (assignment.clone(), t));
+        if t < sb.1 {
+            *sb = (assignment.clone(), t);
+        }
+        // reward r = -t; advantage = (baseline - t) / norm
+        ((self.baseline - t) / self.enc.norm) as f32
+    }
+
     /// Shared reward-to-update tail: baseline/advantage bookkeeping,
     /// best-assignment tracking, one train step, one history row. Used by
     /// both the sequential episode loop and batched Stage II.
@@ -368,26 +430,7 @@ impl<'a> Trainer<'a> {
         t: f64,
     ) -> Result<()> {
         let lr = self.cfg.lr.at(i, total) as f32;
-        // reward baseline (paper §4.1 uses the mean over past episodes;
-        // an exponential moving average tracks the improving policy
-        // better on short budgets)
-        self.baseline_n += 1;
-        if self.baseline_n == 1 {
-            self.baseline = t;
-        } else {
-            let alpha = 0.05f64.max(1.0 / self.baseline_n as f64);
-            self.baseline += alpha * (t - self.baseline);
-        }
-        // reward r = -t; advantage = (baseline - t) / norm
-        let advantage = ((self.baseline - t) / self.enc.norm) as f32;
-
-        if self.best.as_ref().map_or(true, |(_, bt)| t < *bt) {
-            self.best = Some((ep.assignment.clone(), t));
-        }
-        let sb = self.stage_bests.entry(stage).or_insert_with(|| (ep.assignment.clone(), t));
-        if t < sb.1 {
-            *sb = (ep.assignment.clone(), t);
-        }
+        let advantage = self.observe_reward(stage, &ep.assignment, t);
 
         let (loss, ent) = self.nets.train(
             self.cfg.method,
@@ -531,7 +574,19 @@ impl<'a> Trainer<'a> {
     /// order. `episode_batch = 1` (default) is the paper-faithful
     /// sequential loop; the PJRT backend always uses it.
     pub fn stage2_sim(&mut self, episodes: usize) -> Result<()> {
-        if self.cfg.episode_batch > 1 && !self.cfg.force_teacher_sel && !self.cfg.force_teacher_plc
+        let accumulate = self.cfg.update_mode == UpdateMode::Accumulate;
+        if accumulate {
+            // the ablated (teacher-forced) episode path is leader-only
+            // and inherently sequential; accumulate mode over it would
+            // silently mean something else
+            anyhow::ensure!(
+                !self.cfg.force_teacher_sel && !self.cfg.force_teacher_plc,
+                "accumulate update mode does not support teacher-forcing ablations"
+            );
+        }
+        if (self.cfg.episode_batch > 1 || accumulate)
+            && !self.cfg.force_teacher_sel
+            && !self.cfg.force_teacher_plc
         {
             let nets = self.nets;
             if let Some(sync) = nets.as_sync() {
@@ -543,6 +598,9 @@ impl<'a> Trainer<'a> {
                 }
                 return Ok(());
             }
+            // no Sync view (PJRT): keep the leader-thread sequential
+            // loop — the documented accumulate-mode fallback for
+            // backends without gradient access (DESIGN.md §13)
         }
         let sim_cfg = self.cfg.sim.clone();
         let g = self.g;
@@ -561,10 +619,12 @@ impl<'a> Trainer<'a> {
     /// [`multi::MultiGraphTrainer`] (multi-graph interleaving): generate
     /// `bs` episodes for global schedule indices `start..start + bs` of
     /// `total` from the current parameter snapshot across the worker
-    /// pool, score them with the parallel reward evaluator, then apply
-    /// the train steps in episode order. Schedule indices are explicit
-    /// so an interleaved multi-graph run decays lr/epsilon over the
-    /// *global* episode count, not per workload.
+    /// pool, score them with the parallel reward evaluator, then update:
+    /// sequentially in episode order (`UpdateMode::Sequential`, one
+    /// optimizer step per episode) or as one accumulated batch step
+    /// (`UpdateMode::Accumulate`, DESIGN.md §13). Schedule indices are
+    /// explicit so an interleaved multi-graph run decays lr/epsilon over
+    /// the *global* episode count, not per workload.
     ///
     /// `exploit_start` indexes the every-10th pure-exploitation rule and
     /// is counted **per trainer** (equal to `start` in single-graph
@@ -604,7 +664,9 @@ impl<'a> Trainer<'a> {
             &mut self.rng,
             ro.threads,
         )?;
-        let assignments: Vec<Assignment> = eps.iter().map(|e| e.assignment.clone()).collect();
+        // borrow the episode assignments for reward evaluation — cloning
+        // a batch of Vec<DeviceId> per round bought nothing
+        let assignments: Vec<&Assignment> = eps.iter().map(|e| &e.assignment).collect();
         let rewards = crate::rollout::episode_rewards(
             self.g,
             &assignments,
@@ -613,8 +675,68 @@ impl<'a> Trainer<'a> {
             ro.sim_reps,
             ro.threads,
         );
-        for (j, ep) in eps.into_iter().enumerate() {
-            self.apply_update(start + j, total, 2, ep, rewards[j])?;
+        match self.cfg.update_mode {
+            UpdateMode::Sequential => {
+                for (j, ep) in eps.into_iter().enumerate() {
+                    self.apply_update(start + j, total, 2, ep, rewards[j])?;
+                }
+            }
+            UpdateMode::Accumulate => self.apply_batch_update(start, total, &eps, &rewards)?,
+        }
+        Ok(())
+    }
+
+    /// Accumulate-mode tail of [`Trainer::stage2_sim_batch`]: observe
+    /// every reward in episode order (baselines/bests advance exactly as
+    /// in sequential mode), then apply ONE batched train step
+    /// ([`PolicyBackend::train_batch`]) for the whole batch at the
+    /// batch-start schedule value — the batch samples from one parameter
+    /// snapshot, so a single `lr.at(start, total)` is the honest
+    /// schedule index for its single optimizer step (DESIGN.md §13).
+    fn apply_batch_update(
+        &mut self,
+        start: usize,
+        total: usize,
+        eps: &[EpisodeResult],
+        rewards: &[f64],
+    ) -> Result<()> {
+        let lr = self.cfg.lr.at(start, total) as f32;
+        let mut advantages = Vec::with_capacity(eps.len());
+        let mut bests = Vec::with_capacity(eps.len());
+        for (ep, &t) in eps.iter().zip(rewards) {
+            advantages.push(self.observe_reward(2, &ep.assignment, t));
+            bests.push(self.best.as_ref().map_or(f64::NAN, |b| b.1));
+        }
+        let items: Vec<TrainItem> = eps
+            .iter()
+            .zip(&advantages)
+            .map(|(ep, &advantage)| TrainItem {
+                traj: &ep.trajectory,
+                advantage,
+            })
+            .collect();
+        let stats = self.nets.train_batch(
+            self.cfg.method,
+            &self.variant,
+            &self.enc,
+            &mut self.params,
+            &mut self.opt,
+            &items,
+            &self.dev_mask,
+            lr,
+            self.cfg.entropy_w,
+            self.cfg.rollout.threads,
+        )?;
+        for (j, ((ep, &t), (loss, ent))) in eps.iter().zip(rewards).zip(stats).enumerate() {
+            self.history.push(LogRow {
+                episode: self.history.len(),
+                stage: 2,
+                exec_time: t,
+                best_time: bests[j],
+                loss,
+                entropy: ent,
+                encode_calls: ep.encode_calls,
+            });
         }
         Ok(())
     }

@@ -25,6 +25,18 @@
 //!   across the worker pool, but train steps are applied sequentially in
 //!   (round, workload, episode) order — bit-identical at any thread
 //!   count (`tests/multi_graph.rs`).
+//!
+//! With `TrainConfig::update_mode = Accumulate` (DESIGN.md §13) each
+//! workload's Stage II chunk becomes ONE batched update: per-episode
+//! backwards run in parallel from the chunk's shared-blob snapshot and
+//! reduce order-canonically into a single Adam step. Sequential mode
+//! replays the full encoder forward + backward once per episode on the
+//! leader thread — exactly the multi-graph hot path; accumulation
+//! computes the batch-invariant encoder forward once per chunk and fans
+//! the per-episode backwards across the worker pool. The determinism
+//! contract is unchanged: batch boundaries follow the same (round,
+//! workload) interleave, so shared params stay bit-identical at any
+//! thread count and under member-list permutation in either mode.
 
 use anyhow::{Context, Result};
 

@@ -16,11 +16,21 @@
 use doppler::graph::workloads::Scale;
 use doppler::policy::{Method, NativePolicy};
 use doppler::train::multi::{MultiGraphTrainer, MultiTrainCfg, WorkloadSet};
-use doppler::train::{Schedule, Stages, TrainConfig};
+use doppler::train::{Schedule, Stages, TrainConfig, UpdateMode};
 
 /// Small multi-graph run on an already-built set; returns the shared
 /// blob and the per-workload episode counts.
 fn run_shared(set: &WorkloadSet, threads: usize, batch: usize) -> (Vec<f32>, Vec<usize>) {
+    run_shared_mode(set, threads, batch, UpdateMode::Sequential)
+}
+
+/// [`run_shared`] with an explicit Stage II update mode.
+fn run_shared_mode(
+    set: &WorkloadSet,
+    threads: usize,
+    batch: usize,
+    mode: UpdateMode,
+) -> (Vec<f32>, Vec<usize>) {
     let nets = NativePolicy::builtin();
     let first = &set.train[0];
     let mut base = TrainConfig::new(
@@ -30,6 +40,7 @@ fn run_shared(set: &WorkloadSet, threads: usize, batch: usize) -> (Vec<f32>, Vec
     );
     base.seed = 7;
     base.episode_batch = batch;
+    base.update_mode = mode;
     base.rollout.threads = threads;
     base.rollout.sim_reps = 2;
     base.lr = Schedule {
@@ -91,6 +102,46 @@ fn shared_params_invariant_under_workload_order_permutation() {
     let (pa, _) = run_shared(&a, 2, 2);
     let (pb, _) = run_shared(&b, 2, 2);
     assert_eq!(pa, pb, "workload-list permutation leaked into shared params");
+}
+
+#[test]
+fn accumulate_mode_shared_params_deterministic() {
+    // the accumulate update path (ISSUE 5 / DESIGN.md §13) must honor
+    // the same multi-graph contract: bit-identical shared params at any
+    // thread count and under member-list permutation — and actually
+    // differ from sequential mode (one optimizer step per chunk)
+    let set = WorkloadSet::builtin("tiny").unwrap();
+    let (p1, e1) = run_shared_mode(&set, 1, 3, UpdateMode::Accumulate);
+    assert_eq!(e1.iter().sum::<usize>(), 16, "budget fully spent");
+    for threads in [2usize, 4] {
+        let (p, e) = run_shared_mode(&set, threads, 3, UpdateMode::Accumulate);
+        assert_eq!(e, e1, "threads={threads}: episode split changed");
+        assert_eq!(p, p1, "threads={threads}: thread count leaked into accumulated params");
+    }
+    let permuted = WorkloadSet::from_names(
+        "perm",
+        &["synthetic-60", "chainmm", "synthetic-40"],
+        &[],
+        Scale::Tiny,
+        "p100x4",
+        4,
+    )
+    .unwrap();
+    let ordered = WorkloadSet::from_names(
+        "ord",
+        &["chainmm", "synthetic-40", "synthetic-60"],
+        &[],
+        Scale::Tiny,
+        "p100x4",
+        4,
+    )
+    .unwrap();
+    let (pp, _) = run_shared_mode(&permuted, 2, 2, UpdateMode::Accumulate);
+    let (po, _) = run_shared_mode(&ordered, 2, 2, UpdateMode::Accumulate);
+    assert_eq!(pp, po, "member permutation leaked into accumulated shared params");
+    // different numerics from sequential on the same budget
+    let (ps, _) = run_shared_mode(&set, 2, 3, UpdateMode::Sequential);
+    assert_ne!(ps, p1, "accumulate chunks should step the optimizer once per batch");
 }
 
 #[test]

@@ -1,0 +1,292 @@
+//! Accumulate-mode determinism pins (ISSUE 5 / DESIGN.md §13).
+//!
+//! `--update-mode accumulate` applies ONE clipped Adam step per episode
+//! batch, with per-episode gradients computed in parallel from one
+//! parameter snapshot and reduced by IEEE total order. Its contract:
+//!
+//! - **thread counts never leak** — trained params are bit-identical at
+//!   1/2/4/8 rollout threads;
+//! - **within-batch episode order never leaks** — permuting the items
+//!   handed to `train_batch` permutes the returned stats but leaves the
+//!   updated `params`/`opt` bit-identical (the gradient reduction is a
+//!   pure function of the multiset of per-episode gradients);
+//! - **a single-item batch is exactly one sequential step** — the
+//!   reduction degenerates to the identity and the same clipped Adam
+//!   tail runs, so `episode_batch = 1` accumulate training reproduces
+//!   sequential training bit for bit;
+//! - **larger batches are intentionally different numerics** — one
+//!   optimizer step per batch, `opt.t` counting batches.
+//!
+//! Runs entirely on the native backend: zero artifacts required. CI
+//! runs this file as a named step in the determinism-pins job.
+
+use doppler::graph::workloads::{chainmm, Scale};
+use doppler::policy::{
+    device_mask, EpisodeCfg, GraphEncoding, Method, NativePolicy, OptState, PolicyBackend,
+    TrainItem,
+};
+use doppler::sim::topology::DeviceTopology;
+use doppler::train::{Schedule, TrainConfig, UpdateMode};
+use doppler::util::rng::Rng;
+
+/// Small accumulate-mode Stage II run; returns (params, history pairs).
+fn run_stage2(threads: usize, batch: usize, mode: UpdateMode) -> (Vec<f32>, Vec<(f64, f32)>) {
+    let nets = NativePolicy::builtin();
+    let g = chainmm(Scale::Tiny);
+    let topo = DeviceTopology::p100x4();
+    let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+    cfg.seed = 17;
+    cfg.episode_batch = batch;
+    cfg.update_mode = mode;
+    cfg.rollout.threads = threads;
+    cfg.rollout.sim_reps = 2;
+    cfg.lr = Schedule {
+        start: 1e-3,
+        end: 1e-4,
+    };
+    cfg.epsilon = Schedule {
+        start: 0.3,
+        end: 0.05,
+    };
+    let mut trainer = doppler::train::Trainer::new(&nets, &g, topo, cfg).unwrap();
+    trainer.stage2_sim(16).unwrap();
+    assert_eq!(trainer.history.len(), 16);
+    assert!(trainer.history.iter().all(|r| r.loss.is_finite()));
+    let hist = trainer
+        .history
+        .iter()
+        .map(|r| (r.exec_time, r.loss))
+        .collect();
+    (trainer.params.clone(), hist)
+}
+
+#[test]
+fn accumulate_bit_identical_across_thread_counts() {
+    let (p1, h1) = run_stage2(1, 4, UpdateMode::Accumulate);
+    for threads in [2usize, 4, 8] {
+        let (p, h) = run_stage2(threads, 4, UpdateMode::Accumulate);
+        assert_eq!(h, h1, "threads={threads}: accumulate history diverged");
+        assert_eq!(
+            p, p1,
+            "threads={threads}: thread count leaked into accumulated params"
+        );
+    }
+}
+
+#[test]
+fn accumulate_batch_of_one_matches_sequential_bitwise() {
+    // bs = 1: the reduction is the identity and lr.at(start) is the
+    // per-episode schedule value, so the two modes must coincide exactly.
+    // Both runs drive the same batched entry point (stage2_sim_batch) so
+    // episode generation draws identical RNG streams and only the update
+    // path differs.
+    let run = |mode: UpdateMode| {
+        let nets = NativePolicy::builtin();
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+        cfg.seed = 17;
+        cfg.episode_batch = 1;
+        cfg.update_mode = mode;
+        cfg.rollout.threads = 2;
+        cfg.rollout.sim_reps = 2;
+        cfg.lr = Schedule {
+            start: 1e-3,
+            end: 1e-4,
+        };
+        let mut trainer = doppler::train::Trainer::new(&nets, &g, topo, cfg).unwrap();
+        for i in 0..10 {
+            trainer.stage2_sim_batch(&nets, i, 1, 10, i).unwrap();
+        }
+        let hist: Vec<(f64, f32)> = trainer
+            .history
+            .iter()
+            .map(|r| (r.exec_time, r.loss))
+            .collect();
+        (trainer.params.clone(), hist)
+    };
+    let (ps, hs) = run(UpdateMode::Sequential);
+    let (pa, ha) = run(UpdateMode::Accumulate);
+    assert_eq!(hs, ha);
+    assert_eq!(ps, pa, "single-episode batches must reproduce sequential training");
+}
+
+#[test]
+fn accumulate_semantics_differ_from_sequential() {
+    // one optimizer step per batch vs per episode: with bs > 1 the two
+    // modes are INTENTIONALLY different numerics (DESIGN.md §13) — a
+    // silent coincidence here would mean the batch path never ran
+    let (ps, _) = run_stage2(2, 4, UpdateMode::Sequential);
+    let (pa, _) = run_stage2(2, 4, UpdateMode::Accumulate);
+    assert_ne!(ps, pa, "accumulate mode should take fewer, larger optimizer steps");
+}
+
+/// Generate a batch of real episodes for direct `train_batch` calls
+/// (the encoding and episodes own their data; the graph can drop).
+fn episode_fixture() -> (
+    NativePolicy,
+    GraphEncoding,
+    Vec<doppler::policy::EpisodeResult>,
+    Vec<f32>,
+) {
+    let nets = NativePolicy::builtin();
+    let g = chainmm(Scale::Tiny);
+    let topo = DeviceTopology::p100x4();
+    let feats = doppler::features::static_features(&g, &topo, 1.0);
+    let variant = nets.variant_for_graph(g.n(), g.m()).unwrap();
+    let enc = GraphEncoding::build(&g, &feats, nets.manifest(), &variant).unwrap();
+    let params = PolicyBackend::init_params(&nets).unwrap();
+    let cfg = EpisodeCfg {
+        method: Method::Doppler,
+        epsilon: 0.25,
+        n_devices: 4,
+        per_step_encode: false,
+    };
+    let eps = doppler::rollout::generate_episodes(
+        &nets,
+        &enc,
+        &g,
+        &topo,
+        &feats,
+        &params,
+        &cfg,
+        &mut Rng::new(33),
+        5,
+        2,
+    )
+    .unwrap();
+    (nets, enc, eps, params)
+}
+
+#[test]
+fn train_batch_invariant_under_item_permutation() {
+    let (nets, enc, eps, params) = episode_fixture();
+    let variant = nets.variant_for(&enc).unwrap();
+    let dm = device_mask(nets.manifest().max_devices, 4);
+    let advantages = [0.8f32, -0.3, 0.05, -1.1, 0.6];
+    let run = |order: &[usize]| {
+        let mut p = params.clone();
+        let mut opt = OptState::new(p.len());
+        let items: Vec<TrainItem> = order
+            .iter()
+            .map(|&i| TrainItem {
+                traj: &eps[i].trajectory,
+                advantage: advantages[i],
+            })
+            .collect();
+        let stats = nets
+            .train_batch(
+                Method::Doppler,
+                &variant,
+                &enc,
+                &mut p,
+                &mut opt,
+                &items,
+                &dm,
+                1e-3,
+                1e-2,
+                2,
+            )
+            .unwrap();
+        (p, opt, stats)
+    };
+    let (p0, opt0, s0) = run(&[0, 1, 2, 3, 4]);
+    assert_eq!(opt0.t, 1.0, "one optimizer step per batch");
+    for order in [[4usize, 3, 2, 1, 0], [2, 0, 4, 1, 3], [1, 4, 0, 3, 2]] {
+        let (p, opt, s) = run(&order);
+        assert_eq!(p, p0, "order {order:?} leaked into params");
+        assert_eq!(opt.m, opt0.m, "order {order:?} leaked into Adam m");
+        assert_eq!(opt.v, opt0.v, "order {order:?} leaked into Adam v");
+        // stats are per-item: they follow the permutation
+        for (j, &i) in order.iter().enumerate() {
+            assert_eq!(s[j], s0[i], "stats for episode {i} changed under permutation");
+        }
+    }
+}
+
+#[test]
+fn train_batch_single_item_matches_train_step() {
+    let (nets, enc, eps, params) = episode_fixture();
+    let variant = nets.variant_for(&enc).unwrap();
+    let dm = device_mask(nets.manifest().max_devices, 4);
+
+    let mut p_seq = params.clone();
+    let mut o_seq = OptState::new(p_seq.len());
+    let (l_seq, e_seq) = nets
+        .train(
+            Method::Doppler,
+            &variant,
+            &enc,
+            &mut p_seq,
+            &mut o_seq,
+            &eps[0].trajectory,
+            &dm,
+            0.4,
+            1e-3,
+            1e-2,
+        )
+        .unwrap();
+
+    let mut p_bat = params.clone();
+    let mut o_bat = OptState::new(p_bat.len());
+    let items = [TrainItem {
+        traj: &eps[0].trajectory,
+        advantage: 0.4,
+    }];
+    let stats = nets
+        .train_batch(
+            Method::Doppler,
+            &variant,
+            &enc,
+            &mut p_bat,
+            &mut o_bat,
+            &items,
+            &dm,
+            1e-3,
+            1e-2,
+            4,
+        )
+        .unwrap();
+    assert_eq!(stats, vec![(l_seq, e_seq)]);
+    assert_eq!(p_bat, p_seq, "1-item batch must equal one sequential train step");
+    assert_eq!(o_bat.m, o_seq.m);
+    assert_eq!(o_bat.v, o_seq.v);
+    assert_eq!(o_bat.t, o_seq.t);
+}
+
+#[test]
+fn train_batch_empty_is_a_no_op() {
+    let (nets, enc, _eps, params) = episode_fixture();
+    let variant = nets.variant_for(&enc).unwrap();
+    let dm = device_mask(nets.manifest().max_devices, 4);
+    let mut p = params.clone();
+    let mut opt = OptState::new(p.len());
+    let stats = nets
+        .train_batch(Method::Doppler, &variant, &enc, &mut p, &mut opt, &[], &dm, 1e-3, 1e-2, 2)
+        .unwrap();
+    assert!(stats.is_empty());
+    assert_eq!(p, params);
+    assert_eq!(opt.t, 0.0);
+}
+
+#[test]
+fn accumulate_works_for_all_methods() {
+    // GDP / PLACETO batches exercise the non-SEL backward paths
+    for method in [Method::Gdp, Method::Placeto] {
+        let nets = NativePolicy::builtin();
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let mut cfg = TrainConfig::new(method, topo.clone(), 4);
+        cfg.seed = 5;
+        cfg.episode_batch = 3;
+        cfg.update_mode = UpdateMode::Accumulate;
+        cfg.rollout.threads = 2;
+        let mut trainer = doppler::train::Trainer::new(&nets, &g, topo, cfg).unwrap();
+        trainer.stage2_sim(6).unwrap();
+        assert_eq!(trainer.history.len(), 6, "{method:?}");
+        assert!(
+            trainer.history.iter().all(|r| r.loss.is_finite()),
+            "{method:?}: non-finite loss"
+        );
+    }
+}

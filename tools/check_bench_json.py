@@ -2,8 +2,8 @@
 """Schema check for the BENCH_*.json perf snapshots (ISSUE 4).
 
 The bench harnesses (benches/rollout_scaling.rs, sim_scaling.rs,
-episode_scaling.rs, table4_transfer.rs) each write a JSON snapshot at
-the repo root. CI *executes* them in smoke mode and then runs this
+episode_scaling.rs, table4_transfer.rs, train_scaling.rs) each write a
+JSON snapshot at the repo root. CI *executes* them in smoke mode and then runs this
 check, so a harness that silently stops emitting (or emits garbage —
 NaN throughput, empty row sets, renamed keys) fails loudly instead of
 rotting.
@@ -52,6 +52,17 @@ ROW_KEYS = {
         "init_zero_shot_ms": "pos",
         "shared_zero_shot_ms": "pos",
         "full_train_ms": "num?",
+    },
+    "train_scaling": {
+        "mode": "str",
+        "threads": "pos",
+        "episodes": "pos",
+        "episode_batch": "pos",
+        "updates_per_sec": "pos",
+        "ms_per_update": "pos",
+        # baseline = the sequential run at the first measured thread
+        # count (1 under the default thread list)
+        "speedup_vs_seq_base": "pos",
     },
 }
 

@@ -12,7 +12,11 @@ JAX model (`python/compile/model.py`) for
 
   1. forward passes: encode / sel_scores / plc_logits / gdp_logits,
   2. episode_loss value + entropy for all three modes,
-  3. the full parameter gradient vs `jax.grad(episode_loss)`.
+  3. the full parameter gradient vs `jax.grad(episode_loss)`,
+  4. the accumulated-batch reduction (ISSUE 5): the transliteration of
+     native.rs::reduce_gradients must be bitwise permutation-invariant
+     and match the (f64) sum of per-episode gradients — and, with JAX,
+     the sum of per-episode `jax.grad` — within the gradient bounds.
 
 Run from the repo root:  python3 tools/check_native_policy.py
 Exit code 0 = every check within tolerance.
@@ -440,6 +444,97 @@ def rel_err(a, b):
 
 
 # --------------------------------------------------------------------------
+# accumulated-batch oracle (ISSUE 5): native.rs::reduce_gradients
+# --------------------------------------------------------------------------
+
+def np_total_order_key(x32):
+    """IEEE 754 totalOrder sort key for f32 — the order rust's
+    `f32::total_cmp` sorts by (negatives bit-flipped, positives
+    sign-flipped)."""
+    b = x32.view(np.uint32).astype(np.uint64)
+    mask = np.where(b >> np.uint64(31) == 1,
+                    np.uint64(0xFFFFFFFF), np.uint64(0x80000000))
+    return (b ^ mask).astype(np.uint64)
+
+
+def np_reduce_gradients(rows32):
+    """Transliteration of native.rs::reduce_gradients: per-parameter
+    contributions sorted by total order, then summed left-to-right in
+    f32 — a pure function of the multiset of per-episode gradients, so
+    it is invariant under thread count AND within-batch permutation."""
+    order = np.argsort(np_total_order_key(rows32), axis=0, kind="stable")
+    srt = np.take_along_axis(rows32, order, axis=0)
+    red = np.zeros(rows32.shape[1], np.float32)
+    for row in srt:
+        red = (red + row).astype(np.float32)
+    return red
+
+
+def check_batch_oracle(with_jax):
+    """Accumulate-mode gradient reduction oracle: for a batch of
+    trajectories over ONE graph + parameter snapshot,
+
+      1. the transliterated sorted-f32 reduction must be bitwise
+         invariant under within-batch episode permutation,
+      2. it must match the plain f64 sum of per-episode numpy gradients
+         (the --numpy-only replay) to f32 accumulation precision, and
+      3. with JAX available, the sum of per-episode `jax.grad` must
+         match both within the existing gradient bound.
+    """
+    base = make_case(0)
+    trajs = [make_case(s) for s in (3, 4, 5)]
+    advantages = [0.7, -0.4, 0.15]
+    grads64 = []
+    for c, adv in zip(trajs, advantages):
+        _, _, g = np_episode_loss_and_grad(
+            "dual", base["flat"], base["xv"], base["esrc"], base["edst"],
+            base["efeat"], base["node_mask"], base["edge_mask"], base["pb"],
+            base["pt"], c["sel_actions"], c["plc_actions"], c["step_mask"],
+            c["cand_masks"], c["xd_steps"], base["dev_mask"], adv, 1e-2)
+        grads64.append(g)
+    rows32 = np.stack([g.astype(np.float32) for g in grads64])
+    red = np_reduce_gradients(rows32)
+
+    ok = True
+    for perm in ([1, 0, 2], [2, 1, 0], [0, 2, 1], [2, 0, 1], [1, 2, 0]):
+        red_p = np_reduce_gradients(np.ascontiguousarray(rows32[perm]))
+        same = bool((red_p.view(np.uint32) == red.view(np.uint32)).all())
+        if not same:
+            print(f"batch: permutation {perm} changed the reduced gradient bits")
+        ok &= same
+    print("batch: sorted reduction bitwise permutation-invariant"
+          if ok else "batch: reduction NOT permutation-invariant")
+
+    sum64 = np.sum(np.stack(grads64), axis=0)
+    e = rel_err(red.astype(np.float64), sum64)
+    print(f"batch: reduced vs f64-summed per-episode grads rel_err {e:.2e}")
+    ok &= bool(e < 1e-6)
+
+    if with_jax:
+        jax_sum = np.zeros_like(sum64)
+        for c, adv in zip(trajs, advantages):
+            def jax_loss(p, c=c, adv=adv):
+                loss, (_, ent) = model.episode_loss(
+                    "dual", p, jnp.asarray(base["xv"]), jnp.asarray(base["esrc"]),
+                    jnp.asarray(base["edst"]), jnp.asarray(base["efeat"]),
+                    jnp.asarray(base["node_mask"]), jnp.asarray(base["edge_mask"]),
+                    jnp.asarray(base["pb"]), jnp.asarray(base["pt"]),
+                    jnp.asarray(c["sel_actions"]), jnp.asarray(c["plc_actions"]),
+                    jnp.asarray(c["step_mask"]), jnp.asarray(c["cand_masks"]),
+                    jnp.asarray(c["xd_steps"]), jnp.asarray(base["dev_mask"]),
+                    adv, 1e-2)
+                return loss, ent
+            g = jax.grad(jax_loss, has_aux=True)(jnp.asarray(base["flat"]))[0]
+            jax_sum += np.asarray(g)
+        ej = rel_err(jax_sum, sum64)
+        er = rel_err(red.astype(np.float64), jax_sum)
+        print(f"batch: sum of jax.grad vs numpy sum rel_err {ej:.2e}, "
+              f"vs reduced rel_err {er:.2e}")
+        ok &= bool(ej < 1e-7) and bool(er < 1e-6)
+    return ok
+
+
+# --------------------------------------------------------------------------
 # numpy-only subset: replay the golden-logits fixture
 # --------------------------------------------------------------------------
 
@@ -546,12 +641,13 @@ def check_fixture():
 def main():
     numpy_only = "--numpy-only" in sys.argv or not HAVE_JAX
     fixture_ok = check_fixture()
+    batch_ok = check_batch_oracle(with_jax=not numpy_only)
     if numpy_only:
         why = "requested" if "--numpy-only" in sys.argv else "jax not installed"
         print(f"[numpy-only subset: {why}; jax cross-checks skipped]")
-        print("OK" if fixture_ok else "MISMATCH")
-        return 0 if fixture_ok else 1
-    ok = fixture_ok
+        print("OK" if fixture_ok and batch_ok else "MISMATCH")
+        return 0 if fixture_ok and batch_ok else 1
+    ok = fixture_ok and batch_ok
     for seed in (0, 1, 2):
         c = make_case(seed)
         d = np_unpack(c["flat"])

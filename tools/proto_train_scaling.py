@@ -1,0 +1,216 @@
+#!/usr/bin/env python3
+"""Prototype measurement behind the committed BENCH_train.json snapshot.
+
+The build image has no rustc, so `cargo bench --bench train_scaling`
+cannot produce the native numbers here. This prototype measures a numpy
+f32 *proxy* of one Stage II update on a synthetic-300-sized problem:
+
+- episode generation proxy (encoder forward + n PLC-head steps), which
+  fans out across processes in BOTH update modes (that is PR 3's
+  contribution), and
+- the per-episode train-step proxy (encoder + heads backward, ~2x the
+  forward FLOPs), which stays on the leader in sequential mode but fans
+  out — plus a sorted per-parameter reduction and one Adam step per
+  batch — in accumulate mode (this PR's contribution).
+
+An "update" is one episode's trajectory applied to the optimizer, so
+updates/sec is directly comparable across modes, matching
+benches/train_scaling.rs. Run that bench on a machine with a rust
+toolchain to overwrite the snapshot with real native numbers.
+
+Usage: python3 tools/proto_train_scaling.py [--write]
+"""
+
+import json
+import multiprocessing as mp
+import os
+import sys
+import time
+
+import numpy as np
+
+N, E, H, M, DF, NF = 300, 420, 32, 8, 5, 5
+SI = 4 * H
+PIN = 6 * H
+PARAMS = 46115
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_train.json")
+
+
+def _model(rng):
+    f32 = np.float32
+    return {
+        "e0": rng.normal(0, 0.1, (NF, H)).astype(f32),
+        "e1": rng.normal(0, 0.1, (H, H)).astype(f32),
+        "wsrc": rng.normal(0, 0.1, (H, H)).astype(f32),
+        "wdst": rng.normal(0, 0.1, (H, H)).astype(f32),
+        "wphi": rng.normal(0, 0.1, (2 * H, H)).astype(f32),
+        "sel0": rng.normal(0, 0.1, (SI, H)).astype(f32),
+        "plc0": rng.normal(0, 0.1, (PIN, H)).astype(f32),
+        "plc1": rng.normal(0, 0.1, (H, 1)).astype(f32),
+    }
+
+
+def episode_proxy(seed: int) -> float:
+    """Forward-only episode generation: encode once + N PLC steps."""
+    rng = np.random.default_rng(seed)
+    w = _model(rng)
+    xv = rng.normal(0, 0.3, (N, NF)).astype(np.float32)
+    esrc = rng.integers(0, N, E)
+    edst = rng.integers(0, N, E)
+    z = np.maximum(xv @ w["e0"], 0) @ w["e1"]
+    h = z
+    for _ in range(2):
+        msg = np.tanh(h[esrc] @ w["wsrc"] + h[edst] @ w["wdst"])
+        agg = np.zeros_like(h)
+        np.add.at(agg, edst, msg)
+        h = np.tanh(np.concatenate([h, agg], 1) @ w["wphi"])
+    hcat = np.concatenate([h, h, h, z], 1)
+    acc = 0.0
+    xdy = rng.normal(0, 0.3, (M, H)).astype(np.float32)
+    hv = hcat[0]
+    for _ in range(N):
+        feat = np.concatenate([np.tile(hv[None, :], (M, 1)), xdy, xdy], 1)[:, :PIN]
+        logits = (np.maximum(feat @ w["plc0"], 0) @ w["plc1"])[:, 0]
+        acc += float(logits.max())
+    return acc
+
+
+def grad_proxy(seed: int) -> np.ndarray:
+    """Backward proxy: the per-episode `loss_and_grads` work — roughly
+    the episode forward again plus matching transposed matmuls per MDP
+    step — returning a flat f32[PARAMS] pseudo-gradient."""
+    rng = np.random.default_rng(seed)
+    w = _model(rng)
+    xv = rng.normal(0, 0.3, (N, NF)).astype(np.float32)
+    esrc = rng.integers(0, N, E)
+    edst = rng.integers(0, N, E)
+    z = np.maximum(xv @ w["e0"], 0) @ w["e1"]
+    h = z
+    for _ in range(2):
+        msg = np.tanh(h[esrc] @ w["wsrc"] + h[edst] @ w["wdst"])
+        agg = np.zeros_like(h)
+        np.add.at(agg, edst, msg)
+        h = np.tanh(np.concatenate([h, agg], 1) @ w["wphi"])
+    hcat = np.concatenate([h, h, h, z], 1)
+    dhcat = np.zeros_like(hcat)
+    xdy = np.abs(np.random.default_rng(seed + 1).normal(0, 0.3, (M, H))).astype(np.float32)
+    gplc0 = np.zeros_like(w["plc0"])
+    hv = hcat[0]
+    for _ in range(N):
+        feat = np.concatenate([np.tile(hv[None, :], (M, 1)), xdy, xdy], 1)[:, :PIN]
+        x = np.maximum(feat @ w["plc0"], 0)
+        dx = np.where(x > 0, x @ (w["plc1"] @ w["plc1"].T), 0.0)
+        gplc0 += feat.T @ dx
+        dfeat = dx @ w["plc0"].T
+        dhcat[0] += dfeat[:, :SI].sum(axis=0)
+    # encoder backward-ish: transposed MPNN matmuls
+    dh = dhcat[:, :H]
+    for _ in range(2):
+        dmsg = (dh[edst] @ w["wphi"][:H].T)[:, :H]
+        gsrc = dmsg.T @ dmsg
+        dh = np.tanh(dh + dmsg[: len(dh)] @ gsrc[:H, :H])
+    flat = np.concatenate([gplc0.ravel(), dh.ravel()])
+    out = np.zeros(PARAMS, np.float32)
+    out[: min(PARAMS, flat.size)] = flat[: min(PARAMS, flat.size)].astype(np.float32)
+    return out
+
+
+def update_unit(seed: int) -> np.ndarray:
+    """One accumulate-mode work unit: generate + backward."""
+    episode_proxy(seed)
+    return grad_proxy(seed)
+
+
+def measure(mode: str, procs: int, episodes: int, batch: int) -> float:
+    t0 = time.time()
+    if mode == "sequential":
+        # generation fans out (PR 3); gradients + Adam stay on the leader
+        seeds = list(range(episodes))
+        if procs == 1:
+            for s in seeds:
+                episode_proxy(s)
+        else:
+            with mp.Pool(procs) as pool:
+                pool.map(episode_proxy, seeds)
+        for s in seeds:
+            g = grad_proxy(s)
+            g *= np.float32(1.0 / max(1.0, float(np.sqrt((g * g).sum()))))
+    else:
+        # generation AND gradients fan out; sorted reduction + one Adam
+        # step per batch on the leader (one pool for the whole run, like
+        # the rust worker pool)
+        pool = mp.Pool(procs) if procs > 1 else None
+        try:
+            for start in range(0, episodes, batch):
+                seeds = list(range(start, min(start + batch, episodes)))
+                if pool is None:
+                    grads = [update_unit(s) for s in seeds]
+                else:
+                    grads = pool.map(update_unit, seeds)
+                mat = np.sort(np.stack(grads), axis=0)
+                red = np.zeros(PARAMS, np.float32)
+                for row in mat:
+                    red = (red + row).astype(np.float32)
+                red *= np.float32(1.0 / max(1.0, float(np.sqrt((red * red).sum()))))
+        finally:
+            if pool is not None:
+                pool.close()
+                pool.join()
+    return episodes / (time.time() - t0)
+
+
+def main():
+    cores = os.cpu_count() or 1
+    episodes = int(os.environ.get("EPISODES", "16"))
+    batch = int(os.environ.get("BATCH", "8"))
+    rows = []
+    seq_base = None
+    per_4t = {}
+    for mode in ("sequential", "accumulate"):
+        for procs in [1, 2, 4, 8]:
+            if procs > cores:
+                break
+            ups = measure(mode, procs, episodes, batch)
+            if seq_base is None:
+                seq_base = ups
+            if procs == 4:
+                per_4t[mode] = ups
+            rows.append({
+                "mode": mode, "threads": procs, "episodes": episodes,
+                "episode_batch": batch,
+                "updates_per_sec": round(ups, 3),
+                "ms_per_update": round(1e3 / ups, 2),
+                "speedup_vs_seq_base": round(ups / seq_base, 3),
+            })
+            print(rows[-1])
+    speedup_4t = None
+    if "sequential" in per_4t and "accumulate" in per_4t:
+        speedup_4t = round(per_4t["accumulate"] / per_4t["sequential"], 3)
+    doc = {
+        "bench": "train_scaling",
+        "source": ("tools/proto_train_scaling.py numpy prototype (no rustc in the build "
+                   "image; re-run `cargo bench --bench train_scaling` for native numbers). "
+                   f"Prototype host has {cores} visible cores and is CPU-contended, so these "
+                   "rows demonstrate the harness + schema, not the scaling; the >= 2x @ 4 "
+                   "threads target needs >= 4 uncontended cores."),
+        "config": ("numpy f32 Stage II proxy: episode forward fans out in both modes; "
+                   "per-episode backward serial (sequential) vs fanned + sorted reduction + "
+                   "one Adam step per batch (accumulate)"),
+        "workload": f"synthetic{N}-proxy",
+        "nodes": N, "edges": E,
+        "episodes_per_cell": episodes,
+        "episode_batch": batch,
+        "host_threads": cores,
+        "speedup_accumulate_vs_sequential_4t": speedup_4t,
+        "target_speedup_4t": 2.0,
+        "rows": rows,
+    }
+    if "--write" in sys.argv:
+        with open(OUT, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()
