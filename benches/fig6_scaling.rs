@@ -11,7 +11,7 @@ use doppler::engine::EngineConfig;
 use doppler::eval::tables::Table;
 use doppler::features::static_features;
 use doppler::graph::workloads::synthetic_layered;
-use doppler::policy::{run_episode, EpisodeCfg, GraphEncoding, Method, OptState};
+use doppler::policy::{run_episode, EpisodeCfg, GraphEncoding, Method, PolicyBackend};
 use doppler::sim::topology::DeviceTopology;
 use doppler::train::{TrainConfig, Trainer};
 use doppler::util::rng::Rng;
