@@ -53,15 +53,28 @@ pub fn smoke_mode() -> bool {
 }
 
 /// Workload filter: `DOPPLER_WORKLOADS=chainmm,ffnn` restricts the
-/// per-table workload sweeps.
+/// per-table workload sweeps. Empty segments (trailing commas, stray
+/// whitespace) are dropped rather than forwarded to `graph/workloads`,
+/// where an empty name panics; an all-empty value means "no filter".
 pub fn bench_workloads() -> Vec<String> {
-    match std::env::var("DOPPLER_WORKLOADS") {
-        Ok(v) if !v.is_empty() => v.split(',').map(|s| s.to_string()).collect(),
-        _ => crate::graph::workloads::WORKLOADS
-            .iter()
-            .map(|s| s.to_string())
-            .collect(),
+    let filtered = std::env::var("DOPPLER_WORKLOADS")
+        .map(|v| parse_workloads(&v))
+        .unwrap_or_default();
+    if filtered.is_empty() {
+        crate::graph::workloads::WORKLOADS.iter().map(|s| s.to_string()).collect()
+    } else {
+        filtered
     }
+}
+
+/// Split a comma-separated workload list, trimming whitespace and
+/// dropping empty segments.
+fn parse_workloads(v: &str) -> Vec<String> {
+    v.split(',')
+        .map(str::trim)
+        .filter(|s| !s.is_empty())
+        .map(str::to_string)
+        .collect()
 }
 
 /// Standard bench banner: paper reference + budget disclosure.
@@ -93,5 +106,13 @@ mod tests {
     fn episodes_default() {
         // no env in tests: default
         assert!(bench_episodes() > 0);
+    }
+
+    #[test]
+    fn parse_workloads_drops_empty_segments() {
+        assert_eq!(parse_workloads("chainmm,"), vec!["chainmm".to_string()]);
+        assert_eq!(parse_workloads(" chainmm , ffnn "), vec!["chainmm", "ffnn"]);
+        assert!(parse_workloads(",, ,").is_empty());
+        assert!(parse_workloads("").is_empty());
     }
 }

@@ -27,18 +27,29 @@ impl Runtime {
 
     /// Load and compile one HLO-text artifact.
     pub fn load(&self, path: &std::path::Path) -> Result<Executable> {
-        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+        let name = artifact_name(path)?;
+        let text = path
+            .to_str()
+            .with_context(|| format!("artifact path {path:?} is not valid UTF-8"))?;
+        let proto = HloModuleProto::from_text_file(text)
             .with_context(|| format!("parsing HLO text {path:?}"))?;
         let comp = XlaComputation::from_proto(&proto);
         let exe = self
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {path:?}"))?;
-        Ok(Executable {
-            exe,
-            name: path.file_name().unwrap().to_string_lossy().into_owned(),
-        })
+        Ok(Executable { exe, name })
     }
+}
+
+/// Display name of an artifact path: its final component. Paths without
+/// one (`.`, `..`, `/`, empty) are manifest/CLI mistakes — report them
+/// instead of panicking.
+pub fn artifact_name(path: &std::path::Path) -> Result<String> {
+    let name = path
+        .file_name()
+        .with_context(|| format!("artifact path {path:?} has no file name component"))?;
+    Ok(name.to_string_lossy().into_owned())
 }
 
 /// A compiled policy-network executable.
@@ -105,5 +116,28 @@ pub mod lit {
     /// Extract a flat f32 vector.
     pub fn to_f32(l: &Literal) -> Result<Vec<f32>> {
         Ok(l.to_vec::<f32>()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::artifact_name;
+    use std::path::Path;
+
+    #[test]
+    fn artifact_name_takes_final_component() {
+        assert_eq!(artifact_name(Path::new("artifacts/encode.hlo.txt")).unwrap(), "encode.hlo.txt");
+        assert_eq!(artifact_name(Path::new("plain.txt")).unwrap(), "plain.txt");
+    }
+
+    #[test]
+    fn artifact_name_rejects_nameless_paths() {
+        for bad in [".", "..", "/", "artifacts/.."] {
+            let err = artifact_name(Path::new(bad)).unwrap_err();
+            assert!(
+                err.to_string().contains("no file name"),
+                "{bad}: unexpected error {err}"
+            );
+        }
     }
 }

@@ -30,13 +30,15 @@ pub fn max(xs: &[f64]) -> f64 {
     xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
 }
 
-/// Percentile via linear interpolation, p in [0, 100].
+/// Percentile via linear interpolation, p in [0, 100]. NaN measurements
+/// are dropped before ranking so one poisoned sample cannot panic the
+/// bench harness (0.0 when nothing comparable remains).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| !x.is_nan()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     let rank = (p / 100.0) * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -48,22 +50,24 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
-/// Pearson product-moment correlation. NaN-free: returns 0.0 when either
-/// variable is constant.
+/// Pearson product-moment correlation. NaN-free: pairs with a
+/// non-finite coordinate are dropped, and 0.0 is returned when either
+/// variable is constant or fewer than two comparable pairs remain.
 pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     assert_eq!(xs.len(), ys.len());
-    let n = xs.len();
+    let pairs = finite_pairs(xs, ys);
+    let n = pairs.len();
     if n < 2 {
         return 0.0;
     }
-    let mx = mean(xs);
-    let my = mean(ys);
+    let mx = pairs.iter().map(|p| p.0).sum::<f64>() / n as f64;
+    let my = pairs.iter().map(|p| p.1).sum::<f64>() / n as f64;
     let mut num = 0.0;
     let mut dx = 0.0;
     let mut dy = 0.0;
-    for i in 0..n {
-        let a = xs[i] - mx;
-        let b = ys[i] - my;
+    for (x, y) in pairs {
+        let a = x - mx;
+        let b = y - my;
         num += a * b;
         dx += a * a;
         dy += b * b;
@@ -74,11 +78,21 @@ pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     num / (dx.sqrt() * dy.sqrt())
 }
 
+/// Pairs where both coordinates are finite (the only ones a correlation
+/// can rank meaningfully).
+fn finite_pairs(xs: &[f64], ys: &[f64]) -> Vec<(f64, f64)> {
+    xs.iter()
+        .zip(ys)
+        .map(|(&x, &y)| (x, y))
+        .filter(|(x, y)| x.is_finite() && y.is_finite())
+        .collect()
+}
+
 /// Fractional ranks with ties sharing their average rank.
 fn ranks(xs: &[f64]) -> Vec<f64> {
     let n = xs.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| xs[a].partial_cmp(&xs[b]).unwrap());
+    idx.sort_by(|&a, &b| xs[a].total_cmp(&xs[b]));
     let mut r = vec![0.0; n];
     let mut i = 0;
     while i < n {
@@ -96,8 +110,14 @@ fn ranks(xs: &[f64]) -> Vec<f64> {
 }
 
 /// Spearman rank correlation (Pearson over tie-averaged ranks).
+/// Non-finite pairs are dropped *before* ranking so a NaN measurement
+/// neither panics nor distorts the ranks of the comparable samples.
 pub fn spearman(xs: &[f64], ys: &[f64]) -> f64 {
-    pearson(&ranks(xs), &ranks(ys))
+    assert_eq!(xs.len(), ys.len());
+    let pairs = finite_pairs(xs, ys);
+    let fx: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let fy: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+    pearson(&ranks(&fx), &ranks(&fy))
 }
 
 /// A `mean ± std` summary of repeated measurements.
@@ -171,6 +191,42 @@ mod tests {
         assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
         assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
         assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_ignores_nan_samples() {
+        // one poisoned measurement must neither panic nor shift ranks
+        let xs = [3.0, f64::NAN, 1.0, 2.0, 4.0];
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert_eq!(percentile(&[f64::NAN, f64::NAN], 50.0), 0.0);
+    }
+
+    #[test]
+    fn percentile_keeps_infinities_ordered() {
+        let xs = [f64::INFINITY, 1.0, f64::NEG_INFINITY];
+        assert_eq!(percentile(&xs, 0.0), f64::NEG_INFINITY);
+        assert_eq!(percentile(&xs, 50.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn pearson_drops_nonfinite_pairs() {
+        // dropping the poisoned pair leaves a perfect linear relation
+        let xs = [1.0, 2.0, f64::NAN, 4.0];
+        let ys = [2.0, 4.0, 9.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        // all pairs poisoned: defined 0.0, never NaN
+        let bad = [f64::NAN, f64::INFINITY];
+        assert_eq!(pearson(&bad, &[1.0, 2.0]), 0.0);
+    }
+
+    #[test]
+    fn spearman_nan_input_is_finite() {
+        let xs = [1.0, f64::NAN, 3.0, 4.0, 5.0];
+        let ys = [1.0, 8.0, 27.0, f64::NAN, 125.0];
+        let r = spearman(&xs, &ys);
+        assert!(r.is_finite());
+        assert!((r - 1.0).abs() < 1e-12, "monotone on comparable pairs: {r}");
     }
 
     #[test]
