@@ -134,6 +134,43 @@ fn main() {
     }
     table.emit(Some(std::path::Path::new("runs/episode_scaling.csv")));
 
+    // kernel invariance (DESIGN.md §14): regenerate the reference stream
+    // under the scalar oracle and under an adversarial blocking — episode
+    // streams must match the default blocked kernel bit for bit
+    {
+        use doppler::policy::gemm::{self, Blocking, KernelConfig, KernelMode};
+        let prev = gemm::config();
+        for kcfg in [
+            KernelConfig { mode: KernelMode::Oracle, blocking: Blocking::DEFAULT },
+            KernelConfig {
+                mode: KernelMode::Blocked,
+                blocking: Blocking { ib: 2, kb: 3, jb: 5 },
+            },
+        ] {
+            gemm::set_config(kcfg);
+            let mut rng = Rng::new(1);
+            let got = rollout::generate_episodes(
+                &nets,
+                &enc,
+                &g,
+                &topo,
+                &feats,
+                &params,
+                &cfg,
+                &mut rng,
+                episodes,
+                threads_list[0],
+            )
+            .expect("episode generation");
+            assert!(
+                same_episodes(reference.as_ref().unwrap(), &got),
+                "{kcfg:?}: episode stream diverged from the default blocked kernel"
+            );
+        }
+        gemm::set_config(prev);
+        println!("[kernel invariance: episode streams bit-identical across GEMM modes/blockings]");
+    }
+
     let doc = json::obj(vec![
         ("bench", json::s("episode_scaling")),
         ("source", json::s("cargo bench --bench episode_scaling")),

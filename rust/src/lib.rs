@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # DOPPLER — dual-policy learning for device assignment in asynchronous
 //! dataflow graphs
 //!

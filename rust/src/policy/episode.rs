@@ -14,7 +14,11 @@
 //!   device `d` rewrites only row `d` (every entry of a row equals
 //!   `1/count`, so the rewrite is exactly the values the old full O(m·n)
 //!   rebuild produced — bit-identical trajectories, pinned by the
-//!   `scratch_reuse_and_incremental_place_norm_bitwise` test).
+//!   `scratch_reuse_and_incremental_place_norm_bitwise` test);
+//! - backend-specific per-step state (the native backend's head
+//!   activations, sized once per episode) rides in the opaque
+//!   `EpisodeCache` returned by `begin_episode`, so the hot loop below
+//!   allocates nothing per step on either backend.
 
 use anyhow::Result;
 
@@ -211,7 +215,8 @@ pub fn run_episode_with<B: PolicyBackend + ?Sized>(
     let mut hcat = nets.encode(&variant, enc, params)?;
     let mut encode_calls = 1;
     let mut sel_scores = nets.sel_scores(&variant, enc, params, &hcat)?;
-    // per-episode backend state (PJRT: episode-constant literals)
+    // per-episode backend state (PJRT: episode-constant literals; native:
+    // reusable per-step inference scratch, see `EpisodeCache::Native`)
     let mut cache = nets.begin_episode(enc, params, &hcat)?;
 
     let mut st = AssignState::new(g, topo);

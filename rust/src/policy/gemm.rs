@@ -1,0 +1,768 @@
+//! Blocked batch-GEMM kernels for the native policy backend
+//! (DESIGN.md §14).
+//!
+//! The native backend's forward and backward passes are a handful of
+//! small dense products over flat row-major `f32` buffers. This module
+//! is the single home for those products, in three kernel families:
+//!
+//! - [`gemm`] / [`gemm_acc`] — `out (+)= A · B` with an optional row
+//!   stride on `B` and a zero-skip on `A` entries (the one-hot /
+//!   placement / path operands are mostly zero);
+//! - [`gemm_at_b_acc`] — `out += Aᵀ · D`, the weight-gradient form
+//!   (a sum of rank-1 updates over the reduction axis);
+//! - [`gemm_bt`] / [`gemm_bt_acc`] — `out (+)= D · Bᵀ`, the
+//!   input-gradient form (a dot product per output element).
+//!
+//! ## Determinism contract
+//!
+//! Every kernel reduces in a **fixed order**: the contributions to one
+//! output element are always added in ascending reduction-index order,
+//! and `gemm_bt` accumulates its dot product into a local scalar before
+//! a single add into `out`. The cache-blocked variants only re-tile the
+//! *independent* output/row loops — the per-element reduction sequence
+//! is untouched — so blocked, oracle, and SIMD paths are **bit-identical
+//! for every block size** and the golden-logit/trace pins never move
+//! when the blocking (or thread count) changes. The naive `_oracle`
+//! twins exist to pin exactly that: `tests/gemm_kernels.rs` asserts
+//! bitwise equality on random shapes and blockings.
+//!
+//! The optional `simd` feature (nightly `portable_simd`) vectorizes only
+//! [`axpy`], the `dst += a · src` inner kernel, as splat-mul-then-add —
+//! never `mul_add` — so each lane performs the same two correctly-rounded
+//! ops as the scalar loop and bit-identity survives vectorization. Dot
+//! products are deliberately *not* vectorized: lane-wise partial sums
+//! would reorder the reduction.
+//!
+//! ## Runtime selection
+//!
+//! [`config`]/[`set_config`] pick the kernel ([`KernelMode::Blocked`] by
+//! default, [`KernelMode::Oracle`] as the reference) and the blocking;
+//! `DOPPLER_GEMM=oracle|blocked` and `DOPPLER_GEMM_BLOCK=ib,kb,jb`
+//! override from the environment. Because every mode/blocking is
+//! bit-identical, flipping the config mid-run is always numerically
+//! safe — it only changes speed.
+
+use std::sync::{OnceLock, RwLock};
+
+// ----------------------------------------------------------------------
+// configuration
+// ----------------------------------------------------------------------
+
+/// Which kernel implementation the dispatching entry points run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Cache-blocked loops (+ SIMD `axpy` under the `simd` feature).
+    Blocked,
+    /// The naive triple loop — the bitwise reference implementation.
+    Oracle,
+}
+
+/// Cache-blocking tile sizes: `ib` rows × `kb` reduction steps × `jb`
+/// output columns. Any value is numerically valid (zeros are clamped to
+/// 1); the defaults keep one `jb`-wide output strip plus a `kb × jb`
+/// panel of `B` L1-resident for the model's H=32..288-sized operands.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Blocking {
+    pub ib: usize,
+    pub kb: usize,
+    pub jb: usize,
+}
+
+impl Blocking {
+    pub const DEFAULT: Blocking = Blocking { ib: 64, kb: 64, jb: 256 };
+
+    fn clamped(self) -> (usize, usize, usize) {
+        (self.ib.max(1), self.kb.max(1), self.jb.max(1))
+    }
+}
+
+/// Kernel selection + blocking, read once per kernel call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelConfig {
+    pub mode: KernelMode,
+    pub blocking: Blocking,
+}
+
+impl Default for KernelConfig {
+    fn default() -> KernelConfig {
+        KernelConfig {
+            mode: KernelMode::Blocked,
+            blocking: Blocking::DEFAULT,
+        }
+    }
+}
+
+impl KernelConfig {
+    /// Environment override: `DOPPLER_GEMM=oracle|blocked`,
+    /// `DOPPLER_GEMM_BLOCK=ib,kb,jb` (malformed values are ignored).
+    fn from_env() -> KernelConfig {
+        let mut cfg = KernelConfig::default();
+        if let Ok(v) = std::env::var("DOPPLER_GEMM") {
+            match v.as_str() {
+                "oracle" => cfg.mode = KernelMode::Oracle,
+                _ => cfg.mode = KernelMode::Blocked,
+            }
+        }
+        if let Ok(v) = std::env::var("DOPPLER_GEMM_BLOCK") {
+            if let Some(b) = parse_blocking(&v) {
+                cfg.blocking = b;
+            }
+        }
+        cfg
+    }
+}
+
+/// Parse `"ib,kb,jb"` into a [`Blocking`]; `None` on malformed input.
+fn parse_blocking(s: &str) -> Option<Blocking> {
+    let mut it = s.split(',').map(|p| p.trim().parse::<usize>());
+    let ib = it.next()?.ok()?;
+    let kb = it.next()?.ok()?;
+    let jb = it.next()?.ok()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some(Blocking { ib, kb, jb })
+}
+
+fn cell() -> &'static RwLock<KernelConfig> {
+    static CONFIG: OnceLock<RwLock<KernelConfig>> = OnceLock::new();
+    CONFIG.get_or_init(|| RwLock::new(KernelConfig::from_env()))
+}
+
+/// The process-wide kernel configuration.
+pub fn config() -> KernelConfig {
+    *cell().read().expect("kernel config lock poisoned")
+}
+
+/// Replace the process-wide kernel configuration (benches/tests flip
+/// mode and blocking; results are bit-identical either way).
+pub fn set_config(cfg: KernelConfig) {
+    *cell().write().expect("kernel config lock poisoned") = cfg;
+}
+
+// ----------------------------------------------------------------------
+// shapes
+// ----------------------------------------------------------------------
+
+/// Dimensions + row strides of one `out (+)= A · B` product:
+/// `A: [rows × inner]`, `B: [inner × cols]`, `out: [rows × cols]`, each
+/// row-major with an independent row stride (≥ its logical width), so a
+/// kernel can read the leading `cols` columns of a wider matrix — e.g.
+/// the `H` device-embedding columns out of `sel_in`-wide `Hcat` rows.
+#[derive(Clone, Copy, Debug)]
+pub struct MatDims {
+    pub rows: usize,
+    pub inner: usize,
+    pub cols: usize,
+    pub a_stride: usize,
+    pub b_stride: usize,
+    pub out_stride: usize,
+}
+
+impl MatDims {
+    /// Contiguous operands: every stride equals the logical width.
+    pub fn packed(rows: usize, inner: usize, cols: usize) -> MatDims {
+        MatDims {
+            rows,
+            inner,
+            cols,
+            a_stride: inner,
+            b_stride: cols,
+            out_stride: cols,
+        }
+    }
+
+    pub fn with_a_stride(mut self, s: usize) -> MatDims {
+        debug_assert!(s >= self.inner);
+        self.a_stride = s;
+        self
+    }
+
+    pub fn with_b_stride(mut self, s: usize) -> MatDims {
+        debug_assert!(s >= self.cols);
+        self.b_stride = s;
+        self
+    }
+
+    pub fn with_out_stride(mut self, s: usize) -> MatDims {
+        debug_assert!(s >= self.cols);
+        self.out_stride = s;
+        self
+    }
+}
+
+// ----------------------------------------------------------------------
+// inner kernels
+// ----------------------------------------------------------------------
+
+/// `dst[j] += a * src[j]` — the one vectorized inner kernel. The SIMD
+/// path multiplies then adds per lane (no `mul_add`/FMA), so every
+/// element sees the same two correctly-rounded operations as the scalar
+/// loop: bit-identical by construction.
+#[cfg(feature = "simd")]
+#[inline]
+pub fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+    use std::simd::f32x8;
+    let n = dst.len().min(src.len());
+    let av = f32x8::splat(a);
+    let mut i = 0;
+    while i + 8 <= n {
+        let d = f32x8::from_slice(&dst[i..i + 8]);
+        let s = f32x8::from_slice(&src[i..i + 8]);
+        (d + av * s).copy_to_slice(&mut dst[i..i + 8]);
+        i += 8;
+    }
+    while i < n {
+        dst[i] += a * src[i];
+        i += 1;
+    }
+}
+
+/// `dst[j] += a * src[j]` (scalar build).
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn axpy(dst: &mut [f32], src: &[f32], a: f32) {
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += a * *s;
+    }
+}
+
+/// Fixed-order dot product (ascending index, scalar accumulator).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut s = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        s += x * y;
+    }
+    s
+}
+
+/// `out[i] = dot(a_row_i, x)` over `a: [rows × inner]`. A column of dot
+/// products: identical in every mode, so it does not dispatch.
+pub fn matvec(a: &[f32], x: &[f32], rows: usize, inner: usize, out: &mut [f32]) {
+    for (i, o) in out.iter_mut().enumerate().take(rows) {
+        *o = dot(&a[i * inner..(i + 1) * inner], x);
+    }
+}
+
+fn zero_out_rows(out: &mut [f32], dims: &MatDims) {
+    for i in 0..dims.rows {
+        let ob = i * dims.out_stride;
+        out[ob..ob + dims.cols].fill(0.0);
+    }
+}
+
+// ----------------------------------------------------------------------
+// gemm: out (+)= A · B
+// ----------------------------------------------------------------------
+
+/// `out = A · B` under the process config.
+pub fn gemm(a: &[f32], b: &[f32], dims: MatDims, out: &mut [f32]) {
+    zero_out_rows(out, &dims);
+    gemm_acc(a, b, dims, out);
+}
+
+/// `out += A · B` under the process config.
+pub fn gemm_acc(a: &[f32], b: &[f32], dims: MatDims, out: &mut [f32]) {
+    let c = config();
+    match c.mode {
+        KernelMode::Blocked => gemm_acc_with(a, b, dims, c.blocking, out),
+        KernelMode::Oracle => gemm_acc_oracle(a, b, dims, out),
+    }
+}
+
+/// `out = A · B` with explicit blocking.
+pub fn gemm_with(a: &[f32], b: &[f32], dims: MatDims, blk: Blocking, out: &mut [f32]) {
+    zero_out_rows(out, &dims);
+    gemm_acc_with(a, b, dims, blk, out);
+}
+
+/// `out = A · B`, naive reference.
+pub fn gemm_oracle(a: &[f32], b: &[f32], dims: MatDims, out: &mut [f32]) {
+    zero_out_rows(out, &dims);
+    gemm_acc_oracle(a, b, dims, out);
+}
+
+/// `out += A · B`, cache-blocked. The `k` blocks are walked in ascending
+/// order and `k` ascends within each block, so each `out[i, j]` receives
+/// its `a[i, k] * b[k, j]` terms in exactly the oracle's order.
+pub fn gemm_acc_with(a: &[f32], b: &[f32], dims: MatDims, blk: Blocking, out: &mut [f32]) {
+    let MatDims { rows, inner, cols, a_stride, b_stride, out_stride } = dims;
+    if rows == 0 || inner == 0 || cols == 0 {
+        return;
+    }
+    let (ib, kb, jb) = blk.clamped();
+    let mut k0 = 0;
+    while k0 < inner {
+        let kend = (k0 + kb).min(inner);
+        let mut i0 = 0;
+        while i0 < rows {
+            let iend = (i0 + ib).min(rows);
+            let mut j0 = 0;
+            while j0 < cols {
+                let jend = (j0 + jb).min(cols);
+                for i in i0..iend {
+                    let arow = &a[i * a_stride..i * a_stride + inner];
+                    let ob = i * out_stride;
+                    for (k, &av) in arow.iter().enumerate().take(kend).skip(k0) {
+                        if av != 0.0 {
+                            let bb = k * b_stride;
+                            axpy(&mut out[ob + j0..ob + jend], &b[bb + j0..bb + jend], av);
+                        }
+                    }
+                }
+                j0 = jend;
+            }
+            i0 = iend;
+        }
+        k0 = kend;
+    }
+}
+
+/// `out += A · B`, naive reference: `i` outer, `k` ascending with the
+/// zero-skip on `A`, scalar `j` inner loop.
+pub fn gemm_acc_oracle(a: &[f32], b: &[f32], dims: MatDims, out: &mut [f32]) {
+    let MatDims { rows, inner, cols, a_stride, b_stride, out_stride } = dims;
+    for i in 0..rows {
+        let ob = i * out_stride;
+        for k in 0..inner {
+            let av = a[i * a_stride + k];
+            if av != 0.0 {
+                let bb = k * b_stride;
+                let brow = &b[bb..bb + cols];
+                for (o, &bv) in out[ob..ob + cols].iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// at_b: out += Aᵀ · D (weight gradients)
+// ----------------------------------------------------------------------
+
+/// `out[i, j] += Σ_r a[r, i] · d[r, j]` over `a: [reduce × rows]`,
+/// `d: [reduce × cols]`, `out: [rows × cols]` (packed), skipping zero
+/// `a` entries — the weight-gradient form: a sum of rank-1 updates over
+/// the reduction axis, in ascending `r` order.
+pub fn gemm_at_b_acc(a: &[f32], d: &[f32], reduce: usize, rows: usize, cols: usize, out: &mut [f32]) {
+    let c = config();
+    match c.mode {
+        KernelMode::Blocked => gemm_at_b_acc_with(a, d, reduce, rows, cols, c.blocking, out),
+        KernelMode::Oracle => gemm_at_b_acc_oracle(a, d, reduce, rows, cols, out),
+    }
+}
+
+/// [`gemm_at_b_acc`] with explicit blocking: `r` blocks ascend and `r`
+/// ascends within each block, preserving the oracle's reduction order
+/// for every `out[i, j]`.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_at_b_acc_with(
+    a: &[f32],
+    d: &[f32],
+    reduce: usize,
+    rows: usize,
+    cols: usize,
+    blk: Blocking,
+    out: &mut [f32],
+) {
+    if reduce == 0 || rows == 0 || cols == 0 {
+        return;
+    }
+    let (ib, kb, jb) = blk.clamped();
+    let mut r0 = 0;
+    while r0 < reduce {
+        let rend = (r0 + kb).min(reduce);
+        let mut i0 = 0;
+        while i0 < rows {
+            let iend = (i0 + ib).min(rows);
+            let mut j0 = 0;
+            while j0 < cols {
+                let jend = (j0 + jb).min(cols);
+                for r in r0..rend {
+                    let arow = &a[r * rows..(r + 1) * rows];
+                    let db = r * cols;
+                    let dseg = &d[db + j0..db + jend];
+                    for (i, &av) in arow.iter().enumerate().take(iend).skip(i0) {
+                        if av != 0.0 {
+                            axpy(&mut out[i * cols + j0..i * cols + jend], dseg, av);
+                        }
+                    }
+                }
+                j0 = jend;
+            }
+            i0 = iend;
+        }
+        r0 = rend;
+    }
+}
+
+/// [`gemm_at_b_acc`], naive reference: `r` outer, `i` with the zero-skip
+/// on `A`, scalar `j` inner loop.
+pub fn gemm_at_b_acc_oracle(
+    a: &[f32],
+    d: &[f32],
+    reduce: usize,
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    for r in 0..reduce {
+        let db = r * cols;
+        for i in 0..rows {
+            let av = a[r * rows + i];
+            if av != 0.0 {
+                let drow = &d[db..db + cols];
+                for (o, &dv) in out[i * cols..i * cols + cols].iter_mut().zip(drow) {
+                    *o += av * dv;
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// bt: out (+)= D · Bᵀ (input gradients)
+// ----------------------------------------------------------------------
+
+/// `out[i, j] = dot(d_row_i, b_row_j)` over `d: [rows × inner]`,
+/// `b: [cols × inner]`, `out: [rows × cols]` (packed) — the
+/// input-gradient form. Each dot accumulates into a local scalar in
+/// ascending `k` order before one store, in every mode.
+pub fn gemm_bt(d: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize, out: &mut [f32]) {
+    let c = config();
+    match c.mode {
+        KernelMode::Blocked => bt_tiled::<false>(d, b, rows, inner, cols, c.blocking, out),
+        KernelMode::Oracle => bt_naive::<false>(d, b, rows, inner, cols, out),
+    }
+}
+
+/// `out[i, j] += dot(d_row_i, b_row_j)` (accumulating [`gemm_bt`]).
+pub fn gemm_bt_acc(d: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize, out: &mut [f32]) {
+    let c = config();
+    match c.mode {
+        KernelMode::Blocked => bt_tiled::<true>(d, b, rows, inner, cols, c.blocking, out),
+        KernelMode::Oracle => bt_naive::<true>(d, b, rows, inner, cols, out),
+    }
+}
+
+/// [`gemm_bt`] with explicit blocking.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bt_with(
+    d: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    blk: Blocking,
+    out: &mut [f32],
+) {
+    bt_tiled::<false>(d, b, rows, inner, cols, blk, out);
+}
+
+/// [`gemm_bt_acc`] with explicit blocking.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bt_acc_with(
+    d: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    blk: Blocking,
+    out: &mut [f32],
+) {
+    bt_tiled::<true>(d, b, rows, inner, cols, blk, out);
+}
+
+/// [`gemm_bt`], naive reference.
+pub fn gemm_bt_oracle(d: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize, out: &mut [f32]) {
+    bt_naive::<false>(d, b, rows, inner, cols, out);
+}
+
+/// [`gemm_bt_acc`], naive reference.
+pub fn gemm_bt_acc_oracle(
+    d: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    bt_naive::<true>(d, b, rows, inner, cols, out);
+}
+
+fn bt_naive<const ACC: bool>(
+    d: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    out: &mut [f32],
+) {
+    for i in 0..rows {
+        let drow = &d[i * inner..(i + 1) * inner];
+        for j in 0..cols {
+            let s = dot(drow, &b[j * inner..(j + 1) * inner]);
+            if ACC {
+                out[i * cols + j] += s;
+            } else {
+                out[i * cols + j] = s;
+            }
+        }
+    }
+}
+
+/// Tiled `D · Bᵀ`: the `i`/`j` loops are re-tiled for `B`-row reuse; the
+/// per-element dot is the same fixed-order scalar reduction, so tiling
+/// cannot change a single bit.
+fn bt_tiled<const ACC: bool>(
+    d: &[f32],
+    b: &[f32],
+    rows: usize,
+    inner: usize,
+    cols: usize,
+    blk: Blocking,
+    out: &mut [f32],
+) {
+    if rows == 0 || cols == 0 {
+        if !ACC {
+            out[..rows * cols].fill(0.0);
+        }
+        return;
+    }
+    let (ib, _, jb) = blk.clamped();
+    let mut i0 = 0;
+    while i0 < rows {
+        let iend = (i0 + ib).min(rows);
+        let mut j0 = 0;
+        while j0 < cols {
+            let jend = (j0 + jb).min(cols);
+            for i in i0..iend {
+                let drow = &d[i * inner..(i + 1) * inner];
+                for j in j0..jend {
+                    let s = dot(drow, &b[j * inner..(j + 1) * inner]);
+                    if ACC {
+                        out[i * cols + j] += s;
+                    } else {
+                        out[i * cols + j] = s;
+                    }
+                }
+            }
+            j0 = jend;
+        }
+        i0 = iend;
+    }
+}
+
+// ----------------------------------------------------------------------
+// tests (bitwise oracle equivalence on fixed cases; random shapes and
+// blockings live in tests/gemm_kernels.rs)
+// ----------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Pseudo-random fill with exact zeros sprinkled in (the kernels
+    /// branch on zero, so zero coverage matters).
+    fn fill(rng: &mut Rng, buf: &mut [f32]) {
+        for v in buf.iter_mut() {
+            *v = if rng.chance(0.25) { 0.0 } else { (rng.f64() * 2.0 - 1.0) as f32 };
+        }
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    const BLOCKINGS: [Blocking; 5] = [
+        Blocking { ib: 1, kb: 1, jb: 1 },
+        Blocking { ib: 2, kb: 3, jb: 5 },
+        Blocking { ib: 8, kb: 16, jb: 8 },
+        Blocking { ib: 0, kb: 0, jb: 0 }, // clamps to 1
+        Blocking::DEFAULT,
+    ];
+
+    #[test]
+    fn gemm_blocked_matches_oracle_bitwise() {
+        let mut rng = Rng::new(11);
+        for &(r, k, c) in &[(1usize, 1usize, 1usize), (3, 7, 5), (8, 32, 32), (13, 5, 17)] {
+            let mut a = vec![0.0f32; r * k];
+            let mut b = vec![0.0f32; k * c];
+            fill(&mut rng, &mut a);
+            fill(&mut rng, &mut b);
+            let mut want = vec![0.0f32; r * c];
+            gemm_oracle(&a, &b, MatDims::packed(r, k, c), &mut want);
+            for blk in BLOCKINGS {
+                let mut got = vec![0.0f32; r * c];
+                gemm_with(&a, &b, MatDims::packed(r, k, c), blk, &mut got);
+                assert_eq!(bits(&got), bits(&want), "gemm {r}x{k}x{c} blk {blk:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_strided_b_matches_oracle_bitwise() {
+        // read the leading `c` columns of wider B rows (the
+        // hd_from_place_norm shape: Hcat rows are sel_in wide)
+        let (r, k, c, bs) = (6usize, 9usize, 8usize, 13usize);
+        let mut rng = Rng::new(5);
+        let mut a = vec![0.0f32; r * k];
+        let mut b = vec![0.0f32; k * bs];
+        fill(&mut rng, &mut a);
+        fill(&mut rng, &mut b);
+        let dims = MatDims::packed(r, k, c).with_b_stride(bs);
+        let mut want = vec![0.0f32; r * c];
+        gemm_oracle(&a, &b, dims, &mut want);
+        for blk in BLOCKINGS {
+            let mut got = vec![0.0f32; r * c];
+            gemm_with(&a, &b, dims, blk, &mut got);
+            assert_eq!(bits(&got), bits(&want), "strided gemm blk {blk:?}");
+        }
+    }
+
+    #[test]
+    fn gemm_acc_accumulates_into_existing_out() {
+        let (r, k, c) = (4usize, 6usize, 5usize);
+        let mut rng = Rng::new(9);
+        let mut a = vec![0.0f32; r * k];
+        let mut b = vec![0.0f32; k * c];
+        fill(&mut rng, &mut a);
+        fill(&mut rng, &mut b);
+        let mut base = vec![0.0f32; r * c];
+        fill(&mut rng, &mut base);
+        let mut want = base.clone();
+        gemm_acc_oracle(&a, &b, MatDims::packed(r, k, c), &mut want);
+        for blk in BLOCKINGS {
+            let mut got = base.clone();
+            gemm_acc_with(&a, &b, MatDims::packed(r, k, c), blk, &mut got);
+            assert_eq!(bits(&got), bits(&want), "gemm_acc blk {blk:?}");
+        }
+    }
+
+    #[test]
+    fn at_b_blocked_matches_oracle_bitwise() {
+        let mut rng = Rng::new(21);
+        for &(red, r, c) in &[(1usize, 4usize, 3usize), (9, 7, 11), (32, 5, 32)] {
+            let mut a = vec![0.0f32; red * r];
+            let mut d = vec![0.0f32; red * c];
+            fill(&mut rng, &mut a);
+            fill(&mut rng, &mut d);
+            let mut want = vec![0.0f32; r * c];
+            fill(&mut rng, &mut want);
+            let mut base = want.clone();
+            gemm_at_b_acc_oracle(&a, &d, red, r, c, &mut want);
+            for blk in BLOCKINGS {
+                let mut got = base.clone();
+                gemm_at_b_acc_with(&a, &d, red, r, c, blk, &mut got);
+                assert_eq!(bits(&got), bits(&want), "at_b {red}x{r}x{c} blk {blk:?}");
+            }
+            base.fill(0.0);
+        }
+    }
+
+    #[test]
+    fn bt_tiled_matches_oracle_bitwise() {
+        let mut rng = Rng::new(31);
+        let (r, k, c) = (7usize, 12usize, 9usize);
+        let mut d = vec![0.0f32; r * k];
+        let mut b = vec![0.0f32; c * k];
+        fill(&mut rng, &mut d);
+        fill(&mut rng, &mut b);
+        let mut want = vec![0.0f32; r * c];
+        gemm_bt_oracle(&d, &b, r, k, c, &mut want);
+        let mut want_acc = want.clone();
+        gemm_bt_acc_oracle(&d, &b, r, k, c, &mut want_acc);
+        for blk in BLOCKINGS {
+            let mut got = vec![1.0f32; r * c]; // assign must overwrite
+            gemm_bt_with(&d, &b, r, k, c, blk, &mut got);
+            assert_eq!(bits(&got), bits(&want), "bt blk {blk:?}");
+            gemm_bt_acc_with(&d, &b, r, k, c, blk, &mut got);
+            assert_eq!(bits(&got), bits(&want_acc), "bt_acc blk {blk:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_dims_are_noops() {
+        // empty batch / zero-width operands: no panic, no writes (gemm
+        // assign still zero-fills the live out rows)
+        let a: Vec<f32> = vec![];
+        let b: Vec<f32> = vec![];
+        let mut out: Vec<f32> = vec![];
+        for blk in BLOCKINGS {
+            gemm_with(&a, &b, MatDims::packed(0, 0, 0), blk, &mut out);
+            gemm_at_b_acc_with(&a, &b, 0, 0, 0, blk, &mut out);
+            gemm_bt_with(&a, &b, 0, 0, 0, blk, &mut out);
+        }
+        // rows > 0 with inner == 0: assign zero-fills
+        let mut o2 = vec![7.0f32; 6];
+        gemm_with(&a, &b, MatDims::packed(2, 0, 3), Blocking::DEFAULT, &mut o2);
+        assert!(o2.iter().all(|&x| x == 0.0));
+        let mut o3 = vec![3.0f32; 6];
+        gemm_bt_with(&a, &b, 2, 0, 3, Blocking::DEFAULT, &mut o3);
+        assert!(o3.iter().all(|&x| x == 0.0), "bt assign with inner=0 is a zero matrix");
+    }
+
+    #[test]
+    fn axpy_matches_scalar_reference_bitwise() {
+        let mut rng = Rng::new(41);
+        for len in [0usize, 1, 7, 8, 9, 31, 64] {
+            let mut dst = vec![0.0f32; len];
+            let mut src = vec![0.0f32; len];
+            fill(&mut rng, &mut dst);
+            fill(&mut rng, &mut src);
+            let a = (rng.f64() * 2.0 - 1.0) as f32;
+            let mut want = dst.clone();
+            for (w, s) in want.iter_mut().zip(&src) {
+                *w += a * *s;
+            }
+            axpy(&mut dst, &src, a);
+            assert_eq!(bits(&dst), bits(&want), "axpy len {len}");
+        }
+    }
+
+    #[test]
+    fn matvec_is_row_dots() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let x = [1.0f32, 0.5];
+        let mut out = [0.0f32; 3];
+        matvec(&a, &x, 3, 2, &mut out);
+        assert_eq!(out, [2.0, 5.0, 8.0]);
+        assert_eq!(dot(&a[..2], &x), 2.0);
+    }
+
+    #[test]
+    fn parse_blocking_accepts_triples_only() {
+        assert_eq!(parse_blocking("8,16,32"), Some(Blocking { ib: 8, kb: 16, jb: 32 }));
+        assert_eq!(parse_blocking(" 1 , 2 , 3 "), Some(Blocking { ib: 1, kb: 2, jb: 3 }));
+        assert_eq!(parse_blocking("8,16"), None);
+        assert_eq!(parse_blocking("8,16,32,64"), None);
+        assert_eq!(parse_blocking("a,b,c"), None);
+        assert_eq!(parse_blocking(""), None);
+    }
+
+    #[test]
+    fn mode_flip_is_bit_neutral() {
+        // the dispatching entry points agree with the oracle under any
+        // config (safe even if parallel tests race on the global config,
+        // because every mode/blocking is bit-identical by construction)
+        let mut rng = Rng::new(51);
+        let (r, k, c) = (5usize, 8usize, 6usize);
+        let mut a = vec![0.0f32; r * k];
+        let mut b = vec![0.0f32; k * c];
+        fill(&mut rng, &mut a);
+        fill(&mut rng, &mut b);
+        let mut want = vec![0.0f32; r * c];
+        gemm_oracle(&a, &b, MatDims::packed(r, k, c), &mut want);
+        let prev = config();
+        for mode in [KernelMode::Oracle, KernelMode::Blocked] {
+            set_config(KernelConfig { mode, blocking: Blocking { ib: 3, kb: 2, jb: 4 } });
+            let mut got = vec![0.0f32; r * c];
+            gemm(&a, &b, MatDims::packed(r, k, c), &mut got);
+            assert_eq!(bits(&got), bits(&want), "dispatch under {mode:?}");
+        }
+        set_config(prev);
+    }
+}

@@ -1,9 +1,11 @@
 //! Policy layer: padded graph encodings, the [`PolicyBackend`] trait with
-//! its two implementations (pure-Rust native and PJRT-backed), and the
+//! its two implementations (pure-Rust native and PJRT-backed), the shared
+//! blocked-GEMM kernel module backing the native implementation, and the
 //! ASSIGN episode runner (Algorithm 3).
 
 pub mod encoding;
 pub mod episode;
+pub mod gemm;
 pub mod native;
 pub mod nets;
 

@@ -17,6 +17,17 @@
 //! (`rollout::generate_episodes`), which the single-threaded PJRT
 //! handles never could.
 //!
+//! All dense products route through the shared blocked-GEMM kernel
+//! module ([`super::gemm`], DESIGN.md §14): `gemm`/`gemm_acc` for the
+//! forward matmuls, `gemm_at_b_acc` for weight gradients,
+//! `gemm_bt`/`gemm_bt_acc` for input gradients, and `axpy`/`dot` as the
+//! fixed-order inner kernels. Every kernel reduces in a fixed order, so
+//! cache blocking (and the optional SIMD `axpy`) is bit-identical to the
+//! naive oracle at any block size — `tests/gemm_kernels.rs` pins the
+//! kernels themselves and the end-to-end loss/gradient across modes.
+//! Per-episode inference reuses one [`StepScratch`] across MDP steps via
+//! [`EpisodeCache::Native`], so the per-step hot path allocates nothing.
+//!
 //! Correctness contract:
 //! - forward passes are pinned against the JAX reference within 1e-5 by
 //!   `tests/golden_logits.rs` (fixture from tools/gen_golden_logits.py);
@@ -28,6 +39,8 @@
 //!   (DESIGN.md §11): bit-exactness is guaranteed *within* a backend,
 //!   never across backends.
 
+use std::cell::RefCell;
+
 use anyhow::{Context, Result};
 
 use crate::runtime::manifest::{Manifest, VariantInfo};
@@ -35,6 +48,7 @@ use crate::util::rng::Rng;
 
 use super::encoding::GraphEncoding;
 use super::episode::Trajectory;
+use super::gemm::{self, MatDims};
 use super::nets::{EpisodeCache, Method, OptState, PolicyBackend, TrainItem};
 
 /// Masked-logit sentinel (model.py `NEG`).
@@ -233,43 +247,8 @@ impl ParamLayout {
 }
 
 // --------------------------------------------------------------------------
-// dense helpers (row-major, f32)
+// elementwise helpers (dense products live in super::gemm)
 // --------------------------------------------------------------------------
-
-/// `out = a @ b` (row-major; `a: [rows, inner]`, `b: [inner, cols]`).
-/// Zero `a` entries are skipped: harmless for values (adding exact zero
-/// products) and a large win for the one-hot/path/placement operands.
-fn matmul(a: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize, out: &mut [f32]) {
-    for i in 0..rows {
-        let orow = &mut out[i * cols..(i + 1) * cols];
-        orow.fill(0.0);
-        for k in 0..inner {
-            let av = a[i * inner + k];
-            if av != 0.0 {
-                let brow = &b[k * cols..(k + 1) * cols];
-                for j in 0..cols {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
-    }
-}
-
-/// `out += a @ b`.
-fn matmul_acc(a: &[f32], b: &[f32], rows: usize, inner: usize, cols: usize, out: &mut [f32]) {
-    for i in 0..rows {
-        let orow = &mut out[i * cols..(i + 1) * cols];
-        for k in 0..inner {
-            let av = a[i * inner + k];
-            if av != 0.0 {
-                let brow = &b[k * cols..(k + 1) * cols];
-                for j in 0..cols {
-                    orow[j] += av * brow[j];
-                }
-            }
-        }
-    }
-}
 
 fn add_bias(out: &mut [f32], b: &[f32], rows: usize, cols: usize) {
     for i in 0..rows {
@@ -312,14 +291,6 @@ fn mask_rows(x: &mut [f32], mask: &[f32], cols: usize) {
     }
 }
 
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    let mut s = 0.0f32;
-    for (x, y) in a.iter().zip(b) {
-        s += x * y;
-    }
-    s
-}
-
 /// Masked log-softmax into `logp`; returns `sum_k p_k * logp_k`
 /// (= -entropy). Masked entries carry `NEG` and contribute exactly zero:
 /// `exp(NEG - max)` underflows to 0 in f32, matching the JAX model.
@@ -355,6 +326,11 @@ struct EncodeTrace {
     /// `h_0 = Z, h_1, ..., h_K` per round, each `[n, H]` (h_0 doubles as
     /// the node-feature embedding Z in the Hcat concat).
     h_list: Vec<Vec<f32>>,
+    /// Source-endpoint gathers per round, `[e, H]` (zero rows for masked
+    /// edges) — the weight-gradient `Aᵀ·D` operand of the message layer.
+    hs_list: Vec<Vec<f32>>,
+    /// Destination-endpoint gathers per round, `[e, H]`.
+    hd_list: Vec<Vec<f32>>,
     /// Edge messages per round, `[e, H]`.
     msgs: Vec<Vec<f32>>,
     /// Scatter-sums per round, `[n, H]`.
@@ -363,7 +339,8 @@ struct EncodeTrace {
     hcat: Vec<f32>,
 }
 
-/// PLC head activations for one step.
+/// PLC head activations for one step. Reused across steps (every field
+/// is fully overwritten by [`NativePolicy::plc_forward_into`]).
 struct PlcAct {
     y: Vec<f32>,
     feat: Vec<f32>,
@@ -371,13 +348,74 @@ struct PlcAct {
     q: Vec<f32>,
 }
 
-/// GDP head activations for one step.
+impl PlcAct {
+    fn new(l: &ParamLayout) -> PlcAct {
+        PlcAct {
+            y: vec![0.0; l.m * l.h],
+            feat: vec![0.0; l.m * l.plc_in],
+            x: vec![0.0; l.m * l.h],
+            q: vec![0.0; l.m],
+        }
+    }
+}
+
+/// GDP head activations for one step. Reused across steps (every field
+/// is fully overwritten by [`NativePolicy::gdp_forward_into`]; `att`/`w`
+/// are re-sized per call because `n` varies across encodings).
 struct GdpAct {
     s: Vec<f32>,
+    att: Vec<f32>,
     w: Vec<f32>,
+    ctx: Vec<f32>,
     feat: Vec<f32>,
     x: Vec<f32>,
     q: Vec<f32>,
+}
+
+impl GdpAct {
+    fn new(l: &ParamLayout) -> GdpAct {
+        GdpAct {
+            s: vec![0.0; l.sel_in],
+            att: Vec::new(),
+            w: Vec::new(),
+            ctx: vec![0.0; l.sel_in],
+            feat: vec![0.0; l.m * l.gdp_in],
+            x: vec![0.0; l.m * l.h],
+            q: vec![0.0; l.m],
+        }
+    }
+}
+
+/// Per-episode inference scratch carried in [`EpisodeCache::Native`]:
+/// the device aggregate plus both head activation sets, allocated once
+/// by `begin_episode` and reused for every MDP step of the episode (the
+/// per-step logits path allocates nothing). Opaque outside this module —
+/// `nets::EpisodeCache` only names the type.
+pub struct StepScratch {
+    hd: Vec<f32>,
+    plc: PlcAct,
+    gdp: GdpAct,
+}
+
+impl StepScratch {
+    fn new(l: &ParamLayout) -> StepScratch {
+        StepScratch {
+            hd: vec![0.0; l.m * l.h],
+            plc: PlcAct::new(l),
+            gdp: GdpAct::new(l),
+        }
+    }
+}
+
+/// Copy head scores into the masked logits output (`NEG` off-mask).
+fn masked_q(q: &[f32], dev_mask: &[f32], m: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(m, NEG);
+    for d in 0..m {
+        if dev_mask[d] > 0.0 {
+            out[d] = q[d];
+        }
+    }
 }
 
 // --------------------------------------------------------------------------
@@ -468,15 +506,17 @@ impl NativePolicy {
 
         // Z = FFNN(X_V), masked
         let mut a = vec![0.0f32; n * h];
-        matmul(&enc.xv, &params[l.enc_w0..], n, nf, h, &mut a);
+        gemm::gemm(&enc.xv, &params[l.enc_w0..], MatDims::packed(n, nf, h), &mut a);
         add_bias(&mut a, &params[l.enc_b0..], n, h);
         relu_ip(&mut a);
         let mut z = vec![0.0f32; n * h];
-        matmul(&a, &params[l.enc_w1..], n, h, h, &mut z);
+        gemm::gemm(&a, &params[l.enc_w1..], MatDims::packed(n, h, h), &mut z);
         add_bias(&mut z, &params[l.enc_b1..], n, h);
         mask_rows(&mut z, &enc.node_mask, h);
 
         let mut h_list = vec![z.clone()];
+        let mut hs_list = Vec::with_capacity(l.mpnn.len());
+        let mut hd_list = Vec::with_capacity(l.mpnn.len());
         let mut msgs = Vec::with_capacity(l.mpnn.len());
         let mut aggs = Vec::with_capacity(l.mpnn.len());
         let mut hcur = z.clone();
@@ -494,9 +534,9 @@ impl NativePolicy {
             }
             // psi (eq. 2): msg = tanh(hs Wsrc + hd Wdst + ef We + bm)
             let mut msg = vec![0.0f32; e * h];
-            matmul(&hs, &params[mp.wsrc..], e, h, h, &mut msg);
-            matmul_acc(&hd, &params[mp.wdst..], e, h, h, &mut msg);
-            matmul_acc(&enc.efeat, &params[mp.we..], e, 1, h, &mut msg);
+            gemm::gemm(&hs, &params[mp.wsrc..], MatDims::packed(e, h, h), &mut msg);
+            gemm::gemm_acc(&hd, &params[mp.wdst..], MatDims::packed(e, h, h), &mut msg);
+            gemm::gemm_acc(&enc.efeat, &params[mp.we..], MatDims::packed(e, 1, h), &mut msg);
             add_bias(&mut msg, &params[mp.bm..], e, h);
             tanh_ip(&mut msg);
             // scatter-sum over destination nodes
@@ -511,11 +551,13 @@ impl NativePolicy {
             }
             // phi: h' = tanh([h | agg] Wphi + bphi), masked
             let mut hnext = vec![0.0f32; n * h];
-            matmul(&hcur, &params[mp.wphi..], n, h, h, &mut hnext);
-            matmul_acc(&agg, &params[mp.wphi + h * h..], n, h, h, &mut hnext);
+            gemm::gemm(&hcur, &params[mp.wphi..], MatDims::packed(n, h, h), &mut hnext);
+            gemm::gemm_acc(&agg, &params[mp.wphi + h * h..], MatDims::packed(n, h, h), &mut hnext);
             add_bias(&mut hnext, &params[mp.bphi..], n, h);
             tanh_ip(&mut hnext);
             mask_rows(&mut hnext, &enc.node_mask, h);
+            hs_list.push(hs);
+            hd_list.push(hd);
             msgs.push(msg);
             aggs.push(agg);
             h_list.push(hnext.clone());
@@ -524,9 +566,9 @@ impl NativePolicy {
 
         // critical-path poolings + concat (eq. 3)
         let mut hb = vec![0.0f32; n * h];
-        matmul(&enc.pb, &hcur, n, n, h, &mut hb);
+        gemm::gemm(&enc.pb, &hcur, MatDims::packed(n, n, h), &mut hb);
         let mut ht = vec![0.0f32; n * h];
-        matmul(&enc.pt, &hcur, n, n, h, &mut ht);
+        gemm::gemm(&enc.pt, &hcur, MatDims::packed(n, n, h), &mut ht);
         let si = l.sel_in;
         let mut hcat = vec![0.0f32; n * si];
         for v in 0..n {
@@ -538,7 +580,7 @@ impl NativePolicy {
                 hcat[v * si + 3 * h + j] = z[v * h + j] * nm;
             }
         }
-        EncodeTrace { a, h_list, msgs, aggs, hcat }
+        EncodeTrace { a, h_list, hs_list, hd_list, msgs, aggs, hcat }
     }
 
     /// SEL head: returns (hidden activations `[n, H]`, scores `[n]`).
@@ -546,124 +588,105 @@ impl NativePolicy {
         let l = &self.layout;
         let (h, si) = (l.h, l.sel_in);
         let mut x = vec![0.0f32; n * h];
-        matmul(hcat, &params[l.sel_w0..], n, si, h, &mut x);
+        gemm::gemm(hcat, &params[l.sel_w0..], MatDims::packed(n, si, h), &mut x);
         add_bias(&mut x, &params[l.sel_b0..], n, h);
         relu_ip(&mut x);
         let mut q = vec![0.0f32; n];
-        for v in 0..n {
-            q[v] = dot(&x[v * h..(v + 1) * h], &params[l.sel_w1..l.sel_w1 + h]) + params[l.sel_b1];
+        gemm::matvec(&x, &params[l.sel_w1..l.sel_w1 + h], n, h, &mut q);
+        for qv in q.iter_mut() {
+            *qv += params[l.sel_b1];
         }
         (x, q)
     }
 
-    /// Per-device aggregate `h_d = place_norm @ H_gnn` (`[m, H]`).
-    fn hd_from_place_norm(&self, place_norm: &[f32], hcat: &[f32], n: usize) -> Vec<f32> {
+    /// Per-device aggregate `h_d = place_norm @ H_gnn` into `hd [m, H]`
+    /// (reading the leading `H` columns of the `sel_in`-wide Hcat rows).
+    fn hd_from_place_norm_into(&self, place_norm: &[f32], hcat: &[f32], n: usize, hd: &mut [f32]) {
         let l = &self.layout;
-        let (h, si, m) = (l.h, l.sel_in, l.m);
-        let mut hd = vec![0.0f32; m * h];
-        for d in 0..m {
-            for u in 0..n {
-                let w = place_norm[d * n + u];
-                if w != 0.0 {
-                    for j in 0..h {
-                        hd[d * h + j] += w * hcat[u * si + j];
-                    }
-                }
-            }
-        }
-        hd
+        let dims = MatDims::packed(l.m, n, l.h).with_b_stride(l.sel_in);
+        gemm::gemm(place_norm, hcat, dims, hd);
     }
 
     /// PLC head (eqs. 5-8) for selected node `v` given `xd [m, df]` and
-    /// the device aggregate `hd [m, H]`.
-    fn plc_forward(
+    /// the device aggregate `hd [m, H]`; every `act` field is fully
+    /// overwritten, so the caller can reuse one [`PlcAct`] across steps.
+    fn plc_forward_into(
         &self,
         params: &[f32],
         hcat: &[f32],
         v: usize,
         xd: &[f32],
         hd: &[f32],
-    ) -> PlcAct {
+        act: &mut PlcAct,
+    ) {
         let l = &self.layout;
         let (h, si, m, df, pin) = (l.h, l.sel_in, l.m, l.df, l.plc_in);
-        let mut y = vec![0.0f32; m * h];
-        matmul(xd, &params[l.dev_w0..], m, df, h, &mut y);
-        add_bias(&mut y, &params[l.dev_b0..], m, h);
-        relu_ip(&mut y);
+        gemm::gemm(xd, &params[l.dev_w0..], MatDims::packed(m, df, h), &mut act.y);
+        add_bias(&mut act.y, &params[l.dev_b0..], m, h);
+        relu_ip(&mut act.y);
         let hv = &hcat[v * si..(v + 1) * si];
-        let mut feat = vec![0.0f32; m * pin];
         for d in 0..m {
-            feat[d * pin..d * pin + si].copy_from_slice(hv);
-            feat[d * pin + si..d * pin + si + h].copy_from_slice(&hd[d * h..(d + 1) * h]);
-            feat[d * pin + si + h..(d + 1) * pin].copy_from_slice(&y[d * h..(d + 1) * h]);
+            let f = &mut act.feat[d * pin..(d + 1) * pin];
+            f[..si].copy_from_slice(hv);
+            f[si..si + h].copy_from_slice(&hd[d * h..(d + 1) * h]);
+            f[si + h..].copy_from_slice(&act.y[d * h..(d + 1) * h]);
         }
-        let mut x = vec![0.0f32; m * h];
-        matmul(&feat, &params[l.plc_w0..], m, pin, h, &mut x);
-        add_bias(&mut x, &params[l.plc_b0..], m, h);
-        leaky_ip(&mut x);
-        let mut q = vec![0.0f32; m];
-        for d in 0..m {
-            q[d] = dot(&x[d * h..(d + 1) * h], &params[l.plc_w1..l.plc_w1 + h]) + params[l.plc_b1];
+        gemm::gemm(&act.feat, &params[l.plc_w0..], MatDims::packed(m, pin, h), &mut act.x);
+        add_bias(&mut act.x, &params[l.plc_b0..], m, h);
+        leaky_ip(&mut act.x);
+        gemm::matvec(&act.x, &params[l.plc_w1..l.plc_w1 + h], m, h, &mut act.q);
+        for qv in act.q.iter_mut() {
+            *qv += params[l.plc_b1];
         }
-        PlcAct { y, feat, x, q }
     }
 
-    /// GDP attention head for selected node `v` (placement-state-blind).
-    fn gdp_forward(
+    /// GDP attention head for selected node `v` (placement-state-blind);
+    /// every `act` field is fully overwritten (`att`/`w` are re-sized to
+    /// the encoding's `n`), so one [`GdpAct`] serves all steps.
+    fn gdp_forward_into(
         &self,
         params: &[f32],
         hcat: &[f32],
         n: usize,
         v: usize,
         node_mask: &[f32],
-    ) -> GdpAct {
+        act: &mut GdpAct,
+    ) {
         let l = &self.layout;
         let (h, si, m, gin) = (l.h, l.sel_in, l.m, l.gdp_in);
         let hv = &hcat[v * si..(v + 1) * si];
         // s = Wq @ h_v; att_u = <hcat_u, s> / sqrt(sel_in), masked
-        let mut s = vec![0.0f32; si];
-        for i in 0..si {
-            s[i] = dot(&params[l.gdp_wq + i * si..l.gdp_wq + (i + 1) * si], hv);
-        }
+        gemm::matvec(&params[l.gdp_wq..], hv, si, si, &mut act.s);
         let sqrt_si = (si as f32).sqrt();
-        let mut att = vec![NEG; n];
+        act.att.clear();
+        act.att.resize(n, NEG);
         for u in 0..n {
             if node_mask[u] > 0.0 {
-                att[u] = dot(&hcat[u * si..(u + 1) * si], &s) / sqrt_si;
+                act.att[u] = gemm::dot(&hcat[u * si..(u + 1) * si], &act.s) / sqrt_si;
             }
         }
         // softmax -> context (via log-softmax: masked weights underflow
         // to exactly zero, matching the JAX model)
-        let mut w = vec![0.0f32; n];
-        log_softmax(&att, &mut w);
-        for x in w.iter_mut() {
+        act.w.clear();
+        act.w.resize(n, 0.0);
+        log_softmax(&act.att, &mut act.w);
+        for x in act.w.iter_mut() {
             *x = x.exp();
         }
-        let mut ctx = vec![0.0f32; si];
-        for u in 0..n {
-            let wu = w[u];
-            if wu != 0.0 {
-                for j in 0..si {
-                    ctx[j] += wu * hcat[u * si + j];
-                }
-            }
-        }
-        let mut feat = vec![0.0f32; m * gin];
+        gemm::gemm(&act.w, hcat, MatDims::packed(1, n, si), &mut act.ctx);
         for d in 0..m {
-            feat[d * gin..d * gin + si].copy_from_slice(hv);
-            feat[d * gin + si..d * gin + 2 * si].copy_from_slice(&ctx);
-            feat[d * gin + 2 * si..(d + 1) * gin]
-                .copy_from_slice(&params[l.gdp_devemb + d * h..l.gdp_devemb + (d + 1) * h]);
+            let f = &mut act.feat[d * gin..(d + 1) * gin];
+            f[..si].copy_from_slice(hv);
+            f[si..2 * si].copy_from_slice(&act.ctx);
+            f[2 * si..].copy_from_slice(&params[l.gdp_devemb + d * h..l.gdp_devemb + (d + 1) * h]);
         }
-        let mut x = vec![0.0f32; m * h];
-        matmul(&feat, &params[l.gdp_w0..], m, gin, h, &mut x);
-        add_bias(&mut x, &params[l.gdp_b0..], m, h);
-        leaky_ip(&mut x);
-        let mut q = vec![0.0f32; m];
-        for d in 0..m {
-            q[d] = dot(&x[d * h..(d + 1) * h], &params[l.gdp_w1..l.gdp_w1 + h]) + params[l.gdp_b1];
+        gemm::gemm(&act.feat, &params[l.gdp_w0..], MatDims::packed(m, gin, h), &mut act.x);
+        add_bias(&mut act.x, &params[l.gdp_b0..], m, h);
+        leaky_ip(&mut act.x);
+        gemm::matvec(&act.x, &params[l.gdp_w1..l.gdp_w1 + h], m, h, &mut act.q);
+        for qv in act.q.iter_mut() {
+            *qv += params[l.gdp_b1];
         }
-        GdpAct { s, w, feat, x, q }
     }
 
     // ---- loss + analytic gradient (validated vs jax.grad; see module docs) ----
@@ -816,13 +839,18 @@ impl NativePolicy {
         let mut logp = vec![0.0f32; n.max(m)];
         let mut dqd = vec![0.0f32; m];
         // per-step backward scratch, hoisted out of the MDP loop
-        // (gdp_in > plc_in, so one dfeat buffer serves both branches)
+        // (gdp_in > plc_in, so one dfeat buffer serves both branches);
+        // the head activation sets are hoisted too — forward_into fully
+        // overwrites them each step
         let mut dxpre = vec![0.0f32; m * h];
+        let mut dypre_mat = vec![0.0f32; m * h];
         let mut dfeat = vec![0.0f32; m * l.gdp_in.max(l.plc_in)];
         let mut dhv = vec![0.0f32; si];
         let mut dctx = vec![0.0f32; si];
         let mut dattm = vec![0.0f32; n];
         let mut ds = vec![0.0f32; si];
+        let mut plc_act = PlcAct::new(l);
+        let mut gdp_act = GdpAct::new(l);
         let sqrt_si = (si as f32).sqrt();
 
         for t in 0..n {
@@ -857,7 +885,8 @@ impl NativePolicy {
 
             // ---- PLC / GDP term ----
             if method == Method::Gdp {
-                let act = self.gdp_forward(params, hcat, n, a_sel, &enc.node_mask);
+                self.gdp_forward_into(params, hcat, n, a_sel, &enc.node_mask, &mut gdp_act);
+                let act = &gdp_act;
                 for (d, lg) in logits[..m].iter_mut().enumerate() {
                     *lg = if dev_mask[d] > 0.0 { act.q[d] } else { NEG };
                 }
@@ -894,16 +923,14 @@ impl NativePolicy {
                         dxpre[d * h + j] = if act.x[d * h + j] > 0.0 { dx } else { 0.01 * dx };
                     }
                 }
-                for d in 0..m {
-                    for i in 0..gin {
-                        let fv = act.feat[d * gin + i];
-                        if fv != 0.0 {
-                            for j in 0..h {
-                                grads[l.gdp_w0 + i * h + j] += fv * dxpre[d * h + j];
-                            }
-                        }
-                    }
-                }
+                gemm::gemm_at_b_acc(
+                    &act.feat,
+                    &dxpre,
+                    m,
+                    gin,
+                    h,
+                    &mut grads[l.gdp_w0..l.gdp_w0 + gin * h],
+                );
                 for j in 0..h {
                     let mut s2 = 0.0f32;
                     for d in 0..m {
@@ -911,14 +938,7 @@ impl NativePolicy {
                     }
                     grads[l.gdp_b0 + j] += s2;
                 }
-                for d in 0..m {
-                    for i in 0..gin {
-                        dfeat[d * gin + i] = dot(
-                            &dxpre[d * h..(d + 1) * h],
-                            &params[l.gdp_w0 + i * h..l.gdp_w0 + (i + 1) * h],
-                        );
-                    }
-                }
+                gemm::gemm_bt(&dxpre, &params[l.gdp_w0..], m, h, gin, &mut dfeat[..m * gin]);
                 dhv.fill(0.0);
                 dctx.fill(0.0);
                 for d in 0..m {
@@ -935,12 +955,10 @@ impl NativePolicy {
                 let mut wdw_sum = 0.0f32;
                 for u in 0..n {
                     if act.w[u] != 0.0 {
-                        let dwu = dot(&hcat[u * si..(u + 1) * si], &dctx);
+                        let dwu = gemm::dot(&hcat[u * si..(u + 1) * si], &dctx);
                         dattm[u] = dwu;
                         wdw_sum += act.w[u] * dwu;
-                        for j in 0..si {
-                            dhcat[u * si + j] += act.w[u] * dctx[j];
-                        }
+                        gemm::axpy(&mut dhcat[u * si..(u + 1) * si], &dctx, act.w[u]);
                     }
                 }
                 ds.fill(0.0);
@@ -948,22 +966,13 @@ impl NativePolicy {
                     if act.w[u] != 0.0 && enc.node_mask[u] > 0.0 {
                         let da = act.w[u] * (dattm[u] - wdw_sum) / sqrt_si;
                         if da != 0.0 {
-                            for j in 0..si {
-                                dhcat[u * si + j] += da * act.s[j];
-                                ds[j] += da * hcat[u * si + j];
-                            }
+                            gemm::axpy(&mut dhcat[u * si..(u + 1) * si], &act.s, da);
+                            gemm::axpy(&mut ds, &hcat[u * si..(u + 1) * si], da);
                         }
                     }
                 }
                 let hv = &hcat[a_sel * si..(a_sel + 1) * si];
-                for i in 0..si {
-                    let dsi = ds[i];
-                    if dsi != 0.0 {
-                        for j in 0..si {
-                            grads[l.gdp_wq + i * si + j] += dsi * hv[j];
-                        }
-                    }
-                }
+                gemm::gemm_at_b_acc(&ds, hv, 1, si, si, &mut grads[l.gdp_wq..l.gdp_wq + si * si]);
                 for j in 0..si {
                     let mut s2 = 0.0f32;
                     for i in 0..si {
@@ -971,9 +980,7 @@ impl NativePolicy {
                     }
                     dhv[j] += s2;
                 }
-                for j in 0..si {
-                    dhcat[a_sel * si + j] += dhv[j];
-                }
+                gemm::axpy(&mut dhcat[a_sel * si..(a_sel + 1) * si], &dhv, 1.0);
             } else {
                 // device aggregate from the exclusive prefix
                 for d in 0..m {
@@ -990,7 +997,8 @@ impl NativePolicy {
                     }
                 }
                 let xd = &traj.xd_steps[t * m * df..(t + 1) * m * df];
-                let act = self.plc_forward(params, hcat, a_sel, xd, &hd);
+                self.plc_forward_into(params, hcat, a_sel, xd, &hd, &mut plc_act);
+                let act = &plc_act;
                 for (d, lg) in logits[..m].iter_mut().enumerate() {
                     *lg = if dev_mask[d] > 0.0 { act.q[d] } else { NEG };
                 }
@@ -1024,16 +1032,14 @@ impl NativePolicy {
                         dxpre[d * h + j] = if act.x[d * h + j] > 0.0 { dx } else { 0.01 * dx };
                     }
                 }
-                for d in 0..m {
-                    for i in 0..pin {
-                        let fv = act.feat[d * pin + i];
-                        if fv != 0.0 {
-                            for j in 0..h {
-                                grads[l.plc_w0 + i * h + j] += fv * dxpre[d * h + j];
-                            }
-                        }
-                    }
-                }
+                gemm::gemm_at_b_acc(
+                    &act.feat,
+                    &dxpre,
+                    m,
+                    pin,
+                    h,
+                    &mut grads[l.plc_w0..l.plc_w0 + pin * h],
+                );
                 for j in 0..h {
                     let mut s2 = 0.0f32;
                     for d in 0..m {
@@ -1041,31 +1047,30 @@ impl NativePolicy {
                     }
                     grads[l.plc_b0 + j] += s2;
                 }
-                for d in 0..m {
-                    for i in 0..pin {
-                        dfeat[d * pin + i] = dot(
-                            &dxpre[d * h..(d + 1) * h],
-                            &params[l.plc_w0 + i * h..l.plc_w0 + (i + 1) * h],
-                        );
-                    }
-                }
+                gemm::gemm_bt(&dxpre, &params[l.plc_w0..], m, h, pin, &mut dfeat[..m * pin]);
                 // split dfeat -> dhv | dhd | dy
                 dhv.fill(0.0);
                 for d in 0..m {
-                    for j in 0..si {
-                        dhv[j] += dfeat[d * pin + j];
-                    }
+                    gemm::axpy(&mut dhv, &dfeat[d * pin..d * pin + si], 1.0);
                 }
-                // dy -> device-feature encoder grads (xd is data)
+                // dy -> device-feature encoder grads (xd is data); the
+                // relu gate is materialized so the weight gradient is one
+                // Aᵀ·D product over the step's device block
                 for d in 0..m {
                     for j in 0..h {
                         let dy = dfeat[d * pin + si + h + j];
-                        let dypre = if act.y[d * h + j] > 0.0 { dy } else { 0.0 };
-                        if dypre != 0.0 {
-                            for i in 0..df {
-                                grads[l.dev_w0 + i * h + j] += xd[d * df + i] * dypre;
-                            }
-                            grads[l.dev_b0 + j] += dypre;
+                        dypre_mat[d * h + j] = if act.y[d * h + j] > 0.0 { dy } else { 0.0 };
+                    }
+                }
+                gemm::gemm_at_b_acc(xd, &dypre_mat, m, df, h, &mut grads[l.dev_w0..l.dev_w0 + df * h]);
+                // direct accumulation (not a local sum): dev_b0 gathers
+                // contributions across steps, so regrouping would change
+                // the cross-step reduction order
+                for j in 0..h {
+                    for d in 0..m {
+                        let v = dypre_mat[d * h + j];
+                        if v != 0.0 {
+                            grads[l.dev_b0 + j] += v;
                         }
                     }
                 }
@@ -1075,22 +1080,24 @@ impl NativePolicy {
                     if c > 0 {
                         let w = 1.0 / c as f32;
                         for &u in &placed[d] {
-                            for j in 0..h {
-                                dhcat[u * si + j] += w * dfeat[d * pin + si + j];
-                            }
+                            gemm::axpy(
+                                &mut dhcat[u * si..u * si + h],
+                                &dfeat[d * pin + si..d * pin + si + h],
+                                w,
+                            );
                         }
                     }
                 }
-                for j in 0..si {
-                    dhcat[a_sel * si + j] += dhv[j];
-                }
+                gemm::axpy(&mut dhcat[a_sel * si..(a_sel + 1) * si], &dhv, 1.0);
             }
 
             // advance the exclusive placement prefix
             place_counts[a_plc] += 1;
-            for j in 0..h {
-                hd_sums[a_plc * h + j] += hcat[a_sel * si + j];
-            }
+            gemm::axpy(
+                &mut hd_sums[a_plc * h..(a_plc + 1) * h],
+                &hcat[a_sel * si..a_sel * si + h],
+                1.0,
+            );
             placed[a_plc].push(a_sel);
         }
 
@@ -1118,18 +1125,9 @@ impl NativePolicy {
                     }
                 }
             }
-            for u in 0..n {
-                if dq[u] != 0.0 {
-                    for i in 0..si {
-                        let hv = hcat[u * si + i];
-                        if hv != 0.0 {
-                            for j in 0..h {
-                                grads[l.sel_w0 + i * h + j] += hv * dxs[u * h + j];
-                            }
-                        }
-                    }
-                }
-            }
+            // rows with dq[u] == 0 have an all-zero dxs row, so the
+            // kernel's zero-skip reproduces the old dq gate
+            gemm::gemm_at_b_acc(hcat, &dxs, n, si, h, &mut grads[l.sel_w0..l.sel_w0 + si * h]);
             for j in 0..h {
                 let mut s2 = 0.0f32;
                 for u in 0..n {
@@ -1137,14 +1135,7 @@ impl NativePolicy {
                 }
                 grads[l.sel_b0 + j] += s2;
             }
-            for u in 0..n {
-                if dq[u] != 0.0 {
-                    for i in 0..si {
-                        let w0_row = &params[l.sel_w0 + i * h..l.sel_w0 + (i + 1) * h];
-                        dhcat[u * si + i] += dot(&dxs[u * h..(u + 1) * h], w0_row);
-                    }
-                }
-            }
+            gemm::gemm_bt_acc(&dxs, &params[l.sel_w0..], n, h, si, &mut dhcat);
         }
 
         // ---- encoder backward ----
@@ -1159,15 +1150,19 @@ impl NativePolicy {
             for u in 0..n {
                 let wb = enc.pb[v * n + u];
                 if wb != 0.0 {
-                    for j in 0..h {
-                        dh[u * h + j] += wb * dhcat[v * si + h + j];
-                    }
+                    gemm::axpy(
+                        &mut dh[u * h..(u + 1) * h],
+                        &dhcat[v * si + h..v * si + 2 * h],
+                        wb,
+                    );
                 }
                 let wt = enc.pt[v * n + u];
                 if wt != 0.0 {
-                    for j in 0..h {
-                        dh[u * h + j] += wt * dhcat[v * si + 2 * h + j];
-                    }
+                    gemm::axpy(
+                        &mut dh[u * h..(u + 1) * h],
+                        &dhcat[v * si + 2 * h..v * si + 3 * h],
+                        wt,
+                    );
                 }
             }
         }
@@ -1179,10 +1174,12 @@ impl NativePolicy {
         }
 
         let e = enc.e;
-        let mut dmpre_row = vec![0.0f32; h];
+        let mut dmpre_mat = vec![0.0f32; e * h];
         for (k, mp) in l.mpnn.iter().enumerate().rev() {
             let h_in = &tr.h_list[k];
             let h_out = &tr.h_list[k + 1];
+            let hs_mat = &tr.hs_list[k];
+            let hd_mat = &tr.hd_list[k];
             let msg = &tr.msgs[k];
             let agg = &tr.aggs[k];
             let mut dcpre = vec![0.0f32; n * h];
@@ -1193,23 +1190,17 @@ impl NativePolicy {
                     dcpre[v * h + j] = dh[v * h + j] * (1.0 - ho * ho) * nm;
                 }
             }
-            // Wphi / bphi grads over cat = [h_in | agg]
-            for v in 0..n {
-                for i in 0..h {
-                    let a1 = h_in[v * h + i];
-                    if a1 != 0.0 {
-                        for j in 0..h {
-                            grads[mp.wphi + i * h + j] += a1 * dcpre[v * h + j];
-                        }
-                    }
-                    let a2 = agg[v * h + i];
-                    if a2 != 0.0 {
-                        for j in 0..h {
-                            grads[mp.wphi + (h + i) * h + j] += a2 * dcpre[v * h + j];
-                        }
-                    }
-                }
-            }
+            // Wphi grads over cat = [h_in | agg]: two Aᵀ·D products into
+            // the disjoint halves of Wphi
+            gemm::gemm_at_b_acc(h_in, &dcpre, n, h, h, &mut grads[mp.wphi..mp.wphi + h * h]);
+            gemm::gemm_at_b_acc(
+                agg,
+                &dcpre,
+                n,
+                h,
+                h,
+                &mut grads[mp.wphi + h * h..mp.wphi + 2 * h * h],
+            );
             for j in 0..h {
                 let mut s2 = 0.0f32;
                 for v in 0..n {
@@ -1220,53 +1211,48 @@ impl NativePolicy {
             // dcat = dcpre @ Wphi^T
             let mut dh_new = vec![0.0f32; n * h];
             let mut dagg = vec![0.0f32; n * h];
-            for v in 0..n {
-                let drow = &dcpre[v * h..(v + 1) * h];
-                for i in 0..h {
-                    dh_new[v * h + i] = dot(drow, &params[mp.wphi + i * h..mp.wphi + (i + 1) * h]);
-                    dagg[v * h + i] =
-                        dot(drow, &params[mp.wphi + (h + i) * h..mp.wphi + (h + i + 1) * h]);
+            gemm::gemm_bt(&dcpre, &params[mp.wphi..], n, h, h, &mut dh_new);
+            gemm::gemm_bt(&dcpre, &params[mp.wphi + h * h..], n, h, h, &mut dagg);
+            // message backward through tanh into the full [e, H]
+            // pre-activation gradient (masked edges stay zero rows)
+            dmpre_mat.fill(0.0);
+            for idx in 0..e {
+                if enc.edge_mask[idx] <= 0.0 {
+                    continue;
+                }
+                let dv = enc.edst[idx] as usize;
+                for j in 0..h {
+                    let ms = msg[idx * h + j];
+                    dmpre_mat[idx * h + j] = dagg[dv * h + j] * (1.0 - ms * ms);
                 }
             }
-            // edge-message backward (masked edges contribute nothing)
+            // message-layer weight grads: batched Aᵀ·D over all edges —
+            // the endpoint gathers have zero rows exactly where edges are
+            // masked, so the kernel's zero-skip reproduces the old
+            // per-edge gating
+            gemm::gemm_at_b_acc(hs_mat, &dmpre_mat, e, h, h, &mut grads[mp.wsrc..mp.wsrc + h * h]);
+            gemm::gemm_at_b_acc(hd_mat, &dmpre_mat, e, h, h, &mut grads[mp.wdst..mp.wdst + h * h]);
+            gemm::gemm_at_b_acc(&enc.efeat, &dmpre_mat, e, 1, h, &mut grads[mp.we..mp.we + h]);
+            for j in 0..h {
+                let mut s2 = 0.0f32;
+                for idx in 0..e {
+                    s2 += dmpre_mat[idx * h + j];
+                }
+                grads[mp.bm + j] += s2;
+            }
+            // scatter the message gradient back to the endpoint embeddings
             for idx in 0..e {
                 if enc.edge_mask[idx] <= 0.0 {
                     continue;
                 }
                 let sv = enc.esrc[idx] as usize;
                 let dv = enc.edst[idx] as usize;
-                for j in 0..h {
-                    let ms = msg[idx * h + j];
-                    dmpre_row[j] = dagg[dv * h + j] * (1.0 - ms * ms);
-                }
-                for i in 0..h {
-                    let hs = h_in[sv * h + i];
-                    if hs != 0.0 {
-                        for j in 0..h {
-                            grads[mp.wsrc + i * h + j] += hs * dmpre_row[j];
-                        }
-                    }
-                    let hdv = h_in[dv * h + i];
-                    if hdv != 0.0 {
-                        for j in 0..h {
-                            grads[mp.wdst + i * h + j] += hdv * dmpre_row[j];
-                        }
-                    }
-                }
-                let ev = enc.efeat[idx];
-                if ev != 0.0 {
-                    for j in 0..h {
-                        grads[mp.we + j] += ev * dmpre_row[j];
-                    }
-                }
-                for j in 0..h {
-                    grads[mp.bm + j] += dmpre_row[j];
-                }
+                let mrow = &dmpre_mat[idx * h..(idx + 1) * h];
                 for i in 0..h {
                     dh_new[sv * h + i] +=
-                        dot(&dmpre_row, &params[mp.wsrc + i * h..mp.wsrc + (i + 1) * h]);
+                        gemm::dot(mrow, &params[mp.wsrc + i * h..mp.wsrc + (i + 1) * h]);
                     dh_new[dv * h + i] +=
-                        dot(&dmpre_row, &params[mp.wdst + i * h..mp.wdst + (i + 1) * h]);
+                        gemm::dot(mrow, &params[mp.wdst + i * h..mp.wdst + (i + 1) * h]);
                 }
             }
             dh = dh_new;
@@ -1279,16 +1265,7 @@ impl NativePolicy {
                 dz[v * h + j] = (dz[v * h + j] + dh[v * h + j]) * nm;
             }
         }
-        for v in 0..n {
-            for i in 0..h {
-                let av = tr.a[v * h + i];
-                if av != 0.0 {
-                    for j in 0..h {
-                        grads[l.enc_w1 + i * h + j] += av * dz[v * h + j];
-                    }
-                }
-            }
-        }
+        gemm::gemm_at_b_acc(&tr.a, &dz, n, h, h, &mut grads[l.enc_w1..l.enc_w1 + h * h]);
         for j in 0..h {
             let mut s2 = 0.0f32;
             for v in 0..n {
@@ -1296,25 +1273,15 @@ impl NativePolicy {
             }
             grads[l.enc_b1 + j] += s2;
         }
+        // da = dz @ W1ᵀ, then the relu gate re-zeroes inactive units
         let mut da = vec![0.0f32; n * h];
-        for v in 0..n {
-            for i in 0..h {
-                if tr.a[v * h + i] > 0.0 {
-                    let w1_row = &params[l.enc_w1 + i * h..l.enc_w1 + (i + 1) * h];
-                    da[v * h + i] = dot(&dz[v * h..(v + 1) * h], w1_row);
-                }
+        gemm::gemm_bt(&dz, &params[l.enc_w1..], n, h, h, &mut da);
+        for (dv, &av) in da.iter_mut().zip(tr.a.iter()) {
+            if av <= 0.0 {
+                *dv = 0.0;
             }
         }
-        for v in 0..n {
-            for i in 0..nf {
-                let xvv = enc.xv[v * nf + i];
-                if xvv != 0.0 {
-                    for j in 0..h {
-                        grads[l.enc_w0 + i * h + j] += xvv * da[v * h + j];
-                    }
-                }
-            }
-        }
+        gemm::gemm_at_b_acc(&enc.xv, &da, n, nf, h, &mut grads[l.enc_w0..l.enc_w0 + nf * h]);
         for j in 0..h {
             let mut s2 = 0.0f32;
             for v in 0..n {
@@ -1541,14 +1508,16 @@ impl PolicyBackend for NativePolicy {
         _params: &[f32],
         _hcat: &[f32],
     ) -> Result<EpisodeCache> {
-        Ok(EpisodeCache::None)
+        // one scratch allocation per episode; every MDP step borrows it
+        // mutably through the shared cache reference
+        Ok(EpisodeCache::Native(RefCell::new(StepScratch::new(&self.layout))))
     }
 
     fn plc_logits_step(
         &self,
         _variant: &VariantInfo,
         enc: &GraphEncoding,
-        _cache: &EpisodeCache,
+        cache: &EpisodeCache,
         params: &[f32],
         hcat: &[f32],
         v_onehot: &[f32],
@@ -1561,15 +1530,17 @@ impl PolicyBackend for NativePolicy {
             .iter()
             .position(|&x| x != 0.0)
             .context("v_onehot selects no node")?;
-        let hd = self.hd_from_place_norm(place_norm, hcat, enc.n);
-        let act = self.plc_forward(params, hcat, v, xd, &hd);
-        let m = self.layout.m;
-        out.clear();
-        out.resize(m, NEG);
-        for d in 0..m {
-            if dev_mask[d] > 0.0 {
-                out[d] = act.q[d];
-            }
+        let mut run = |scratch: &mut StepScratch| {
+            let StepScratch { hd, plc, .. } = scratch;
+            self.hd_from_place_norm_into(place_norm, hcat, enc.n, hd);
+            self.plc_forward_into(params, hcat, v, xd, hd, plc);
+            masked_q(&plc.q, dev_mask, self.layout.m, out);
+        };
+        match cache {
+            EpisodeCache::Native(cell) => run(&mut cell.borrow_mut()),
+            // callers without an episode cache (e.g. one-shot fixture
+            // replay) pay a fresh allocation, same numerics
+            _ => run(&mut StepScratch::new(&self.layout)),
         }
         Ok(())
     }
@@ -1578,7 +1549,7 @@ impl PolicyBackend for NativePolicy {
         &self,
         _variant: &VariantInfo,
         enc: &GraphEncoding,
-        _cache: &EpisodeCache,
+        cache: &EpisodeCache,
         params: &[f32],
         hcat: &[f32],
         v_onehot: &[f32],
@@ -1589,14 +1560,13 @@ impl PolicyBackend for NativePolicy {
             .iter()
             .position(|&x| x != 0.0)
             .context("v_onehot selects no node")?;
-        let act = self.gdp_forward(params, hcat, enc.n, v, &enc.node_mask);
-        let m = self.layout.m;
-        out.clear();
-        out.resize(m, NEG);
-        for d in 0..m {
-            if dev_mask[d] > 0.0 {
-                out[d] = act.q[d];
-            }
+        let mut run = |scratch: &mut StepScratch| {
+            self.gdp_forward_into(params, hcat, enc.n, v, &enc.node_mask, &mut scratch.gdp);
+            masked_q(&scratch.gdp.q, dev_mask, self.layout.m, out);
+        };
+        match cache {
+            EpisodeCache::Native(cell) => run(&mut cell.borrow_mut()),
+            _ => run(&mut StepScratch::new(&self.layout)),
         }
         Ok(())
     }

@@ -84,12 +84,18 @@ pub struct TrainItem<'a> {
 /// [`PolicyBackend::begin_episode`] and threaded through the hot-loop
 /// head calls. PJRT caches episode-constant argument literals (params,
 /// Hcat) so they are marshalled once instead of once per MDP step; the
-/// native backend needs no per-episode state.
+/// native backend carries its per-step inference scratch (device
+/// aggregate + head activations) so the step hot path allocates nothing.
 pub enum EpisodeCache {
     /// Backend keeps no per-episode state.
     None,
     /// PJRT episode-constant literals.
     Pjrt(EpisodeLiterals),
+    /// Native per-step scratch, reused across the episode's MDP steps.
+    /// `RefCell` because logits steps only see `&EpisodeCache`; the cache
+    /// never crosses threads within an episode (each rollout worker owns
+    /// its own).
+    Native(std::cell::RefCell<super::native::StepScratch>),
 }
 
 /// The policy-backend contract (DESIGN.md §11). All methods are pure in
@@ -617,7 +623,7 @@ impl PolicyBackend for PolicyNets {
             EpisodeCache::Pjrt(c) => {
                 self.plc_logits_cached(variant, enc, c, v_onehot, xd, place_norm, dev_mask)?
             }
-            EpisodeCache::None => {
+            EpisodeCache::None | EpisodeCache::Native(_) => {
                 self.plc_logits(variant, enc, params, hcat, v_onehot, xd, place_norm, dev_mask)?
             }
         };
@@ -639,7 +645,7 @@ impl PolicyBackend for PolicyNets {
     ) -> Result<()> {
         let r = match cache {
             EpisodeCache::Pjrt(c) => self.gdp_logits_cached(variant, enc, c, v_onehot, dev_mask)?,
-            EpisodeCache::None => {
+            EpisodeCache::None | EpisodeCache::Native(_) => {
                 self.gdp_logits(variant, enc, params, hcat, v_onehot, dev_mask)?
             }
         };

@@ -626,6 +626,12 @@ impl<'a> Trainer<'a> {
     /// explicit so an interleaved multi-graph run decays lr/epsilon over
     /// the *global* episode count, not per workload.
     ///
+    /// On the native backend the per-episode gradient passes inside this
+    /// batch run through the shared blocked-GEMM kernels
+    /// (`policy::gemm`, DESIGN.md §14); the kernels keep every reduction
+    /// in the scalar order, so batch results stay bit-identical across
+    /// kernel modes, block sizes, and worker thread counts.
+    ///
     /// `exploit_start` indexes the every-10th pure-exploitation rule and
     /// is counted **per trainer** (equal to `start` in single-graph
     /// training, where the two coincide): if it followed the global

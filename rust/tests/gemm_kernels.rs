@@ -1,0 +1,226 @@
+//! Kernel-vs-oracle pins for the shared blocked-GEMM module
+//! (`policy::gemm`, DESIGN.md §14).
+//!
+//! The determinism contract says the blocked kernels reorder *loops*,
+//! never *reductions*: every output element accumulates its terms in
+//! exactly the naive-triple-loop order, so blocked and oracle results are
+//! bit-identical for any block size — including degenerate and empty
+//! shapes. The property tests below check that contract on random
+//! shapes/strides/blockings via the explicit `_with`/`_oracle` entry
+//! points (which bypass the process-global config, so they are safe
+//! under parallel test execution); the end-to-end test flips the global
+//! config around full `run_episode` + `train` calls and is the only test
+//! in this binary that touches it.
+
+use doppler::features::static_features;
+use doppler::graph::workloads::{chainmm, Scale};
+use doppler::policy::gemm::{self, Blocking, KernelConfig, KernelMode, MatDims};
+use doppler::policy::{
+    device_mask, run_episode, EpisodeCfg, GraphEncoding, Method, NativePolicy, OptState,
+    PolicyBackend,
+};
+use doppler::sim::topology::DeviceTopology;
+use doppler::util::rng::Rng;
+
+/// Blockings exercised everywhere: pathological tiles, tiles that divide
+/// nothing evenly, zero tiles (clamped to 1), and the default.
+const BLOCKINGS: [Blocking; 5] = [
+    Blocking { ib: 1, kb: 1, jb: 1 },
+    Blocking { ib: 2, kb: 3, jb: 5 },
+    Blocking { ib: 8, kb: 16, jb: 8 },
+    Blocking { ib: 0, kb: 0, jb: 0 },
+    Blocking::DEFAULT,
+];
+
+/// Fill with a mix of normals and exact zeros — the kernels' zero-skip
+/// paths only matter when zeros actually occur.
+fn fill(rng: &mut Rng, buf: &mut [f32]) {
+    for v in buf.iter_mut() {
+        *v = if rng.chance(0.25) { 0.0 } else { rng.normal() as f32 };
+    }
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn prop_gemm_random_shapes_strides_blockings_bitwise() {
+    let mut rng = Rng::new(0xB10C_ED);
+    for case in 0..60 {
+        // shapes 0..=24 so empty-batch (rows == 0) and degenerate inner
+        // and col dims all occur with decent probability
+        let rows = rng.below(25);
+        let inner = rng.below(25);
+        let cols = rng.below(25);
+        let a_stride = inner + rng.below(4);
+        let b_stride = cols + rng.below(4);
+        let out_stride = cols + rng.below(4);
+        let dims = MatDims::packed(rows, inner, cols)
+            .with_a_stride(a_stride.max(1))
+            .with_b_stride(b_stride.max(1))
+            .with_out_stride(out_stride.max(1));
+
+        let mut a = vec![0.0f32; rows * a_stride.max(1)];
+        let mut b = vec![0.0f32; inner * b_stride.max(1)];
+        let mut seed = vec![0.0f32; rows * out_stride.max(1)];
+        fill(&mut rng, &mut a);
+        fill(&mut rng, &mut b);
+        fill(&mut rng, &mut seed);
+
+        let mut want_acc = seed.clone();
+        gemm::gemm_acc_oracle(&a, &b, dims, &mut want_acc);
+        let mut want_assign = seed.clone();
+        gemm::gemm_oracle(&a, &b, dims, &mut want_assign);
+
+        for blk in BLOCKINGS {
+            let mut got = seed.clone();
+            gemm::gemm_acc_with(&a, &b, dims, blk, &mut got);
+            assert_eq!(
+                bits(&got),
+                bits(&want_acc),
+                "gemm_acc case {case} ({rows}x{inner}x{cols}) blk {blk:?}"
+            );
+            let mut got = seed.clone();
+            gemm::gemm_with(&a, &b, dims, blk, &mut got);
+            assert_eq!(
+                bits(&got),
+                bits(&want_assign),
+                "gemm case {case} ({rows}x{inner}x{cols}) blk {blk:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_at_b_and_bt_random_shapes_bitwise() {
+    let mut rng = Rng::new(0x7A_B17);
+    for case in 0..60 {
+        let reduce = rng.below(20);
+        let rows = rng.below(20);
+        let cols = rng.below(20);
+
+        // Aᵀ·D: a [reduce × rows], d [reduce × cols], out [rows × cols]
+        let mut a = vec![0.0f32; reduce * rows];
+        let mut d = vec![0.0f32; reduce * cols];
+        let mut seed = vec![0.0f32; rows * cols];
+        fill(&mut rng, &mut a);
+        fill(&mut rng, &mut d);
+        fill(&mut rng, &mut seed);
+        let mut want = seed.clone();
+        gemm::gemm_at_b_acc_oracle(&a, &d, reduce, rows, cols, &mut want);
+        for blk in BLOCKINGS {
+            let mut got = seed.clone();
+            gemm::gemm_at_b_acc_with(&a, &d, reduce, rows, cols, blk, &mut got);
+            assert_eq!(bits(&got), bits(&want), "at_b case {case} blk {blk:?}");
+        }
+
+        // D·Bᵀ: d [rows × inner], b [cols × inner], out [rows × cols]
+        let inner = rng.below(20);
+        let mut dm = vec![0.0f32; rows * inner];
+        let mut bm = vec![0.0f32; cols * inner];
+        fill(&mut rng, &mut dm);
+        fill(&mut rng, &mut bm);
+        let mut want_acc = seed.clone();
+        gemm::gemm_bt_acc_oracle(&dm, &bm, rows, inner, cols, &mut want_acc);
+        let mut want_assign = seed.clone();
+        gemm::gemm_bt_oracle(&dm, &bm, rows, inner, cols, &mut want_assign);
+        for blk in BLOCKINGS {
+            let mut got = seed.clone();
+            gemm::gemm_bt_acc_with(&dm, &bm, rows, inner, cols, blk, &mut got);
+            assert_eq!(bits(&got), bits(&want_acc), "bt_acc case {case} blk {blk:?}");
+            let mut got = seed.clone();
+            gemm::gemm_bt_with(&dm, &bm, rows, inner, cols, blk, &mut got);
+            assert_eq!(bits(&got), bits(&want_assign), "bt case {case} blk {blk:?}");
+        }
+    }
+}
+
+#[test]
+fn degenerate_shapes_assign_zero_fills_acc_is_noop() {
+    // rows > 0 with inner == 0: assign must zero-fill the output rows,
+    // acc must leave them untouched — on both implementations.
+    let dims = MatDims::packed(3, 0, 4);
+    for blk in BLOCKINGS {
+        let mut out = vec![7.0f32; 12];
+        gemm::gemm_with(&[], &[], dims, blk, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0), "assign blk {blk:?}");
+        let mut out = vec![7.0f32; 12];
+        gemm::gemm_acc_with(&[], &[], dims, blk, &mut out);
+        assert!(out.iter().all(|&x| x == 7.0), "acc blk {blk:?}");
+        let mut out = vec![7.0f32; 6];
+        gemm::gemm_bt_with(&[], &[], 2, 0, 3, blk, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0), "bt blk {blk:?}");
+        let mut out = vec![7.0f32; 6];
+        gemm::gemm_at_b_acc_with(&[], &[], 0, 2, 3, blk, &mut out);
+        assert!(out.iter().all(|&x| x == 7.0), "at_b blk {blk:?}");
+    }
+    // fully empty: no panics, nothing written
+    let mut out: Vec<f32> = vec![];
+    gemm::gemm(&[], &[], MatDims::packed(0, 0, 0), &mut out);
+    gemm::gemm_bt(&[], &[], 0, 5, 0, &mut out);
+    assert!(out.is_empty());
+}
+
+#[test]
+fn episode_and_train_bit_identical_across_kernel_configs() {
+    let nets = NativePolicy::builtin();
+    let g = chainmm(Scale::Tiny);
+    let topo = DeviceTopology::p100x4();
+    let feats = static_features(&g, &topo, 1.0);
+    let variant = nets.variant_for_graph(g.n(), g.m()).unwrap();
+    let enc = GraphEncoding::build(&g, &feats, nets.manifest(), &variant).unwrap();
+    let params0 = PolicyBackend::init_params(&nets).unwrap();
+    let dev_mask = device_mask(nets.manifest().max_devices, 4);
+    let cfg = EpisodeCfg {
+        method: Method::Doppler,
+        epsilon: 0.2,
+        n_devices: 4,
+        per_step_encode: false,
+    };
+
+    // one full episode + one train step under a given kernel config;
+    // returns everything observable downstream
+    let run = |kcfg: KernelConfig| -> (Vec<usize>, Vec<u32>, Vec<u32>, f32, f32) {
+        gemm::set_config(kcfg);
+        let mut rng = Rng::new(42);
+        let ep = run_episode(&nets, &enc, &g, &topo, &feats, &params0, &cfg, &mut rng).unwrap();
+        let mut params = params0.clone();
+        let mut opt = OptState::new(params.len());
+        let (loss, ent) = nets
+            .train(
+                Method::Doppler,
+                &variant,
+                &enc,
+                &mut params,
+                &mut opt,
+                &ep.trajectory,
+                &dev_mask,
+                1.0,
+                1e-3,
+                1e-2,
+            )
+            .unwrap();
+        let logits = ep.trajectory.cand_masks.iter().map(|x| x.to_bits()).collect();
+        (ep.assignment, logits, bits(&params), loss, ent)
+    };
+
+    let prev = gemm::config();
+    let base = run(KernelConfig::default());
+    let mut configs = vec![KernelConfig {
+        mode: KernelMode::Oracle,
+        blocking: Blocking::DEFAULT,
+    }];
+    for blk in BLOCKINGS {
+        configs.push(KernelConfig { mode: KernelMode::Blocked, blocking: blk });
+    }
+    for kcfg in configs {
+        let got = run(kcfg);
+        assert_eq!(got.0, base.0, "{kcfg:?}: assignment diverged");
+        assert_eq!(got.1, base.1, "{kcfg:?}: trajectory diverged");
+        assert_eq!(got.2, base.2, "{kcfg:?}: post-train params diverged");
+        assert_eq!(got.3.to_bits(), base.3.to_bits(), "{kcfg:?}: loss diverged");
+        assert_eq!(got.4.to_bits(), base.4.to_bits(), "{kcfg:?}: entropy diverged");
+    }
+    gemm::set_config(prev);
+}

@@ -68,10 +68,29 @@ ROW_KEYS = {
 
 TOP_KEYS = {"bench": "str", "source": "str"}
 
+# extra row lists required for specific benches: bench -> {key -> schema}
+# (train_scaling grew a GEMM-kernel comparison section, DESIGN.md §14)
+EXTRA_ROW_LISTS = {
+    "train_scaling": {
+        "kernel_rows": {
+            "kernel": "str",
+            "threads": "pos",
+            "updates_per_sec": "pos",
+        },
+    },
+}
+
+# extra top-level fields required for specific benches: bench -> {key -> kind}
+EXTRA_TOP_KEYS = {
+    "train_scaling": {"kernel_bitwise_identical": "bool"},
+}
+
 
 def type_ok(value, kind):
     if kind == "str":
         return isinstance(value, str) and value != ""
+    if kind == "bool":
+        return value is True  # the bench asserts; false must never be written
     if kind == "num?":
         if value is None:
             return True
@@ -100,19 +119,29 @@ def check(path):
     if schema is None:
         errors.append(f"{path}: unknown bench '{bench}' (expected {sorted(ROW_KEYS)})")
         return errors
-    rows = doc.get("rows")
-    if not isinstance(rows, list) or not rows:
-        errors.append(f"{path}: 'rows' must be a non-empty list")
-        return errors
-    for i, row in enumerate(rows):
-        if not isinstance(row, dict):
-            errors.append(f"{path}: rows[{i}] is not an object")
-            continue
-        for key, kind in schema.items():
-            if key not in row:
-                errors.append(f"{path}: rows[{i}] missing '{key}'")
-            elif not type_ok(row[key], kind):
-                errors.append(f"{path}: rows[{i}].{key} = {row[key]!r} fails '{kind}'")
+    def check_rows(list_key, row_schema):
+        rows = doc.get(list_key)
+        if not isinstance(rows, list) or not rows:
+            errors.append(f"{path}: '{list_key}' must be a non-empty list")
+            return
+        for i, row in enumerate(rows):
+            if not isinstance(row, dict):
+                errors.append(f"{path}: {list_key}[{i}] is not an object")
+                continue
+            for key, kind in row_schema.items():
+                if key not in row:
+                    errors.append(f"{path}: {list_key}[{i}] missing '{key}'")
+                elif not type_ok(row[key], kind):
+                    errors.append(
+                        f"{path}: {list_key}[{i}].{key} = {row[key]!r} fails '{kind}'"
+                    )
+
+    check_rows("rows", schema)
+    for list_key, row_schema in EXTRA_ROW_LISTS.get(bench, {}).items():
+        check_rows(list_key, row_schema)
+    for key, kind in EXTRA_TOP_KEYS.get(bench, {}).items():
+        if not type_ok(doc.get(key), kind):
+            errors.append(f"{path}: bad or missing top-level '{key}'")
     return errors
 
 

@@ -28,7 +28,9 @@ inputs are integer-exact splitmix64 streams) through the numpy
 transliteration and compares against the pinned JAX f32 outputs. That
 keeps the transliteration — and therefore the algorithm the rust
 backend implements — pinned to the JAX reference even in environments
-that can't run JAX itself.
+that can't run JAX itself. Both subsets also run a small f32
+transliteration of the blocked GEMM loop nest (rust/src/policy/gemm.rs,
+DESIGN.md §14) against the naive triple loop, bitwise.
 
 The numpy code below is deliberately written loop-free where the rust
 code uses loops — the *math* is identical; only the Rust golden-logits
@@ -638,16 +640,54 @@ def check_fixture():
     return ok
 
 
+def check_blocked_order():
+    """Mini-pin of the GEMM kernel contract (DESIGN.md §14): an f32
+    transliteration of the blocked loop nest in rust/src/policy/gemm.rs
+    must be bitwise-identical to the naive triple loop — same
+    per-(i, j) ascending-k term order, same a==0 skip — under blockings
+    that divide nothing evenly."""
+    rng = np.random.default_rng(0xD0)
+    ok = True
+    for rows, inner, cols in [(1, 1, 1), (3, 7, 5), (8, 13, 4)]:
+        a = rng.normal(0, 1, (rows, inner)).astype(np.float32)
+        a[rng.random((rows, inner)) < 0.25] = np.float32(0.0)
+        b = rng.normal(0, 1, (inner, cols)).astype(np.float32)
+        naive = np.zeros((rows, cols), np.float32)
+        for i in range(rows):
+            for k in range(inner):
+                av = a[i, k]
+                if av == 0.0:
+                    continue
+                naive[i] += av * b[k]
+        for ib, kb, jb in [(1, 1, 1), (2, 3, 5), (8, 16, 8)]:
+            out = np.zeros((rows, cols), np.float32)
+            for k0 in range(0, inner, kb):
+                for i0 in range(0, rows, ib):
+                    for j0 in range(0, cols, jb):
+                        for i in range(i0, min(i0 + ib, rows)):
+                            for k in range(k0, min(k0 + kb, inner)):
+                                av = a[i, k]
+                                if av == 0.0:
+                                    continue
+                                out[i, j0:j0 + jb] += av * b[k, j0:j0 + jb]
+            ok &= bool((out.view(np.uint32) == naive.view(np.uint32)).all())
+    print(f"gemm blocked-order mini-check: "
+          f"{'bitwise identical' if ok else 'MISMATCH'}")
+    return ok
+
+
 def main():
     numpy_only = "--numpy-only" in sys.argv or not HAVE_JAX
     fixture_ok = check_fixture()
     batch_ok = check_batch_oracle(with_jax=not numpy_only)
+    order_ok = check_blocked_order()
     if numpy_only:
         why = "requested" if "--numpy-only" in sys.argv else "jax not installed"
         print(f"[numpy-only subset: {why}; jax cross-checks skipped]")
-        print("OK" if fixture_ok and batch_ok else "MISMATCH")
-        return 0 if fixture_ok and batch_ok else 1
-    ok = fixture_ok and batch_ok
+        good = fixture_ok and batch_ok and order_ok
+        print("OK" if good else "MISMATCH")
+        return 0 if good else 1
+    ok = fixture_ok and batch_ok and order_ok
     for seed in (0, 1, 2):
         c = make_case(seed)
         d = np_unpack(c["flat"])

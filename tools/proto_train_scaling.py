@@ -159,6 +159,81 @@ def measure(mode: str, procs: int, episodes: int, batch: int) -> float:
     return episodes / (time.time() - t0)
 
 
+def kernel_unit(args):
+    """One GEMM-kernel work unit: the PLC-head product stack of a batched
+    update. 'blocked' runs whole-matrix products (the effective shape of
+    the cache-blocked rust kernel); 'oracle' runs the same products one
+    output row/column at a time (the naive kernel's working-set
+    behavior). Both compute the same values."""
+    kernel, seed = args
+    rng = np.random.default_rng(seed)
+    feat = rng.normal(0, 0.3, (16 * M, PIN)).astype(np.float32)
+    w0 = rng.normal(0, 0.1, (PIN, H)).astype(np.float32)
+    acc = np.zeros((PIN, H), np.float32)
+    for _ in range(24):
+        if kernel == "blocked":
+            x = np.maximum(feat @ w0, 0)
+            acc += feat.T @ x
+        else:
+            x = np.maximum(np.stack([row @ w0 for row in feat]), 0)
+            acc += np.stack([feat[:, j] @ x for j in range(PIN)])
+    return float(acc[0, 0])
+
+
+def measure_kernel(kernel: str, procs: int, units: int) -> float:
+    args = [(kernel, s) for s in range(units)]
+    t0 = time.time()
+    if procs == 1:
+        for a in args:
+            kernel_unit(a)
+    else:
+        with mp.Pool(procs) as pool:
+            pool.map(kernel_unit, args)
+    return units / (time.time() - t0)
+
+
+def bitwise_kernel_check() -> bool:
+    """Pure-python transliteration of rust/src/policy/gemm.rs on small
+    dims: the blocked loop nest (k-blocks outer, k ascending inside each
+    block, zero-skip on a[i][k]) must reproduce the naive triple loop bit
+    for bit. Python floats are f64 rather than f32, but the argument this
+    checks — per-(i,j) terms are added in ascending-k order under any
+    blocking — is precision-independent."""
+    import random
+
+    rnd = random.Random(7)
+    for rows, inner, cols in [(1, 1, 1), (3, 7, 5), (8, 13, 4), (0, 4, 3), (4, 0, 3)]:
+        a = [[0.0 if rnd.random() < 0.25 else rnd.gauss(0, 1) for _ in range(inner)]
+             for _ in range(rows)]
+        b = [[rnd.gauss(0, 1) for _ in range(cols)] for _ in range(inner)]
+        naive = [[0.0] * cols for _ in range(rows)]
+        for i in range(rows):
+            for k in range(inner):
+                av = a[i][k]
+                if av == 0.0:
+                    continue
+                for j in range(cols):
+                    naive[i][j] += av * b[k][j]
+        for ib, kb, jb in [(1, 1, 1), (2, 3, 5), (8, 16, 8)]:
+            out = [[0.0] * cols for _ in range(rows)]
+            for k0 in range(0, inner, kb):
+                kend = min(k0 + kb, inner)
+                for i0 in range(0, rows, ib):
+                    for j0 in range(0, cols, jb):
+                        jend = min(j0 + jb, cols)
+                        for i in range(i0, min(i0 + ib, rows)):
+                            for k in range(k0, kend):
+                                av = a[i][k]
+                                if av == 0.0:
+                                    continue
+                                for j in range(j0, jend):
+                                    out[i][j] += av * b[k][j]
+            if any(x.hex() != y.hex()
+                   for rx, ry in zip(out, naive) for x, y in zip(rx, ry)):
+                return False
+    return True
+
+
 def main():
     cores = os.cpu_count() or 1
     episodes = int(os.environ.get("EPISODES", "16"))
@@ -186,6 +261,28 @@ def main():
     speedup_4t = None
     if "sequential" in per_4t and "accumulate" in per_4t:
         speedup_4t = round(per_4t["accumulate"] / per_4t["sequential"], 3)
+
+    # GEMM-kernel comparison proxy (DESIGN.md §14) + the genuine
+    # loop-order bitwise check that backs kernel_bitwise_identical
+    kernel_rows = []
+    kernel_4t = {}
+    for kernel in ("oracle", "blocked"):
+        for procs in [1, 2, 4, 8]:
+            if procs > cores:
+                break
+            ups = measure_kernel(kernel, procs, episodes)
+            if procs == 4:
+                kernel_4t[kernel] = ups
+            kernel_rows.append({
+                "kernel": kernel, "threads": procs,
+                "updates_per_sec": round(ups, 3),
+            })
+            print(kernel_rows[-1])
+    kernel_speedup_4t = None
+    if "oracle" in kernel_4t and "blocked" in kernel_4t:
+        kernel_speedup_4t = round(kernel_4t["blocked"] / kernel_4t["oracle"], 3)
+    if not bitwise_kernel_check():
+        raise SystemExit("blocked loop nest is NOT bitwise-identical to the naive loop")
     doc = {
         "bench": "train_scaling",
         "source": ("tools/proto_train_scaling.py numpy prototype (no rustc in the build "
@@ -204,6 +301,11 @@ def main():
         "speedup_accumulate_vs_sequential_4t": speedup_4t,
         "target_speedup_4t": 2.0,
         "rows": rows,
+        "kernel_rows": kernel_rows,
+        "kernel_speedup_blocked_vs_oracle_4t": kernel_speedup_4t,
+        # backed by bitwise_kernel_check() above (the script aborts
+        # before writing if the loop-order argument ever fails)
+        "kernel_bitwise_identical": True,
     }
     if "--write" in sys.argv:
         with open(OUT, "w") as f:
