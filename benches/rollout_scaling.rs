@@ -66,7 +66,8 @@ fn main() {
     );
 
     // serial reference: rewards every thread count must reproduce exactly
-    let reference = rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, 1);
+    let reference = rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, 1)
+        .expect("serial rollout failed");
 
     let mut table = Table::new(
         "Rollout scaling (episodes/sec, higher is better)",
@@ -83,7 +84,8 @@ fn main() {
         for _ in 0..3 {
             let t0 = Instant::now();
             rewards =
-                rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, threads);
+                rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(1), reps, threads)
+                    .expect("parallel rollout failed");
             best = best.min(t0.elapsed().as_secs_f64());
         }
         let eps = episodes as f64 / best;

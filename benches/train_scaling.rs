@@ -18,7 +18,10 @@
 //! merely validates the harness + schema).
 //!
 //! The bench also *asserts* the determinism contract: accumulate-mode
-//! parameters must be bit-identical at every measured thread count.
+//! parameters must be bit-identical at every measured thread count —
+//! and the fault-tolerance contract: a Stage II run interrupted by a
+//! simulated mid-run kill and resumed from its checkpoint must land on
+//! bit-identical parameters (DESIGN.md §15).
 //!
 //! Writes BENCH_train.json at the repo root. Knobs:
 //! DOPPLER_TRAIN_BENCH_EPISODES (per cell, default 24),
@@ -218,6 +221,55 @@ fn main() {
     ktable.emit(None);
     println!("[kernel determinism: trained params bit-identical across modes, blockings, threads]");
 
+    // ---- kill-and-resume smoke (DESIGN.md §15): interrupt the Stage II
+    // loop at a checkpoint boundary, resume from the blob, and require
+    // bit-identical trained parameters to the uninterrupted run.
+    {
+        use doppler::runtime::checkpoint::{CheckpointCfg, Interrupted};
+        let dir = std::env::temp_dir()
+            .join(format!("doppler-train-bench-ckpt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ck_run = |ck: Option<CheckpointCfg>| -> anyhow::Result<Vec<f32>> {
+            let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+            cfg.seed = 1;
+            cfg.episode_batch = batch;
+            cfg.update_mode = UpdateMode::Accumulate;
+            cfg.rollout.threads = threads_list[0];
+            cfg.rollout.sim_reps = 2;
+            cfg.lr = Schedule {
+                start: 1e-3,
+                end: 1e-4,
+            };
+            cfg.checkpoint = ck;
+            let mut trainer = Trainer::new(&nets, &g, topo.clone(), cfg)?;
+            trainer.try_resume()?;
+            trainer.stage2_sim(episodes)?;
+            Ok(trainer.params.clone())
+        };
+        let golden = ck_run(None).expect("uninterrupted reference run");
+        let mut ck = CheckpointCfg::new(&dir);
+        ck.every = batch;
+        ck.halt_after = Some(episodes / 2);
+        let err = ck_run(Some(ck)).expect_err("halt_after must interrupt the run");
+        let interrupted_at = err
+            .downcast_ref::<Interrupted>()
+            .unwrap_or_else(|| panic!("expected a typed Interrupted error, got: {err:#}"))
+            .episodes_done;
+        let mut ck = CheckpointCfg::new(&dir);
+        ck.every = batch;
+        ck.resume = true;
+        let resumed = ck_run(Some(ck)).expect("resumed run");
+        assert_eq!(
+            resumed, golden,
+            "kill-and-resume drifted from the uninterrupted run"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+        println!(
+            "[kill-and-resume: interrupted at {interrupted_at}/{episodes} episodes, \
+             resumed bit-identically]"
+        );
+    }
+
     // null (not 0.0) when the 4-thread cells were not measured (smoke)
     let speedup_4t = match (acc_4t, seq_4t) {
         (Some(a), Some(s)) if s > 0.0 => json::num(a / s),
@@ -251,10 +303,11 @@ fn main() {
                 _ => Json::Null,
             },
         ),
-        // the asserts above abort the bench on any divergence, so this
-        // field is only ever written true — it exists so the JSON schema
-        // records that the pin actually ran
+        // the asserts above abort the bench on any divergence, so these
+        // fields are only ever written true — they exist so the JSON
+        // schema records that the pins actually ran
         ("kernel_bitwise_identical", Json::Bool(true)),
+        ("kill_resume_bitwise_identical", Json::Bool(true)),
     ]);
     std::fs::write(OUT_JSON, doc.to_string() + "\n").expect("writing BENCH_train.json");
     println!("[perf snapshot written to {OUT_JSON}]");

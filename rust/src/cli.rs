@@ -41,16 +41,41 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Shared numeric-flag fallback: a missing flag silently takes the
+    /// default; a flag that is *present but unparseable* also takes the
+    /// default, but warns on stderr naming the flag and the rejected
+    /// value — a typo'd `--episodes 40O` must not silently train with
+    /// the default budget.
+    fn parsed_or<T: std::str::FromStr + std::fmt::Display + Copy>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => match v.parse() {
+                Ok(x) => x,
+                Err(_) => {
+                    eprintln!(
+                        "warning: ignoring --{key} {v:?}: expected a number; \
+                         using default {default}"
+                    );
+                    default
+                }
+            },
+        }
+    }
+
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parsed_or(key, default)
     }
 
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parsed_or(key, default)
     }
 
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+        self.parsed_or(key, default)
     }
 
     pub fn has(&self, key: &str) -> bool {
@@ -95,6 +120,22 @@ mod tests {
         assert_eq!(a.usize_or("episodes", 7), 7);
         assert_eq!(a.f64_or("lr", 0.5), 0.5);
         assert!(!a.has("x"));
+    }
+
+    #[test]
+    fn unparseable_numeric_flags_fall_back_to_defaults() {
+        // present-but-bad values take the default (and warn on stderr,
+        // which we can't capture here — the behavior under test is that
+        // they neither panic nor poison other flags)
+        let a = args("train --episodes 40O --lr fast --seed -3");
+        assert_eq!(a.usize_or("episodes", 7), 7);
+        assert_eq!(a.f64_or("lr", 0.5), 0.5);
+        assert_eq!(a.u64_or("seed", 11), 11);
+        // good values still win
+        let b = args("train --episodes 400 --lr 0.25 --seed 9");
+        assert_eq!(b.usize_or("episodes", 7), 400);
+        assert_eq!(b.f64_or("lr", 0.5), 0.25);
+        assert_eq!(b.u64_or("seed", 11), 9);
     }
 
     #[test]

@@ -20,6 +20,7 @@ use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::graph::{Assignment, Graph, NodeId};
+use crate::runtime::resilience;
 use crate::sim::topology::DeviceTopology;
 use crate::sim::{ExecEvent, SimResult, TransferEvent};
 
@@ -53,6 +54,72 @@ pub struct EngineResult {
     pub outputs: HashMap<NodeId, Tensor>,
     /// Total real compute seconds measured (sum over kernels).
     pub real_compute: f64,
+}
+
+/// [`execute`] under the fault-tolerance policy for the `engine.execute`
+/// site (DESIGN.md §15): per-attempt failure injection from the active
+/// [`FaultPlan`](resilience::FaultPlan), panic isolation via
+/// `catch_unwind`, a wall-clock timeout check (`timeout-ms`), and
+/// exponential backoff between attempts (`backoff-ms`, capped at
+/// [`resilience::MAX_BACKOFF_MS`]) — transient engine outages in a real
+/// deployment look like stalls, so retries here *do* sleep, unlike the
+/// pure-compute rollout retries. Exhausting the budget returns the typed
+/// [`resilience::EngineUnavailable`], the Stage III trainer's cue to
+/// degrade to simulator rewards.
+///
+/// `episode`/`replicate` key the injection schedule (not the
+/// computation): the schedule is reproducible across runs and thread
+/// counts like every other site.
+pub fn execute_resilient(
+    g: &Graph,
+    a: &Assignment,
+    cfg: &EngineConfig,
+    episode: u64,
+    replicate: u64,
+) -> Result<EngineResult, resilience::EngineUnavailable> {
+    let plan = resilience::active_plan();
+    let retry = resilience::RetryPolicy::from_plan(plan.as_deref());
+    let mut last_error = String::new();
+    for attempt in 0..retry.max_attempts {
+        if let Some(p) = plan.as_deref() {
+            if p.should_fail(resilience::SITE_ENGINE, episode, replicate, attempt) {
+                resilience::count_injected();
+                last_error = format!("injected engine fault (replicate {replicate}, attempt {attempt})");
+                retry.backoff_sleep(attempt);
+                continue;
+            }
+        }
+        let started = Instant::now();
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| execute(g, a, cfg))) {
+            Ok(result) => {
+                let elapsed_ms = started.elapsed().as_millis() as u64;
+                if let Some(limit) = retry.timeout_ms {
+                    if elapsed_ms > limit {
+                        last_error = format!(
+                            "engine execution exceeded the {limit} ms timeout (took {elapsed_ms} ms)"
+                        );
+                        retry.backoff_sleep(attempt);
+                        continue;
+                    }
+                }
+                if attempt > 0 {
+                    resilience::count_retry_ok();
+                }
+                return Ok(result);
+            }
+            Err(payload) => {
+                resilience::count_panic();
+                last_error = resilience::panic_message(payload.as_ref());
+                retry.backoff_sleep(attempt);
+            }
+        }
+    }
+    resilience::count_exhausted();
+    Err(resilience::EngineUnavailable {
+        episode,
+        attempts: retry.max_attempts,
+        last_error,
+    })
 }
 
 /// Execute assignment `a` on the real engine and return the WC virtual

@@ -302,7 +302,7 @@ pub fn sim_time_ms(
     topo: &DeviceTopology,
     seed: u64,
     reps: usize,
-) -> f64 {
+) -> Result<f64> {
     sim_time_ms_par(
         g,
         a,
@@ -316,7 +316,9 @@ pub fn sim_time_ms(
 
 /// [`sim_time_ms`] with explicit worker-thread count and simulator
 /// engine — the escape hatch for checking numbers against the
-/// `Engine::Reference` oracle (DESIGN.md §10).
+/// `Engine::Reference` oracle (DESIGN.md §10). Fallible since the
+/// resilient rollout executor surfaces worker failures as typed errors
+/// instead of aborting the process (DESIGN.md §15).
 pub fn sim_time_ms_par(
     g: &Graph,
     a: &Assignment,
@@ -325,10 +327,10 @@ pub fn sim_time_ms_par(
     reps: usize,
     threads: usize,
     engine: crate::sim::Engine,
-) -> f64 {
+) -> Result<f64> {
     let cfg = SimConfig::new(topo.clone()).with_engine(engine);
     let mut rng = Rng::new(seed);
-    crate::rollout::mean_exec_time(g, a, &cfg, &mut rng, reps, threads) * 1e3
+    Ok(crate::rollout::mean_exec_time(g, a, &cfg, &mut rng, reps, threads)? * 1e3)
 }
 
 #[cfg(test)]

@@ -39,6 +39,15 @@
 //!                   incremental default is the fast path — DESIGN.md §10)
 //!               --engine-reps R  engine executions per Stage III reward
 //!
+//! Fault tolerance (DESIGN.md §15):
+//!               --checkpoint-dir D   write CRC-validated checkpoints to
+//!                   D (atomic temp-file + rename); --checkpoint-every N
+//!                   sets the cadence (default 50 episodes); --resume
+//!                   continues from the existing blob, bit-identical to
+//!                   the uninterrupted run
+//!               --fault-plan SPEC    failure-injection plan (same
+//!                   grammar as DOPPLER_FAULTS; see runtime/resilience.rs)
+//!
 //! Multi-graph transfer training (train; DESIGN.md §12):
 //!               --transfer-suite S   built-in suite (transfer-block |
 //!                   transfer-layer | tiny): train ONE shared parameter
@@ -68,6 +77,7 @@ use doppler::util::stats;
 
 fn main() {
     let args = Args::parse();
+    install_fault_plan(&args);
     let r = match args.command.as_str() {
         "compare" => cmd_compare(&args),
         "train" => cmd_train(&args),
@@ -85,10 +95,56 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // fault-injected runs always report what the resilience layer saw,
+    // success or not — a run that "passed" with silent retries is the
+    // thing this summary exists to surface
+    if doppler::runtime::resilience::plan_active() {
+        eprintln!("fault-injection stats: {}", doppler::runtime::resilience::stats());
+    }
     if let Err(e) = r {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Install the failure-injection plan from `--fault-plan` (the CLI
+/// twin of the `DOPPLER_FAULTS` environment variable; same spec
+/// grammar — see `runtime::resilience::FaultPlan::parse`). A bad spec
+/// is a usage error: exit 2 before any training starts.
+fn install_fault_plan(args: &Args) {
+    if let Some(spec) = args.get("fault-plan") {
+        match doppler::runtime::resilience::FaultPlan::parse(spec) {
+            Ok(plan) => {
+                doppler::runtime::resilience::set_plan(Some(std::sync::Arc::new(plan)));
+            }
+            Err(e) => {
+                eprintln!("error: bad --fault-plan '{spec}': {e:#}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+/// Parse `--checkpoint-dir` / `--checkpoint-every` / `--resume` into the
+/// trainer's checkpoint policy (DESIGN.md §15). The cadence/resume flags
+/// without a directory are a usage error — silently training without
+/// the checkpoints the user asked for is exactly the failure mode the
+/// resilience layer exists to prevent.
+fn checkpoint_cfg(args: &Args) -> Result<Option<doppler::runtime::checkpoint::CheckpointCfg>> {
+    let dir = match args.get("checkpoint-dir") {
+        Some(d) => d.to_string(),
+        None => {
+            anyhow::ensure!(
+                !args.has("resume") && !args.has("checkpoint-every"),
+                "--resume/--checkpoint-every require --checkpoint-dir"
+            );
+            return Ok(None);
+        }
+    };
+    let mut ck = doppler::runtime::checkpoint::CheckpointCfg::new(dir);
+    ck.every = args.usize_or("checkpoint-every", ck.every).max(1);
+    ck.resume = args.has("resume");
+    Ok(Some(ck))
 }
 
 const HELP: &str = "doppler — dual-policy device assignment (paper reproduction)
@@ -115,6 +171,19 @@ const HELP: &str = "doppler — dual-policy device assignment (paper reproductio
     --sim-engine E        {incremental|reference} task enumeration engine
                           (bitwise-identical results; default incremental)
     --engine-reps R       engine executions per Stage III reward (train)
+  fault tolerance (DESIGN.md §15):
+    --checkpoint-dir D    write CRC-validated training checkpoints to D
+                          (atomic temp-file + rename; train only)
+    --checkpoint-every N  checkpoint cadence in completed episodes
+                          (default 50; batched runs round up to batch
+                          boundaries)
+    --resume              continue from the checkpoint in --checkpoint-dir
+                          (bit-identical to the uninterrupted run)
+    --fault-plan SPEC     failure-injection plan, same grammar as the
+                          DOPPLER_FAULTS env var: comma-separated
+                          key=value with reserved keys seed/retries/
+                          backoff-ms/timeout-ms; any other key is a site
+                          prefix rule, e.g. 'seed=1,retries=3,rollout=0.2'
   multi-graph transfer (train): --transfer-suite S | --workloads a,b,c
     [--holdout x,y] | --workload-set f.json  -> one shared blob + zero-shot
     held-out eval; evaluate --params blob.bin deploys a checkpoint zero-shot
@@ -284,6 +353,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.update_mode = update_mode(args)?;
     cfg.sim.engine = sim_engine(args)?;
     cfg.engine_reps = args.usize_or("engine-reps", cfg.engine_reps).max(1);
+    cfg.checkpoint = checkpoint_cfg(args)?;
     let budget = args.usize_or("episodes", 400);
     let stages = Stages::budget(budget);
     let engine_cfg = EngineConfig::new(sub);
@@ -358,6 +428,7 @@ fn cmd_train_multi(args: &Args) -> Result<()> {
     base.episode_batch = args.usize_or("episode-batch", 4).max(1);
     base.update_mode = update_mode(args)?;
     base.sim.engine = sim_engine(args)?;
+    base.checkpoint = checkpoint_cfg(args)?;
     let budget = args.usize_or("episodes", 400);
     base.scale_to_budget(budget);
     let stages = Stages {

@@ -1298,8 +1298,19 @@ impl NativePolicy {
     /// [`Self::train_step`] and the batched [`Self::train_batch_step`];
     /// the only difference between the two modes is what gradient
     /// reaches this step.
+    ///
+    /// Anomaly guard (DESIGN.md §15): a non-finite gradient norm would
+    /// poison the Adam moments (NaN `m`/`v` never recover), so such a
+    /// batch is quarantined — counted via
+    /// `runtime::resilience::note_anomaly` and skipped without touching
+    /// `params`, `m`, `v`, or `t`.
     fn clipped_adam_step(&self, params: &mut [f32], opt: &mut OptState, grads: &[f32], lr: f32) {
-        let gnorm = (grads.iter().map(|g| g * g).sum::<f32>() + 1e-12).sqrt();
+        let sumsq = grads.iter().map(|g| g * g).sum::<f32>();
+        if !sumsq.is_finite() {
+            crate::runtime::resilience::note_anomaly();
+            return;
+        }
+        let gnorm = (sumsq + 1e-12).sqrt();
         let scale = 1.0f32.min(1.0 / gnorm);
         let (b1, b2, eps) = (0.9f32, 0.999f32, 1e-8f32);
         let t_new = opt.t + 1.0;
@@ -1333,7 +1344,15 @@ impl NativePolicy {
     ) -> Result<(f32, f32)> {
         let (loss, ent, grads) =
             self.loss_and_grads(method, enc, params, traj, dev_mask, advantage, entropy_w)?;
-        anyhow::ensure!(loss.is_finite(), "native train step produced non-finite loss");
+        // Anomaly quarantine (DESIGN.md §15): a non-finite loss (NaN
+        // advantage, overflowed logits) is skipped-and-counted rather
+        // than erroring out — `params`/`opt` stay untouched and the
+        // non-finite loss is RETURNED so the trainer can count it in
+        // `LogRow.anomalies` without a backend trait change.
+        if !loss.is_finite() {
+            crate::runtime::resilience::note_anomaly();
+            return Ok((loss, ent));
+        }
         self.clipped_adam_step(params, opt, &grads, lr);
         Ok((loss, ent))
     }
@@ -1385,31 +1404,45 @@ impl NativePolicy {
         let stats: Vec<Result<(f32, f32)>> = {
             let rows: Vec<std::sync::Mutex<&mut [f32]>> =
                 grad_mat.chunks_mut(total).map(std::sync::Mutex::new).collect();
-            crate::rollout::parallel_map(threads, bs, |i| {
-                // uncontended by construction: each index is pulled once
-                let mut row = rows[i].lock().expect("gradient row lock poisoned");
-                self.backward_from_forward(
-                    method,
-                    enc,
-                    snapshot,
-                    &tr,
-                    &x_sel,
-                    &q,
-                    items[i].traj,
-                    dev_mask,
-                    items[i].advantage,
-                    entropy_w,
-                    &mut **row,
-                )
-            })
+            crate::rollout::parallel_map_site(
+                crate::runtime::resilience::SITE_BACKWARD,
+                threads,
+                bs,
+                |i| {
+                    // Uncontended by construction: each index is pulled
+                    // once (plus deterministic retries of the same index).
+                    // A panicked attempt poisons the mutex and may leave a
+                    // half-written row — recover the guard and zero the
+                    // row so a retry starts from the all-zeros invariant.
+                    let mut row = rows[i].lock().unwrap_or_else(|e| e.into_inner());
+                    row.fill(0.0);
+                    self.backward_from_forward(
+                        method,
+                        enc,
+                        snapshot,
+                        &tr,
+                        &x_sel,
+                        &q,
+                        items[i].traj,
+                        dev_mask,
+                        items[i].advantage,
+                        entropy_w,
+                        &mut **row,
+                    )
+                },
+            )?
         };
         let mut out = Vec::with_capacity(bs);
         for (i, s) in stats.into_iter().enumerate() {
             let (loss, ent) = s?;
-            anyhow::ensure!(
-                loss.is_finite(),
-                "batched train step: episode {i} produced non-finite loss"
-            );
+            // Anomaly quarantine (DESIGN.md §15): zero out the gradient
+            // row of a non-finite episode so it contributes nothing to
+            // the reduction (zeros are multiset-stable), count it, and
+            // surface the non-finite loss to the trainer's LogRow.
+            if !loss.is_finite() {
+                crate::runtime::resilience::note_anomaly();
+                grad_mat[i * total..(i + 1) * total].fill(0.0);
+            }
             out.push((loss, ent));
         }
         let mut reduced = vec![0.0f32; total];

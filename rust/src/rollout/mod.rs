@@ -31,6 +31,18 @@
 //! The determinism contract is enforced by
 //! `tests/prop_invariants.rs::prop_rollout_parallel_matches_serial`.
 //!
+//! **Fault tolerance (DESIGN.md §15).** Work items run inside
+//! `catch_unwind`: a panicking item no longer aborts the whole process.
+//! Failed items are retried in place up to a bounded budget with a fresh
+//! clone of their *original* forked RNG stream, so a retried item is
+//! bit-identical to one that never failed and the canonical-order merge
+//! is unchanged. When the budget is exhausted the map returns a
+//! structured [`RolloutError`] carrying per-item attempt counts instead
+//! of tearing down the trainer. An active
+//! [`FaultPlan`](crate::runtime::resilience::FaultPlan)
+//! (`DOPPLER_FAULTS` / `--fault-plan`) injects deterministic synthetic
+//! failures at the named sites for testing this machinery end to end.
+//!
 //! Multi-graph training (`train::multi`, DESIGN.md §12) composes these
 //! primitives unchanged: each member workload's batches flow through
 //! [`generate_episodes_cfg`] + [`episode_rewards`] with that workload's
@@ -44,6 +56,7 @@
 //! rewards (see `tests/prop_invariants.rs::prop_sim_engines_bitwise_identical`
 //! and DESIGN.md §10).
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use anyhow::Result;
@@ -53,9 +66,12 @@ use crate::graph::{Assignment, Graph};
 use crate::policy::{
     run_episode_with, EpisodeCfg, EpisodeResult, EpisodeScratch, GraphEncoding, PolicyBackend,
 };
+use crate::runtime::resilience::{self, RetryPolicy};
 use crate::sim::topology::DeviceTopology;
 use crate::sim::{simulate, SimConfig, SimResult};
 use crate::util::rng::Rng;
+
+pub use crate::runtime::resilience::{ItemFailure, RolloutError};
 
 /// Rollout parallelism configuration, threaded through the trainer, the
 /// evaluation harness, and the CLI (`--rollout-threads N`).
@@ -117,14 +133,36 @@ pub fn available_threads() -> usize {
 /// the forks happen serially on the caller thread **before** any worker
 /// starts, so the result is a pure function of `base`'s state and `n` —
 /// independent of `threads` and of scheduling order. Results are returned
-/// in item order.
-pub fn parallel_map_rng<T, F>(threads: usize, base: &mut Rng, n: usize, f: F) -> Vec<T>
+/// in item order. Each *attempt* at item `i` runs with a fresh clone of
+/// stream `i`, so retries after a caught panic or an injected fault are
+/// bit-identical to a first-attempt success.
+pub fn parallel_map_rng<T, F>(
+    threads: usize,
+    base: &mut Rng,
+    n: usize,
+    f: F,
+) -> Result<Vec<T>, RolloutError>
+where
+    T: Send,
+    F: Fn(usize, &mut Rng) -> T + Sync,
+{
+    parallel_map_rng_site(resilience::SITE_SIM, threads, base, n, f)
+}
+
+/// [`parallel_map_rng`] under an explicit failure-injection site name.
+pub fn parallel_map_rng_site<T, F>(
+    site: &'static str,
+    threads: usize,
+    base: &mut Rng,
+    n: usize,
+    f: F,
+) -> Result<Vec<T>, RolloutError>
 where
     T: Send,
     F: Fn(usize, &mut Rng) -> T + Sync,
 {
     let streams: Vec<Rng> = (0..n).map(|i| base.fork(i as u64)).collect();
-    run_indexed(threads, n, move |i| {
+    run_indexed(site, threads, n, move |i| {
         let mut rng = streams[i].clone();
         f(i, &mut rng)
     })
@@ -134,12 +172,26 @@ where
 /// are pure functions of their index. Results in item order. (Not for
 /// engine-timed work: measured wall clock must stay serial — see
 /// [`mean_engine_time`].)
-pub fn parallel_map<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+pub fn parallel_map<T, F>(threads: usize, n: usize, f: F) -> Result<Vec<T>, RolloutError>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    run_indexed(threads, n, f)
+    run_indexed(resilience::SITE_MAP, threads, n, f)
+}
+
+/// [`parallel_map`] under an explicit failure-injection site name.
+pub fn parallel_map_site<T, F>(
+    site: &'static str,
+    threads: usize,
+    n: usize,
+    f: F,
+) -> Result<Vec<T>, RolloutError>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    run_indexed(site, threads, n, f)
 }
 
 /// Shared work-queue executor: workers pull indices from an atomic
@@ -151,53 +203,160 @@ where
 /// (Full-scale simulations run ~ms each); for micro work — Tiny test
 /// graphs, single replicates — pass `threads = 1` (the trainer's
 /// default) and this degrades to a plain serial loop with no spawns.
-fn run_indexed<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+///
+/// Fault handling: every item attempt runs inside `catch_unwind`, failed
+/// attempts (real panics or plan-injected faults) retry in place up to
+/// the budget from [`RetryPolicy::from_plan`], and items that exhaust it
+/// are reported through [`RolloutError`] in canonical index order. `f`
+/// must be pure in `i` for the retry-determinism contract to hold —
+/// which every caller in this crate satisfies by construction (the
+/// RNG-stream variants re-clone their stream per attempt). Retries never
+/// sleep: these are pure compute items, and injected faults consume one
+/// fresh schedule draw per attempt.
+fn run_indexed<T, F>(
+    site: &'static str,
+    threads: usize,
+    n: usize,
+    f: F,
+) -> Result<Vec<T>, RolloutError>
 where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
     let workers = threads.max(1).min(n.max(1));
-    if workers <= 1 {
-        return (0..n).map(f).collect();
-    }
+    let plan = resilience::active_plan();
+    // The epoch is claimed on the leader (this call is serialized by
+    // construction), keying this map's injection schedule independently
+    // of worker count. No plan → no shared state touched at all.
+    let epoch = if plan.is_some() { resilience::next_epoch() } else { 0 };
+    let retry = RetryPolicy::from_plan(plan.as_deref());
 
-    let next = AtomicUsize::new(0);
-    let per_worker: Vec<Vec<(usize, T)>> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..workers)
-            .map(|_| {
-                let next = &next;
-                let f = &f;
-                s.spawn(move || {
-                    let mut got: Vec<(usize, T)> = Vec::new();
-                    loop {
-                        let i = next.fetch_add(1, Ordering::Relaxed);
-                        if i >= n {
-                            break;
-                        }
-                        got.push((i, f(i)));
+    let attempt_item = |i: usize| -> Result<T, ItemFailure> {
+        let mut last_error = String::new();
+        let mut injected = 0usize;
+        for attempt in 0..retry.max_attempts {
+            if let Some(p) = plan.as_deref() {
+                if p.should_fail(site, epoch, i as u64, attempt) {
+                    injected += 1;
+                    resilience::count_injected();
+                    last_error = format!("injected fault (attempt {attempt})");
+                    continue;
+                }
+            }
+            match std::panic::catch_unwind(AssertUnwindSafe(|| f(i))) {
+                Ok(v) => {
+                    if attempt > 0 {
+                        resilience::count_retry_ok();
                     }
-                    got
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("rollout worker panicked"))
-            .collect()
-    });
+                    return Ok(v);
+                }
+                Err(payload) => {
+                    resilience::count_panic();
+                    last_error = resilience::panic_message(payload.as_ref());
+                }
+            }
+        }
+        resilience::count_exhausted();
+        Err(ItemFailure {
+            index: i,
+            attempts: retry.max_attempts,
+            injected,
+            last_error,
+        })
+    };
 
     let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
     slots.resize_with(n, || None);
-    for chunk in per_worker {
-        for (i, v) in chunk {
-            debug_assert!(slots[i].is_none(), "work item {i} produced twice");
-            slots[i] = Some(v);
+    let mut failures: Vec<ItemFailure> = Vec::new();
+
+    if workers <= 1 {
+        for i in 0..n {
+            match attempt_item(i) {
+                Ok(v) => slots[i] = Some(v),
+                Err(e) => failures.push(e),
+            }
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let per_worker = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|_| {
+                    let next = &next;
+                    let attempt_item = &attempt_item;
+                    s.spawn(move || {
+                        let mut got: Vec<(usize, Result<T, ItemFailure>)> = Vec::new();
+                        loop {
+                            let i = next.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            got.push((i, attempt_item(i)));
+                        }
+                        got
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().map_err(|p| resilience::panic_message(p.as_ref())))
+                .collect::<Vec<_>>()
+        });
+        for chunk in per_worker {
+            match chunk {
+                Ok(items) => {
+                    for (i, r) in items {
+                        match r {
+                            Ok(v) => {
+                                debug_assert!(slots[i].is_none(), "work item {i} produced twice");
+                                slots[i] = Some(v);
+                            }
+                            Err(e) => failures.push(e),
+                        }
+                    }
+                }
+                // A worker thread dying outside the per-item catch_unwind
+                // boundary should be impossible; keep it structured anyway
+                // instead of reinstating the old hard abort.
+                Err(msg) => failures.push(ItemFailure {
+                    index: n,
+                    attempts: 1,
+                    injected: 0,
+                    last_error: format!("worker thread crashed outside the item boundary: {msg}"),
+                }),
+            }
         }
     }
-    slots
-        .into_iter()
-        .map(|v| v.expect("work item lost"))
-        .collect()
+
+    if failures.is_empty() {
+        let mut out = Vec::with_capacity(n);
+        let mut lost: Vec<usize> = Vec::new();
+        for (i, v) in slots.into_iter().enumerate() {
+            match v {
+                Some(v) => out.push(v),
+                None => lost.push(i),
+            }
+        }
+        if lost.is_empty() {
+            return Ok(out);
+        }
+        // Formerly `expect("work item lost")`: a scheduling hole now
+        // surfaces as a typed error naming the missing indices.
+        failures = lost
+            .into_iter()
+            .map(|i| ItemFailure {
+                index: i,
+                attempts: 0,
+                injected: 0,
+                last_error: "work item lost (never scheduled)".to_string(),
+            })
+            .collect();
+    }
+    failures.sort_by_key(|fl| fl.index);
+    Err(RolloutError {
+        site,
+        total: n,
+        failures,
+    })
 }
 
 /// Simulate `reps` jittered replicates of one assignment. Replicate `r`
@@ -210,7 +369,7 @@ pub fn simulate_replicates(
     base: &mut Rng,
     reps: usize,
     threads: usize,
-) -> Vec<SimResult> {
+) -> Result<Vec<SimResult>, RolloutError> {
     parallel_map_rng(threads, base, reps, |_r, rng| simulate(g, a, cfg, rng))
 }
 
@@ -224,12 +383,12 @@ pub fn mean_exec_time(
     base: &mut Rng,
     reps: usize,
     threads: usize,
-) -> f64 {
-    let total: f64 = simulate_replicates(g, a, cfg, base, reps, threads)
+) -> Result<f64, RolloutError> {
+    let total: f64 = simulate_replicates(g, a, cfg, base, reps, threads)?
         .iter()
         .map(|r| r.makespan)
         .sum();
-    total / reps.max(1) as f64
+    Ok(total / reps.max(1) as f64)
 }
 
 /// Stage II batch reward evaluation: given the leader-produced episode
@@ -249,7 +408,7 @@ pub fn episode_rewards<A>(
     base: &mut Rng,
     reps: usize,
     threads: usize,
-) -> Vec<f64>
+) -> Result<Vec<f64>, RolloutError>
 where
     A: std::borrow::Borrow<Assignment> + Sync,
 {
@@ -257,11 +416,11 @@ where
     let makespans = parallel_map_rng(threads, base, assignments.len() * reps, |u, rng| {
         let e = u / reps;
         simulate(g, assignments[e].borrow(), cfg, rng).makespan
-    });
-    makespans
+    })?;
+    Ok(makespans
         .chunks(reps)
         .map(|c| c.iter().sum::<f64>() / reps as f64)
-        .collect()
+        .collect())
 }
 
 /// Parallel whole-episode generation: run `episodes` ASSIGN episodes
@@ -313,7 +472,7 @@ pub fn generate_episodes_cfg(
         static SCRATCH: std::cell::RefCell<EpisodeScratch> =
             std::cell::RefCell::new(EpisodeScratch::new());
     }
-    let results = parallel_map_rng(threads, base, cfgs.len(), |i, rng| {
+    let results = parallel_map_rng_site(resilience::SITE_EPISODE, threads, base, cfgs.len(), |i, rng| {
         SCRATCH.with(|s| {
             run_episode_with(
                 backend,
@@ -327,7 +486,7 @@ pub fn generate_episodes_cfg(
                 &mut s.borrow_mut(),
             )
         })
-    });
+    })?;
     results.into_iter().collect()
 }
 
@@ -349,6 +508,29 @@ pub fn mean_engine_time(
     total / reps as f64
 }
 
+/// [`mean_engine_time`] through the resilient engine wrapper: each
+/// replicate gets the `engine.execute` retry/timeout/backoff treatment
+/// ([`crate::engine::execute_resilient`]), and the typed
+/// [`resilience::EngineUnavailable`] error surfaces once a replicate's
+/// budget is exhausted — the trainer's cue to degrade to simulator
+/// rewards. Still serial, for the same timing-fidelity reason.
+pub fn mean_engine_time_resilient(
+    g: &Graph,
+    a: &Assignment,
+    engine_cfg: &crate::engine::EngineConfig,
+    reps: usize,
+    episode: u64,
+) -> Result<f64, resilience::EngineUnavailable> {
+    let reps = reps.max(1);
+    let mut total = 0.0f64;
+    for r in 0..reps {
+        total += crate::engine::execute_resilient(g, a, engine_cfg, episode, r as u64)?
+            .sim
+            .makespan;
+    }
+    Ok(total / reps as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -360,11 +542,12 @@ mod tests {
         // the map result must be a pure function of (base state, n)
         let reference: Vec<u64> = {
             let mut base = Rng::new(99);
-            parallel_map_rng(1, &mut base, 37, |i, rng| rng.next_u64() ^ i as u64)
+            parallel_map_rng(1, &mut base, 37, |i, rng| rng.next_u64() ^ i as u64).unwrap()
         };
         for threads in [2, 3, 4, 8, 64] {
             let mut base = Rng::new(99);
-            let got = parallel_map_rng(threads, &mut base, 37, |i, rng| rng.next_u64() ^ i as u64);
+            let got = parallel_map_rng(threads, &mut base, 37, |i, rng| rng.next_u64() ^ i as u64)
+                .unwrap();
             assert_eq!(got, reference, "threads={threads}");
         }
     }
@@ -375,18 +558,18 @@ mod tests {
         // regardless of thread count, so subsequent draws line up
         let mut a = Rng::new(5);
         let mut b = Rng::new(5);
-        let _ = parallel_map_rng(1, &mut a, 10, |i, _| i);
-        let _ = parallel_map_rng(8, &mut b, 10, |i, _| i);
+        let _ = parallel_map_rng(1, &mut a, 10, |i, _| i).unwrap();
+        let _ = parallel_map_rng(8, &mut b, 10, |i, _| i).unwrap();
         assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]
     fn parallel_map_handles_edge_sizes() {
-        let empty: Vec<usize> = parallel_map(4, 0, |i| i);
+        let empty: Vec<usize> = parallel_map(4, 0, |i| i).unwrap();
         assert!(empty.is_empty());
-        let one = parallel_map(4, 1, |i| i * 10);
+        let one = parallel_map(4, 1, |i| i * 10).unwrap();
         assert_eq!(one, vec![0]);
-        let many = parallel_map(3, 100, |i| i);
+        let many = parallel_map(3, 100, |i| i).unwrap();
         assert_eq!(many, (0..100).collect::<Vec<_>>());
     }
 
@@ -397,7 +580,7 @@ mod tests {
         let cfg = SimConfig::new(DeviceTopology::p100x4());
         let serial = crate::sim::mean_exec_time(&g, &a, &cfg, &mut Rng::new(7), 6);
         for threads in [1, 2, 4] {
-            let par = mean_exec_time(&g, &a, &cfg, &mut Rng::new(7), 6, threads);
+            let par = mean_exec_time(&g, &a, &cfg, &mut Rng::new(7), 6, threads).unwrap();
             assert_eq!(par, serial, "threads={threads}");
         }
     }
@@ -417,9 +600,10 @@ mod tests {
         let base = SimConfig::new(DeviceTopology::p100x4());
         let inc_cfg = base.clone().with_engine(crate::sim::Engine::Incremental);
         let ref_cfg = base.with_engine(crate::sim::Engine::Reference);
-        let want = episode_rewards(&g, &assignments, &inc_cfg, &mut Rng::new(5), 3, 1);
+        let want = episode_rewards(&g, &assignments, &inc_cfg, &mut Rng::new(5), 3, 1).unwrap();
         for threads in [1usize, 4] {
-            let got = episode_rewards(&g, &assignments, &ref_cfg, &mut Rng::new(5), 3, threads);
+            let got =
+                episode_rewards(&g, &assignments, &ref_cfg, &mut Rng::new(5), 3, threads).unwrap();
             assert_eq!(got, want, "threads={threads}: engine leaked into rewards");
         }
     }
@@ -434,8 +618,8 @@ mod tests {
                 crate::heuristics::random_assignment(&g, 4, &mut r)
             })
             .collect();
-        let serial = episode_rewards(&g, &assignments, &cfg, &mut Rng::new(3), 3, 1);
-        let par = episode_rewards(&g, &assignments, &cfg, &mut Rng::new(3), 3, 4);
+        let serial = episode_rewards(&g, &assignments, &cfg, &mut Rng::new(3), 3, 1).unwrap();
+        let par = episode_rewards(&g, &assignments, &cfg, &mut Rng::new(3), 3, 4).unwrap();
         assert_eq!(serial, par);
         assert_eq!(serial.len(), 5);
         assert!(serial.iter().all(|t| t.is_finite() && *t > 0.0));

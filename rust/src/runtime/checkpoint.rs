@@ -1,0 +1,427 @@
+//! Versioned, CRC-validated, atomically-written checkpoint blobs
+//! (DESIGN.md §15).
+//!
+//! # File layout
+//!
+//! ```text
+//! magic  8 bytes  b"DPCKPT01"  (format name + container version)
+//! len    u64 LE   payload length in bytes
+//! payload         module-defined (trainer/multi-trainer state blob)
+//! crc    u32 LE   CRC-32 (IEEE, reflected) over the payload
+//! ```
+//!
+//! The container frames and validates; the *payload* carries its own
+//! version word and fingerprint, written/read with [`ByteWriter`] /
+//! [`ByteReader`] by `train::Trainer::state_blob` and friends. Writes go
+//! to a temp file in the target directory followed by `rename`, so a
+//! crash mid-write leaves either the previous checkpoint or a stray
+//! `.tmp` file — never a truncated blob that a resume could half-read.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Container magic: format + container version. Bump the trailing
+/// digits on incompatible container changes; payload-level evolution
+/// goes through the payload's own version word.
+pub const MAGIC: &[u8; 8] = b"DPCKPT01";
+
+/// CRC-32 (IEEE 802.3, reflected, init/xorout 0xFFFFFFFF) — the
+/// ubiquitous zlib/PNG polynomial, table built on the fly (checkpoint
+/// blobs are small enough that table construction is noise).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut table = [0u32; 256];
+    for (i, slot) in table.iter_mut().enumerate() {
+        let mut c = i as u32;
+        for _ in 0..8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+        }
+        *slot = c;
+    }
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    crc ^ 0xFFFF_FFFF
+}
+
+/// Write `contents` to `path` atomically: temp file in the same
+/// directory, then `rename`. Readers never observe a partial file.
+pub fn atomic_write(path: &Path, contents: &[u8]) -> Result<()> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("atomic write target {path:?} has no file name"))?;
+    let tmp = path.with_file_name(format!(".{name}.tmp.{}", std::process::id()));
+    std::fs::write(&tmp, contents).with_context(|| format!("writing temp file {tmp:?}"))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {tmp:?} into place at {path:?}"))?;
+    Ok(())
+}
+
+/// Atomically write a framed + CRC'd checkpoint blob.
+pub fn save_atomic(path: &Path, payload: &[u8]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating checkpoint directory {parent:?}"))?;
+        }
+    }
+    let mut framed = Vec::with_capacity(payload.len() + 20);
+    framed.extend_from_slice(MAGIC);
+    framed.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    framed.extend_from_slice(payload);
+    framed.extend_from_slice(&crc32(payload).to_le_bytes());
+    atomic_write(path, &framed)
+}
+
+/// Read and validate a checkpoint file, returning the payload.
+pub fn load(path: &Path) -> Result<Vec<u8>> {
+    let bytes =
+        std::fs::read(path).with_context(|| format!("reading checkpoint {path:?}"))?;
+    anyhow::ensure!(
+        bytes.len() >= MAGIC.len() + 12,
+        "checkpoint {path:?} is truncated ({} bytes)",
+        bytes.len()
+    );
+    anyhow::ensure!(
+        &bytes[..MAGIC.len()] == MAGIC,
+        "checkpoint {path:?} has wrong magic (not a {} file, or an incompatible version)",
+        String::from_utf8_lossy(MAGIC)
+    );
+    let mut len8 = [0u8; 8];
+    len8.copy_from_slice(&bytes[8..16]);
+    let len = u64::from_le_bytes(len8) as usize;
+    anyhow::ensure!(
+        bytes.len() == 16 + len + 4,
+        "checkpoint {path:?} length mismatch: header says {len} payload bytes, file has {}",
+        bytes.len().saturating_sub(20)
+    );
+    let payload = &bytes[16..16 + len];
+    let mut crc4 = [0u8; 4];
+    crc4.copy_from_slice(&bytes[16 + len..]);
+    let want = u32::from_le_bytes(crc4);
+    let got = crc32(payload);
+    anyhow::ensure!(
+        got == want,
+        "checkpoint {path:?} failed CRC validation (stored {want:#010x}, computed {got:#010x})"
+    );
+    Ok(payload.to_vec())
+}
+
+/// Map a workload/graph name onto a safe checkpoint file stem.
+pub fn sanitize_name(name: &str) -> String {
+    let s: String = name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '-' | '_' | '.') {
+                c
+            } else {
+                '-'
+            }
+        })
+        .collect();
+    if s.is_empty() {
+        "unnamed".to_string()
+    } else {
+        s
+    }
+}
+
+/// Checkpoint/resume configuration carried by `TrainConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CheckpointCfg {
+    /// Directory the checkpoint blob lives in.
+    pub dir: PathBuf,
+    /// Write a checkpoint every N completed episodes (boundaries only:
+    /// the batched Stage II path rounds up to its batch boundary).
+    pub every: usize,
+    /// Load the existing blob (if any) before training starts.
+    pub resume: bool,
+    /// Test/bench hook simulating a mid-run kill: force a checkpoint at
+    /// the first boundary with >= N episodes done, then return a typed
+    /// [`Interrupted`] error. The resume run must pass `None` here.
+    pub halt_after: Option<usize>,
+}
+
+impl CheckpointCfg {
+    pub fn new(dir: impl Into<PathBuf>) -> CheckpointCfg {
+        CheckpointCfg {
+            dir: dir.into(),
+            every: 50,
+            resume: false,
+            halt_after: None,
+        }
+    }
+}
+
+/// Typed "simulated kill" error produced by `CheckpointCfg::halt_after`
+/// after the forced checkpoint write; recoverable from `anyhow::Error`
+/// via `downcast_ref::<Interrupted>()`.
+#[derive(Clone, Debug)]
+pub struct Interrupted {
+    pub episodes_done: usize,
+    pub path: PathBuf,
+}
+
+impl fmt::Display for Interrupted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "training halted after {} episodes (checkpoint written to {:?}; resume with --resume)",
+            self.episodes_done, self.path
+        )
+    }
+}
+
+impl std::error::Error for Interrupted {}
+
+// ---------------------------------------------------------------------------
+// Little-endian payload serialization
+// ---------------------------------------------------------------------------
+
+/// Append-only little-endian payload builder.
+#[derive(Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+    pub fn put_u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    pub fn put_u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+    pub fn put_usize(&mut self, x: usize) {
+        self.put_u64(x as u64);
+    }
+    pub fn put_f32(&mut self, x: f32) {
+        // bit pattern, not value: NaNs and -0.0 must round-trip exactly
+        self.put_u32(x.to_bits());
+    }
+    pub fn put_f64(&mut self, x: f64) {
+        self.put_u64(x.to_bits());
+    }
+    pub fn put_str(&mut self, s: &str) {
+        self.put_usize(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+    pub fn put_vec_f32(&mut self, xs: &[f32]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_f32(x);
+        }
+    }
+    pub fn put_vec_usize(&mut self, xs: &[usize]) {
+        self.put_usize(xs.len());
+        for &x in xs {
+            self.put_usize(x);
+        }
+    }
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_usize(bytes.len());
+        self.buf.extend_from_slice(bytes);
+    }
+}
+
+/// Cursor-based reader over a payload; every getter bounds-checks so a
+/// corrupt blob produces an error, never a panic or a huge allocation.
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.remaining(),
+            "checkpoint payload truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.remaining()
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn get_u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        b.copy_from_slice(self.take(4)?);
+        Ok(u32::from_le_bytes(b))
+    }
+    pub fn get_u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(self.take(8)?);
+        Ok(u64::from_le_bytes(b))
+    }
+    pub fn get_usize(&mut self) -> Result<usize> {
+        let x = self.get_u64()?;
+        usize::try_from(x).map_err(|_| anyhow::anyhow!("checkpoint count {x} overflows usize"))
+    }
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.get_u32()?))
+    }
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.get_u64()?))
+    }
+    pub fn get_str(&mut self) -> Result<String> {
+        let n = self.get_usize()?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).context("checkpoint string is not UTF-8")
+    }
+    pub fn get_vec_f32(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_usize()?;
+        anyhow::ensure!(
+            n.saturating_mul(4) <= self.remaining(),
+            "checkpoint f32 vector length {n} exceeds remaining payload"
+        );
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_f32()?);
+        }
+        Ok(out)
+    }
+    pub fn get_vec_usize(&mut self) -> Result<Vec<usize>> {
+        let n = self.get_usize()?;
+        anyhow::ensure!(
+            n.saturating_mul(8) <= self.remaining(),
+            "checkpoint usize vector length {n} exceeds remaining payload"
+        );
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.get_usize()?);
+        }
+        Ok(out)
+    }
+    pub fn get_bytes(&mut self) -> Result<Vec<u8>> {
+        let n = self.get_usize()?;
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "doppler-ckpt-test-{}-{tag}.bin",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard test vector for CRC-32/ISO-HDLC ("check" value).
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn byte_writer_reader_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u32(0xDEAD_BEEF);
+        w.put_u64(u64::MAX - 1);
+        w.put_f32(f32::NAN);
+        w.put_f32(-0.0);
+        w.put_f64(std::f64::consts::PI);
+        w.put_str("synthetic layered n=60");
+        w.put_vec_f32(&[1.0, -2.5, 3.25]);
+        w.put_vec_usize(&[0, 9, 18]);
+        w.put_bytes(b"nested");
+        let bytes = w.into_bytes();
+        let mut r = ByteReader::new(&bytes);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        // NaN round-trips by bit pattern
+        assert_eq!(r.get_f32().unwrap().to_bits(), f32::NAN.to_bits());
+        assert_eq!(r.get_f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.get_f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(r.get_str().unwrap(), "synthetic layered n=60");
+        assert_eq!(r.get_vec_f32().unwrap(), vec![1.0, -2.5, 3.25]);
+        assert_eq!(r.get_vec_usize().unwrap(), vec![0, 9, 18]);
+        assert_eq!(r.get_bytes().unwrap(), b"nested");
+        assert!(r.is_empty());
+        // overrun is an error, not a panic
+        assert!(r.get_u8().is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_crc_rejects_corruption() {
+        let path = tmp_path("roundtrip");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(1000).collect();
+        save_atomic(&path, &payload).unwrap();
+        assert_eq!(load(&path).unwrap(), payload);
+
+        // flip one payload byte → CRC failure mentioning the check
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[40] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("CRC"), "{err}");
+
+        // wrong magic → clear error
+        std::fs::write(&path, b"NOTMAGIC").unwrap();
+        let err = format!("{:#}", load(&path).unwrap_err());
+        assert!(err.contains("truncated") || err.contains("magic"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn atomic_write_replaces_and_leaves_no_temp() {
+        let path = tmp_path("atomic");
+        atomic_write(&path, b"first").unwrap();
+        atomic_write(&path, b"second").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second");
+        // no stray temp siblings with our prefix
+        let dir = path.parent().unwrap();
+        let stem = path.file_name().unwrap().to_str().unwrap().to_string();
+        let strays = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                let n = e.file_name().to_string_lossy().into_owned();
+                n.starts_with(&format!(".{stem}.tmp"))
+            })
+            .count();
+        assert_eq!(strays, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sanitize_names() {
+        assert_eq!(sanitize_name("synthetic layered n=60"), "synthetic-layered-n-60");
+        assert_eq!(sanitize_name("llama-block"), "llama-block");
+        assert_eq!(sanitize_name(""), "unnamed");
+    }
+}

@@ -6,7 +6,9 @@
 //! instruction ids, avoiding the 64-bit-id protos of jax >= 0.5 that
 //! xla_extension 0.5.1 rejects (see /opt/xla-example/README.md).
 
+pub mod checkpoint;
 pub mod manifest;
+pub mod resilience;
 
 use anyhow::{Context, Result};
 use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};

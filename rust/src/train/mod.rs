@@ -10,11 +10,34 @@
 //!
 //! Hyperparameters follow §6.1: linearly decaying learning rate and
 //! exploration, entropy weight 1e-2, and a running-mean reward baseline.
+//!
+//! # Fault tolerance (DESIGN.md §15)
+//!
+//! The trainer participates in the crate's resilience layer three ways:
+//!
+//! - **Checkpoint/resume**: with [`TrainConfig::checkpoint`] set, a
+//!   versioned, CRC-validated blob (params + Adam state + RNG stream +
+//!   baseline + bests + history + stage/episode cursor) is written
+//!   atomically every `every` completed episodes. A resumed run replays
+//!   *nothing*: it restores the exact RNG stream and cursor, so resuming
+//!   at episode k is bit-identical to never having stopped.
+//! - **Anomaly quarantine**: non-finite rewards never reach the baseline
+//!   or the optimizer (the episode is logged with NaN loss and counted),
+//!   and a non-finite loss reported by the backend (which skips its own
+//!   Adam step) is counted here — one bad episode can never poison
+//!   training state.
+//! - **Degraded-mode Stage III**: real-engine rewards go through
+//!   `rollout::mean_engine_time_resilient` (timeout + backoff retry);
+//!   when the engine stays unavailable the episode falls back to the
+//!   simulator reward and is counted in `engine_fallbacks`.
 
 pub mod multi;
 pub mod teacher;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
+
+use crate::runtime::checkpoint::{self, ByteReader, ByteWriter, CheckpointCfg, Interrupted};
+use crate::runtime::resilience;
 
 use crate::features::{static_features, StaticFeatures};
 use crate::graph::{Assignment, Graph};
@@ -154,6 +177,10 @@ pub struct TrainConfig {
     pub update_mode: UpdateMode,
     /// Real-engine executions averaged per Stage III reward.
     pub engine_reps: usize,
+    /// Checkpoint/resume policy (`--checkpoint-dir`, DESIGN.md §15).
+    /// `None` (default) disables checkpointing entirely; the trainer
+    /// then keeps no cursor state and behaves exactly as before.
+    pub checkpoint: Option<CheckpointCfg>,
 }
 
 impl TrainConfig {
@@ -204,6 +231,7 @@ impl TrainConfig {
             episode_batch: 1,
             update_mode: UpdateMode::Sequential,
             engine_reps: 1,
+            checkpoint: None,
         }
     }
 }
@@ -220,6 +248,10 @@ pub struct LogRow {
     pub loss: f32,
     pub entropy: f32,
     pub encode_calls: usize,
+    /// Cumulative quarantined-anomaly count (non-finite rewards or
+    /// losses) at the time this row was written. A quarantined episode's
+    /// own row carries NaN loss/entropy; fault-free runs stay at 0.
+    pub anomalies: usize,
 }
 
 /// Training output.
@@ -231,6 +263,12 @@ pub struct TrainResult {
     /// stage 2 times come from the simulator, stage 3 from the engine).
     pub stage_bests: std::collections::BTreeMap<u8, (Assignment, f64)>,
     pub history: Vec<LogRow>,
+    /// Episodes whose reward or loss was non-finite and therefore never
+    /// reached the baseline/optimizer (DESIGN.md §15).
+    pub anomalies: usize,
+    /// Stage III episodes that fell back to the simulator reward after
+    /// the real engine stayed unavailable through its retry budget.
+    pub engine_fallbacks: usize,
 }
 
 /// The trainer: owns policy params + optimizer state for one graph
@@ -257,6 +295,20 @@ pub struct Trainer<'a> {
     rng: Rng,
     /// Reused episode hot-loop buffers (leader-thread episodes).
     scratch: EpisodeScratch,
+    /// Resume cursor: stage currently in progress (0 = none yet) and
+    /// episodes completed *within* that stage. Only maintained when
+    /// `cfg.checkpoint` is set — the multi-graph trainer drives member
+    /// trainers with `checkpoint: None` and keeps its own cursor.
+    cursor_stage: u8,
+    cursor_done: usize,
+    /// Episodes completed across all stages (the checkpoint cadence).
+    episodes_done: usize,
+    /// `episodes_done` at the last checkpoint write.
+    last_ckpt: usize,
+    /// Quarantined non-finite rewards/losses (never applied to Adam).
+    anomalies: usize,
+    /// Stage III simulator fallbacks after engine retry exhaustion.
+    engine_fallbacks: usize,
 }
 
 impl<'a> Trainer<'a> {
@@ -291,6 +343,12 @@ impl<'a> Trainer<'a> {
             stage_bests: std::collections::BTreeMap::new(),
             rng,
             scratch: EpisodeScratch::new(),
+            cursor_stage: 0,
+            cursor_done: 0,
+            episodes_done: 0,
+            last_ckpt: 0,
+            anomalies: 0,
+            engine_fallbacks: 0,
         })
     }
 
@@ -307,7 +365,7 @@ impl<'a> Trainer<'a> {
             Method::Doppler => teacher::TeacherSel::CriticalPath,
             _ => teacher::TeacherSel::TopoOrder,
         };
-        for i in 0..episodes {
+        for i in self.stage_start(1, episodes)..episodes {
             let (_, traj) = teacher::run_teacher_episode(
                 self.g,
                 &self.topo,
@@ -340,20 +398,23 @@ impl<'a> Trainer<'a> {
                 loss,
                 entropy: ent,
                 encode_calls: 0,
+                anomalies: self.anomalies,
             });
-            let _ = i;
+            self.advance_cursor(1, i + 1, 1)?;
         }
         Ok(())
     }
 
     /// Run one RL episode and update; `exec_time_of` supplies the reward
-    /// (Stage II: simulator; Stage III: real engine).
+    /// (Stage II: simulator; Stage III: real engine). A non-finite
+    /// reward is quarantined: the episode is logged (NaN loss) and
+    /// counted, but never touches the baseline or the optimizer.
     fn rl_episode(
         &mut self,
         i: usize,
         total: usize,
         stage: u8,
-        exec_time_of: &mut dyn FnMut(&Assignment, &mut Rng) -> f64,
+        exec_time_of: &mut dyn FnMut(&Assignment, &mut Rng) -> Result<f64>,
     ) -> Result<()> {
         // every 10th episode is pure exploitation: the best-assignment
         // tracker then observes the policy's greedy quality, matching how
@@ -387,7 +448,22 @@ impl<'a> Trainer<'a> {
             )?
         };
 
-        let t = exec_time_of(&ep.assignment, &mut self.rng);
+        let t = exec_time_of(&ep.assignment, &mut self.rng)?;
+        if !t.is_finite() {
+            self.anomalies += 1;
+            resilience::note_anomaly();
+            self.history.push(LogRow {
+                episode: self.history.len(),
+                stage,
+                exec_time: t,
+                best_time: self.best.as_ref().map_or(f64::NAN, |b| b.1),
+                loss: f32::NAN,
+                entropy: f32::NAN,
+                encode_calls: ep.encode_calls,
+                anomalies: self.anomalies,
+            });
+            return Ok(());
+        }
         self.apply_update(i, total, stage, ep, t)
     }
 
@@ -444,6 +520,11 @@ impl<'a> Trainer<'a> {
             lr,
             self.cfg.entropy_w,
         )?;
+        if !loss.is_finite() {
+            // the backend's own anomaly guard skipped the Adam step and
+            // handed the non-finite loss back; count it here
+            self.anomalies += 1;
+        }
         self.history.push(LogRow {
             episode: self.history.len(),
             stage,
@@ -452,6 +533,7 @@ impl<'a> Trainer<'a> {
             loss,
             entropy: ent,
             encode_calls: ep.encode_calls,
+            anomalies: self.anomalies,
         });
         Ok(())
     }
@@ -590,11 +672,15 @@ impl<'a> Trainer<'a> {
         {
             let nets = self.nets;
             if let Some(sync) = nets.as_sync() {
-                let mut done = 0;
+                // resume lands on a batch boundary by construction:
+                // checkpoints are only written from `advance_cursor`
+                // below, after a whole batch completed
+                let mut done = self.stage_start(2, episodes);
                 while done < episodes {
                     let bs = self.cfg.episode_batch.min(episodes - done);
                     self.stage2_sim_batch(sync, done, bs, episodes, done)?;
                     done += bs;
+                    self.advance_cursor(2, done, bs)?;
                 }
                 return Ok(());
             }
@@ -605,11 +691,12 @@ impl<'a> Trainer<'a> {
         let sim_cfg = self.cfg.sim.clone();
         let g = self.g;
         let ro = self.cfg.rollout;
-        for i in 0..episodes {
-            let mut f = |a: &Assignment, rng: &mut Rng| {
-                crate::rollout::mean_exec_time(g, a, &sim_cfg, rng, ro.sim_reps, ro.threads)
+        for i in self.stage_start(2, episodes)..episodes {
+            let mut f = |a: &Assignment, rng: &mut Rng| -> Result<f64> {
+                Ok(crate::rollout::mean_exec_time(g, a, &sim_cfg, rng, ro.sim_reps, ro.threads)?)
             };
             self.rl_episode(i, episodes, 2, &mut f)?;
+            self.advance_cursor(2, i + 1, 1)?;
         }
         Ok(())
     }
@@ -680,7 +767,7 @@ impl<'a> Trainer<'a> {
             &mut self.rng,
             ro.sim_reps,
             ro.threads,
-        );
+        )?;
         match self.cfg.update_mode {
             UpdateMode::Sequential => {
                 for (j, ep) in eps.into_iter().enumerate() {
@@ -710,30 +797,54 @@ impl<'a> Trainer<'a> {
         let mut advantages = Vec::with_capacity(eps.len());
         let mut bests = Vec::with_capacity(eps.len());
         for (ep, &t) in eps.iter().zip(rewards) {
-            advantages.push(self.observe_reward(2, &ep.assignment, t));
+            if t.is_finite() {
+                advantages.push(self.observe_reward(2, &ep.assignment, t));
+            } else {
+                // quarantined episode: placeholder advantage that never
+                // reaches the optimizer (filtered out of `items` below);
+                // the baseline/bests are untouched, so the surviving
+                // episodes see the same advantages they would in a run
+                // where this episode had simply not happened
+                self.anomalies += 1;
+                resilience::note_anomaly();
+                advantages.push(f32::NAN);
+            }
             bests.push(self.best.as_ref().map_or(f64::NAN, |b| b.1));
         }
-        let items: Vec<TrainItem> = eps
+        let kept: Vec<usize> = (0..eps.len()).filter(|&j| rewards[j].is_finite()).collect();
+        let items: Vec<TrainItem> = kept
             .iter()
-            .zip(&advantages)
-            .map(|(ep, &advantage)| TrainItem {
-                traj: &ep.trajectory,
-                advantage,
+            .map(|&j| TrainItem {
+                traj: &eps[j].trajectory,
+                advantage: advantages[j],
             })
             .collect();
-        let stats = self.nets.train_batch(
-            self.cfg.method,
-            &self.variant,
-            &self.enc,
-            &mut self.params,
-            &mut self.opt,
-            &items,
-            &self.dev_mask,
-            lr,
-            self.cfg.entropy_w,
-            self.cfg.rollout.threads,
-        )?;
-        for (j, ((ep, &t), (loss, ent))) in eps.iter().zip(rewards).zip(stats).enumerate() {
+        let stats = if items.is_empty() {
+            Vec::new()
+        } else {
+            self.nets.train_batch(
+                self.cfg.method,
+                &self.variant,
+                &self.enc,
+                &mut self.params,
+                &mut self.opt,
+                &items,
+                &self.dev_mask,
+                lr,
+                self.cfg.entropy_w,
+                self.cfg.rollout.threads,
+            )?
+        };
+        let mut losses = vec![(f32::NAN, f32::NAN); eps.len()];
+        for (k, &j) in kept.iter().enumerate() {
+            losses[j] = stats[k];
+        }
+        for (j, (ep, &t)) in eps.iter().zip(rewards).enumerate() {
+            let (loss, ent) = losses[j];
+            if t.is_finite() && !loss.is_finite() {
+                // backend-side quarantine: its gradient row was zeroed
+                self.anomalies += 1;
+            }
             self.history.push(LogRow {
                 episode: self.history.len(),
                 stage: 2,
@@ -742,6 +853,7 @@ impl<'a> Trainer<'a> {
                 loss,
                 entropy: ent,
                 encode_calls: ep.encode_calls,
+                anomalies: self.anomalies,
             });
         }
         Ok(())
@@ -751,6 +863,15 @@ impl<'a> Trainer<'a> {
     /// `engine_reps` executions; 1 by default). Engine rewards are
     /// measured wall clock, so replicates run serially — rollout
     /// threads never touch engine timing (see `rollout::mean_engine_time`).
+    ///
+    /// Engine executions run under the resilience layer's retry policy
+    /// (timeout + exponential backoff). If an episode's engine reward
+    /// stays unavailable through the whole retry budget, the episode
+    /// *degrades* instead of aborting the run: it takes a simulator
+    /// reward and is counted in `engine_fallbacks`. Because the fallback
+    /// consumes simulator RNG draws the fault-free bit-identity contract
+    /// covers Stages I/II only — a Stage III fallback is a logged,
+    /// counted divergence, not a silent one (DESIGN.md §15).
     pub fn stage3_real(
         &mut self,
         episodes: usize,
@@ -758,11 +879,33 @@ impl<'a> Trainer<'a> {
     ) -> Result<()> {
         let g = self.g;
         let reps = self.cfg.engine_reps;
-        for i in 0..episodes {
-            let mut f = |a: &Assignment, _rng: &mut Rng| {
-                crate::rollout::mean_engine_time(g, a, engine_cfg, reps)
-            };
-            self.rl_episode(i, episodes, 3, &mut f)?;
+        let sim_cfg = self.cfg.sim.clone();
+        let ro = self.cfg.rollout;
+        for i in self.stage_start(3, episodes)..episodes {
+            let mut fell_back = 0usize;
+            {
+                let mut f = |a: &Assignment, rng: &mut Rng| -> Result<f64> {
+                    match crate::rollout::mean_engine_time_resilient(
+                        g, a, engine_cfg, reps, i as u64,
+                    ) {
+                        Ok(t) => Ok(t),
+                        Err(e) => {
+                            resilience::count_engine_fallback();
+                            fell_back += 1;
+                            eprintln!(
+                                "warning: stage III episode {i}: {e}; \
+                                 falling back to the simulator reward"
+                            );
+                            Ok(crate::rollout::mean_exec_time(
+                                g, a, &sim_cfg, rng, ro.sim_reps, ro.threads,
+                            )?)
+                        }
+                    }
+                };
+                self.rl_episode(i, episodes, 3, &mut f)?;
+            }
+            self.engine_fallbacks += fell_back;
+            self.advance_cursor(3, i + 1, 1)?;
         }
         Ok(())
     }
@@ -773,6 +916,7 @@ impl<'a> Trainer<'a> {
         stages: Stages,
         engine_cfg: &crate::engine::EngineConfig,
     ) -> Result<TrainResult> {
+        self.try_resume()?;
         self.stage1_imitation(stages.imitation)?;
         self.stage2_sim(stages.sim_rl)?;
         self.stage3_real(stages.real_rl, engine_cfg)?;
@@ -799,6 +943,8 @@ impl<'a> Trainer<'a> {
             best_time,
             stage_bests: self.stage_bests,
             history: self.history,
+            anomalies: self.anomalies,
+            engine_fallbacks: self.engine_fallbacks,
         })
     }
 
@@ -823,25 +969,283 @@ impl<'a> Trainer<'a> {
         )?
         .assignment)
     }
+
+    // -----------------------------------------------------------------
+    // Checkpoint/resume (DESIGN.md §15)
+    // -----------------------------------------------------------------
+
+    /// Where this trainer's checkpoint blob lives (`None` when
+    /// checkpointing is disabled).
+    pub fn checkpoint_path(&self) -> Option<std::path::PathBuf> {
+        let ck = self.cfg.checkpoint.as_ref()?;
+        Some(ck.dir.join(format!("trainer-{}.ckpt", checkpoint::sanitize_name(&self.g.name))))
+    }
+
+    /// First episode index a (possibly resumed) stage loop should run.
+    /// Fresh runs and disabled checkpointing start at 0; a finished
+    /// earlier stage is skipped entirely (its RNG draws are already
+    /// accounted for in the restored stream).
+    fn stage_start(&self, stage: u8, episodes: usize) -> usize {
+        if self.cfg.checkpoint.is_none() {
+            return 0;
+        }
+        if self.cursor_stage > stage {
+            episodes
+        } else if self.cursor_stage == stage {
+            self.cursor_done.min(episodes)
+        } else {
+            0
+        }
+    }
+
+    /// Record stage progress after `delta` freshly completed episodes
+    /// and write a checkpoint when one is due. No-op when checkpointing
+    /// is disabled, so the multi-graph trainer's chunked stage calls
+    /// (members run with `checkpoint: None`) never touch the cursor.
+    fn advance_cursor(&mut self, stage: u8, done_in_stage: usize, delta: usize) -> Result<()> {
+        if self.cfg.checkpoint.is_none() {
+            return Ok(());
+        }
+        self.cursor_stage = stage;
+        self.cursor_done = done_in_stage;
+        self.episodes_done += delta;
+        self.maybe_checkpoint()
+    }
+
+    /// Write a checkpoint if the `every` cadence crossed a boundary
+    /// since the last write, or the `halt_after` test hook fired. A halt
+    /// writes the blob, then returns a typed [`Interrupted`] error — the
+    /// simulated mid-run kill used by the kill-and-resume pins.
+    fn maybe_checkpoint(&mut self) -> Result<()> {
+        let ck = match self.cfg.checkpoint.as_ref() {
+            Some(c) => c.clone(),
+            None => return Ok(()),
+        };
+        let every = ck.every.max(1);
+        let due = self.episodes_done / every > self.last_ckpt / every;
+        let halt = ck.halt_after.map_or(false, |k| self.episodes_done >= k);
+        if !(due || halt) {
+            return Ok(());
+        }
+        let path = self.checkpoint_path().expect("checkpoint cfg present");
+        checkpoint::save_atomic(&path, &self.state_blob())?;
+        self.last_ckpt = self.episodes_done;
+        if halt {
+            return Err(Interrupted {
+                episodes_done: self.episodes_done,
+                path,
+            }
+            .into());
+        }
+        Ok(())
+    }
+
+    /// Load the checkpoint blob if `resume` is set and one exists.
+    /// A missing blob is a fresh start (noted on stderr), not an error;
+    /// a corrupt or mismatched blob is an error — silently restarting
+    /// would destroy the very state the user asked to keep.
+    pub fn try_resume(&mut self) -> Result<()> {
+        let resume = self.cfg.checkpoint.as_ref().map_or(false, |c| c.resume);
+        if !resume {
+            return Ok(());
+        }
+        let path = self.checkpoint_path().expect("checkpoint cfg present");
+        if !path.exists() {
+            eprintln!("note: no checkpoint at {path:?}; starting fresh");
+            return Ok(());
+        }
+        let payload =
+            checkpoint::load(&path).with_context(|| format!("resuming from {path:?}"))?;
+        self.restore_blob(&payload)
+            .with_context(|| format!("resuming from {path:?}"))?;
+        eprintln!(
+            "resumed from {path:?}: stage {}, {} episodes done",
+            self.cursor_stage, self.episodes_done
+        );
+        Ok(())
+    }
+
+    /// Serialize the full training state (payload version 1). The blob
+    /// opens with a fingerprint of the run configuration so a resume
+    /// into a different graph/seed/mode fails loudly instead of
+    /// continuing from someone else's parameters.
+    pub(crate) fn state_blob(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u32(1); // payload version
+        // fingerprint
+        w.put_str(&self.g.name);
+        w.put_usize(self.g.n());
+        w.put_usize(self.g.m());
+        w.put_str(&format!("{:?}", self.cfg.method));
+        w.put_u64(self.cfg.seed);
+        w.put_usize(self.cfg.n_devices);
+        w.put_str(&format!("{:?}", self.cfg.update_mode));
+        w.put_usize(self.cfg.episode_batch);
+        w.put_usize(self.params.len());
+        // cursor + counters
+        w.put_u8(self.cursor_stage);
+        w.put_usize(self.cursor_done);
+        w.put_usize(self.episodes_done);
+        w.put_usize(self.anomalies);
+        w.put_usize(self.engine_fallbacks);
+        // RNG stream (exact xoshiro state: a resumed run continues the
+        // same draw sequence, which is what makes resume bit-identical)
+        for s in self.rng.state() {
+            w.put_u64(s);
+        }
+        // reward baseline
+        w.put_f64(self.baseline);
+        w.put_usize(self.baseline_n);
+        // parameters + Adam state
+        w.put_vec_f32(&self.params);
+        w.put_vec_f32(&self.opt.m);
+        w.put_vec_f32(&self.opt.v);
+        w.put_f32(self.opt.t);
+        // best-assignment trackers
+        match &self.best {
+            Some((a, t)) => {
+                w.put_u8(1);
+                w.put_vec_usize(a);
+                w.put_f64(*t);
+            }
+            None => w.put_u8(0),
+        }
+        w.put_usize(self.stage_bests.len());
+        for (stage, (a, t)) in &self.stage_bests {
+            w.put_u8(*stage);
+            w.put_vec_usize(a);
+            w.put_f64(*t);
+        }
+        // history
+        w.put_usize(self.history.len());
+        for r in &self.history {
+            w.put_usize(r.episode);
+            w.put_u8(r.stage);
+            w.put_f64(r.exec_time);
+            w.put_f64(r.best_time);
+            w.put_f32(r.loss);
+            w.put_f32(r.entropy);
+            w.put_usize(r.encode_calls);
+            w.put_usize(r.anomalies);
+        }
+        w.into_bytes()
+    }
+
+    /// Inverse of [`Trainer::state_blob`], with fingerprint validation.
+    pub(crate) fn restore_blob(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut r = ByteReader::new(bytes);
+        let version = r.get_u32()?;
+        anyhow::ensure!(version == 1, "unsupported checkpoint payload version {version}");
+        let name = r.get_str()?;
+        let n = r.get_usize()?;
+        let m = r.get_usize()?;
+        let method = r.get_str()?;
+        let seed = r.get_u64()?;
+        let n_devices = r.get_usize()?;
+        let update_mode = r.get_str()?;
+        let episode_batch = r.get_usize()?;
+        let n_params = r.get_usize()?;
+        anyhow::ensure!(
+            name == self.g.name && n == self.g.n() && m == self.g.m(),
+            "checkpoint is for graph {name:?} ({n} nodes, {m} edges), \
+             not {:?} ({} nodes, {} edges)",
+            self.g.name,
+            self.g.n(),
+            self.g.m()
+        );
+        anyhow::ensure!(
+            method == format!("{:?}", self.cfg.method)
+                && seed == self.cfg.seed
+                && n_devices == self.cfg.n_devices
+                && update_mode == format!("{:?}", self.cfg.update_mode)
+                && episode_batch == self.cfg.episode_batch,
+            "checkpoint fingerprint ({method}, seed {seed}, {n_devices} devices, \
+             {update_mode}, batch {episode_batch}) does not match the current run"
+        );
+        anyhow::ensure!(
+            n_params == self.params.len(),
+            "checkpoint has {n_params} parameters, expected {}",
+            self.params.len()
+        );
+        self.cursor_stage = r.get_u8()?;
+        self.cursor_done = r.get_usize()?;
+        self.episodes_done = r.get_usize()?;
+        self.anomalies = r.get_usize()?;
+        self.engine_fallbacks = r.get_usize()?;
+        let mut s = [0u64; 4];
+        for slot in &mut s {
+            *slot = r.get_u64()?;
+        }
+        self.rng = Rng::from_state(s);
+        self.baseline = r.get_f64()?;
+        self.baseline_n = r.get_usize()?;
+        self.params = r.get_vec_f32()?;
+        self.opt.m = r.get_vec_f32()?;
+        self.opt.v = r.get_vec_f32()?;
+        self.opt.t = r.get_f32()?;
+        self.best = if r.get_u8()? == 1 {
+            let a = r.get_vec_usize()?;
+            let t = r.get_f64()?;
+            Some((a, t))
+        } else {
+            None
+        };
+        self.stage_bests.clear();
+        let nb = r.get_usize()?;
+        for _ in 0..nb {
+            let stage = r.get_u8()?;
+            let a = r.get_vec_usize()?;
+            let t = r.get_f64()?;
+            self.stage_bests.insert(stage, (a, t));
+        }
+        self.history.clear();
+        let nh = r.get_usize()?;
+        for _ in 0..nh {
+            self.history.push(LogRow {
+                episode: r.get_usize()?,
+                stage: r.get_u8()?,
+                exec_time: r.get_f64()?,
+                best_time: r.get_f64()?,
+                loss: r.get_f32()?,
+                entropy: r.get_f32()?,
+                encode_calls: r.get_usize()?,
+                anomalies: r.get_usize()?,
+            });
+        }
+        anyhow::ensure!(
+            r.is_empty(),
+            "checkpoint payload has {} trailing bytes",
+            r.remaining()
+        );
+        // the blob was written at a checkpoint, so the cadence restarts
+        // from the restored episode count
+        self.last_ckpt = self.episodes_done;
+        Ok(())
+    }
 }
 
-/// Write a training history to CSV (for the Fig. 4 curves).
+/// Write a training history to CSV (for the Fig. 4 curves). The write
+/// is atomic (temp file + rename): a crash mid-write leaves either the
+/// previous history or none — never a truncated CSV that a plotting
+/// script would silently half-read.
 pub fn write_history_csv(path: &std::path::Path, history: &[LogRow]) -> Result<()> {
-    let mut out =
-        String::from("episode,stage,exec_time_ms,best_time_ms,loss,entropy,encode_calls\n");
+    let mut out = String::from(
+        "episode,stage,exec_time_ms,best_time_ms,loss,entropy,encode_calls,anomalies\n",
+    );
     for r in history {
         out.push_str(&format!(
-            "{},{},{:.4},{:.4},{:.5},{:.4},{}\n",
+            "{},{},{:.4},{:.4},{:.5},{:.4},{},{}\n",
             r.episode,
             r.stage,
             r.exec_time * 1e3,
             r.best_time * 1e3,
             r.loss,
             r.entropy,
-            r.encode_calls
+            r.encode_calls,
+            r.anomalies
         ));
     }
-    std::fs::write(path, out)?;
+    checkpoint::atomic_write(path, out.as_bytes())?;
     Ok(())
 }
 
@@ -868,5 +1272,65 @@ mod tests {
         assert_eq!(st.sim_rl, 600);
         assert_eq!(st.real_rl, 300);
         assert!(st.total() <= 1000);
+    }
+
+    #[test]
+    fn non_finite_rewards_are_quarantined() {
+        let nets = crate::policy::NativePolicy::builtin();
+        let g = crate::graph::workloads::chainmm(crate::graph::workloads::Scale::Tiny);
+        let topo = crate::sim::topology::DeviceTopology::p100x4();
+        let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+        cfg.seed = 7;
+        let mut tr = Trainer::new(&nets, &g, topo, cfg).unwrap();
+        let params0 = tr.params.clone();
+        let opt_t0 = tr.opt.t;
+        let mut f = |_a: &Assignment, _r: &mut Rng| -> Result<f64> { Ok(f64::NAN) };
+        tr.rl_episode(0, 10, 2, &mut f).unwrap();
+        assert_eq!(tr.anomalies, 1);
+        assert_eq!(tr.params, params0, "a NaN reward must never reach the optimizer");
+        assert_eq!(tr.opt.t, opt_t0, "the Adam step counter must not advance");
+        assert_eq!(tr.baseline_n, 0, "quarantined rewards must not move the baseline");
+        assert!(tr.best.is_none(), "a NaN time is not a best assignment");
+        let row = tr.history.last().unwrap();
+        assert!(row.exec_time.is_nan() && row.loss.is_nan());
+        assert_eq!(row.anomalies, 1);
+    }
+
+    #[test]
+    fn state_blob_roundtrips_and_validates_fingerprint() {
+        let nets = crate::policy::NativePolicy::builtin();
+        let g = crate::graph::workloads::chainmm(crate::graph::workloads::Scale::Tiny);
+        let topo = crate::sim::topology::DeviceTopology::p100x4();
+        let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+        cfg.seed = 11;
+        let mut tr = Trainer::new(&nets, &g, topo.clone(), cfg.clone()).unwrap();
+        tr.stage1_imitation(2).unwrap();
+        tr.stage2_sim(3).unwrap();
+        let blob = tr.state_blob();
+
+        let mut fresh = Trainer::new(&nets, &g, topo.clone(), cfg.clone()).unwrap();
+        fresh.restore_blob(&blob).unwrap();
+        assert_eq!(fresh.params, tr.params);
+        assert_eq!(fresh.opt.m, tr.opt.m);
+        assert_eq!(fresh.opt.v, tr.opt.v);
+        assert_eq!(fresh.opt.t, tr.opt.t);
+        assert_eq!(fresh.rng.state(), tr.rng.state());
+        assert_eq!(fresh.baseline.to_bits(), tr.baseline.to_bits());
+        assert_eq!(fresh.baseline_n, tr.baseline_n);
+        assert_eq!(fresh.history.len(), tr.history.len());
+        assert_eq!(
+            fresh.best.as_ref().map(|(a, _)| a.clone()),
+            tr.best.as_ref().map(|(a, _)| a.clone())
+        );
+
+        // a different seed is a different run: the fingerprint rejects it
+        let mut other_cfg = cfg;
+        other_cfg.seed = 12;
+        let mut wrong = Trainer::new(&nets, &g, topo, other_cfg).unwrap();
+        let err = wrong.restore_blob(&blob).unwrap_err();
+        assert!(
+            err.to_string().contains("fingerprint"),
+            "unexpected error: {err}"
+        );
     }
 }

@@ -46,6 +46,7 @@ use crate::graph::{Assignment, Graph};
 use crate::policy::{
     run_episode_with, EpisodeCfg, EpisodeScratch, GraphEncoding, Method, OptState, PolicyBackend,
 };
+use crate::runtime::checkpoint::{self, ByteReader, ByteWriter, CheckpointCfg, Interrupted};
 use crate::runtime::manifest::WorkloadSetManifest;
 use crate::sim::topology::DeviceTopology;
 use crate::util::rng::Rng;
@@ -358,6 +359,10 @@ impl<'a> MultiGraphTrainer<'a> {
             // per-workload simulator topology; every other sim knob
             // (engine, jitter, choose, enforce_memory) stays as configured
             cfg.sim.topology = topo.clone();
+            // members never checkpoint themselves: the multi-trainer owns
+            // the round cursor and nests each member's state blob in its
+            // own checkpoint (DESIGN.md §15)
+            cfg.checkpoint = None;
             trainers.push(Trainer::new(self.nets, g, topo.clone(), cfg)?);
         }
 
@@ -378,54 +383,107 @@ impl<'a> MultiGraphTrainer<'a> {
         let weights: Vec<f64> = members.iter().map(|w| w.weight).collect();
         let chunk = self.cfg.base.episode_batch.max(1);
 
+        let im = split_budget(self.cfg.stages.imitation, &weights);
+        let im_total: usize = im.iter().sum();
+        let sim = split_budget(self.cfg.stages.sim_rl, &weights);
+        let total: usize = sim.iter().sum();
+
+        // Round-cursor state: Stage I/II remainders, per-workload spent
+        // counts (the every-10th exploitation rule), and the global
+        // Stage II episode index — everything a round-boundary
+        // checkpoint must restore, next to the shared blob, the
+        // optimizer, and each member trainer's private state.
+        let ck = self.cfg.base.checkpoint.clone();
+        let mut rem_im = im.clone();
+        let mut rem_sim = sim.clone();
+        let mut spent = vec![0usize; trainers.len()];
+        let mut done = 0usize;
+        let mut last_ckpt = 0usize;
+
+        if let Some(c) = &ck {
+            if c.resume {
+                let path = self.checkpoint_path(c);
+                if path.exists() {
+                    let payload = checkpoint::load(&path)
+                        .with_context(|| format!("resuming from {path:?}"))?;
+                    let episodes_done = self
+                        .restore_blob(
+                            &payload,
+                            &mut trainers,
+                            &mut rem_im,
+                            &mut rem_sim,
+                            &mut spent,
+                            &mut done,
+                            &mut params,
+                            &mut opt,
+                        )
+                        .with_context(|| format!("resuming from {path:?}"))?;
+                    last_ckpt = episodes_done;
+                    eprintln!("resumed from {path:?}: {episodes_done} episodes done");
+                } else {
+                    eprintln!("note: no checkpoint at {path:?}; starting fresh");
+                }
+            }
+        }
+
         // Stage I: weighted round-robin imitation chunks. The swap dance
         // moves the shared blob into the member trainer for the chunk and
         // back out — updates land on the one shared blob, in canonical
-        // member order.
-        let im = split_budget(self.cfg.stages.imitation, &weights);
-        let mut rem = im.clone();
-        while rem.iter().any(|&r| r > 0) {
+        // member order. Checkpoints are written at round boundaries only,
+        // so a resumed run re-enters the rotation exactly where it left.
+        while rem_im.iter().any(|&r| r > 0) {
             for (i, tr) in trainers.iter_mut().enumerate() {
-                if rem[i] == 0 {
+                if rem_im[i] == 0 {
                     continue;
                 }
-                let k = chunk.min(rem[i]);
+                let k = chunk.min(rem_im[i]);
                 std::mem::swap(&mut tr.params, &mut params);
                 std::mem::swap(&mut tr.opt, &mut opt);
                 let r = tr.stage1_imitation(k);
                 std::mem::swap(&mut tr.params, &mut params);
                 std::mem::swap(&mut tr.opt, &mut opt);
                 r?;
-                rem[i] -= k;
+                rem_im[i] -= k;
+            }
+            if let Some(c) = &ck {
+                let episodes_done = im_total - rem_im.iter().sum::<usize>();
+                round_checkpoint(c, self.checkpoint_path(c), episodes_done, &mut last_ckpt, || {
+                    self.state_blob(
+                        1, episodes_done, &rem_im, &rem_sim, &spent, done, &params, &opt, &trainers,
+                    )
+                })?;
             }
         }
 
         // Stage II: weighted round-robin batches through the shared
         // batched entry point, against ONE global lr/epsilon schedule
-        // (`start`/`total` are global episode indices).
-        let sim = split_budget(self.cfg.stages.sim_rl, &weights);
-        let total: usize = sim.iter().sum();
-        let mut rem = sim.clone();
-        // per-workload episode counts drive the every-10th exploitation
-        // rule (a global index would alias with the interleave period
-        // and starve some members of exploitation episodes)
-        let mut spent = vec![0usize; trainers.len()];
-        let mut done = 0usize;
+        // (`start`/`total` are global episode indices). Per-workload
+        // `spent` counts drive the every-10th exploitation rule (a
+        // global index would alias with the interleave period and starve
+        // some members of exploitation episodes).
         while done < total {
             for (i, tr) in trainers.iter_mut().enumerate() {
-                if rem[i] == 0 {
+                if rem_sim[i] == 0 {
                     continue;
                 }
-                let bs = chunk.min(rem[i]);
+                let bs = chunk.min(rem_sim[i]);
                 std::mem::swap(&mut tr.params, &mut params);
                 std::mem::swap(&mut tr.opt, &mut opt);
                 let r = tr.stage2_sim_batch(sync, done, bs, total, spent[i]);
                 std::mem::swap(&mut tr.params, &mut params);
                 std::mem::swap(&mut tr.opt, &mut opt);
                 r?;
-                rem[i] -= bs;
+                rem_sim[i] -= bs;
                 spent[i] += bs;
                 done += bs;
+            }
+            if let Some(c) = &ck {
+                let episodes_done = im_total + done;
+                round_checkpoint(c, self.checkpoint_path(c), episodes_done, &mut last_ckpt, || {
+                    self.state_blob(
+                        2, episodes_done, &rem_im, &rem_sim, &spent, done, &params, &opt, &trainers,
+                    )
+                })?;
             }
         }
 
@@ -450,6 +508,172 @@ impl<'a> MultiGraphTrainer<'a> {
             reports,
         })
     }
+
+    /// Where this run's multi-graph checkpoint blob lives.
+    fn checkpoint_path(&self, ck: &CheckpointCfg) -> std::path::PathBuf {
+        ck.dir.join(format!("multi-{}.ckpt", checkpoint::sanitize_name(&self.set.name)))
+    }
+
+    /// Serialize the full multi-graph training state (payload version
+    /// 1): run fingerprint, round cursor, the shared blob + optimizer,
+    /// and each member trainer's private state blob, length-prefixed in
+    /// canonical member order.
+    #[allow(clippy::too_many_arguments)]
+    fn state_blob(
+        &self,
+        phase: u8,
+        episodes_done: usize,
+        rem_im: &[usize],
+        rem_sim: &[usize],
+        spent: &[usize],
+        done: usize,
+        params: &[f32],
+        opt: &OptState,
+        trainers: &[Trainer],
+    ) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u32(1); // payload version
+        // fingerprint
+        w.put_str(&self.set.name);
+        w.put_usize(self.set.train.len());
+        for m in &self.set.train {
+            w.put_str(&m.name);
+        }
+        w.put_u64(self.cfg.base.seed);
+        w.put_str(&format!("{:?}", self.cfg.base.method));
+        w.put_str(&format!("{:?}", self.cfg.base.update_mode));
+        w.put_usize(self.cfg.base.episode_batch);
+        w.put_usize(self.cfg.stages.imitation);
+        w.put_usize(self.cfg.stages.sim_rl);
+        w.put_usize(params.len());
+        // round cursor
+        w.put_u8(phase);
+        w.put_usize(episodes_done);
+        w.put_vec_usize(rem_im);
+        w.put_vec_usize(rem_sim);
+        w.put_vec_usize(spent);
+        w.put_usize(done);
+        // shared blob + optimizer
+        w.put_vec_f32(params);
+        w.put_vec_f32(&opt.m);
+        w.put_vec_f32(&opt.v);
+        w.put_f32(opt.t);
+        // member trainer state (RNG streams, baselines, histories)
+        for tr in trainers {
+            w.put_bytes(&tr.state_blob());
+        }
+        w.into_bytes()
+    }
+
+    /// Inverse of [`MultiGraphTrainer::state_blob`] with fingerprint
+    /// validation; returns the global episode count at the blob's write
+    /// time (the checkpoint-cadence cursor).
+    #[allow(clippy::too_many_arguments)]
+    fn restore_blob(
+        &self,
+        bytes: &[u8],
+        trainers: &mut [Trainer],
+        rem_im: &mut Vec<usize>,
+        rem_sim: &mut Vec<usize>,
+        spent: &mut Vec<usize>,
+        done: &mut usize,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+    ) -> Result<usize> {
+        let mut r = ByteReader::new(bytes);
+        let version = r.get_u32()?;
+        anyhow::ensure!(version == 1, "unsupported multi-checkpoint payload version {version}");
+        let name = r.get_str()?;
+        let n_members = r.get_usize()?;
+        anyhow::ensure!(
+            name == self.set.name && n_members == self.set.train.len(),
+            "checkpoint is for workload set {name:?} ({n_members} members), not {:?} ({})",
+            self.set.name,
+            self.set.train.len()
+        );
+        for m in &self.set.train {
+            let have = r.get_str()?;
+            anyhow::ensure!(
+                have == m.name,
+                "checkpoint member {have:?} does not match workload {:?}",
+                m.name
+            );
+        }
+        let seed = r.get_u64()?;
+        let method = r.get_str()?;
+        let update_mode = r.get_str()?;
+        let episode_batch = r.get_usize()?;
+        let imitation = r.get_usize()?;
+        let sim_rl = r.get_usize()?;
+        let n_params = r.get_usize()?;
+        anyhow::ensure!(
+            seed == self.cfg.base.seed
+                && method == format!("{:?}", self.cfg.base.method)
+                && update_mode == format!("{:?}", self.cfg.base.update_mode)
+                && episode_batch == self.cfg.base.episode_batch
+                && imitation == self.cfg.stages.imitation
+                && sim_rl == self.cfg.stages.sim_rl
+                && n_params == params.len(),
+            "multi-checkpoint fingerprint (seed {seed}, {method}, {update_mode}, \
+             batch {episode_batch}, stages {imitation}+{sim_rl}, {n_params} params) \
+             does not match the current run"
+        );
+        let _phase = r.get_u8()?;
+        let episodes_done = r.get_usize()?;
+        *rem_im = r.get_vec_usize()?;
+        *rem_sim = r.get_vec_usize()?;
+        *spent = r.get_vec_usize()?;
+        anyhow::ensure!(
+            rem_im.len() == n_members && rem_sim.len() == n_members && spent.len() == n_members,
+            "multi-checkpoint cursor vectors do not match the member count"
+        );
+        *done = r.get_usize()?;
+        *params = r.get_vec_f32()?;
+        opt.m = r.get_vec_f32()?;
+        opt.v = r.get_vec_f32()?;
+        opt.t = r.get_f32()?;
+        for tr in trainers.iter_mut() {
+            let blob = r.get_bytes()?;
+            tr.restore_blob(&blob)?;
+        }
+        anyhow::ensure!(
+            r.is_empty(),
+            "multi-checkpoint payload has {} trailing bytes",
+            r.remaining()
+        );
+        Ok(episodes_done)
+    }
+}
+
+/// Shared round-boundary checkpoint policy: write when the `every`
+/// cadence crossed a boundary since the last write or the `halt_after`
+/// test hook fired; a halt writes the blob, then returns the typed
+/// [`Interrupted`] error (the simulated mid-run kill the kill-and-resume
+/// pins rely on). The blob is built lazily — rounds that owe no
+/// checkpoint never pay for serialization.
+fn round_checkpoint(
+    ck: &CheckpointCfg,
+    path: std::path::PathBuf,
+    episodes_done: usize,
+    last_ckpt: &mut usize,
+    blob: impl FnOnce() -> Vec<u8>,
+) -> Result<()> {
+    let every = ck.every.max(1);
+    let due = episodes_done / every > *last_ckpt / every;
+    let halt = ck.halt_after.map_or(false, |k| episodes_done >= k);
+    if !(due || halt) {
+        return Ok(());
+    }
+    checkpoint::save_atomic(&path, &blob())?;
+    *last_ckpt = episodes_done;
+    if halt {
+        return Err(Interrupted {
+            episodes_done,
+            path,
+        }
+        .into());
+    }
+    Ok(())
 }
 
 /// Greedy zero-shot deployment of a parameter blob on one graph — the

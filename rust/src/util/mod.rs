@@ -11,17 +11,75 @@ pub fn fmt_ms(x: f64) -> String {
 }
 
 /// Read an env var as usize with a default (used for episode budgets).
+/// A set-but-unparseable value falls back to the default with a one-line
+/// stderr warning (silent fallback hid typos like `DOPPLER_EPISODES=4OO`).
 pub fn env_usize(name: &str, default: usize) -> usize {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    env_parsed(name, default)
 }
 
-/// Read an env var as f64 with a default.
+/// Read an env var as f64 with a default (same warning contract).
 pub fn env_f64(name: &str, default: f64) -> f64 {
-    std::env::var(name)
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(default)
+    env_parsed(name, default)
+}
+
+/// Shared impl: unset or empty → default silently; set-but-unparseable →
+/// default with a warning naming the variable and the rejected value.
+fn env_parsed<T>(name: &str, default: T) -> T
+where
+    T: std::str::FromStr + std::fmt::Display + Copy,
+{
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(v) if v.is_empty() => default,
+        Ok(v) => match v.parse() {
+            Ok(x) => x,
+            Err(_) => {
+                eprintln!(
+                    "warning: ignoring {name}={v:?}: expected a number; using default {default}"
+                );
+                default
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Each test uses a unique variable name: the test harness runs tests
+    // on parallel threads sharing one process environment.
+
+    #[test]
+    fn env_usize_parses_set_values() {
+        std::env::set_var("DOPPLER_TEST_ENV_USIZE_OK", "42");
+        assert_eq!(env_usize("DOPPLER_TEST_ENV_USIZE_OK", 7), 42);
+        std::env::remove_var("DOPPLER_TEST_ENV_USIZE_OK");
+    }
+
+    #[test]
+    fn env_usize_unset_and_empty_fall_back_silently() {
+        assert_eq!(env_usize("DOPPLER_TEST_ENV_USIZE_UNSET", 7), 7);
+        std::env::set_var("DOPPLER_TEST_ENV_USIZE_EMPTY", "");
+        assert_eq!(env_usize("DOPPLER_TEST_ENV_USIZE_EMPTY", 9), 9);
+        std::env::remove_var("DOPPLER_TEST_ENV_USIZE_EMPTY");
+    }
+
+    #[test]
+    fn env_usize_rejects_garbage_with_default() {
+        std::env::set_var("DOPPLER_TEST_ENV_USIZE_BAD", "4OO");
+        // warns on stderr (not capturable here) and keeps the default
+        assert_eq!(env_usize("DOPPLER_TEST_ENV_USIZE_BAD", 11), 11);
+        std::env::remove_var("DOPPLER_TEST_ENV_USIZE_BAD");
+    }
+
+    #[test]
+    fn env_f64_rejects_garbage_with_default() {
+        std::env::set_var("DOPPLER_TEST_ENV_F64_BAD", "fast");
+        assert_eq!(env_f64("DOPPLER_TEST_ENV_F64_BAD", 0.5), 0.5);
+        std::env::remove_var("DOPPLER_TEST_ENV_F64_BAD");
+        std::env::set_var("DOPPLER_TEST_ENV_F64_OK", "2.5");
+        assert_eq!(env_f64("DOPPLER_TEST_ENV_F64_OK", 0.5), 2.5);
+        std::env::remove_var("DOPPLER_TEST_ENV_F64_OK");
+    }
 }

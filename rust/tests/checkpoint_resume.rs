@@ -1,0 +1,306 @@
+//! Kill-and-resume determinism pins (DESIGN.md §15).
+//!
+//! The contract under test: a run that is interrupted at a checkpoint
+//! boundary (simulated with `CheckpointCfg::halt_after`) and then
+//! resumed with `--resume` must produce **bit-identical** parameters,
+//! optimizer state, and history to the same run executed without
+//! interruption — in sequential and accumulate update modes, and for
+//! the multi-graph trainer. Plus the container-level guarantees: CRC
+//! validation rejects corruption, and history CSVs are written
+//! atomically.
+
+use doppler::engine::EngineConfig;
+use doppler::graph::workloads::{chainmm, Scale};
+use doppler::policy::{Method, NativePolicy};
+use doppler::runtime::checkpoint::{self, CheckpointCfg, Interrupted};
+use doppler::sim::topology::DeviceTopology;
+use doppler::train::multi::{MultiGraphTrainer, MultiTrainCfg, WorkloadSet};
+use doppler::train::{LogRow, Stages, TrainConfig, Trainer, UpdateMode};
+
+/// Fresh per-test scratch directory (removed and recreated on entry so
+/// a previous failed run can never satisfy a resume).
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("doppler-ckpt-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn history_key(history: &[LogRow]) -> Vec<(usize, u8, f64, f64, f32, f32, usize, usize)> {
+    history
+        .iter()
+        .map(|r| {
+            (
+                r.episode,
+                r.stage,
+                r.exec_time,
+                r.best_time,
+                r.loss,
+                r.entropy,
+                r.encode_calls,
+                r.anomalies,
+            )
+        })
+        .collect()
+}
+
+/// One single-graph training run to completion (or until `halt_after`
+/// interrupts it). All non-checkpoint knobs are fixed so runs differ
+/// only in their checkpoint policy.
+fn run_trainer(
+    mode: UpdateMode,
+    batch: usize,
+    stages: Stages,
+    ck: Option<CheckpointCfg>,
+) -> anyhow::Result<(Vec<f32>, Vec<(usize, u8, f64, f64, f32, f32, usize, usize)>, f64)> {
+    let nets = NativePolicy::builtin();
+    let g = chainmm(Scale::Tiny);
+    let topo = DeviceTopology::p100x4();
+    let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+    cfg.seed = 13;
+    cfg.update_mode = mode;
+    cfg.episode_batch = batch;
+    cfg.rollout.threads = 2;
+    cfg.rollout.sim_reps = 2;
+    cfg.lr = doppler::train::Schedule {
+        start: 1e-3,
+        end: 1e-4,
+    };
+    cfg.checkpoint = ck;
+    let trainer = Trainer::new(&nets, &g, topo.clone(), cfg)?;
+    let engine_cfg = EngineConfig::new(topo);
+    let result = trainer.run(stages, &engine_cfg)?;
+    Ok((result.params, history_key(&result.history), result.best_time))
+}
+
+#[test]
+fn sequential_kill_and_resume_is_bit_identical() {
+    let dir = temp_dir("seq");
+    let stages = Stages {
+        imitation: 4,
+        sim_rl: 10,
+        real_rl: 0,
+    };
+
+    // golden: uninterrupted, no checkpointing at all
+    let golden = run_trainer(UpdateMode::Sequential, 1, stages, None).unwrap();
+
+    // interrupted: checkpoint every 5 episodes, simulated kill at 7
+    let mut ck = CheckpointCfg::new(&dir);
+    ck.every = 5;
+    ck.halt_after = Some(7);
+    let err = run_trainer(UpdateMode::Sequential, 1, stages, Some(ck))
+        .expect_err("halt_after must interrupt the run");
+    let int = err
+        .downcast_ref::<Interrupted>()
+        .expect("interrupt must surface as the typed Interrupted error");
+    assert_eq!(int.episodes_done, 7, "sequential halt fires exactly at the boundary");
+    assert!(int.path.exists(), "the interrupting halt must have written its blob");
+
+    // resumed: same run config, resume on, kill switch off
+    let mut ck = CheckpointCfg::new(&dir);
+    ck.every = 5;
+    ck.resume = true;
+    let resumed = run_trainer(UpdateMode::Sequential, 1, stages, Some(ck)).unwrap();
+
+    assert_eq!(resumed.0, golden.0, "resumed params drifted from the golden run");
+    assert_eq!(resumed.1, golden.1, "resumed history drifted from the golden run");
+    assert_eq!(
+        resumed.2.to_bits(),
+        golden.2.to_bits(),
+        "resumed best_time drifted from the golden run"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn accumulate_kill_and_resume_is_bit_identical() {
+    let dir = temp_dir("acc");
+    let stages = Stages {
+        imitation: 0,
+        sim_rl: 12,
+        real_rl: 0,
+    };
+
+    let golden = run_trainer(UpdateMode::Accumulate, 4, stages, None).unwrap();
+
+    // batched path: checkpoints land on batch boundaries (4, 8, 12);
+    // the kill at >= 8 episodes fires after the second batch
+    let mut ck = CheckpointCfg::new(&dir);
+    ck.every = 4;
+    ck.halt_after = Some(8);
+    let err = run_trainer(UpdateMode::Accumulate, 4, stages, Some(ck))
+        .expect_err("halt_after must interrupt the batched run");
+    let int = err
+        .downcast_ref::<Interrupted>()
+        .expect("interrupt must surface as the typed Interrupted error");
+    assert_eq!(int.episodes_done, 8, "batched halt fires at the batch boundary");
+
+    let mut ck = CheckpointCfg::new(&dir);
+    ck.every = 4;
+    ck.resume = true;
+    let resumed = run_trainer(UpdateMode::Accumulate, 4, stages, Some(ck)).unwrap();
+
+    assert_eq!(resumed.0, golden.0, "resumed accumulate params drifted");
+    assert_eq!(resumed.1, golden.1, "resumed accumulate history drifted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Multi-graph kill-and-resume: interrupt mid-Stage II (between
+/// interleave rounds) and resume; the shared blob and every member
+/// history must match the uninterrupted run bit-for-bit.
+#[test]
+fn multi_graph_kill_and_resume_is_bit_identical() {
+    let dir = temp_dir("multi");
+    let nets = NativePolicy::builtin();
+    let set = WorkloadSet::builtin("tiny").unwrap();
+    let first = &set.train[0];
+    let stages = Stages {
+        imitation: 8,
+        sim_rl: 12,
+        real_rl: 0,
+    };
+    let base_cfg = |ck: Option<CheckpointCfg>| {
+        let mut base = TrainConfig::new(
+            Method::Doppler,
+            first.build_topology().unwrap(),
+            first.n_devices,
+        );
+        base.seed = 23;
+        base.episode_batch = 2;
+        base.rollout.threads = 2;
+        base.rollout.sim_reps = 2;
+        base.lr = doppler::train::Schedule {
+            start: 1e-3,
+            end: 1e-4,
+        };
+        base.checkpoint = ck;
+        base
+    };
+    let run = |ck: Option<CheckpointCfg>| {
+        MultiGraphTrainer::new(&nets, &set, MultiTrainCfg {
+            base: base_cfg(ck),
+            stages,
+        })
+        .run()
+    };
+
+    let golden = run(None).unwrap();
+
+    // Stage I contributes 8 episodes; the first Stage II round boundary
+    // lands at 8 + 6 = 14 global episodes, which trips the >= 13 kill —
+    // an interrupt in the middle of the Stage II rotation.
+    let mut ck = CheckpointCfg::new(&dir);
+    ck.every = 4;
+    ck.halt_after = Some(13);
+    let err = run(Some(ck)).expect_err("halt_after must interrupt the multi run");
+    let int = err
+        .downcast_ref::<Interrupted>()
+        .expect("interrupt must surface as the typed Interrupted error");
+    assert_eq!(int.episodes_done, 14, "multi halt fires at a round boundary");
+    assert!(int.path.exists());
+
+    let mut ck = CheckpointCfg::new(&dir);
+    ck.every = 4;
+    ck.resume = true;
+    let resumed = run(Some(ck)).unwrap();
+
+    assert_eq!(resumed.params, golden.params, "resumed shared blob drifted");
+    assert_eq!(resumed.total_episodes, golden.total_episodes);
+    assert_eq!(resumed.reports.len(), golden.reports.len());
+    for (r, g) in resumed.reports.iter().zip(&golden.reports) {
+        assert_eq!(r.name, g.name);
+        assert_eq!(r.episodes, g.episodes, "workload {}: episode count drifted", r.name);
+        assert_eq!(
+            history_key(&r.history),
+            history_key(&g.history),
+            "workload {}: resumed history drifted",
+            r.name
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The checkpoint container must reject bit rot and truncation loudly —
+/// silently resuming from a damaged blob would corrupt the run it was
+/// meant to save.
+#[test]
+fn corrupt_checkpoints_are_rejected() {
+    let dir = temp_dir("corrupt");
+    let path = dir.join("blob.ckpt");
+    let payload = b"checkpoint payload bytes for crc validation".to_vec();
+    checkpoint::save_atomic(&path, &payload).unwrap();
+    assert_eq!(checkpoint::load(&path).unwrap(), payload);
+
+    // flip one payload bit -> CRC failure
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[16 + 3] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let e = checkpoint::load(&path).expect_err("bit rot must fail validation");
+    assert!(format!("{e:#}").contains("CRC"), "unexpected error: {e:#}");
+
+    // truncate -> length failure
+    checkpoint::save_atomic(&path, &payload).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::write(&path, &bytes[..bytes.len() - 2]).unwrap();
+    let e = checkpoint::load(&path).expect_err("truncation must fail validation");
+    assert!(format!("{e:#}").contains("length mismatch"), "unexpected error: {e:#}");
+
+    // wrong magic -> not-a-checkpoint failure
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes.truncate(0);
+    bytes.extend_from_slice(b"NOTACKPT");
+    std::fs::write(&path, &bytes).unwrap();
+    let e = checkpoint::load(&path).expect_err("wrong magic must fail validation");
+    assert!(format!("{e:#}").contains("truncated") || format!("{e:#}").contains("magic"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `write_history_csv` goes through the atomic temp-file + rename path:
+/// the final file is complete and no temp file is left behind.
+#[test]
+fn history_csv_is_written_atomically() {
+    let dir = temp_dir("csv");
+    let path = dir.join("history.csv");
+    let rows = vec![
+        LogRow {
+            episode: 0,
+            stage: 1,
+            exec_time: 0.5,
+            best_time: 0.5,
+            loss: 1.25,
+            entropy: 0.9,
+            encode_calls: 1,
+            anomalies: 0,
+        },
+        LogRow {
+            episode: 1,
+            stage: 2,
+            exec_time: 0.4,
+            best_time: 0.4,
+            loss: f32::NAN,
+            entropy: f32::NAN,
+            encode_calls: 2,
+            anomalies: 1,
+        },
+    ];
+    doppler::train::write_history_csv(&path, &rows).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 3);
+    assert_eq!(
+        lines[0],
+        "episode,stage,exec_time_ms,best_time_ms,loss,entropy,encode_calls,anomalies"
+    );
+    assert!(lines[1].starts_with("0,1,"));
+    assert!(lines[2].ends_with(",2,1"), "anomaly count missing: {}", lines[2]);
+
+    // no temp droppings in the directory
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| e.file_name().to_string_lossy().contains(".tmp"))
+        .collect();
+    assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

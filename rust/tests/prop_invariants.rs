@@ -421,10 +421,11 @@ fn prop_rollout_parallel_matches_serial() {
         let reps = 1 + (seed as usize % 4);
 
         // replicate traces: serial reference vs every worker count
-        let serial = rollout::simulate_replicates(&g, &a, &cfg, &mut Rng::new(seed), reps, 1);
+        let serial =
+            rollout::simulate_replicates(&g, &a, &cfg, &mut Rng::new(seed), reps, 1).unwrap();
         for threads in [2usize, 4, 8] {
-            let par =
-                rollout::simulate_replicates(&g, &a, &cfg, &mut Rng::new(seed), reps, threads);
+            let par = rollout::simulate_replicates(&g, &a, &cfg, &mut Rng::new(seed), reps, threads)
+                .unwrap();
             assert_eq!(serial.len(), par.len());
             for (r, (x, y)) in serial.iter().zip(&par).enumerate() {
                 assert_same_trace(x, y, &format!("seed {seed} threads {threads} rep {r}"));
@@ -434,8 +435,8 @@ fn prop_rollout_parallel_matches_serial() {
         // scalar rewards: rollout::mean_exec_time == sim::mean_exec_time
         let reference = doppler::sim::mean_exec_time(&g, &a, &cfg, &mut Rng::new(seed + 9), reps);
         for threads in [1usize, 2, 4, 8] {
-            let got =
-                rollout::mean_exec_time(&g, &a, &cfg, &mut Rng::new(seed + 9), reps, threads);
+            let got = rollout::mean_exec_time(&g, &a, &cfg, &mut Rng::new(seed + 9), reps, threads)
+                .unwrap();
             assert_eq!(got, reference, "seed {seed} threads {threads}: reward drifted");
         }
 
@@ -444,7 +445,8 @@ fn prop_rollout_parallel_matches_serial() {
             .map(|e| random_valid_assignment(&g, nd, &mut Rng::new(seed * 100 + e)))
             .collect();
         let serial_r =
-            rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(seed), reps, 1);
+            rollout::episode_rewards(&g, &assignments, &cfg, &mut Rng::new(seed), reps, 1)
+                .unwrap();
         for threads in [2usize, 8] {
             let par_r = rollout::episode_rewards(
                 &g,
@@ -453,7 +455,8 @@ fn prop_rollout_parallel_matches_serial() {
                 &mut Rng::new(seed),
                 reps,
                 threads,
-            );
+            )
+            .unwrap();
             assert_eq!(serial_r, par_r, "seed {seed} threads {threads}: batch rewards");
         }
     }

@@ -6,13 +6,25 @@
 //! Like the real crate, [`Error`] deliberately does **not** implement
 //! `std::error::Error`, which is what makes the blanket
 //! `From<E: std::error::Error>` conversion coherent.
+//!
+//! Typed-error support: the blanket `From` conversion additionally stores
+//! the original error value as an opaque payload, so callers can recover
+//! it with [`Error::downcast_ref`] (used by the fault-tolerance layer to
+//! match `RolloutError` / `Interrupted` through `anyhow::Result` plumbing).
+//! Caveat vs real anyhow: the [`Context`] trait's `Result` impl re-renders
+//! the source error as a string, so a `.context(...)` frame added through
+//! that path DROPS the payload — match typed errors before adding context.
+//! `Error::context` (the inherent method) keeps it.
 
+use std::any::Any;
 use std::fmt;
 
 /// A string-backed error value with optional context frames.
 pub struct Error {
     /// Context frames, outermost first, then the root message last.
     chain: Vec<String>,
+    /// The original typed error (when built via the blanket `From`).
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
@@ -20,13 +32,20 @@ impl Error {
     pub fn msg<M: fmt::Display>(message: M) -> Error {
         Error {
             chain: vec![message.to_string()],
+            payload: None,
         }
     }
 
-    /// Wrap with an outer context frame.
+    /// Wrap with an outer context frame (keeps any typed payload).
     pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// Borrow the original typed error, if this `Error` was produced by
+    /// the blanket `From<E: std::error::Error>` conversion from a `T`.
+    pub fn downcast_ref<T: 'static>(&self) -> Option<&T> {
+        self.payload.as_ref()?.downcast_ref::<T>()
     }
 }
 
@@ -52,7 +71,11 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Error {
-        Error::msg(e.to_string())
+        let msg = e.to_string();
+        Error {
+            chain: vec![msg],
+            payload: Some(Box::new(e)),
+        }
     }
 }
 
@@ -158,5 +181,46 @@ mod tests {
         let e = Error::msg("root cause").context("outer");
         assert_eq!(format!("{e}"), "outer");
         assert_eq!(format!("{e:#}"), "outer: root cause");
+    }
+
+    #[derive(Debug)]
+    struct Typed {
+        code: u32,
+    }
+    impl fmt::Display for Typed {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write!(f, "typed error {}", self.code)
+        }
+    }
+    impl std::error::Error for Typed {}
+
+    #[test]
+    fn downcast_recovers_typed_payload() {
+        fn fail() -> Result<()> {
+            Err(Typed { code: 7 })?;
+            Ok(())
+        }
+        let e = fail().unwrap_err();
+        assert_eq!(format!("{e}"), "typed error 7");
+        assert_eq!(e.downcast_ref::<Typed>().map(|t| t.code), Some(7));
+        assert!(e.downcast_ref::<String>().is_none());
+
+        // The inherent context method keeps the payload...
+        let e = e.context("outer");
+        assert_eq!(e.downcast_ref::<Typed>().map(|t| t.code), Some(7));
+
+        // ...but Error::msg never has one.
+        assert!(Error::msg("plain").downcast_ref::<Typed>().is_none());
+    }
+
+    #[test]
+    fn context_trait_drops_payload_documented() {
+        // Known shim limitation: the blanket `Context` impl stringifies the
+        // source, so the typed payload does not survive `.context()` on a
+        // Result. This test pins the documented behavior.
+        let r: std::result::Result<(), Typed> = Err(Typed { code: 9 });
+        let e = r.context("while frobbing").unwrap_err();
+        assert_eq!(format!("{e:#}"), "while frobbing: typed error 9");
+        assert!(e.downcast_ref::<Typed>().is_none());
     }
 }
