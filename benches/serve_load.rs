@@ -1,0 +1,126 @@
+//! Serving-coordinator load bench (DESIGN.md §16): requests/sec and
+//! tail latency (p50/p95/p99) of the degradation ladder at 1/2/4/8
+//! worker threads, under deterministic fault injection, plus a live
+//! replay-determinism check (every thread count must reproduce the
+//! 1-thread report digest bit-for-bit) and an availability check
+//! (every admitted request answered despite injected policy/cache
+//! failures).
+//!
+//! Writes BENCH_serve.json at the repo root.
+//! Knobs: DOPPLER_SERVE_REQUESTS (trace length, default 160),
+//! DOPPLER_SERVE_BURST (arrivals per admission slot, default 8);
+//! DOPPLER_BENCH_SMOKE / --smoke shrinks both for CI.
+
+use doppler::bench_util::{banner, smoke_mode};
+use doppler::eval::tables::Table;
+use doppler::graph::workloads::Scale;
+use doppler::runtime::resilience::{self, FaultPlan};
+use doppler::serve::{synthetic_trace, Coordinator, ServeCfg};
+use doppler::sim::topology::DeviceTopology;
+use doppler::util::env_usize;
+use doppler::util::json::{self, Json};
+
+const OUT_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+
+/// Injected failure schedule: half of policy attempts and a tenth of
+/// cache lookups fail; with 2 attempts per request, ~25% of cache
+/// misses exhaust retries, so every ladder rung is exercised.
+const FAULT_PLAN: &str = "seed=5,retries=2,serve.policy=0.5,serve.cache=0.1";
+
+fn main() {
+    banner(
+        "Serve load — degradation-ladder throughput under fault injection",
+        "DESIGN.md §16 (systems extension; paper §5 deployment story)",
+    );
+    let smoke = smoke_mode();
+    let requests = env_usize("DOPPLER_SERVE_REQUESTS", if smoke { 32 } else { 160 });
+    let burst = env_usize("DOPPLER_SERVE_BURST", 8).max(1);
+    let threads_list: Vec<usize> = if smoke { vec![1, 2] } else { vec![1, 2, 4, 8] };
+    let scale = if smoke { Scale::Tiny } else { Scale::Small };
+
+    let nets = doppler::policy::load_default_backend().expect("policy backend");
+    let topo = DeviceTopology::p100x4();
+    let workloads: Vec<String> = vec!["chainmm".into(), "ffnn".into()];
+    let trace = synthetic_trace(&workloads, scale, requests, burst, 7, topo.n(), None);
+    println!(
+        "trace: {} requests over {:?} (burst {}), fault plan '{}'",
+        requests, workloads, burst, FAULT_PLAN
+    );
+
+    let run = |threads: usize| {
+        // reinstall per run: set_plan resets the injection epoch, so
+        // every thread count replays the identical failure schedule
+        resilience::set_plan(Some(std::sync::Arc::new(
+            FaultPlan::parse(FAULT_PLAN).expect("fault plan"),
+        )));
+        let cfg = ServeCfg {
+            threads,
+            method: doppler::policy::Method::Doppler,
+            ..ServeCfg::default()
+        };
+        let mut coord = Coordinator::new(cfg, topo.clone(), Some(nets.as_ref()), None)
+            .expect("coordinator");
+        coord.run_trace(&trace).expect("serve trace")
+    };
+
+    let reference = run(threads_list[0]);
+    let ref_digest = reference.digest();
+
+    let mut table = Table::new(
+        "Serve load (requests/sec, higher is better)",
+        &["THREADS", "REQ/SEC", "P50", "P95", "P99", "CACHE/POLICY/HEUR", "DETERMINISTIC"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut all_served = true;
+    for &threads in &threads_list {
+        let report = run(threads);
+        let m = &report.metrics;
+        let bitwise = report.digest() == ref_digest;
+        assert!(bitwise, "threads={threads}: digest diverged from 1-thread replay");
+        let served_all = m.completed == m.admitted;
+        assert!(served_all, "threads={threads}: availability loss under faults");
+        all_served &= served_all;
+        let rps = m.requests_per_sec(report.wall_s);
+        table.row(vec![
+            format!("{threads}"),
+            format!("{rps:.1}"),
+            format!("{:.3}", m.p50()),
+            format!("{:.3}", m.p95()),
+            format!("{:.3}", m.p99()),
+            format!("{}/{}/{}", m.cache_hits, m.policy_served, m.heuristic_served),
+            "yes (bitwise)".to_string(),
+        ]);
+        rows.push(json::obj(vec![
+            ("threads", json::num(threads as f64)),
+            ("requests_per_sec", json::num(rps)),
+            ("p50_ms", json::num(m.p50())),
+            ("p95_ms", json::num(m.p95())),
+            ("p99_ms", json::num(m.p99())),
+            ("cache_hits", json::num(m.cache_hits as f64)),
+            ("policy_served", json::num(m.policy_served as f64)),
+            ("heuristic_served", json::num(m.heuristic_served as f64)),
+            ("completed", json::num(m.completed as f64)),
+            ("rejected", json::num(m.rejected as f64)),
+        ]));
+    }
+    table.emit(Some(std::path::Path::new("runs/serve_load.csv")));
+    resilience::set_plan(None);
+
+    let doc = json::obj(vec![
+        ("bench", json::s("serve_load")),
+        ("source", json::s("cargo bench --bench serve_load")),
+        (
+            "config",
+            json::s("p100x4, chainmm+ffnn trace, degradation ladder, injected faults"),
+        ),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        ("requests", json::num(requests as f64)),
+        ("burst", json::num(burst as f64)),
+        ("fault_plan", json::s(FAULT_PLAN)),
+        ("all_admitted_served", Json::Bool(all_served)),
+        ("replay_deterministic", Json::Bool(true)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(OUT_JSON, doc.to_string() + "\n").expect("writing BENCH_serve.json");
+    println!("[perf snapshot written to {OUT_JSON}]");
+}

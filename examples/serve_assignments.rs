@@ -1,61 +1,77 @@
-//! Serving scenario (§5 Stage III, "rewards for free"): a deployed
-//! coordinator serves a stream of execution requests for a fixed graph on
-//! the real WC engine while continuously refining its placement policy
-//! online — each served request's measured runtime doubles as the
-//! REINFORCE reward. Reports per-request latency over time.
+//! Serving scenario (§5 + DESIGN.md §16): the resilient coordinator
+//! serves a mixed stream of placement requests down the degradation
+//! ladder (cache → policy → heuristic), with bounded admission and a
+//! replay-deterministic digest. A short warm-start trains shared params
+//! so the policy tier serves real zero-shot placements, then the same
+//! trace is replayed with the policy tier disabled to show graceful
+//! degradation. Reports per-request latency drift over the deployment.
 //!
 //!     cargo run --release --example serve_assignments
-//! (native policy backend by default; `make artifacts` + DOPPLER_POLICY_BACKEND=pjrt for PJRT)
+//! (native policy backend by default; inject faults with
+//!  DOPPLER_FAULTS='serve.policy=0.3' to watch the ladder degrade)
 
-use doppler::engine::{execute, EngineConfig};
-use doppler::graph::workloads::{llama_block, Scale};
+use doppler::graph::workloads::Scale;
 use doppler::policy::Method;
+use doppler::serve::{synthetic_trace, Coordinator, ServeCfg, Tier};
 use doppler::sim::topology::DeviceTopology;
-use doppler::train::{TrainConfig, Trainer};
+use doppler::train::multi::{MultiGraphTrainer, MultiTrainCfg, WorkloadSet};
+use doppler::train::{Stages, TrainConfig};
 use doppler::util::env_usize;
 use doppler::util::stats::{mean, Summary};
 
 fn main() -> anyhow::Result<()> {
     let nets = doppler::policy::load_default_backend()
         .map_err(|e| anyhow::anyhow!("loading policy backend: {e}"))?;
-    let g = llama_block(Scale::Full);
     let topo = DeviceTopology::p100x4();
     let requests = env_usize("DOPPLER_REQUESTS", 120);
 
-    println!("=== online-refinement serving: {} ({} nodes) ===", g.name, g.n());
+    println!("=== resilient assignment serving (DESIGN.md §16) ===");
 
-    // warm-start: a short offline phase (imitation + a little sim RL),
-    // as a production deployment would (§5: avoid unstable exploration)
-    let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
-    cfg.scale_to_budget(requests);
-    cfg.seed = 3;
-    // gentle online exploration
-    cfg.epsilon = doppler::train::Schedule {
-        start: 0.1,
-        end: 0.0,
+    // warm-start: train one shared parameter blob across workloads, as
+    // a production deployment would before taking traffic (§5: avoid
+    // unstable online exploration)
+    let set = WorkloadSet::builtin("tiny")?;
+    let first = &set.train[0];
+    let mut base = TrainConfig::new(Method::Doppler, first.build_topology()?, first.n_devices);
+    base.scale_to_budget(60);
+    base.seed = 3;
+    base.rollout.threads = doppler::bench_util::rollout_threads();
+    let stages = Stages {
+        imitation: 20,
+        sim_rl: 40,
+        real_rl: 0,
     };
-    let mut trainer = Trainer::new(nets.as_ref(), &g, topo.clone(), cfg)?;
-    trainer.stage1_imitation(20)?;
-    trainer.stage2_sim(40)?;
-    println!("warm-start done (20 imitation + 40 sim episodes)\n");
+    let result = MultiGraphTrainer::new(nets.as_ref(), &set, MultiTrainCfg { base, stages })
+        .run()?;
+    let params = result.params;
+    println!("warm-start done (20 imitation + 40 sim episodes, shared blob)\n");
 
-    // serve: each request = one episode executed on the real engine;
-    // the measured latency is both the SLA metric and the reward
-    let engine_cfg = EngineConfig::new(topo.clone());
-    trainer.stage3_real(requests, &engine_cfg)?;
+    // serve a bursty synthetic stream over the trained workloads
+    let workloads: Vec<String> = vec!["chainmm".into(), "ffnn".into()];
+    let trace = synthetic_trace(&workloads, Scale::Tiny, requests, 8, 7, topo.n(), None);
+    let serve_cfg = ServeCfg {
+        threads: doppler::bench_util::rollout_threads(),
+        method: Method::Doppler,
+        ..ServeCfg::default()
+    };
+    let mut coord = Coordinator::new(
+        serve_cfg.clone(),
+        topo.clone(),
+        Some(nets.as_ref()),
+        Some(params),
+    )?;
+    let report = coord.run_trace(&trace)?;
+    report.metrics.render(report.wall_s);
 
-    let served: Vec<f64> = trainer
-        .history
-        .iter()
-        .filter(|r| r.stage == 3)
-        .map(|r| r.exec_time * 1e3)
-        .collect();
+    // latency-drift report: the cache warms as the stream repeats
+    // graphs, so later quartiles should be cheaper than the first
+    let served: Vec<f64> = report.responses.iter().map(|r| r.wall_ms).collect();
     let k = (served.len() / 4).max(1);
-    println!("served {} requests (latency = real WC-engine makespan):", served.len());
+    println!("\nserved {} requests (latency = coordinator service time):", served.len());
     for (i, chunk) in served.chunks(k).enumerate() {
         let s = Summary::of(chunk);
         println!(
-            "  requests {:>3}-{:<3}  p50-ish mean {:.1} ± {:.1} ms",
+            "  requests {:>3}-{:<3}  mean {:.3} ± {:.3} ms",
             i * k,
             i * k + chunk.len() - 1,
             s.mean,
@@ -65,18 +81,28 @@ fn main() -> anyhow::Result<()> {
     let first_q = mean(&served[..k]);
     let last_q = mean(&served[served.len() - k..]);
     println!(
-        "\nlatency drift over deployment: {:.1} ms -> {:.1} ms ({:+.1}%)",
+        "latency drift over deployment: {:.3} ms -> {:.3} ms ({:+.1}%)",
         first_q,
         last_q,
         (last_q - first_q) / first_q * 100.0
     );
 
-    // the best discovered placement is what a router would pin
-    let best = trainer.greedy_assignment()?;
-    let final_lat: Vec<f64> = (0..10)
-        .map(|_| execute(&g, &best, &engine_cfg).sim.makespan * 1e3)
-        .collect();
-    let s = Summary::of(&final_lat);
-    println!("pinned greedy placement: {:.1} ± {:.1} ms", s.mean, s.std);
+    // graceful degradation: the same trace with no policy backend must
+    // still answer every admitted request from lower tiers
+    let mut degraded = Coordinator::new(serve_cfg, topo, None, None)?;
+    let fallback = degraded.run_trace(&trace)?;
+    let heuristic = fallback
+        .responses
+        .iter()
+        .filter(|r| r.tier == Tier::Heuristic)
+        .count();
+    println!(
+        "\npolicy-tier outage drill: {}/{} admitted requests still served \
+         ({} heuristic), digest {:#018x}",
+        fallback.responses.len(),
+        fallback.metrics.admitted,
+        heuristic,
+        fallback.digest()
+    );
     Ok(())
 }

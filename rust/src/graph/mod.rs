@@ -413,6 +413,132 @@ impl Graph {
 /// A device assignment `A : V -> D` (paper §2).
 pub type Assignment = Vec<DeviceId>;
 
+// ---------------------------------------------------------------------------
+// Canonical structural hash (serving cache key — DESIGN.md §16)
+// ---------------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over the 8 little-endian bytes of `x`, folded into `h`.
+/// Wrapping u64 arithmetic only, so the Python oracle
+/// (`tools/check_graph_hash.py`) ports it with a `& MASK64`.
+fn fnv_mix(mut h: u64, x: u64) -> u64 {
+    for b in x.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Stable numeric codes for a vertex kind: `(kind, elem)` where `elem`
+/// is 0 for non-elementwise kinds. Pinned by the Python oracle —
+/// append-only; renumbering silently invalidates every served cache.
+fn kind_codes(kind: OpKind) -> (u64, u64) {
+    let elem = |op: ElemOp| -> u64 {
+        match op {
+            ElemOp::Add => 1,
+            ElemOp::Sub => 2,
+            ElemOp::Mul => 3,
+            ElemOp::Div => 4,
+            ElemOp::Max => 5,
+            ElemOp::Relu => 6,
+            ElemOp::Exp => 7,
+            ElemOp::Silu => 8,
+            ElemOp::Rsqrt => 9,
+            ElemOp::Square => 10,
+            ElemOp::Scale => 11,
+        }
+    };
+    match kind {
+        OpKind::Input => (1, 0),
+        OpKind::MatMul => (2, 0),
+        OpKind::InputElemwise(op) => (3, elem(op)),
+        OpKind::StraightElemwise(op) => (4, elem(op)),
+        OpKind::BcastElemwise(op) => (5, elem(op)),
+        OpKind::MaxReduction => (6, 0),
+        OpKind::MinReduction => (7, 0),
+        OpKind::SumReduction => (8, 0),
+        OpKind::ProdReduction => (9, 0),
+        OpKind::Formation => (10, 0),
+        OpKind::Complexer => (11, 0),
+        OpKind::Fill => (12, 0),
+        OpKind::Squeezer => (13, 0),
+        OpKind::Selec => (14, 0),
+    }
+}
+
+/// Content seed of one vertex: kind, elementwise op, shape, and the
+/// exact bit pattern of its FLOP cost. Names, ids, and meta-op
+/// membership are deliberately excluded — the hash is structural.
+fn node_seed(node: &Node) -> u64 {
+    let (kind, elem) = kind_codes(node.kind);
+    let mut h = fnv_mix(FNV_OFFSET, kind);
+    h = fnv_mix(h, elem);
+    h = fnv_mix(h, node.shape.len() as u64);
+    for &d in &node.shape {
+        h = fnv_mix(h, d as u64);
+    }
+    fnv_mix(h, node.flops.to_bits())
+}
+
+/// Refinement rounds for [`canonical_hash`]. Three rounds propagate
+/// each vertex's content three hops in both directions — enough to
+/// separate every perturbation class the serving cache cares about
+/// while keeping the hash O(rounds · (|V| + |E|)).
+const HASH_ROUNDS: usize = 3;
+
+/// Canonical structural hash of a graph: invariant under node
+/// relabeling (index permutation) and edge/member order, sensitive to
+/// structure — kinds, shapes, FLOP costs, and the dependency topology.
+///
+/// Weisfeiler–Lehman-style iterative refinement: each vertex starts
+/// from a content seed ([`node_seed`]) and absorbs the sorted multisets
+/// of its predecessor and successor labels for [`HASH_ROUNDS`] rounds;
+/// the final digest folds the sorted label multiset with |V| and |E|.
+/// Adjacency is derived from the edge list directly, so the hash does
+/// not require [`Graph::freeze`] and never depends on edge-list order.
+///
+/// This is the serving coordinator's cache key (`serve::Coordinator`,
+/// DESIGN.md §16). The dual-port oracle `tools/check_graph_hash.py`
+/// pins both the golden values and the invariance properties.
+pub fn canonical_hash(g: &Graph) -> u64 {
+    let n = g.n();
+    let mut preds: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    let mut succs: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for &(a, b) in &g.edges {
+        if a < n && b < n {
+            preds[b].push(a);
+            succs[a].push(b);
+        }
+    }
+    let mut labels: Vec<u64> = g.nodes.iter().map(node_seed).collect();
+    let mut scratch: Vec<u64> = Vec::new();
+    for _ in 0..HASH_ROUNDS {
+        let mut next = vec![0u64; n];
+        for v in 0..n {
+            let mut h = fnv_mix(FNV_OFFSET, labels[v]);
+            for side in [&preds[v], &succs[v]] {
+                scratch.clear();
+                scratch.extend(side.iter().map(|&u| labels[u]));
+                scratch.sort_unstable();
+                h = fnv_mix(h, scratch.len() as u64);
+                for &x in &scratch {
+                    h = fnv_mix(h, x);
+                }
+            }
+            next[v] = h;
+        }
+        labels = next;
+    }
+    labels.sort_unstable();
+    let mut h = fnv_mix(FNV_OFFSET, n as u64);
+    h = fnv_mix(h, g.m() as u64);
+    for &x in &labels {
+        h = fnv_mix(h, x);
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -502,5 +628,66 @@ mod tests {
         let dot = g.to_dot(Some(&vec![0, 1, 2, 3]));
         assert!(dot.contains("n0 ->") || dot.contains("n0 [label"));
         assert!(dot.contains("#377eb8"));
+    }
+
+    /// Golden canonical hashes — the same constants are pinned in
+    /// tools/check_graph_hash.py, so either port drifting fails its suite.
+    const GOLDEN_DIAMOND: u64 = 0x22AD_E94A_CE1F_E733;
+    const GOLDEN_CHAIN: u64 = 0x4980_7F49_1601_17D4;
+
+    fn chain() -> Graph {
+        let mut g = Graph::new("chain");
+        let mut prev = g.add_node(OpKind::Input, vec![8, 8], 0.0, "in".into());
+        for i in 0..3 {
+            let v = g.add_node(OpKind::MatMul, vec![8, 8], 1024.0, format!("mm{i}"));
+            g.add_edge(prev, v);
+            prev = v;
+        }
+        let out = g.add_node(OpKind::SumReduction, vec![8], 64.0, "sum".into());
+        g.add_edge(prev, out);
+        g
+    }
+
+    #[test]
+    fn canonical_hash_golden_pins() {
+        assert_eq!(canonical_hash(&diamond()), GOLDEN_DIAMOND);
+        assert_eq!(canonical_hash(&chain()), GOLDEN_CHAIN);
+    }
+
+    #[test]
+    fn canonical_hash_relabel_invariant() {
+        // Same diamond, different insertion order, different names,
+        // different edge-insertion order: hash must not move.
+        let mut g = Graph::new("diamond-permuted");
+        let d = g.add_node(OpKind::StraightElemwise(ElemOp::Add), vec![4, 4], 16.0, "w".into());
+        let c = g.add_node(OpKind::InputElemwise(ElemOp::Relu), vec![4, 4], 16.0, "x".into());
+        let a = g.add_node(OpKind::Input, vec![4, 4], 0.0, "y".into());
+        let b = g.add_node(OpKind::MatMul, vec![4, 4], 128.0, "z".into());
+        g.add_edge(c, d);
+        g.add_edge(a, c);
+        g.add_edge(b, d);
+        g.add_edge(a, b);
+        assert_eq!(canonical_hash(&g), GOLDEN_DIAMOND);
+    }
+
+    #[test]
+    fn canonical_hash_sensitive_to_structure() {
+        let base = canonical_hash(&diamond());
+
+        let mut flops = diamond();
+        flops.nodes[1].flops = 256.0;
+        assert_ne!(canonical_hash(&flops), base, "flops change must move the hash");
+
+        let mut shape = diamond();
+        shape.nodes[3].shape = vec![4, 4, 2];
+        assert_ne!(canonical_hash(&shape), base, "shape change must move the hash");
+
+        let mut edge = diamond();
+        edge.edges.pop();
+        assert_ne!(canonical_hash(&edge), base, "edge drop must move the hash");
+
+        let mut kind = diamond();
+        kind.nodes[3].kind = OpKind::StraightElemwise(ElemOp::Mul);
+        assert_ne!(canonical_hash(&kind), base, "elem-op change must move the hash");
     }
 }

@@ -30,6 +30,7 @@ pub mod heuristics;
 pub mod policy;
 pub mod rollout;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod train;
 pub mod util;

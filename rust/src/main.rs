@@ -7,6 +7,8 @@
 //!   visualize  DOT + ASCII utilization timeline for an assignment
 //!   calibrate  measure native kernel throughput for the cost model
 //!   simfit     simulator-vs-engine correlation (Fig. 26 protocol)
+//!   serve      run the resilient assignment-serving coordinator over a
+//!              request trace (replayable; DESIGN.md §16)
 //!   info       print workload/graph statistics
 //!
 //! Common flags: --workload {chainmm|ffnn|llama-block|llama-layer}
@@ -85,6 +87,7 @@ fn main() {
         "visualize" => cmd_visualize(&args),
         "calibrate" => cmd_calibrate(&args),
         "simfit" => cmd_simfit(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         "" | "help" | "--help" => {
             println!("{}", HELP);
@@ -148,7 +151,7 @@ fn checkpoint_cfg(args: &Args) -> Result<Option<doppler::runtime::checkpoint::Ch
 }
 
 const HELP: &str = "doppler — dual-policy device assignment (paper reproduction)
-  compare | train | evaluate | visualize | calibrate | simfit | info
+  compare | train | evaluate | visualize | calibrate | simfit | serve | info
   common flags:
     --workload {chainmm|ffnn|llama-block|llama-layer}
     --scale {tiny|small|full}  --devices N  --topology {p100x4|v100x8|single}
@@ -187,6 +190,18 @@ const HELP: &str = "doppler — dual-policy device assignment (paper reproductio
   multi-graph transfer (train): --transfer-suite S | --workloads a,b,c
     [--holdout x,y] | --workload-set f.json  -> one shared blob + zero-shot
     held-out eval; evaluate --params blob.bin deploys a checkpoint zero-shot
+  serving (DESIGN.md §16):
+    serve --trace f.json   replay a request-trace manifest, or synthesize
+      one with --requests N --burst B --workloads a,b,c --scale S
+      [--seed S] [--dump-trace f.json]
+    --queue-capacity N / --drain N   bounded admission queue + per-slot
+                          service rate (overflow -> typed rejection)
+    --serve-threads N     wave worker threads (bit-identical at any count)
+    --cache-capacity N    canonical-hash assignment cache (FIFO)
+    --deadline-ms D       default per-request deadline (deterministic
+                          tier-2 retry budget, not a wall-clock abort)
+    --breaker-threshold N / --breaker-cooldown W   per-tier circuit breaker
+    --params blob.bin     shared zero-shot params for the policy tier
   see rust/src/main.rs header for the full flag list";
 
 /// Parse the shared `--rollout-threads` / `--sim-reps` flags. The
@@ -670,5 +685,120 @@ fn cmd_info(args: &Args) -> Result<()> {
         g.entry_nodes().len(),
         g.exit_nodes().len()
     );
+    Ok(())
+}
+
+/// `doppler serve`: run the resilient serving coordinator over a
+/// request trace — either replayed from `--trace f.json` or
+/// synthesized from `--requests`/`--burst`/`--workloads` (and optionally
+/// dumped with `--dump-trace` for later bit-identical replay). Faults
+/// injected via `--fault-plan serve.policy=...,serve.cache=...` degrade
+/// tiers, never availability (DESIGN.md §16).
+fn cmd_serve(args: &Args) -> Result<()> {
+    use doppler::runtime::manifest::RequestTraceManifest;
+    use doppler::serve::{self, Coordinator, ServeCfg};
+
+    let topo = load_topo(args)?;
+    let n_devices = args.usize_or("devices", topo.n());
+    let deadline_ms = args.get("deadline-ms").map(|_| args.u64_or("deadline-ms", 0));
+
+    let trace = if let Some(path) = args.get("trace") {
+        let m = RequestTraceManifest::load(std::path::Path::new(path))?;
+        println!(
+            "trace '{}': {} requests (scale {}, {} devices)",
+            m.name,
+            m.requests.len(),
+            m.scale,
+            m.n_devices
+        );
+        serve::requests_from_manifest(&m)?
+    } else {
+        let workload_names = {
+            let named = args.csv("workloads");
+            if named.is_empty() {
+                vec![args.str_or("workload", "chainmm")]
+            } else {
+                named
+            }
+        };
+        for w in &workload_names {
+            if !workloads::WORKLOADS.contains(&w.as_str()) {
+                bail!("unknown workload {w:?} (expected one of {:?})", workloads::WORKLOADS);
+            }
+        }
+        let scale = Scale::parse(&args.str_or("scale", "small")).context("bad --scale")?;
+        let requests = args.usize_or("requests", 64);
+        let burst = args.usize_or("burst", 8);
+        let seed = args.u64_or("seed", 0);
+        let trace = serve::synthetic_trace(
+            &workload_names,
+            scale,
+            requests,
+            burst,
+            seed,
+            n_devices,
+            deadline_ms,
+        );
+        if let Some(path) = args.get("dump-trace") {
+            let m = RequestTraceManifest {
+                name: format!("synthetic-{seed}"),
+                scale: args.str_or("scale", "small"),
+                n_devices,
+                deadline_ms,
+                requests: trace
+                    .iter()
+                    .map(|r| doppler::runtime::manifest::RequestTraceEntry {
+                        workload: r.workload.clone(),
+                        scale: None,
+                        slot: Some(r.slot),
+                        n_devices: None,
+                        deadline_ms: None,
+                    })
+                    .collect(),
+            };
+            std::fs::write(path, m.to_json_string() + "\n")
+                .with_context(|| format!("writing {path:?}"))?;
+            println!("replayable trace written to {path}");
+        }
+        trace
+    };
+
+    let cfg = ServeCfg {
+        queue_capacity: args.usize_or("queue-capacity", 64),
+        drain_per_slot: args.usize_or("drain", 64),
+        threads: args.usize_or(
+            "serve-threads",
+            args.usize_or("rollout-threads", doppler::bench_util::rollout_threads()),
+        ),
+        cache_capacity: args.usize_or("cache-capacity", 256),
+        breaker_threshold: args.usize_or("breaker-threshold", 3),
+        breaker_cooldown: args.u64_or("breaker-cooldown", 2),
+        default_deadline_ms: deadline_ms,
+        method: parse_train_method(args)?,
+        ..ServeCfg::default()
+    };
+
+    let nets = load_policy_opt(args);
+    let params = match args.get("params") {
+        Some(p) => Some(doppler::runtime::manifest::load_params(std::path::Path::new(p))?),
+        None => None,
+    };
+    let mut coord = Coordinator::new(cfg, topo, nets.as_deref(), params)?;
+    if !coord.policy_available() {
+        println!("policy tier unavailable — serving cache + heuristic tiers only");
+    }
+
+    let report = coord.run_trace(&trace)?;
+    report.metrics.render(report.wall_s);
+    println!(
+        "digest: {:#018x}  (replay-deterministic: excludes wall clock)",
+        report.digest()
+    );
+    for q in report.rejections.iter().take(5) {
+        println!("rejected: {q}");
+    }
+    if report.rejections.len() > 5 {
+        println!("  ... and {} more rejections", report.rejections.len() - 5);
+    }
     Ok(())
 }

@@ -46,17 +46,41 @@ pub fn crc32(bytes: &[u8]) -> u32 {
     crc ^ 0xFFFF_FFFF
 }
 
-/// Write `contents` to `path` atomically: temp file in the same
-/// directory, then `rename`. Readers never observe a partial file.
+/// Write `contents` to `path` atomically *and durably*: temp file in
+/// the same directory, `fsync` the data, `rename` into place, then
+/// `fsync` the parent directory so the rename itself survives a host
+/// crash. Readers never observe a partial file, and a checkpoint that
+/// `try_resume` can see is actually on disk.
 pub fn atomic_write(path: &Path, contents: &[u8]) -> Result<()> {
+    use std::io::Write;
+
     let name = path
         .file_name()
         .and_then(|n| n.to_str())
         .with_context(|| format!("atomic write target {path:?} has no file name"))?;
     let tmp = path.with_file_name(format!(".{name}.tmp.{}", std::process::id()));
-    std::fs::write(&tmp, contents).with_context(|| format!("writing temp file {tmp:?}"))?;
+    let mut f =
+        std::fs::File::create(&tmp).with_context(|| format!("creating temp file {tmp:?}"))?;
+    f.write_all(contents)
+        .with_context(|| format!("writing temp file {tmp:?}"))?;
+    f.sync_all()
+        .with_context(|| format!("fsyncing temp file {tmp:?}"))?;
+    drop(f);
     std::fs::rename(&tmp, path)
         .with_context(|| format!("renaming {tmp:?} into place at {path:?}"))?;
+    // Without a directory fsync the rename lives only in the page
+    // cache: a crash can resurrect the old file (or nothing) after
+    // try_resume already reported the new one.
+    #[cfg(unix)]
+    {
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p,
+            _ => Path::new("."),
+        };
+        std::fs::File::open(parent)
+            .and_then(|d| d.sync_all())
+            .with_context(|| format!("fsyncing parent directory {parent:?}"))?;
+    }
     Ok(())
 }
 
@@ -416,6 +440,23 @@ mod tests {
             .count();
         assert_eq!(strays, 0);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn atomic_write_durable_roundtrip_in_nested_dir() {
+        // the fsync-temp + fsync-parent-dir path must still round-trip,
+        // including in a freshly created nested directory
+        let dir = std::env::temp_dir()
+            .join(format!("doppler-ckpt-nested-{}", std::process::id()))
+            .join("deep");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.bin");
+        let payload: Vec<u8> = (0..=255u8).collect();
+        atomic_write(&path, &payload).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), payload);
+        atomic_write(&path, b"replaced").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"replaced");
+        std::fs::remove_dir_all(dir.parent().unwrap()).ok();
     }
 
     #[test]

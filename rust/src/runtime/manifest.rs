@@ -233,6 +233,115 @@ impl WorkloadSetManifest {
     }
 }
 
+/// One request in a serving trace: a workload name plus optional
+/// overrides of the trace-level defaults. `slot` defaults to the entry
+/// index (one wave per request).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestTraceEntry {
+    pub workload: String,
+    pub scale: Option<String>,
+    pub slot: Option<u64>,
+    pub n_devices: Option<usize>,
+    pub deadline_ms: Option<u64>,
+}
+
+/// Replayable serving request trace (ISSUE 8 / DESIGN.md §16). This
+/// type owns only the file format; `serve::requests_from_manifest`
+/// resolves entries into `serve::ServeRequest`s. Replaying the same
+/// trace under the same `--fault-plan` reproduces every served
+/// assignment and tier decision bit-identically at any thread count.
+///
+/// ```json
+/// { "name": "smoke", "scale": "tiny", "devices": 4, "deadline_ms": 40,
+///   "requests": [{"workload": "ffnn", "slot": 0},
+///                {"workload": "chainmm", "slot": 0, "devices": 2}] }
+/// ```
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RequestTraceManifest {
+    pub name: String,
+    pub scale: String,
+    pub n_devices: usize,
+    pub deadline_ms: Option<u64>,
+    pub requests: Vec<RequestTraceEntry>,
+}
+
+impl RequestTraceManifest {
+    /// Load a request trace from a JSON file.
+    pub fn load(path: &Path) -> Result<RequestTraceManifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading request trace {path:?}"))?;
+        Self::parse_str(&text).with_context(|| format!("parsing request trace {path:?}"))
+    }
+
+    /// Parse a request trace from JSON text.
+    pub fn parse_str(text: &str) -> Result<RequestTraceManifest> {
+        let j = parse(text).map_err(|e| anyhow::anyhow!("request-trace parse error: {e}"))?;
+        let mut requests = Vec::new();
+        if let Some(arr) = j.get("requests").as_arr() {
+            for v in arr {
+                let workload = v
+                    .get("workload")
+                    .as_str()
+                    .context("'requests' entry missing 'workload'")?
+                    .to_string();
+                requests.push(RequestTraceEntry {
+                    workload,
+                    scale: v.get("scale").as_str().map(str::to_string),
+                    slot: v.get("slot").as_usize().map(|s| s as u64),
+                    n_devices: v.get("devices").as_usize(),
+                    deadline_ms: v.get("deadline_ms").as_usize().map(|d| d as u64),
+                });
+            }
+        }
+        anyhow::ensure!(!requests.is_empty(), "request trace has no 'requests' entries");
+        let n_devices = j.get("devices").as_usize().unwrap_or(4);
+        anyhow::ensure!(n_devices >= 1, "request trace 'devices' must be >= 1");
+        Ok(RequestTraceManifest {
+            name: j.get("name").as_str().unwrap_or("trace").to_string(),
+            scale: j.get("scale").as_str().unwrap_or("full").to_string(),
+            n_devices,
+            deadline_ms: j.get("deadline_ms").as_usize().map(|d| d as u64),
+            requests,
+        })
+    }
+
+    /// Serialize back to the JSON format `parse_str` reads (for
+    /// `doppler serve --dump-trace`: every synthetic run is replayable).
+    pub fn to_json_string(&self) -> String {
+        use crate::util::json::{self, Json};
+        let rows: Vec<Json> = self
+            .requests
+            .iter()
+            .map(|r| {
+                let mut pairs = vec![("workload", json::s(&r.workload))];
+                if let Some(sc) = &r.scale {
+                    pairs.push(("scale", json::s(sc)));
+                }
+                if let Some(slot) = r.slot {
+                    pairs.push(("slot", json::num(slot as f64)));
+                }
+                if let Some(d) = r.n_devices {
+                    pairs.push(("devices", json::num(d as f64)));
+                }
+                if let Some(d) = r.deadline_ms {
+                    pairs.push(("deadline_ms", json::num(d as f64)));
+                }
+                json::obj(pairs)
+            })
+            .collect();
+        let mut pairs = vec![
+            ("name", json::s(&self.name)),
+            ("scale", json::s(&self.scale)),
+            ("devices", json::num(self.n_devices as f64)),
+        ];
+        if let Some(d) = self.deadline_ms {
+            pairs.push(("deadline_ms", json::num(d as f64)));
+        }
+        pairs.push(("requests", Json::Arr(rows)));
+        json::obj(pairs).to_string()
+    }
+}
+
 /// Parameter blob I/O (checkpoints).
 pub fn save_params(path: &Path, params: &[f32]) -> Result<()> {
     let mut bytes = Vec::with_capacity(params.len() * 4);
@@ -319,6 +428,44 @@ mod tests {
         assert_eq!(m.train[1].weight, 1.0); // default
         assert_eq!(m.holdout.len(), 1);
         assert_eq!(m.holdout[0].scale, "small");
+    }
+
+    #[test]
+    fn request_trace_parses_defaults_and_roundtrips() {
+        let text = r#"{
+          "name": "smoke", "scale": "tiny", "devices": 4, "deadline_ms": 40,
+          "requests": [
+            {"workload": "ffnn", "slot": 0},
+            {"workload": "chainmm", "slot": 0, "scale": "small",
+             "devices": 2, "deadline_ms": 10},
+            {"workload": "llama-block"}
+          ]
+        }"#;
+        let m = RequestTraceManifest::parse_str(text).unwrap();
+        assert_eq!(m.name, "smoke");
+        assert_eq!(m.n_devices, 4);
+        assert_eq!(m.deadline_ms, Some(40));
+        assert_eq!(m.requests.len(), 3);
+        assert_eq!(m.requests[0].slot, Some(0));
+        assert_eq!(m.requests[0].scale, None);
+        assert_eq!(m.requests[1].n_devices, Some(2));
+        assert_eq!(m.requests[2].slot, None);
+        let back = RequestTraceManifest::parse_str(&m.to_json_string()).unwrap();
+        assert_eq!(m, back);
+    }
+
+    #[test]
+    fn request_trace_rejects_bad_input() {
+        // no requests at all
+        assert!(RequestTraceManifest::parse_str(r#"{"name": "x"}"#).is_err());
+        assert!(RequestTraceManifest::parse_str(r#"{"requests": []}"#).is_err());
+        // entry without a workload name
+        assert!(RequestTraceManifest::parse_str(r#"{"requests": [{"slot": 0}]}"#).is_err());
+        // zero devices
+        assert!(RequestTraceManifest::parse_str(
+            r#"{"devices": 0, "requests": [{"workload": "ffnn"}]}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! | `rollout.episode` | whole-episode generation (`generate_episodes[_cfg]`)|
 //! | `train.backward`  | per-episode backward passes in `train_batch`        |
 //! | `engine.execute`  | Stage III real-engine reward collection             |
+//! | `serve.policy`    | serving-ladder tier 2 policy inference attempts     |
+//! | `serve.cache`     | serving-ladder tier 1 cache lookups (forced misses) |
 //!
 //! # Deterministic injection
 //!
@@ -56,6 +58,11 @@ pub const SITE_EPISODE: &str = "rollout.episode";
 pub const SITE_BACKWARD: &str = "train.backward";
 /// Stage III real-engine reward collection.
 pub const SITE_ENGINE: &str = "engine.execute";
+/// Serving-ladder tier 2: policy inference per admitted request attempt.
+pub const SITE_SERVE_POLICY: &str = "serve.policy";
+/// Serving-ladder tier 1: assignment-cache lookups (an injected failure
+/// is a forced miss, never an error — the ladder falls through).
+pub const SITE_SERVE_CACHE: &str = "serve.cache";
 
 /// Default bounded retry budget when no [`FaultPlan`] is active: real
 /// panics still get isolated and retried this many times before the

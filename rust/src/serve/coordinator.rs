@@ -1,0 +1,715 @@
+//! The serving coordinator: bounded admission, wave-parallel request
+//! execution, and the graceful-degradation ladder (DESIGN.md §16).
+//!
+//! # Why not `rollout::parallel_map_site`
+//!
+//! The rollout executor's contract is *fail the whole map with a typed
+//! error* when any item exhausts its retries — exactly wrong for
+//! serving, where a blanket `serve=1.0` fault plan must degrade answer
+//! quality, never availability. The coordinator runs its own
+//! injection-free fan-out (same worker-queue/canonical-merge shape as
+//! the rollout executor) and consults the fault plan manually inside
+//! each ladder tier, so an injected failure only pushes a request down
+//! a rung.
+//!
+//! # Determinism
+//!
+//! Admission is a pure function of the request trace. Admitted requests
+//! are grouped into waves by arrival slot; each wave claims one fault
+//! epoch on the leader, injection draws key on the *request id* (not
+//! the worker), breaker state is frozen per wave, and breaker/cache
+//! updates are applied at the wave boundary in canonical request order.
+//! Thread count is therefore a pure wall-clock knob: assignments, tiers,
+//! and the report digest are bit-identical at any worker count.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::fmt;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::eval::restrict;
+use crate::features::static_features;
+use crate::graph::workloads::{self, Scale, WORKLOADS};
+use crate::graph::{canonical_hash, Assignment, Graph};
+use crate::heuristics::{check_assignment, critical_path_once, round_robin};
+use crate::policy::{EpisodeScratch, Method, PolicyBackend};
+use crate::runtime::resilience::{
+    self, RetryPolicy, SITE_SERVE_CACHE, SITE_SERVE_POLICY,
+};
+use crate::sim::topology::DeviceTopology;
+use crate::sim::{simulate, SimConfig};
+use crate::train::multi::zero_shot_assignment;
+use crate::util::rng::Rng;
+
+use super::ladder::{Breaker, Tier};
+use super::metrics::ServeMetrics;
+
+/// Fixed seed for tier-3 tie-breaking: a served placement must be a
+/// pure function of the graph, never of wall clock or thread schedule.
+const HEURISTIC_SEED: u64 = 0x5EED_CAFE;
+
+/// Coordinator knobs. Defaults suit the bench/CI scale; the `serve` CLI
+/// subcommand exposes each one.
+#[derive(Clone, Debug)]
+pub struct ServeCfg {
+    /// Bounded admission queue: arrivals beyond this backlog are
+    /// rejected with [`QueueFull`], never buffered unboundedly.
+    pub queue_capacity: usize,
+    /// Requests drained from the backlog per arrival-slot tick.
+    pub drain_per_slot: usize,
+    /// Worker threads per wave (wall-clock only; see module docs).
+    pub threads: usize,
+    /// FIFO assignment-cache capacity (entries).
+    pub cache_capacity: usize,
+    /// Consecutive tier failures before the breaker trips.
+    pub breaker_threshold: usize,
+    /// Waves a tripped breaker stays open before the half-open probe.
+    pub breaker_cooldown: u64,
+    /// Deterministic per-node cost model (ms) for the deadline budget:
+    /// one tier-2 attempt on graph `g` is costed `g.n() * this`.
+    pub policy_step_cost_ms: f64,
+    /// Deadline applied to requests that carry none of their own.
+    pub default_deadline_ms: Option<u64>,
+    /// Policy architecture for tier-2 inference.
+    pub method: Method,
+}
+
+impl Default for ServeCfg {
+    fn default() -> Self {
+        ServeCfg {
+            queue_capacity: 64,
+            drain_per_slot: 64,
+            threads: 1,
+            cache_capacity: 256,
+            breaker_threshold: 3,
+            breaker_cooldown: 2,
+            policy_step_cost_ms: 0.05,
+            default_deadline_ms: None,
+            method: Method::Doppler,
+        }
+    }
+}
+
+/// One placement request in a trace.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeRequest {
+    /// Stable id: keys the injection schedule and the report digest.
+    pub id: usize,
+    pub workload: String,
+    pub scale: Scale,
+    /// Coarse arrival time; requests sharing a slot form one wave.
+    pub slot: u64,
+    /// Devices requested (clamped to the coordinator topology size).
+    pub n_devices: usize,
+    /// Per-request deadline; `None` falls back to the config default.
+    pub deadline_ms: Option<u64>,
+}
+
+/// Typed admission rejection: the bounded queue was full on arrival.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QueueFull {
+    pub request: usize,
+    pub slot: u64,
+    pub backlog: usize,
+    pub capacity: usize,
+}
+
+impl fmt::Display for QueueFull {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "request {} rejected at slot {}: queue full ({}/{})",
+            self.request, self.slot, self.backlog, self.capacity
+        )
+    }
+}
+
+impl std::error::Error for QueueFull {}
+
+/// A served placement, tagged with the ladder tier that produced it.
+#[derive(Clone, Debug)]
+pub struct ServeResponse {
+    pub request: usize,
+    pub workload: String,
+    pub graph_hash: u64,
+    pub n_devices: usize,
+    pub tier: Tier,
+    pub assignment: Assignment,
+    /// Deterministic simulated makespan of the served placement (ms).
+    pub est_ms: f64,
+    /// Wall-clock service time (measurement only; not in the digest).
+    pub wall_ms: f64,
+    /// Tier-2 attempts consumed (0 = tier 2 never entered).
+    pub policy_attempts: usize,
+    /// The deadline shrank the tier-2 retry budget below the plan's.
+    pub deadline_limited: bool,
+}
+
+/// Everything a trace run produced, in canonical order.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub responses: Vec<ServeResponse>,
+    pub rejections: Vec<QueueFull>,
+    pub metrics: ServeMetrics,
+    pub wall_s: f64,
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv(mut h: u64, x: u64) -> u64 {
+    for b in x.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+impl ServeReport {
+    /// Digest of every replay-deterministic field: request ids, tiers,
+    /// graph hashes, assignments, simulated makespans, rejections.
+    /// Wall-clock latencies are deliberately excluded.
+    pub fn digest(&self) -> u64 {
+        let mut h = fnv(FNV_OFFSET, self.responses.len() as u64);
+        for r in &self.responses {
+            h = fnv(h, r.request as u64);
+            h = fnv(h, r.tier.code());
+            h = fnv(h, r.graph_hash);
+            h = fnv(h, r.n_devices as u64);
+            h = fnv(h, r.assignment.len() as u64);
+            for &d in &r.assignment {
+                h = fnv(h, d as u64);
+            }
+            h = fnv(h, r.est_ms.to_bits());
+        }
+        h = fnv(h, self.rejections.len() as u64);
+        for q in &self.rejections {
+            h = fnv(h, q.request as u64);
+            h = fnv(h, q.slot);
+        }
+        h
+    }
+}
+
+/// Cache key: canonical graph hash + effective device count. The
+/// coordinator owns one topology and one method, so neither needs to
+/// be in the key.
+type CacheKey = (u64, usize);
+
+struct GraphEntry {
+    graph: Graph,
+    hash: u64,
+}
+
+/// Internal per-request outcome: the response plus the breaker events
+/// to replay at the wave boundary.
+struct Outcome {
+    resp: ServeResponse,
+    /// `Some(ok)` iff tier 1 was consulted: `true` = valid hit,
+    /// `false` = injected failure or corrupt entry. A plain miss on an
+    /// absent key records nothing.
+    cache_event: Option<bool>,
+    /// `Some(ok)` iff tier 2 consumed at least one attempt.
+    policy_event: Option<bool>,
+}
+
+/// Tier-2 attempts affordable inside `deadline_ms` given the retry
+/// policy's backoff schedule and a deterministic per-attempt cost.
+/// Pure: the deadline budget must replay identically, so it never
+/// reads a clock.
+fn attempts_within(retry: &RetryPolicy, deadline_ms: Option<u64>, est_attempt_ms: f64) -> usize {
+    let Some(d) = deadline_ms else {
+        return retry.max_attempts;
+    };
+    let mut spent = 0.0;
+    let mut n = 0;
+    for a in 0..retry.max_attempts {
+        if a > 0 {
+            spent += retry.backoff(a - 1).as_secs_f64() * 1000.0;
+        }
+        spent += est_attempt_ms;
+        if spent > d as f64 {
+            break;
+        }
+        n += 1;
+    }
+    n
+}
+
+pub struct Coordinator<'a> {
+    cfg: ServeCfg,
+    topo: DeviceTopology,
+    /// Tier-2 backend; `None` (no backend, or a leader-thread-only one
+    /// like PJRT) permanently skips tier 2 — gracefully, not fatally.
+    nets: Option<&'a (dyn PolicyBackend + Sync)>,
+    params: Vec<f32>,
+    cache: BTreeMap<CacheKey, Assignment>,
+    cache_order: VecDeque<CacheKey>,
+    policy_breaker: Breaker,
+    cache_breaker: Breaker,
+    /// Monotonic wave clock; persists across `run_trace` calls so
+    /// breaker state carries over.
+    wave: u64,
+}
+
+impl<'a> Coordinator<'a> {
+    /// `nets = None` serves heuristics-only. `params = None` pulls the
+    /// backend's deterministic init (the shared-params zero-shot story
+    /// expects trained params to be passed in).
+    pub fn new(
+        cfg: ServeCfg,
+        topo: DeviceTopology,
+        nets: Option<&'a dyn PolicyBackend>,
+        params: Option<Vec<f32>>,
+    ) -> Result<Coordinator<'a>> {
+        let sync_nets = nets.and_then(|n| n.as_sync());
+        let params = match (params, sync_nets) {
+            (Some(p), _) => p,
+            (None, Some(n)) => n.init_params().context("initialising serve policy params")?,
+            (None, None) => Vec::new(),
+        };
+        let (threshold, cooldown) = (cfg.breaker_threshold, cfg.breaker_cooldown);
+        Ok(Coordinator {
+            cfg,
+            topo,
+            nets: sync_nets,
+            params,
+            cache: BTreeMap::new(),
+            cache_order: VecDeque::new(),
+            policy_breaker: Breaker::new(threshold, cooldown),
+            cache_breaker: Breaker::new(threshold, cooldown),
+            wave: 0,
+        })
+    }
+
+    /// Is tier 2 available at all (backend present and `Sync`)?
+    pub fn policy_available(&self) -> bool {
+        self.nets.is_some()
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    fn cache_insert(&mut self, key: CacheKey, a: Assignment) {
+        if self.cfg.cache_capacity == 0 {
+            return;
+        }
+        if self.cache.contains_key(&key) {
+            self.cache.insert(key, a);
+            return;
+        }
+        while self.cache.len() >= self.cfg.cache_capacity {
+            match self.cache_order.pop_front() {
+                Some(old) => {
+                    self.cache.remove(&old);
+                }
+                None => break,
+            }
+        }
+        self.cache.insert(key, a);
+        self.cache_order.push_back(key);
+    }
+
+    /// Serve a full request trace: pure bounded admission, then
+    /// wave-parallel execution down the degradation ladder.
+    pub fn run_trace(&mut self, trace: &[ServeRequest]) -> Result<ServeReport> {
+        let t0 = Instant::now();
+        for r in trace {
+            if !WORKLOADS.contains(&r.workload.as_str()) {
+                bail!(
+                    "request {}: unknown workload {:?} (expected one of {:?})",
+                    r.id,
+                    r.workload,
+                    WORKLOADS
+                );
+            }
+            if r.n_devices == 0 {
+                bail!("request {}: n_devices must be >= 1", r.id);
+            }
+        }
+
+        // ---- admission: a pure function of the trace -------------------
+        let mut order: Vec<usize> = (0..trace.len()).collect();
+        order.sort_by_key(|&i| (trace[i].slot, i));
+        let drain = self.cfg.drain_per_slot.max(1);
+        let cap = self.cfg.queue_capacity.max(1);
+        let mut admitted: Vec<usize> = Vec::new();
+        let mut rejections: Vec<QueueFull> = Vec::new();
+        let mut backlog = 0usize;
+        let mut last_slot: Option<u64> = None;
+        for &i in &order {
+            let r = &trace[i];
+            if let Some(ls) = last_slot {
+                let gap = (r.slot - ls) as usize;
+                backlog = backlog.saturating_sub(gap.saturating_mul(drain));
+            }
+            last_slot = Some(r.slot);
+            if backlog >= cap {
+                rejections.push(QueueFull {
+                    request: r.id,
+                    slot: r.slot,
+                    backlog,
+                    capacity: cap,
+                });
+            } else {
+                backlog += 1;
+                admitted.push(i);
+            }
+        }
+
+        // ---- resolve graphs once, on the leader ------------------------
+        let mut entry_ix: BTreeMap<(String, &'static str), usize> = BTreeMap::new();
+        let mut entries: Vec<GraphEntry> = Vec::new();
+        let mut entry_of: Vec<usize> = vec![0; trace.len()];
+        for &i in &admitted {
+            let r = &trace[i];
+            let key = (r.workload.clone(), scale_tag(r.scale));
+            let ix = *entry_ix.entry(key).or_insert_with(|| {
+                let graph = workloads::by_name(&r.workload, r.scale);
+                let hash = canonical_hash(&graph);
+                entries.push(GraphEntry { graph, hash });
+                entries.len() - 1
+            });
+            entry_of[i] = ix;
+        }
+
+        // ---- waves: one per distinct arrival slot ----------------------
+        let mut waves: Vec<Vec<usize>> = Vec::new();
+        let mut cur_slot: Option<u64> = None;
+        for &i in &admitted {
+            if Some(trace[i].slot) != cur_slot {
+                waves.push(Vec::new());
+                cur_slot = Some(trace[i].slot);
+            }
+            waves.last_mut().expect("wave pushed above").push(i);
+        }
+
+        let plan = resilience::active_plan();
+        let retry = RetryPolicy::from_plan(plan.as_deref());
+        let mut metrics = ServeMetrics {
+            admitted: admitted.len(),
+            rejected: rejections.len(),
+            ..ServeMetrics::default()
+        };
+        let mut responses: Vec<ServeResponse> = Vec::with_capacity(admitted.len());
+
+        for wave_members in &waves {
+            let wave = self.wave;
+            let epoch = if plan.is_some() { resilience::next_epoch() } else { 0 };
+            let cache_allowed = self.cache_breaker.allows(wave);
+            let nets = if self.policy_breaker.allows(wave) {
+                self.nets
+            } else {
+                None
+            };
+            let cache = &self.cache;
+            let params = &self.params;
+            let cfg = &self.cfg;
+            let topo = &self.topo;
+            let plan_ref = plan.as_deref();
+
+            let serve_one = |i: usize| -> Outcome {
+                let t = Instant::now();
+                let r = &trace[i];
+                let entry = &entries[entry_of[i]];
+                let nd = r.n_devices.clamp(1, topo.n().max(1));
+                let topo_r = restrict(topo, nd);
+                let key: CacheKey = (entry.hash, nd);
+
+                let mut assignment: Option<(Assignment, Tier)> = None;
+                let mut cache_event = None;
+                let mut policy_event = None;
+                let mut policy_attempts = 0;
+                let mut deadline_limited = false;
+
+                // tier 1: cache
+                if cache_allowed {
+                    let injected = plan_ref
+                        .map_or(false, |p| p.should_fail(SITE_SERVE_CACHE, epoch, r.id as u64, 0));
+                    if injected {
+                        resilience::count_injected();
+                        cache_event = Some(false);
+                    } else if let Some(a) = cache.get(&key) {
+                        if check_assignment(&entry.graph, a, nd).is_ok() {
+                            assignment = Some((a.clone(), Tier::Cache));
+                            cache_event = Some(true);
+                        } else {
+                            cache_event = Some(false);
+                        }
+                    }
+                }
+
+                // tier 2: policy inference under the deadline budget
+                if assignment.is_none() {
+                    if let Some(nets) = nets {
+                        let requested = r.deadline_ms.or(cfg.default_deadline_ms);
+                        let deadline = match (requested, retry.timeout_ms) {
+                            (Some(d), Some(t)) => Some(d.min(t)),
+                            (d, t) => d.or(t),
+                        };
+                        let est_attempt_ms = entry.graph.n() as f64 * cfg.policy_step_cost_ms;
+                        let budget = attempts_within(&retry, deadline, est_attempt_ms);
+                        deadline_limited = budget < retry.max_attempts;
+                        for attempt in 0..budget {
+                            policy_attempts = attempt + 1;
+                            if let Some(p) = plan_ref {
+                                if p.should_fail(SITE_SERVE_POLICY, epoch, r.id as u64, attempt) {
+                                    resilience::count_injected();
+                                    continue;
+                                }
+                            }
+                            let got = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                                let mut scratch = EpisodeScratch::new();
+                                zero_shot_assignment(
+                                    nets,
+                                    &entry.graph,
+                                    &topo_r,
+                                    nd,
+                                    cfg.method,
+                                    params,
+                                    &mut scratch,
+                                )
+                            }));
+                            match got {
+                                Ok(Ok(a)) if check_assignment(&entry.graph, &a, nd).is_ok() => {
+                                    if attempt > 0 {
+                                        resilience::count_retry_ok();
+                                    }
+                                    assignment = Some((a, Tier::Policy));
+                                    policy_event = Some(true);
+                                    break;
+                                }
+                                Ok(_) => {}
+                                Err(_) => resilience::count_panic(),
+                            }
+                        }
+                        if policy_attempts > 0 && assignment.is_none() {
+                            resilience::count_exhausted();
+                            policy_event = Some(false);
+                        }
+                    }
+                }
+
+                // tier 3: heuristic — always answers
+                let (a, tier) = assignment.unwrap_or_else(|| {
+                    let a = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        let feats = static_features(&entry.graph, &topo_r, 1.0);
+                        let mut rng = Rng::new(HEURISTIC_SEED ^ entry.hash);
+                        critical_path_once(&entry.graph, &topo_r, &feats, &mut rng, 0.0)
+                    }))
+                    .ok()
+                    .filter(|a| check_assignment(&entry.graph, a, nd).is_ok())
+                    .unwrap_or_else(|| round_robin(&entry.graph, nd));
+                    (a, Tier::Heuristic)
+                });
+
+                let est_ms =
+                    simulate(&entry.graph, &a, &SimConfig::deterministic(topo_r), &mut Rng::new(0))
+                        .makespan;
+                Outcome {
+                    resp: ServeResponse {
+                        request: r.id,
+                        workload: r.workload.clone(),
+                        graph_hash: entry.hash,
+                        n_devices: nd,
+                        tier,
+                        assignment: a,
+                        est_ms,
+                        wall_ms: t.elapsed().as_secs_f64() * 1000.0,
+                        policy_attempts,
+                        deadline_limited,
+                    },
+                    cache_event,
+                    policy_event,
+                }
+            };
+
+            // injection-free fan-out, canonical merge (see module docs)
+            let n = wave_members.len();
+            let workers = self.cfg.threads.max(1).min(n.max(1));
+            let mut slots: Vec<Option<Outcome>> = Vec::with_capacity(n);
+            slots.resize_with(n, || None);
+            if workers <= 1 {
+                for (w, &i) in wave_members.iter().enumerate() {
+                    slots[w] = Some(serve_one(i));
+                }
+            } else {
+                let next = AtomicUsize::new(0);
+                let per_worker = std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..workers)
+                        .map(|_| {
+                            let next = &next;
+                            let serve_one = &serve_one;
+                            s.spawn(move || {
+                                let mut got: Vec<(usize, Outcome)> = Vec::new();
+                                loop {
+                                    let w = next.fetch_add(1, Ordering::Relaxed);
+                                    if w >= n {
+                                        break;
+                                    }
+                                    got.push((w, serve_one(wave_members[w])));
+                                }
+                                got
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("serve worker panicked"))
+                        .collect::<Vec<_>>()
+                });
+                for chunk in per_worker {
+                    for (w, outcome) in chunk {
+                        slots[w] = Some(outcome);
+                    }
+                }
+            }
+
+            // wave boundary: breaker + cache + metrics in canonical order
+            for slot in slots {
+                let outcome = slot.expect("every wave slot filled");
+                if let Some(ok) = outcome.cache_event {
+                    self.cache_breaker.record(wave, ok);
+                }
+                if let Some(ok) = outcome.policy_event {
+                    self.policy_breaker.record(wave, ok);
+                    if !ok {
+                        metrics.policy_failures += 1;
+                    }
+                }
+                if outcome.resp.deadline_limited {
+                    metrics.deadline_limited += 1;
+                }
+                if outcome.resp.tier == Tier::Policy {
+                    self.cache_insert(
+                        (outcome.resp.graph_hash, outcome.resp.n_devices),
+                        outcome.resp.assignment.clone(),
+                    );
+                }
+                metrics.note_response(outcome.resp.tier, outcome.resp.wall_ms);
+                responses.push(outcome.resp);
+            }
+            self.wave += 1;
+        }
+
+        metrics.breaker_trips = self.policy_breaker.trips + self.cache_breaker.trips;
+        Ok(ServeReport {
+            responses,
+            rejections,
+            metrics,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+fn scale_tag(s: Scale) -> &'static str {
+    match s {
+        Scale::Full => "full",
+        Scale::Small => "small",
+        Scale::Tiny => "tiny",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: usize, slot: u64) -> ServeRequest {
+        ServeRequest {
+            id,
+            workload: "chainmm".into(),
+            scale: Scale::Tiny,
+            slot,
+            n_devices: 4,
+            deadline_ms: None,
+        }
+    }
+
+    #[test]
+    fn admission_rejects_beyond_capacity_and_drains_by_slot() {
+        let cfg = ServeCfg {
+            queue_capacity: 4,
+            drain_per_slot: 2,
+            ..ServeCfg::default()
+        };
+        let topo = DeviceTopology::p100x4();
+        let mut c = Coordinator::new(cfg, topo, None, None).unwrap();
+        // slot 0: 6 arrivals into capacity 4 -> 2 rejected;
+        // slot 1: drains 2, so 2 more fit before rejection resumes.
+        let mut trace: Vec<ServeRequest> = (0..6).map(|i| req(i, 0)).collect();
+        trace.extend((6..9).map(|i| req(i, 1)));
+        let report = c.run_trace(&trace).unwrap();
+        let rejected: Vec<usize> = report.rejections.iter().map(|q| q.request).collect();
+        assert_eq!(rejected, vec![4, 5, 8]);
+        assert_eq!(report.responses.len(), 6);
+        assert_eq!(report.metrics.completed + report.metrics.rejected, 9);
+    }
+
+    #[test]
+    fn heuristics_only_serving_is_valid_and_deterministic() {
+        let topo = DeviceTopology::p100x4();
+        let trace: Vec<ServeRequest> = (0..5).map(|i| req(i, i as u64)).collect();
+        let run = |threads: usize| {
+            let cfg = ServeCfg {
+                threads,
+                ..ServeCfg::default()
+            };
+            let mut c = Coordinator::new(cfg, DeviceTopology::p100x4(), None, None).unwrap();
+            c.run_trace(&trace).unwrap()
+        };
+        let a = run(1);
+        let b = run(4);
+        assert_eq!(a.digest(), b.digest());
+        let n_nodes = workloads::by_name("chainmm", Scale::Tiny).n();
+        for r in &a.responses {
+            assert_eq!(r.tier, Tier::Heuristic, "no backend -> tier 3");
+            assert_eq!(r.assignment.len(), n_nodes);
+            for &d in &r.assignment {
+                assert!(d < topo.n());
+            }
+        }
+    }
+
+    #[test]
+    fn cache_evicts_fifo_at_capacity() {
+        let cfg = ServeCfg {
+            cache_capacity: 2,
+            ..ServeCfg::default()
+        };
+        let mut c = Coordinator::new(cfg, DeviceTopology::p100x4(), None, None).unwrap();
+        c.cache_insert((1, 4), vec![0]);
+        c.cache_insert((2, 4), vec![0]);
+        c.cache_insert((3, 4), vec![0]);
+        assert_eq!(c.cache_len(), 2);
+        assert!(!c.cache.contains_key(&(1, 4)), "oldest entry evicted");
+        assert!(c.cache.contains_key(&(3, 4)));
+    }
+
+    #[test]
+    fn unknown_workload_is_a_trace_error() {
+        let mut c =
+            Coordinator::new(ServeCfg::default(), DeviceTopology::p100x4(), None, None).unwrap();
+        let mut bad = req(0, 0);
+        bad.workload = "nope".into();
+        assert!(c.run_trace(&[bad]).is_err());
+    }
+
+    #[test]
+    fn deadline_budget_is_pure_and_monotone() {
+        let retry = RetryPolicy {
+            max_attempts: 4,
+            backoff_ms: 10,
+            timeout_ms: None,
+        };
+        assert_eq!(attempts_within(&retry, None, 5.0), 4);
+        assert_eq!(attempts_within(&retry, Some(0), 5.0), 0);
+        // 5ms per attempt + 10/20/40ms backoffs: 5, 20, 45, 90 cumulative
+        assert_eq!(attempts_within(&retry, Some(5), 5.0), 1);
+        assert_eq!(attempts_within(&retry, Some(44), 5.0), 2);
+        assert_eq!(attempts_within(&retry, Some(45), 5.0), 3);
+        assert_eq!(attempts_within(&retry, Some(1000), 5.0), 4);
+    }
+}

@@ -1,0 +1,139 @@
+//! Degradation-ladder vocabulary: response tiers and the per-tier
+//! circuit breaker (DESIGN.md §16).
+//!
+//! The breaker is clocked in *waves* (one admission slot's worth of
+//! requests), not wall time: its state is frozen when a wave starts and
+//! updated at the wave boundary from outcomes applied in canonical
+//! request order. That makes trip/half-open/close decisions a pure
+//! function of the request trace and fault plan — worker-thread count
+//! can never change which tier serves a request.
+
+/// Which rung of the degradation ladder produced a response.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    /// Tier 1: canonical-hash cache hit (validated before reuse).
+    Cache,
+    /// Tier 2: policy inference (`multi::zero_shot_assignment`).
+    Policy,
+    /// Tier 3: heuristic critical-path placement (always available).
+    Heuristic,
+}
+
+impl Tier {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Tier::Cache => "cache",
+            Tier::Policy => "policy",
+            Tier::Heuristic => "heuristic",
+        }
+    }
+
+    /// Stable numeric code mixed into `ServeReport::digest`.
+    pub fn code(self) -> u64 {
+        match self {
+            Tier::Cache => 1,
+            Tier::Policy => 2,
+            Tier::Heuristic => 3,
+        }
+    }
+}
+
+/// Deterministic per-tier circuit breaker.
+///
+/// Closed → `threshold` consecutive failures trip it open for
+/// `cooldown` full waves. The first wave at or past `open_until` is the
+/// half-open probe: a success closes the breaker fully, a single
+/// failure re-trips it immediately.
+#[derive(Clone, Debug)]
+pub struct Breaker {
+    threshold: usize,
+    cooldown: u64,
+    failures: usize,
+    open_until: Option<u64>,
+    /// Total trips, for metrics.
+    pub trips: usize,
+}
+
+impl Breaker {
+    pub fn new(threshold: usize, cooldown: u64) -> Breaker {
+        Breaker {
+            threshold: threshold.max(1),
+            cooldown,
+            failures: 0,
+            open_until: None,
+            trips: 0,
+        }
+    }
+
+    /// May this tier be attempted during `wave`? Callers freeze this at
+    /// wave start; outcomes feed back only through [`Breaker::record`].
+    pub fn allows(&self, wave: u64) -> bool {
+        self.open_until.map_or(true, |until| wave >= until)
+    }
+
+    /// Apply one attempt outcome at a wave boundary (canonical order).
+    /// Only called for requests that actually consulted the tier.
+    pub fn record(&mut self, wave: u64, ok: bool) {
+        if ok {
+            self.failures = 0;
+            self.open_until = None;
+            return;
+        }
+        if self.open_until.is_some() {
+            // half-open probe failed: re-trip without a fresh count-up
+            self.open_until = Some(wave + 1 + self.cooldown);
+            self.trips += 1;
+            return;
+        }
+        self.failures += 1;
+        if self.failures >= self.threshold {
+            self.open_until = Some(wave + 1 + self.cooldown);
+            self.failures = 0;
+            self.trips += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_after_threshold_and_cools_down() {
+        let mut b = Breaker::new(3, 2);
+        assert!(b.allows(0));
+        b.record(0, false);
+        b.record(0, false);
+        assert!(b.allows(0), "below threshold stays closed");
+        b.record(0, false);
+        assert_eq!(b.trips, 1);
+        assert!(!b.allows(1));
+        assert!(!b.allows(2));
+        assert!(b.allows(3), "cooldown expires into half-open");
+    }
+
+    #[test]
+    fn half_open_success_closes_failure_retrips() {
+        let mut b = Breaker::new(1, 1);
+        b.record(0, false);
+        assert!(!b.allows(1));
+        assert!(b.allows(2));
+        b.record(2, false); // probe fails: immediate re-trip
+        assert_eq!(b.trips, 2);
+        assert!(!b.allows(3));
+        assert!(b.allows(4));
+        b.record(4, true); // probe succeeds: fully closed
+        assert!(b.allows(5));
+        assert_eq!(b.trips, 2);
+    }
+
+    #[test]
+    fn success_resets_failure_count() {
+        let mut b = Breaker::new(2, 1);
+        b.record(0, false);
+        b.record(0, true);
+        b.record(1, false);
+        assert!(b.allows(2), "interleaved success must reset the count");
+        assert_eq!(b.trips, 0);
+    }
+}

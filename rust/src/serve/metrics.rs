@@ -1,0 +1,110 @@
+//! Serving metrics: per-tier counts, latency percentiles, throughput.
+//!
+//! Wall-clock latency is measurement-only: it feeds the percentiles
+//! below but is excluded from `ServeReport::digest`, so metrics never
+//! perturb the replay-determinism contract.
+
+use crate::eval::tables::Table;
+use crate::util::stats;
+
+use super::ladder::Tier;
+
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    pub admitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub cache_hits: usize,
+    pub policy_served: usize,
+    pub heuristic_served: usize,
+    /// Requests whose tier-2 retry budget was exhausted (fell to tier 3).
+    pub policy_failures: usize,
+    /// Requests whose deadline shrank or zeroed the tier-2 retry budget.
+    pub deadline_limited: usize,
+    /// Circuit-breaker trips across both breakers.
+    pub breaker_trips: usize,
+    /// Per-response wall-clock service time (ms), completion order.
+    pub wall_ms: Vec<f64>,
+}
+
+impl ServeMetrics {
+    pub fn note_response(&mut self, tier: Tier, wall_ms: f64) {
+        self.completed += 1;
+        self.wall_ms.push(wall_ms);
+        match tier {
+            Tier::Cache => self.cache_hits += 1,
+            Tier::Policy => self.policy_served += 1,
+            Tier::Heuristic => self.heuristic_served += 1,
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        stats::percentile(&self.wall_ms, 50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        stats::percentile(&self.wall_ms, 95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        stats::percentile(&self.wall_ms, 99.0)
+    }
+
+    /// Completed requests per second over the run's wall time.
+    pub fn requests_per_sec(&self, wall_s: f64) -> f64 {
+        if wall_s > 0.0 {
+            self.completed as f64 / wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Print the serving summary table.
+    pub fn render(&self, wall_s: f64) {
+        let mut t = Table::new(
+            "Serving summary",
+            &["METRIC", "VALUE"],
+        );
+        let row = |t: &mut Table, k: &str, v: String| t.row(vec![k.to_string(), v]);
+        row(&mut t, "admitted", format!("{}", self.admitted));
+        row(&mut t, "completed", format!("{}", self.completed));
+        row(&mut t, "rejected (queue full)", format!("{}", self.rejected));
+        row(&mut t, "tier 1: cache hits", format!("{}", self.cache_hits));
+        row(&mut t, "tier 2: policy served", format!("{}", self.policy_served));
+        row(&mut t, "tier 3: heuristic served", format!("{}", self.heuristic_served));
+        row(&mut t, "policy tier exhausted", format!("{}", self.policy_failures));
+        row(&mut t, "deadline-limited", format!("{}", self.deadline_limited));
+        row(&mut t, "breaker trips", format!("{}", self.breaker_trips));
+        row(&mut t, "requests/sec", format!("{:.1}", self.requests_per_sec(wall_s)));
+        row(
+            &mut t,
+            "latency p50/p95/p99 (ms)",
+            format!("{:.3} / {:.3} / {:.3}", self.p50(), self.p95(), self.p99()),
+        );
+        t.emit(None);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_counts_and_percentiles() {
+        let mut m = ServeMetrics::default();
+        for i in 0..10 {
+            let tier = match i % 3 {
+                0 => Tier::Cache,
+                1 => Tier::Policy,
+                _ => Tier::Heuristic,
+            };
+            m.note_response(tier, (i + 1) as f64);
+        }
+        assert_eq!(m.completed, 10);
+        assert_eq!(m.cache_hits + m.policy_served + m.heuristic_served, 10);
+        assert!(m.p50() >= 5.0 && m.p50() <= 6.0);
+        assert!(m.p99() <= 10.0 && m.p99() > m.p50());
+        assert!((m.requests_per_sec(2.0) - 5.0).abs() < 1e-12);
+        assert_eq!(m.requests_per_sec(0.0), 0.0);
+    }
+}

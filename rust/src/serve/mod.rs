@@ -1,0 +1,154 @@
+//! Resilient assignment serving (DESIGN.md §16).
+//!
+//! A [`Coordinator`] accepts streams of placement requests over many
+//! graphs, with a bounded admission queue (typed [`QueueFull`]
+//! rejections, never unbounded growth), deterministic per-request
+//! deadlines, and an assignment cache keyed by
+//! [`crate::graph::canonical_hash`]. The robustness core is a
+//! graceful-degradation ladder with a circuit breaker per tier:
+//!
+//! 1. [`Tier::Cache`] — validated canonical-hash cache hit
+//! 2. [`Tier::Policy`] — zero-shot policy inference (shared params)
+//! 3. [`Tier::Heuristic`] — critical-path placement, always available
+//!
+//! Injected (`--fault-plan serve.policy=...,serve.cache=...`) or real
+//! backend failures degrade response *quality*, never availability:
+//! every admitted request is answered, tagged with the producing tier,
+//! and the whole run replays bit-identically at any worker-thread
+//! count ([`ServeReport::digest`]).
+
+pub mod coordinator;
+pub mod ladder;
+pub mod metrics;
+
+pub use coordinator::{
+    Coordinator, QueueFull, ServeCfg, ServeReport, ServeRequest, ServeResponse,
+};
+pub use ladder::{Breaker, Tier};
+pub use metrics::ServeMetrics;
+
+use anyhow::{Context, Result};
+
+use crate::graph::workloads::Scale;
+use crate::runtime::manifest::RequestTraceManifest;
+use crate::util::rng::Rng;
+
+/// Resolve a replayable trace file into coordinator requests: entry
+/// fields override the trace-level defaults; a missing `slot` defaults
+/// to the entry index (one wave per request).
+pub fn requests_from_manifest(m: &RequestTraceManifest) -> Result<Vec<ServeRequest>> {
+    let default_scale = Scale::parse(&m.scale)
+        .with_context(|| format!("request trace: bad scale {:?}", m.scale))?;
+    m.requests
+        .iter()
+        .enumerate()
+        .map(|(i, e)| {
+            let scale = match &e.scale {
+                Some(s) => Scale::parse(s)
+                    .with_context(|| format!("request {i}: bad scale {s:?}"))?,
+                None => default_scale,
+            };
+            Ok(ServeRequest {
+                id: i,
+                workload: e.workload.clone(),
+                scale,
+                slot: e.slot.unwrap_or(i as u64),
+                n_devices: e.n_devices.unwrap_or(m.n_devices),
+                deadline_ms: e.deadline_ms.or(m.deadline_ms),
+            })
+        })
+        .collect()
+}
+
+/// Deterministic synthetic request trace: `requests` requests drawn
+/// uniformly (seeded) from `workload_names`, arriving `burst` per
+/// admission slot. Caller validates workload names (the coordinator
+/// rejects unknown ones as a trace error).
+#[allow(clippy::too_many_arguments)]
+pub fn synthetic_trace(
+    workload_names: &[String],
+    scale: Scale,
+    requests: usize,
+    burst: usize,
+    seed: u64,
+    n_devices: usize,
+    deadline_ms: Option<u64>,
+) -> Vec<ServeRequest> {
+    let burst = burst.max(1);
+    let mut rng = Rng::new(seed);
+    (0..requests)
+        .map(|i| ServeRequest {
+            id: i,
+            workload: rng.choose(workload_names).clone(),
+            scale,
+            slot: (i / burst) as u64,
+            n_devices,
+            deadline_ms,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::RequestTraceEntry;
+
+    #[test]
+    fn manifest_resolution_applies_defaults_and_overrides() {
+        let m = RequestTraceManifest {
+            name: "t".into(),
+            scale: "tiny".into(),
+            n_devices: 4,
+            deadline_ms: Some(40),
+            requests: vec![
+                RequestTraceEntry {
+                    workload: "ffnn".into(),
+                    scale: None,
+                    slot: Some(3),
+                    n_devices: None,
+                    deadline_ms: None,
+                },
+                RequestTraceEntry {
+                    workload: "chainmm".into(),
+                    scale: Some("small".into()),
+                    slot: None,
+                    n_devices: Some(2),
+                    deadline_ms: Some(10),
+                },
+            ],
+        };
+        let reqs = requests_from_manifest(&m).unwrap();
+        assert_eq!(reqs.len(), 2);
+        assert_eq!(reqs[0].scale, Scale::Tiny);
+        assert_eq!(reqs[0].slot, 3);
+        assert_eq!(reqs[0].n_devices, 4);
+        assert_eq!(reqs[0].deadline_ms, Some(40));
+        assert_eq!(reqs[1].scale, Scale::Small);
+        assert_eq!(reqs[1].slot, 1, "missing slot defaults to entry index");
+        assert_eq!(reqs[1].n_devices, 2);
+        assert_eq!(reqs[1].deadline_ms, Some(10));
+
+        let mut bad = m.clone();
+        bad.requests[0].scale = Some("huge".into());
+        assert!(requests_from_manifest(&bad).is_err());
+    }
+
+    #[test]
+    fn synthetic_trace_is_seed_deterministic() {
+        let ws = vec!["chainmm".to_string(), "ffnn".to_string()];
+        let a = synthetic_trace(&ws, Scale::Tiny, 12, 4, 7, 4, Some(50));
+        let b = synthetic_trace(&ws, Scale::Tiny, 12, 4, 7, 4, Some(50));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 12);
+        assert_eq!(a[0].slot, 0);
+        assert_eq!(a[4].slot, 1);
+        assert_eq!(a[11].slot, 2);
+        assert!(a.iter().all(|r| ws.contains(&r.workload)));
+        let c = synthetic_trace(&ws, Scale::Tiny, 12, 4, 8, 4, Some(50));
+        assert_ne!(
+            a.iter().map(|r| r.workload.clone()).collect::<Vec<_>>(),
+            c.iter().map(|r| r.workload.clone()).collect::<Vec<_>>(),
+            "different seed should reshuffle workloads (overwhelmingly likely)"
+        );
+    }
+}

@@ -1,0 +1,244 @@
+//! Degradation-ladder property tests (DESIGN.md §16): availability and
+//! replay determinism of the serving coordinator end to end.
+//!
+//! - Under ANY injected fault pattern and ANY worker-thread count,
+//!   every admitted request is answered with a *valid* assignment
+//!   (all nodes placed, devices within topology bounds) and a
+//!   correctly-tagged tier — faults degrade quality, never
+//!   availability.
+//! - A fixed trace + fault plan replays **bit-identically** at
+//!   1/2/4/8 worker threads ([`ServeReport::digest`]).
+//! - A cache hit returns the bit-identical assignment the cache-miss
+//!   path produced for the same canonical hash.
+//!
+//! The fault plan and its counters are process-global, so every test
+//! serializes on one mutex and clears the plan on drop (same harness
+//! as tests/resilience.rs).
+
+use std::sync::{Arc, Mutex};
+
+use doppler::graph::workloads::{self, Scale};
+use doppler::heuristics::check_assignment;
+use doppler::policy::NativePolicy;
+use doppler::runtime::resilience::{self, FaultPlan};
+use doppler::serve::{synthetic_trace, Coordinator, ServeCfg, ServeReport, ServeRequest, Tier};
+use doppler::sim::topology::DeviceTopology;
+
+static LOCK: Mutex<()> = Mutex::new(());
+
+struct PlanGuard<'a> {
+    _lock: std::sync::MutexGuard<'a, ()>,
+}
+
+impl<'a> PlanGuard<'a> {
+    fn acquire() -> PlanGuard<'a> {
+        let lock = LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        resilience::set_plan(None);
+        resilience::reset_stats();
+        PlanGuard { _lock: lock }
+    }
+}
+
+impl Drop for PlanGuard<'_> {
+    fn drop(&mut self) {
+        resilience::set_plan(None);
+        resilience::reset_stats();
+    }
+}
+
+/// Installing a plan also resets the injection epoch, so each replay
+/// sees the identical failure schedule.
+fn install(spec: &str) {
+    let plan = Arc::new(FaultPlan::parse(spec).unwrap());
+    resilience::set_plan(Some(plan));
+}
+
+fn mixed_trace(requests: usize) -> Vec<ServeRequest> {
+    let ws = vec!["chainmm".to_string(), "ffnn".to_string()];
+    synthetic_trace(&ws, Scale::Tiny, requests, 6, 11, 4, None)
+}
+
+fn run_with(nets: Option<&NativePolicy>, threads: usize, trace: &[ServeRequest]) -> ServeReport {
+    let cfg = ServeCfg {
+        threads,
+        ..ServeCfg::default()
+    };
+    let mut c = Coordinator::new(
+        cfg,
+        DeviceTopology::p100x4(),
+        nets.map(|n| n as &dyn doppler::policy::PolicyBackend),
+        None,
+    )
+    .unwrap();
+    c.run_trace(trace).unwrap()
+}
+
+/// Every response must be a valid placement with a consistent tag,
+/// regardless of which tier produced it.
+fn assert_all_valid(report: &ServeReport, trace: &[ServeRequest]) {
+    let topo_n = DeviceTopology::p100x4().n();
+    assert_eq!(
+        report.responses.len() + report.rejections.len(),
+        trace.len(),
+        "every request is either served or explicitly rejected"
+    );
+    assert_eq!(report.responses.len(), report.metrics.admitted);
+    for r in &report.responses {
+        let g = workloads::by_name(&r.workload, Scale::Tiny);
+        check_assignment(&g, &r.assignment, r.n_devices)
+            .unwrap_or_else(|e| panic!("request {}: invalid assignment: {e}", r.request));
+        assert!(r.n_devices <= topo_n);
+        assert!(r.est_ms.is_finite() && r.est_ms > 0.0);
+        match r.tier {
+            Tier::Policy => assert!(
+                r.policy_attempts >= 1,
+                "policy-tier response without a policy attempt"
+            ),
+            Tier::Cache => assert_eq!(
+                r.policy_attempts, 0,
+                "cache hit must short-circuit the policy tier"
+            ),
+            Tier::Heuristic => {}
+        }
+    }
+}
+
+#[test]
+fn policy_outage_serves_every_admitted_request_via_lower_tiers() {
+    let _guard = PlanGuard::acquire();
+    install("seed=5,retries=2,serve.policy=1.0");
+    let nets = NativePolicy::builtin();
+    let trace = mixed_trace(30);
+    let report = run_with(Some(&nets), 4, &trace);
+    assert_all_valid(&report, &trace);
+    assert_eq!(
+        report.metrics.completed, report.metrics.admitted,
+        "zero availability loss under a dead policy backend"
+    );
+    assert!(
+        report.responses.iter().all(|r| r.tier != Tier::Policy),
+        "a fully-dead policy tier can never produce a response"
+    );
+    assert!(report.metrics.heuristic_served > 0);
+    assert!(resilience::stats().injected > 0, "the plan actually fired");
+}
+
+#[test]
+fn trace_replays_bit_identically_at_any_thread_count() {
+    let _guard = PlanGuard::acquire();
+    let nets = NativePolicy::builtin();
+    let trace = mixed_trace(36);
+    let mut digests = Vec::new();
+    let mut tiers: Vec<Vec<Tier>> = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        // reinstall per run: set_plan resets the injection epoch, so
+        // every replay sees the same failure schedule
+        install("seed=9,retries=3,serve.policy=0.4,serve.cache=0.2");
+        let report = run_with(Some(&nets), threads, &trace);
+        assert_all_valid(&report, &trace);
+        digests.push(report.digest());
+        tiers.push(report.responses.iter().map(|r| r.tier).collect());
+    }
+    assert!(
+        digests.windows(2).all(|w| w[0] == w[1]),
+        "digest must be thread-count independent: {digests:?}"
+    );
+    assert!(
+        tiers.windows(2).all(|w| w[0] == w[1]),
+        "tier decisions must be thread-count independent"
+    );
+}
+
+#[test]
+fn cache_hit_is_bit_identical_to_the_cache_miss_result() {
+    let _guard = PlanGuard::acquire();
+    let nets = NativePolicy::builtin();
+    // same workload in two slots: slot 0 misses (policy), slot 1 hits
+    let mk = |id: usize, slot: u64| ServeRequest {
+        id,
+        workload: "chainmm".into(),
+        scale: Scale::Tiny,
+        slot,
+        n_devices: 4,
+        deadline_ms: None,
+    };
+    let trace = vec![mk(0, 0), mk(1, 1)];
+    let report = run_with(Some(&nets), 2, &trace);
+    assert_eq!(report.responses.len(), 2);
+    let (a, b) = (&report.responses[0], &report.responses[1]);
+    assert_eq!(a.tier, Tier::Policy);
+    assert_eq!(b.tier, Tier::Cache);
+    assert_eq!(a.graph_hash, b.graph_hash);
+    assert_eq!(
+        a.assignment, b.assignment,
+        "cache hit must reproduce the cached placement bit-for-bit"
+    );
+    assert_eq!(a.est_ms.to_bits(), b.est_ms.to_bits());
+}
+
+#[test]
+fn any_fault_pattern_and_thread_count_yields_valid_tagged_responses() {
+    let _guard = PlanGuard::acquire();
+    let nets = NativePolicy::builtin();
+    let trace = mixed_trace(24);
+    for (seed, policy_rate, cache_rate) in [
+        (1u64, 0.0, 0.0),
+        (2, 0.3, 0.0),
+        (3, 0.7, 0.5),
+        (4, 1.0, 1.0),
+    ] {
+        for threads in [1usize, 3, 8] {
+            install(&format!(
+                "seed={seed},retries=2,serve.policy={policy_rate},serve.cache={cache_rate}"
+            ));
+            let report = run_with(Some(&nets), threads, &trace);
+            assert_all_valid(&report, &trace);
+            assert_eq!(report.metrics.completed, report.metrics.admitted);
+        }
+    }
+}
+
+#[test]
+fn bounded_queue_rejections_are_deterministic() {
+    let _guard = PlanGuard::acquire();
+    // burst of 12 per slot into a queue of 5 draining 3/slot
+    let ws = vec!["chainmm".to_string()];
+    let trace = synthetic_trace(&ws, Scale::Tiny, 36, 12, 2, 4, None);
+    let run = |threads: usize| {
+        let cfg = ServeCfg {
+            threads,
+            queue_capacity: 5,
+            drain_per_slot: 3,
+            ..ServeCfg::default()
+        };
+        let mut c = Coordinator::new(cfg, DeviceTopology::p100x4(), None, None).unwrap();
+        c.run_trace(&trace).unwrap()
+    };
+    let a = run(1);
+    let b = run(8);
+    assert!(!a.rejections.is_empty(), "overload must actually reject");
+    assert_eq!(a.rejections, b.rejections);
+    assert_eq!(a.digest(), b.digest());
+    for q in &a.rejections {
+        assert_eq!(q.capacity, 5);
+        assert!(q.backlog >= q.capacity);
+    }
+}
+
+#[test]
+fn zero_deadline_skips_the_policy_tier_but_still_serves() {
+    let _guard = PlanGuard::acquire();
+    let nets = NativePolicy::builtin();
+    let ws = vec!["chainmm".to_string(), "ffnn".to_string()];
+    let trace = synthetic_trace(&ws, Scale::Tiny, 10, 4, 3, 4, Some(0));
+    let report = run_with(Some(&nets), 2, &trace);
+    assert_all_valid(&report, &trace);
+    assert_eq!(report.metrics.completed, report.metrics.admitted);
+    assert!(
+        report
+            .responses
+            .iter()
+            .all(|r| r.tier == Tier::Heuristic && r.policy_attempts == 0 && r.deadline_limited),
+        "a zero deadline affords no policy attempts, yet every request is served"
+    );
+}

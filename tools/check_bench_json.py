@@ -53,6 +53,18 @@ ROW_KEYS = {
         "shared_zero_shot_ms": "pos",
         "full_train_ms": "num?",
     },
+    "serve_load": {
+        "threads": "pos",
+        "requests_per_sec": "pos",
+        "p50_ms": "pos",
+        "p95_ms": "pos",
+        "p99_ms": "pos",
+        "cache_hits": "num",
+        "policy_served": "num",
+        "heuristic_served": "num",
+        "completed": "pos",
+        "rejected": "num",
+    },
     "train_scaling": {
         "mode": "str",
         "threads": "pos",
@@ -83,6 +95,9 @@ EXTRA_ROW_LISTS = {
 # extra top-level fields required for specific benches: bench -> {key -> kind}
 EXTRA_TOP_KEYS = {
     "train_scaling": {"kernel_bitwise_identical": "bool"},
+    # the serve bench asserts both; a snapshot with either flag false
+    # (or missing) means the ladder lost availability or determinism
+    "serve_load": {"all_admitted_served": "bool", "replay_deterministic": "bool"},
 }
 
 

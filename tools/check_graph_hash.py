@@ -1,0 +1,254 @@
+#!/usr/bin/env python3
+"""Dual-port oracle for `graph::canonical_hash` (ISSUE 8, DESIGN.md §16).
+
+The serving coordinator caches assignments under a canonical structural
+graph hash, so the hash carries a contract:
+
+  1. **Relabeling invariance** — permuting node indices (and remapping
+     the edge list accordingly) must not change the hash, and neither
+     may edge-list order or node names.
+  2. **Perturbation sensitivity** — structurally different graphs
+     (edge dropped/added, shape dim changed, FLOP cost changed, kind
+     changed, vertex added) must hash differently.
+  3. **Cross-language pin** — the Python port below mirrors
+     rust/src/graph/mod.rs::canonical_hash operation for operation
+     (FNV-1a over little-endian u64 bytes, 3 WL refinement rounds,
+     sorted label multisets). Golden values for two fixed graphs are
+     asserted here AND in the Rust unit tests, so either side drifting
+     fails its own suite.
+
+Stdlib-only, mirrors the dual-port style of check_incremental_sim.py.
+Exit code 0 = all properties hold.
+"""
+
+import random
+import struct
+import sys
+
+MASK = (1 << 64) - 1
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+HASH_ROUNDS = 3
+
+# Pinned kind/elem codes — must match graph/mod.rs::kind_codes.
+KINDS = {
+    "input": 1,
+    "matmul": 2,
+    "input_ew": 3,
+    "straight_ew": 4,
+    "bcast_ew": 5,
+    "max_red": 6,
+    "min_red": 7,
+    "sum_red": 8,
+    "prod_red": 9,
+    "formation": 10,
+    "complexer": 11,
+    "fill": 12,
+    "squeezer": 13,
+    "selec": 14,
+}
+ELEMS = {
+    None: 0,
+    "add": 1,
+    "sub": 2,
+    "mul": 3,
+    "div": 4,
+    "max": 5,
+    "relu": 6,
+    "exp": 7,
+    "silu": 8,
+    "rsqrt": 9,
+    "square": 10,
+    "scale": 11,
+}
+
+
+def fnv_mix(h, x):
+    """FNV-1a over the 8 little-endian bytes of the u64 `x`."""
+    for b in (x & MASK).to_bytes(8, "little"):
+        h = ((h ^ b) * FNV_PRIME) & MASK
+    return h
+
+
+def f64_bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+def node_seed(node):
+    kind, elem, shape, flops = node
+    h = fnv_mix(FNV_OFFSET, KINDS[kind])
+    h = fnv_mix(h, ELEMS[elem])
+    h = fnv_mix(h, len(shape))
+    for d in shape:
+        h = fnv_mix(h, d)
+    return fnv_mix(h, f64_bits(flops))
+
+
+def canonical_hash(nodes, edges):
+    """Port of graph/mod.rs::canonical_hash.
+
+    nodes: list of (kind_tag, elem_tag_or_None, shape_tuple, flops)
+    edges: list of (producer_index, consumer_index)
+    """
+    n = len(nodes)
+    preds = [[] for _ in range(n)]
+    succs = [[] for _ in range(n)]
+    for a, b in edges:
+        if a < n and b < n:
+            preds[b].append(a)
+            succs[a].append(b)
+    labels = [node_seed(nd) for nd in nodes]
+    for _ in range(HASH_ROUNDS):
+        nxt = [0] * n
+        for v in range(n):
+            h = fnv_mix(FNV_OFFSET, labels[v])
+            for side in (preds[v], succs[v]):
+                ls = sorted(labels[u] for u in side)
+                h = fnv_mix(h, len(ls))
+                for x in ls:
+                    h = fnv_mix(h, x)
+            nxt[v] = h
+        labels = nxt
+    labels.sort()
+    h = fnv_mix(FNV_OFFSET, n)
+    h = fnv_mix(h, len(edges))
+    for x in labels:
+        h = fnv_mix(h, x)
+    return h
+
+
+def relabel(nodes, edges, perm):
+    """Apply a node permutation: node old-index i moves to perm[i]."""
+    new_nodes = [None] * len(nodes)
+    for i, nd in enumerate(nodes):
+        new_nodes[perm[i]] = nd
+    new_edges = [(perm[a], perm[b]) for a, b in edges]
+    return new_nodes, new_edges
+
+
+# -- fixed graphs pinned on both sides --------------------------------------
+
+# The diamond from graph/mod.rs tests: a -> b, a -> c, b -> d, c -> d.
+DIAMOND_NODES = [
+    ("input", None, (4, 4), 0.0),
+    ("matmul", None, (4, 4), 128.0),
+    ("input_ew", "relu", (4, 4), 16.0),
+    ("straight_ew", "add", (4, 4), 16.0),
+]
+DIAMOND_EDGES = [(0, 1), (0, 2), (1, 3), (2, 3)]
+
+# A 4-stage matmul chain with one input.
+CHAIN_NODES = [
+    ("input", None, (8, 8), 0.0),
+    ("matmul", None, (8, 8), 1024.0),
+    ("matmul", None, (8, 8), 1024.0),
+    ("matmul", None, (8, 8), 1024.0),
+    ("sum_red", None, (8,), 64.0),
+]
+CHAIN_EDGES = [(0, 1), (1, 2), (2, 3), (3, 4)]
+
+# Golden values — regenerate by running this script with --print-golden;
+# the Rust tests in graph/mod.rs pin the same constants.
+GOLDEN_DIAMOND = 0x22ADE94ACE1FE733
+GOLDEN_CHAIN = 0x49807F49160117D4
+
+
+def random_dag(rng, n):
+    """Random layered DAG over the full kind vocabulary."""
+    kinds = list(KINDS)
+    elems = [e for e in ELEMS if e is not None]
+    nodes = []
+    edges = []
+    for i in range(n):
+        kind = rng.choice(kinds) if i > 0 else "input"
+        elem = rng.choice(elems) if kind.endswith("_ew") else None
+        shape = tuple(rng.choice([1, 2, 4, 8, 16]) for _ in range(rng.randint(1, 3)))
+        flops = rng.choice([0.0, 16.0, 128.0, 1024.0, 4096.0]) * rng.randint(1, 4)
+        nodes.append((kind, elem, shape, flops))
+        if i > 0:
+            seen = set()
+            for _ in range(rng.randint(1, min(3, i))):
+                p = rng.randrange(i)
+                if p not in seen:
+                    seen.add(p)
+                    edges.append((p, i))
+    return nodes, edges
+
+
+def check_invariance(rng, cases=40, perms=6):
+    for case in range(cases):
+        nodes, edges = random_dag(rng, rng.randint(2, 40))
+        base = canonical_hash(nodes, edges)
+        for _ in range(perms):
+            perm = list(range(len(nodes)))
+            rng.shuffle(perm)
+            pn, pe = relabel(nodes, edges, perm)
+            rng.shuffle(pe)  # edge order must not matter either
+            got = canonical_hash(pn, pe)
+            if got != base:
+                return f"case {case}: relabeling changed hash {base:#x} -> {got:#x}"
+    return None
+
+
+def check_sensitivity(rng, cases=40):
+    """Structural perturbations must change the hash."""
+    collisions = 0
+    total = 0
+    for case in range(cases):
+        nodes, edges = random_dag(rng, rng.randint(4, 30))
+        base = canonical_hash(nodes, edges)
+        perturbed = []
+        if edges:
+            perturbed.append((nodes, edges[:-1]))  # drop an edge
+        kind, elem, shape, flops = nodes[-1]
+        perturbed.append((nodes[:-1] + [(kind, elem, shape + (2,), flops)], edges))
+        perturbed.append((nodes[:-1] + [(kind, elem, shape, flops + 1.0)], edges))
+        new_kind = "fill" if kind != "fill" else "formation"
+        perturbed.append((nodes[:-1] + [(new_kind, None, shape, flops)], edges))
+        perturbed.append((nodes + [("squeezer", None, (1,), 0.0)],
+                          edges + [(0, len(nodes))]))
+        for pn, pe in perturbed:
+            total += 1
+            if canonical_hash(pn, pe) == base:
+                collisions += 1
+    if collisions:
+        return f"{collisions}/{total} structural perturbations left the hash unchanged"
+    return None
+
+
+def main(argv):
+    if "--print-golden" in argv:
+        print(f"diamond: {canonical_hash(DIAMOND_NODES, DIAMOND_EDGES):#018X}")
+        print(f"chain:   {canonical_hash(CHAIN_NODES, CHAIN_EDGES):#018X}")
+        return 0
+
+    failures = []
+
+    d = canonical_hash(DIAMOND_NODES, DIAMOND_EDGES)
+    c = canonical_hash(CHAIN_NODES, CHAIN_EDGES)
+    if d != GOLDEN_DIAMOND:
+        failures.append(f"diamond golden drift: got {d:#x}, pinned {GOLDEN_DIAMOND:#x}")
+    if c != GOLDEN_CHAIN:
+        failures.append(f"chain golden drift: got {c:#x}, pinned {GOLDEN_CHAIN:#x}")
+
+    rng = random.Random(0xD0BB1E8)
+    for name, check in [
+        ("relabeling invariance", lambda: check_invariance(rng)),
+        ("perturbation sensitivity", lambda: check_sensitivity(rng)),
+    ]:
+        err = check()
+        if err:
+            failures.append(f"{name}: {err}")
+        else:
+            print(f"ok    {name}")
+
+    if failures:
+        for f in failures:
+            print(f"FAIL  {f}")
+        return 1
+    print("ok    golden values pinned (diamond, chain)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

