@@ -1,6 +1,6 @@
 //! Native train-step throughput: Stage II updates/sec as rollout worker
-//! threads grow, sequential vs accumulate update mode (ISSUE 5 /
-//! DESIGN.md §13).
+//! threads grow — sequential vs accumulate vs accumulate-fused update
+//! mode (ISSUE 5 / DESIGN.md §13–§14).
 //!
 //! Since PR 3/4 episode *generation* scales with cores but every
 //! sequential `loss_and_grads` + Adam step runs on the leader thread —
@@ -15,9 +15,14 @@
 //!
 //! Acceptance target: accumulate >= 2x updates/sec at 4 threads vs
 //! sequential at 4 threads (needs >= 4 physical cores; smoke mode
-//! merely validates the harness + schema).
+//! merely validates the harness + schema). The fused section
+//! (`fused_rows`) compares `accumulate-fused` — the cross-episode
+//! batched backward that routes per-layer weight gradients through ONE
+//! packed `[batch*rows x d] x [d x d]` product (DESIGN.md §14 round
+//! 2) — against per-episode accumulate at every thread count.
 //!
-//! The bench also *asserts* the determinism contract: accumulate-mode
+//! The bench also *asserts* the determinism contract: accumulate- and
+//! accumulate-fused-mode
 //! parameters must be bit-identical at every measured thread count —
 //! and the fault-tolerance contract: a Stage II run interrupted by a
 //! simulated mid-run kill and resumed from its checkpoint must land on
@@ -94,11 +99,15 @@ fn main() {
     let mut seq_base = 0.0f64;
     let mut seq_4t: Option<f64> = None;
     let mut acc_4t: Option<f64> = None;
-    for mode in [UpdateMode::Sequential, UpdateMode::Accumulate] {
-        let mode_name = match mode {
-            UpdateMode::Sequential => "sequential",
-            UpdateMode::Accumulate => "accumulate",
-        };
+    // per-thread-count accumulate vs fused throughputs for `fused_rows`
+    let mut acc_by_threads: std::collections::BTreeMap<usize, f64> = Default::default();
+    let mut fused_by_threads: std::collections::BTreeMap<usize, f64> = Default::default();
+    for mode in [
+        UpdateMode::Sequential,
+        UpdateMode::Accumulate,
+        UpdateMode::AccumulateFused,
+    ] {
+        let mode_name = mode.name();
         // warmup + determinism pin: the trained parameters are a pure
         // function of (seed, batch, mode) — never of the thread count
         let mut reference: Option<Vec<f32>> = None;
@@ -121,7 +130,17 @@ fn main() {
                 match mode {
                     UpdateMode::Sequential => seq_4t = Some(ups),
                     UpdateMode::Accumulate => acc_4t = Some(ups),
+                    UpdateMode::AccumulateFused => {}
                 }
+            }
+            match mode {
+                UpdateMode::Accumulate => {
+                    acc_by_threads.insert(threads, ups);
+                }
+                UpdateMode::AccumulateFused => {
+                    fused_by_threads.insert(threads, ups);
+                }
+                UpdateMode::Sequential => {}
             }
             let speedup = ups / seq_base.max(1e-12);
             table.row(vec![
@@ -145,6 +164,42 @@ fn main() {
         }
     }
     table.emit(Some(std::path::Path::new("runs/train_scaling.csv")));
+
+    // ---- fused vs per-episode accumulate backward (DESIGN.md §14 round 2)
+    //
+    // Same Stage II loop, same batch, same single-optimizer-step
+    // semantics; the fused mode replaces per-episode encoder backward
+    // kernel calls with one packed product per layer. The determinism
+    // pre-pass above already asserted fused params are bit-identical at
+    // every measured thread count (`fused_thread_bitwise_identical`).
+    let mut ftable = Table::new(
+        "fused cross-episode backward vs per-episode accumulate (higher is better)",
+        &["THREADS", "FUSED UPDATES/S", "MS/UPDATE", "VS ACCUMULATE"],
+    );
+    let mut fused_rows: Vec<Json> = Vec::new();
+    let mut fused_speedup_4t: Option<f64> = None;
+    for (&threads, &fups) in &fused_by_threads {
+        let Some(&aups) = acc_by_threads.get(&threads) else {
+            continue;
+        };
+        let speedup = fups / aups.max(1e-12);
+        if threads == 4 {
+            fused_speedup_4t = Some(speedup);
+        }
+        ftable.row(vec![
+            threads.to_string(),
+            format!("{fups:.2}"),
+            format!("{:.2}", 1e3 / fups),
+            format!("{speedup:.2}x"),
+        ]);
+        fused_rows.push(json::obj(vec![
+            ("threads", json::num(threads as f64)),
+            ("updates_per_sec", json::num(fups)),
+            ("ms_per_update", json::num(1e3 / fups)),
+            ("speedup_vs_accumulate", json::num(speedup)),
+        ]));
+    }
+    ftable.emit(None);
 
     // ---- kernel comparison: blocked GEMM vs scalar oracle (DESIGN.md §14)
     //
@@ -295,6 +350,14 @@ fn main() {
         ("speedup_accumulate_vs_sequential_4t", speedup_4t),
         ("target_speedup_4t", json::num(2.0)),
         ("rows", Json::Arr(rows)),
+        ("fused_rows", Json::Arr(fused_rows)),
+        (
+            "fused_speedup_vs_accumulate_4t",
+            match fused_speedup_4t {
+                Some(x) => json::num(x),
+                None => Json::Null,
+            },
+        ),
         ("kernel_rows", Json::Arr(kernel_rows)),
         (
             "kernel_speedup_blocked_vs_oracle_4t",
@@ -307,6 +370,7 @@ fn main() {
         // fields are only ever written true — they exist so the JSON
         // schema records that the pins actually ran
         ("kernel_bitwise_identical", Json::Bool(true)),
+        ("fused_thread_bitwise_identical", Json::Bool(true)),
         ("kill_resume_bitwise_identical", Json::Bool(true)),
     ]);
     std::fs::write(OUT_JSON, doc.to_string() + "\n").expect("writing BENCH_train.json");
@@ -322,6 +386,16 @@ fn main() {
                 "-- below target, but this host has < 4 cores (target needs >= 4)"
             } else {
                 "-- BELOW the >= 2x acceptance target"
+            }
+        );
+    }
+    if let Some(x) = fused_speedup_4t {
+        println!(
+            "fused vs per-episode accumulate backward at 4 threads: {x:.2}x {}",
+            if x >= 1.0 {
+                "-- the packed batch products pay for themselves"
+            } else {
+                "-- fused slower than per-episode here (expected to win as batch*rows grows)"
             }
         );
     }

@@ -221,12 +221,12 @@ fn rollout_cfg(args: &Args) -> doppler::rollout::RolloutCfg {
 }
 
 /// Parse `--update-mode` (default: the paper-faithful sequential loop;
-/// accumulate is a semantic knob — one optimizer step per batch — with
-/// its own determinism pins, DESIGN.md §13).
+/// the accumulate flavors are semantic knobs — one optimizer step per
+/// batch — with their own determinism pins, DESIGN.md §13/§14).
 fn update_mode(args: &Args) -> Result<doppler::train::UpdateMode> {
     let s = args.str_or("update-mode", "sequential");
     doppler::train::UpdateMode::parse(&s).with_context(|| {
-        format!("unknown --update-mode '{s}' (expected sequential|accumulate)")
+        format!("unknown --update-mode '{s}' (expected sequential|accumulate|accumulate-fused)")
     })
 }
 
@@ -391,9 +391,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let result = trainer.run(stages, &engine_cfg)?;
     println!(
-        "done in {:.1}s; best observed {:.1} ms",
+        "done in {:.1}s; best observed {:.1} ms (update mode: {})",
         t0.elapsed().as_secs_f64(),
-        result.best_time * 1e3
+        result.best_time * 1e3,
+        result.effective_update_mode.name()
     );
     if let Some(out) = args.get("out") {
         doppler::runtime::manifest::save_params(std::path::Path::new(out), &result.params)?;

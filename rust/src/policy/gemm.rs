@@ -245,6 +245,24 @@ pub fn matvec(a: &[f32], x: &[f32], rows: usize, inner: usize, out: &mut [f32]) 
     }
 }
 
+/// Tile `src` `reps` times along the row axis — the A-operand builder
+/// for the fused batch products (DESIGN.md §14, round 2). An accumulate
+/// batch shares one forward trace, so the Aᵀ·D weight gradient over a
+/// packed `[bs·rows × cols]` D-batch multiplies against `bs` repeats of
+/// the same `[rows × ...]` activation block. `reps == 1` borrows `src`
+/// unchanged, so the degenerate single-episode fused product issues a
+/// byte-identical kernel call to the per-episode path.
+pub fn tile_rows(src: &[f32], reps: usize) -> std::borrow::Cow<'_, [f32]> {
+    if reps == 1 {
+        return std::borrow::Cow::Borrowed(src);
+    }
+    let mut out = Vec::with_capacity(src.len() * reps);
+    for _ in 0..reps {
+        out.extend_from_slice(src);
+    }
+    std::borrow::Cow::Owned(out)
+}
+
 fn zero_out_rows(out: &mut [f32], dims: &MatDims) {
     for i in 0..dims.rows {
         let ob = i * dims.out_stride;

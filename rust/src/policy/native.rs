@@ -785,7 +785,10 @@ impl NativePolicy {
     /// Replay one trajectory through the heads and accumulate the full
     /// analytic parameter gradient into `grads` (zeroed here), given the
     /// precomputed [`Self::episode_forward`] activations. Returns
-    /// `(loss, mean entropy)`.
+    /// `(loss, mean entropy)`. Composition of the trajectory-dependent
+    /// [`Self::head_backward`] and the single-episode case of the
+    /// batchable [`Self::encoder_backward_batch`]; the op sequence is
+    /// bit-identical to the pre-split monolithic backward.
     #[allow(clippy::too_many_arguments)]
     fn backward_from_forward(
         &self,
@@ -801,8 +804,40 @@ impl NativePolicy {
         entropy_w: f32,
         grads: &mut [f32],
     ) -> Result<(f32, f32)> {
+        let mut dhcat = vec![0.0f32; enc.n * self.layout.sel_in];
+        let (loss, ent) = self.head_backward(
+            method, enc, params, tr, x_sel, q, traj, dev_mask, advantage, entropy_w, grads,
+            &mut dhcat,
+        )?;
+        self.encoder_backward_batch(enc, params, tr, &dhcat, 1, grads);
+        Ok((loss, ent))
+    }
+
+    /// The trajectory-dependent half of the backward: the MDP-step loop
+    /// over the SEL/PLC/GDP heads plus the shared SEL head backward.
+    /// Zeroes `grads` and `dhcat`, fills the head/device parameter
+    /// regions of `grads`, and leaves in `dhcat` (`[n × sel_in]`) the
+    /// adjoint flowing into the concatenated encoder output. The encoder
+    /// half is completed by [`Self::encoder_backward_batch`] — which a
+    /// fused batch calls ONCE over every episode's packed `dhcat` block.
+    #[allow(clippy::too_many_arguments)]
+    fn head_backward(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &[f32],
+        tr: &EncodeTrace,
+        x_sel: &[f32],
+        q: &[f32],
+        traj: &Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        entropy_w: f32,
+        grads: &mut [f32],
+        dhcat: &mut [f32],
+    ) -> Result<(f32, f32)> {
         let l = &self.layout;
-        let (h, si, m, df, nf) = (l.h, l.sel_in, l.m, l.df, l.nf);
+        let (h, si, m, df) = (l.h, l.sel_in, l.m, l.df);
         let n = enc.n;
         anyhow::ensure!(
             grads.len() == l.total,
@@ -816,14 +851,15 @@ impl NativePolicy {
             traj.sel_actions.len(),
             n
         );
+        debug_assert_eq!(dhcat.len(), n * si);
         grads.fill(0.0);
+        dhcat.fill(0.0);
         let hcat = &tr.hcat;
 
         let steps: f32 = traj.step_mask.iter().sum::<f32>().max(1.0);
         let dlogp_w = -advantage / steps;
         let dent_w = -entropy_w / steps;
 
-        let mut dhcat = vec![0.0f32; n * si];
         let mut dq = vec![0.0f32; n];
         let mut logp_total = 0.0f32;
         let mut ent_total = 0.0f32;
@@ -1135,46 +1171,85 @@ impl NativePolicy {
                 }
                 grads[l.sel_b0 + j] += s2;
             }
-            gemm::gemm_bt_acc(&dxs, &params[l.sel_w0..], n, h, si, &mut dhcat);
+            gemm::gemm_bt_acc(&dxs, &params[l.sel_w0..], n, h, si, dhcat);
         }
 
-        // ---- encoder backward ----
-        // dH_K = dHcat[:, :H] + Pb^T dHcat[:, H:2H] + Pt^T dHcat[:, 2H:3H]
-        let mut dh = vec![0.0f32; n * h];
-        for u in 0..n {
-            for j in 0..h {
-                dh[u * h + j] = dhcat[u * si + j];
-            }
-        }
-        for v in 0..n {
-            for u in 0..n {
-                let wb = enc.pb[v * n + u];
-                if wb != 0.0 {
-                    gemm::axpy(
-                        &mut dh[u * h..(u + 1) * h],
-                        &dhcat[v * si + h..v * si + 2 * h],
-                        wb,
-                    );
-                }
-                let wt = enc.pt[v * n + u];
-                if wt != 0.0 {
-                    gemm::axpy(
-                        &mut dh[u * h..(u + 1) * h],
-                        &dhcat[v * si + 2 * h..v * si + 3 * h],
-                        wt,
-                    );
-                }
-            }
-        }
-        let mut dz = vec![0.0f32; n * h];
-        for u in 0..n {
-            for j in 0..h {
-                dz[u * h + j] = dhcat[u * si + 3 * h + j];
-            }
-        }
+        Ok((loss, ent_avg))
+    }
 
+    /// Encoder backward over a packed batch of `bs` head-gradient blocks
+    /// (DESIGN.md §14, round 2). `dhcat` is `[bs·n × sel_in]` in
+    /// canonical episode-then-node row order; the forward trace `tr` is
+    /// batch-invariant (one parameter snapshot), so every weight-gradient
+    /// Aᵀ·D runs as ONE fused product per layer over the whole
+    /// `[bs·rows × d]` batch with the shared activations row-tiled
+    /// ([`gemm::tile_rows`]), and every input-gradient D·Bᵀ is
+    /// row-independent, so the batch is just more rows. Each output
+    /// element reduces in globally ascending (episode, row) order — the
+    /// §14 fixed-order contract extended over the batch axis, bit-stable
+    /// under any blocking or thread count but intentionally NOT the
+    /// sorted multiset order of the per-episode accumulate path (hence
+    /// the separate `accumulate-fused` blessing). At `bs == 1` the tiled
+    /// operands are borrowed unchanged and the op sequence is
+    /// byte-identical to the pre-split per-episode backward.
+    fn encoder_backward_batch(
+        &self,
+        enc: &GraphEncoding,
+        params: &[f32],
+        tr: &EncodeTrace,
+        dhcat: &[f32],
+        bs: usize,
+        grads: &mut [f32],
+    ) {
+        let l = &self.layout;
+        let (h, si, nf) = (l.h, l.sel_in, l.nf);
+        let n = enc.n;
         let e = enc.e;
-        let mut dmpre_mat = vec![0.0f32; e * h];
+        debug_assert_eq!(dhcat.len(), bs * n * si);
+
+        // dH_K = dHcat[:, :H] + Pb^T dHcat[:, H:2H] + Pt^T dHcat[:, 2H:3H]
+        let mut dh = vec![0.0f32; bs * n * h];
+        for ep in 0..bs {
+            let dc = &dhcat[ep * n * si..(ep + 1) * n * si];
+            let dhb = &mut dh[ep * n * h..(ep + 1) * n * h];
+            for u in 0..n {
+                for j in 0..h {
+                    dhb[u * h + j] = dc[u * si + j];
+                }
+            }
+            for v in 0..n {
+                for u in 0..n {
+                    let wb = enc.pb[v * n + u];
+                    if wb != 0.0 {
+                        gemm::axpy(
+                            &mut dhb[u * h..(u + 1) * h],
+                            &dc[v * si + h..v * si + 2 * h],
+                            wb,
+                        );
+                    }
+                    let wt = enc.pt[v * n + u];
+                    if wt != 0.0 {
+                        gemm::axpy(
+                            &mut dhb[u * h..(u + 1) * h],
+                            &dc[v * si + 2 * h..v * si + 3 * h],
+                            wt,
+                        );
+                    }
+                }
+            }
+        }
+        let mut dz = vec![0.0f32; bs * n * h];
+        for ep in 0..bs {
+            let dc = &dhcat[ep * n * si..(ep + 1) * n * si];
+            let dzb = &mut dz[ep * n * h..(ep + 1) * n * h];
+            for u in 0..n {
+                for j in 0..h {
+                    dzb[u * h + j] = dc[u * si + 3 * h + j];
+                }
+            }
+        }
+
+        let mut dmpre_mat = vec![0.0f32; bs * e * h];
         for (k, mp) in l.mpnn.iter().enumerate().rev() {
             let h_in = &tr.h_list[k];
             let h_out = &tr.h_list[k + 1];
@@ -1182,115 +1257,176 @@ impl NativePolicy {
             let hd_mat = &tr.hd_list[k];
             let msg = &tr.msgs[k];
             let agg = &tr.aggs[k];
-            let mut dcpre = vec![0.0f32; n * h];
-            for v in 0..n {
-                let nm = enc.node_mask[v];
-                for j in 0..h {
-                    let ho = h_out[v * h + j];
-                    dcpre[v * h + j] = dh[v * h + j] * (1.0 - ho * ho) * nm;
+            let mut dcpre = vec![0.0f32; bs * n * h];
+            for ep in 0..bs {
+                let dhb = &dh[ep * n * h..(ep + 1) * n * h];
+                let dcb = &mut dcpre[ep * n * h..(ep + 1) * n * h];
+                for v in 0..n {
+                    let nm = enc.node_mask[v];
+                    for j in 0..h {
+                        let ho = h_out[v * h + j];
+                        dcb[v * h + j] = dhb[v * h + j] * (1.0 - ho * ho) * nm;
+                    }
                 }
             }
-            // Wphi grads over cat = [h_in | agg]: two Aᵀ·D products into
-            // the disjoint halves of Wphi
-            gemm::gemm_at_b_acc(h_in, &dcpre, n, h, h, &mut grads[mp.wphi..mp.wphi + h * h]);
+            // Wphi grads over cat = [h_in | agg]: two fused Aᵀ·D
+            // products into the disjoint halves of Wphi, each over the
+            // whole [bs·n × H] batch against the row-tiled shared trace
             gemm::gemm_at_b_acc(
-                agg,
+                &gemm::tile_rows(h_in, bs),
                 &dcpre,
-                n,
+                bs * n,
+                h,
+                h,
+                &mut grads[mp.wphi..mp.wphi + h * h],
+            );
+            gemm::gemm_at_b_acc(
+                &gemm::tile_rows(agg, bs),
+                &dcpre,
+                bs * n,
                 h,
                 h,
                 &mut grads[mp.wphi + h * h..mp.wphi + 2 * h * h],
             );
             for j in 0..h {
                 let mut s2 = 0.0f32;
-                for v in 0..n {
-                    s2 += dcpre[v * h + j];
+                for r in 0..bs * n {
+                    s2 += dcpre[r * h + j];
                 }
                 grads[mp.bphi + j] += s2;
             }
-            // dcat = dcpre @ Wphi^T
-            let mut dh_new = vec![0.0f32; n * h];
-            let mut dagg = vec![0.0f32; n * h];
-            gemm::gemm_bt(&dcpre, &params[mp.wphi..], n, h, h, &mut dh_new);
-            gemm::gemm_bt(&dcpre, &params[mp.wphi + h * h..], n, h, h, &mut dagg);
-            // message backward through tanh into the full [e, H]
+            // dcat = dcpre @ Wphi^T (row-independent: the batch is just
+            // more rows through the same B operand)
+            let mut dh_new = vec![0.0f32; bs * n * h];
+            let mut dagg = vec![0.0f32; bs * n * h];
+            gemm::gemm_bt(&dcpre, &params[mp.wphi..], bs * n, h, h, &mut dh_new);
+            gemm::gemm_bt(&dcpre, &params[mp.wphi + h * h..], bs * n, h, h, &mut dagg);
+            // message backward through tanh into the full [bs·e, H]
             // pre-activation gradient (masked edges stay zero rows)
             dmpre_mat.fill(0.0);
-            for idx in 0..e {
-                if enc.edge_mask[idx] <= 0.0 {
-                    continue;
-                }
-                let dv = enc.edst[idx] as usize;
-                for j in 0..h {
-                    let ms = msg[idx * h + j];
-                    dmpre_mat[idx * h + j] = dagg[dv * h + j] * (1.0 - ms * ms);
+            for ep in 0..bs {
+                let daggb = &dagg[ep * n * h..(ep + 1) * n * h];
+                let dmb = &mut dmpre_mat[ep * e * h..(ep + 1) * e * h];
+                for idx in 0..e {
+                    if enc.edge_mask[idx] <= 0.0 {
+                        continue;
+                    }
+                    let dv = enc.edst[idx] as usize;
+                    for j in 0..h {
+                        let ms = msg[idx * h + j];
+                        dmb[idx * h + j] = daggb[dv * h + j] * (1.0 - ms * ms);
+                    }
                 }
             }
-            // message-layer weight grads: batched Aᵀ·D over all edges —
-            // the endpoint gathers have zero rows exactly where edges are
-            // masked, so the kernel's zero-skip reproduces the old
-            // per-edge gating
-            gemm::gemm_at_b_acc(hs_mat, &dmpre_mat, e, h, h, &mut grads[mp.wsrc..mp.wsrc + h * h]);
-            gemm::gemm_at_b_acc(hd_mat, &dmpre_mat, e, h, h, &mut grads[mp.wdst..mp.wdst + h * h]);
-            gemm::gemm_at_b_acc(&enc.efeat, &dmpre_mat, e, 1, h, &mut grads[mp.we..mp.we + h]);
+            // message-layer weight grads: one fused Aᵀ·D over all
+            // bs·e edge rows — the endpoint gathers have zero rows
+            // exactly where edges are masked, so the kernel's zero-skip
+            // reproduces the old per-edge gating
+            gemm::gemm_at_b_acc(
+                &gemm::tile_rows(hs_mat, bs),
+                &dmpre_mat,
+                bs * e,
+                h,
+                h,
+                &mut grads[mp.wsrc..mp.wsrc + h * h],
+            );
+            gemm::gemm_at_b_acc(
+                &gemm::tile_rows(hd_mat, bs),
+                &dmpre_mat,
+                bs * e,
+                h,
+                h,
+                &mut grads[mp.wdst..mp.wdst + h * h],
+            );
+            gemm::gemm_at_b_acc(
+                &gemm::tile_rows(&enc.efeat, bs),
+                &dmpre_mat,
+                bs * e,
+                1,
+                h,
+                &mut grads[mp.we..mp.we + h],
+            );
             for j in 0..h {
                 let mut s2 = 0.0f32;
-                for idx in 0..e {
-                    s2 += dmpre_mat[idx * h + j];
+                for r in 0..bs * e {
+                    s2 += dmpre_mat[r * h + j];
                 }
                 grads[mp.bm + j] += s2;
             }
             // scatter the message gradient back to the endpoint embeddings
-            for idx in 0..e {
-                if enc.edge_mask[idx] <= 0.0 {
-                    continue;
-                }
-                let sv = enc.esrc[idx] as usize;
-                let dv = enc.edst[idx] as usize;
-                let mrow = &dmpre_mat[idx * h..(idx + 1) * h];
-                for i in 0..h {
-                    dh_new[sv * h + i] +=
-                        gemm::dot(mrow, &params[mp.wsrc + i * h..mp.wsrc + (i + 1) * h]);
-                    dh_new[dv * h + i] +=
-                        gemm::dot(mrow, &params[mp.wdst + i * h..mp.wdst + (i + 1) * h]);
+            for ep in 0..bs {
+                let dmb = &dmpre_mat[ep * e * h..(ep + 1) * e * h];
+                let dhb = &mut dh_new[ep * n * h..(ep + 1) * n * h];
+                for idx in 0..e {
+                    if enc.edge_mask[idx] <= 0.0 {
+                        continue;
+                    }
+                    let sv = enc.esrc[idx] as usize;
+                    let dv = enc.edst[idx] as usize;
+                    let mrow = &dmb[idx * h..(idx + 1) * h];
+                    for i in 0..h {
+                        dhb[sv * h + i] +=
+                            gemm::dot(mrow, &params[mp.wsrc + i * h..mp.wsrc + (i + 1) * h]);
+                        dhb[dv * h + i] +=
+                            gemm::dot(mrow, &params[mp.wdst + i * h..mp.wdst + (i + 1) * h]);
+                    }
                 }
             }
             dh = dh_new;
         }
 
         // h_0 = Z: fold the MPNN path into dZ, then FFNN backward
-        for v in 0..n {
-            let nm = enc.node_mask[v];
-            for j in 0..h {
-                dz[v * h + j] = (dz[v * h + j] + dh[v * h + j]) * nm;
+        for ep in 0..bs {
+            let dhb = &dh[ep * n * h..(ep + 1) * n * h];
+            let dzb = &mut dz[ep * n * h..(ep + 1) * n * h];
+            for v in 0..n {
+                let nm = enc.node_mask[v];
+                for j in 0..h {
+                    dzb[v * h + j] = (dzb[v * h + j] + dhb[v * h + j]) * nm;
+                }
             }
         }
-        gemm::gemm_at_b_acc(&tr.a, &dz, n, h, h, &mut grads[l.enc_w1..l.enc_w1 + h * h]);
+        gemm::gemm_at_b_acc(
+            &gemm::tile_rows(&tr.a, bs),
+            &dz,
+            bs * n,
+            h,
+            h,
+            &mut grads[l.enc_w1..l.enc_w1 + h * h],
+        );
         for j in 0..h {
             let mut s2 = 0.0f32;
-            for v in 0..n {
-                s2 += dz[v * h + j];
+            for r in 0..bs * n {
+                s2 += dz[r * h + j];
             }
             grads[l.enc_b1 + j] += s2;
         }
         // da = dz @ W1ᵀ, then the relu gate re-zeroes inactive units
-        let mut da = vec![0.0f32; n * h];
-        gemm::gemm_bt(&dz, &params[l.enc_w1..], n, h, h, &mut da);
-        for (dv, &av) in da.iter_mut().zip(tr.a.iter()) {
-            if av <= 0.0 {
-                *dv = 0.0;
+        let mut da = vec![0.0f32; bs * n * h];
+        gemm::gemm_bt(&dz, &params[l.enc_w1..], bs * n, h, h, &mut da);
+        for ep in 0..bs {
+            let dab = &mut da[ep * n * h..(ep + 1) * n * h];
+            for (dv, &av) in dab.iter_mut().zip(tr.a.iter()) {
+                if av <= 0.0 {
+                    *dv = 0.0;
+                }
             }
         }
-        gemm::gemm_at_b_acc(&enc.xv, &da, n, nf, h, &mut grads[l.enc_w0..l.enc_w0 + nf * h]);
+        gemm::gemm_at_b_acc(
+            &gemm::tile_rows(&enc.xv, bs),
+            &da,
+            bs * n,
+            nf,
+            h,
+            &mut grads[l.enc_w0..l.enc_w0 + nf * h],
+        );
         for j in 0..h {
             let mut s2 = 0.0f32;
-            for v in 0..n {
-                s2 += da[v * h + j];
+            for r in 0..bs * n {
+                s2 += da[r * h + j];
             }
             grads[l.enc_b0 + j] += s2;
         }
-
-        Ok((loss, ent_avg))
     }
 
     /// Global-norm clip at 1.0 + one Adam update in place (model.py
@@ -1386,20 +1522,78 @@ impl NativePolicy {
         if items.is_empty() {
             return Ok(Vec::new());
         }
+        let (reduced, out) =
+            self.batch_gradients(method, enc, params, items, dev_mask, entropy_w, threads)?;
+        self.clipped_adam_step(params, opt, &reduced, lr);
+        Ok(out)
+    }
+
+    /// Fused-batch REINFORCE update — `accumulate-fused` mode (DESIGN.md
+    /// §14, round 2): same parallel per-episode head backwards as
+    /// [`Self::train_batch_step`], but the per-episode rows stop at the
+    /// `dhcat` adjoint and the whole encoder backward runs ONCE over the
+    /// packed `[batch·n × sel_in]` adjoint batch — one fused Aᵀ·D
+    /// product per layer instead of `batch` independent kernel calls.
+    ///
+    /// Determinism: bit-identical at any thread count (index-keyed rows
+    /// + a leader-thread fusion), but NOT invariant under within-batch
+    /// item permutation — the fused reduction is positional
+    /// (episode-then-row ascending), which is exactly why this mode is
+    /// blessed separately from `accumulate`'s sorted-multiset contract.
+    /// For `items.len() == 1` it is bit-identical to both pinned modes.
+    #[allow(clippy::too_many_arguments)]
+    pub fn train_batch_fused_step(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        items: &[TrainItem<'_>],
+        dev_mask: &[f32],
+        lr: f32,
+        entropy_w: f32,
+        threads: usize,
+    ) -> Result<Vec<(f32, f32)>> {
+        if items.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (reduced, out) =
+            self.batch_gradients_fused(method, enc, params, items, dev_mask, entropy_w, threads)?;
+        self.clipped_adam_step(params, opt, &reduced, lr);
+        Ok(out)
+    }
+
+    /// The gradient half of [`Self::train_batch_step`]: the reduced
+    /// per-batch gradient (sorted-multiset order, DESIGN.md §13) plus
+    /// per-item `(loss, entropy)`, without touching the optimizer.
+    /// Public so the fused-vs-accumulate property tests can compare raw
+    /// gradients instead of post-Adam parameters (Adam's per-parameter
+    /// normalization would amplify near-zero differences).
+    #[allow(clippy::too_many_arguments)]
+    pub fn batch_gradients(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &[f32],
+        items: &[TrainItem<'_>],
+        dev_mask: &[f32],
+        entropy_w: f32,
+        threads: usize,
+    ) -> Result<(Vec<f32>, Vec<(f32, f32)>)> {
+        anyhow::ensure!(!items.is_empty(), "batch_gradients on an empty batch");
         let total = self.layout.total;
         let bs = items.len();
-        let snapshot: &[f32] = &params[..];
         anyhow::ensure!(
-            snapshot.len() == total,
+            params.len() == total,
             "param blob len {} != layout {}",
-            snapshot.len(),
+            params.len(),
             total
         );
         // the whole batch samples from one snapshot, so the encoder
         // trace and SEL scores are batch-invariant: run that forward
         // ONCE and share it across every episode's backward (sequential
         // mode replays it per episode)
-        let (tr, x_sel, q) = self.episode_forward(method, enc, snapshot);
+        let (tr, x_sel, q) = self.episode_forward(method, enc, params);
         let mut grad_mat = vec![0.0f32; bs * total];
         let stats: Vec<Result<(f32, f32)>> = {
             let rows: Vec<std::sync::Mutex<&mut [f32]>> =
@@ -1419,7 +1613,7 @@ impl NativePolicy {
                     self.backward_from_forward(
                         method,
                         enc,
-                        snapshot,
+                        params,
                         &tr,
                         &x_sel,
                         &q,
@@ -1447,8 +1641,100 @@ impl NativePolicy {
         }
         let mut reduced = vec![0.0f32; total];
         reduce_gradients(&grad_mat, bs, total, &mut reduced);
-        self.clipped_adam_step(params, opt, &reduced, lr);
-        Ok(out)
+        Ok((reduced, out))
+    }
+
+    /// The gradient half of [`Self::train_batch_fused_step`]: per-episode
+    /// head backwards fanned over the worker pool into `(grad row, dhcat
+    /// block)` pairs, a positional episode-ascending reduction of the
+    /// head rows, then ONE [`Self::encoder_backward_batch`] over the
+    /// packed adjoint batch. Public for the property tests, like
+    /// [`Self::batch_gradients`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn batch_gradients_fused(
+        &self,
+        method: Method,
+        enc: &GraphEncoding,
+        params: &[f32],
+        items: &[TrainItem<'_>],
+        dev_mask: &[f32],
+        entropy_w: f32,
+        threads: usize,
+    ) -> Result<(Vec<f32>, Vec<(f32, f32)>)> {
+        anyhow::ensure!(!items.is_empty(), "batch_gradients_fused on an empty batch");
+        let total = self.layout.total;
+        let bs = items.len();
+        let n = enc.n;
+        let si = self.layout.sel_in;
+        anyhow::ensure!(
+            params.len() == total,
+            "param blob len {} != layout {}",
+            params.len(),
+            total
+        );
+        let (tr, x_sel, q) = self.episode_forward(method, enc, params);
+        let mut grad_mat = vec![0.0f32; bs * total];
+        let mut dhcat_mat = vec![0.0f32; bs * n * si];
+        let stats: Vec<Result<(f32, f32)>> = {
+            // each index owns one (grad row, dhcat block) pair; the pair
+            // shares a mutex so a panicked retry re-zeroes both halves
+            let rows: Vec<std::sync::Mutex<(&mut [f32], &mut [f32])>> = grad_mat
+                .chunks_mut(total)
+                .zip(dhcat_mat.chunks_mut(n * si))
+                .map(|pair| std::sync::Mutex::new((pair.0, pair.1)))
+                .collect();
+            crate::rollout::parallel_map_site(
+                crate::runtime::resilience::SITE_BACKWARD,
+                threads,
+                bs,
+                |i| {
+                    let mut pair = rows[i].lock().unwrap_or_else(|e| e.into_inner());
+                    let (row, dhcat) = &mut *pair;
+                    row.fill(0.0);
+                    dhcat.fill(0.0);
+                    self.head_backward(
+                        method,
+                        enc,
+                        params,
+                        &tr,
+                        &x_sel,
+                        &q,
+                        items[i].traj,
+                        dev_mask,
+                        items[i].advantage,
+                        entropy_w,
+                        row,
+                        dhcat,
+                    )
+                },
+            )?
+        };
+        let mut out = Vec::with_capacity(bs);
+        for (i, s) in stats.into_iter().enumerate() {
+            let (loss, ent) = s?;
+            // Anomaly quarantine (DESIGN.md §15): a quarantined episode
+            // must vanish from BOTH reductions — its head-gradient row
+            // (positional sum) and its dhcat block (all-zero D rows
+            // contribute exact zeros through every fused product)
+            if !loss.is_finite() {
+                crate::runtime::resilience::note_anomaly();
+                grad_mat[i * total..(i + 1) * total].fill(0.0);
+                dhcat_mat[i * n * si..(i + 1) * n * si].fill(0.0);
+            }
+            out.push((loss, ent));
+        }
+        // positional episode-ascending head reduction (encoder regions
+        // of every row are still zero, so they stay exactly zero here)
+        let mut reduced = vec![0.0f32; total];
+        reduced.copy_from_slice(&grad_mat[..total]);
+        for i in 1..bs {
+            for (o, g) in reduced.iter_mut().zip(&grad_mat[i * total..(i + 1) * total]) {
+                *o += *g;
+            }
+        }
+        // ONE fused encoder backward over the packed adjoint batch
+        self.encoder_backward_batch(enc, params, &tr, &dhcat_mat, bs, &mut reduced);
+        Ok((reduced, out))
     }
 }
 
@@ -1636,6 +1922,25 @@ impl PolicyBackend for NativePolicy {
         threads: usize,
     ) -> Result<Vec<(f32, f32)>> {
         self.train_batch_step(method, enc, params, opt, items, dev_mask, lr, entropy_w, threads)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn train_batch_fused(
+        &self,
+        method: Method,
+        _variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        items: &[TrainItem<'_>],
+        dev_mask: &[f32],
+        lr: f32,
+        entropy_w: f32,
+        threads: usize,
+    ) -> Result<Vec<(f32, f32)>> {
+        self.train_batch_fused_step(
+            method, enc, params, opt, items, dev_mask, lr, entropy_w, threads,
+        )
     }
 
     fn as_sync(&self) -> Option<&(dyn PolicyBackend + Sync)> {

@@ -242,6 +242,38 @@ pub trait PolicyBackend {
         Ok(out)
     }
 
+    /// [`PolicyBackend::train_batch`] with the fused cross-episode
+    /// backward (`--update-mode accumulate-fused`, DESIGN.md §14 round
+    /// 2): per-layer weight gradients computed as one `[batch·rows × d]
+    /// × [d × d]`-shaped product over the packed episode batch instead
+    /// of per-episode kernel calls. Same single-optimizer-step semantics
+    /// as `train_batch`; the gradient differs only in f32 reduction
+    /// order (positional episode-ascending instead of sorted-multiset).
+    ///
+    /// The default delegates to [`PolicyBackend::train_batch`]: a
+    /// backend without native gradient access has nothing to fuse, and
+    /// the trainer never routes fused mode to such backends anyway (it
+    /// requires [`PolicyBackend::as_sync`]). Only the native backend
+    /// overrides this.
+    #[allow(clippy::too_many_arguments)]
+    fn train_batch_fused(
+        &self,
+        method: Method,
+        variant: &VariantInfo,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        items: &[TrainItem<'_>],
+        dev_mask: &[f32],
+        lr: f32,
+        entropy_w: f32,
+        threads: usize,
+    ) -> Result<Vec<(f32, f32)>> {
+        self.train_batch(
+            method, variant, enc, params, opt, items, dev_mask, lr, entropy_w, threads,
+        )
+    }
+
     /// A `Sync` view of this backend for parallel episode fan-out, or
     /// `None` when the backend is leader-thread-only (PJRT).
     fn as_sync(&self) -> Option<&(dyn PolicyBackend + Sync)>;

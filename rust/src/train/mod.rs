@@ -84,6 +84,19 @@ pub enum UpdateMode {
     /// episode permutation. Requires a backend with gradient access
     /// (native); PJRT keeps its leader-thread sequential fallback.
     Accumulate,
+    /// `Accumulate` with the fused cross-episode backward (DESIGN.md
+    /// §14, round 2): per-layer weight gradients run as ONE
+    /// `[batch·rows × d] × [d × d]`-shaped product over the packed
+    /// episode batch instead of per-episode kernel calls
+    /// ([`PolicyBackend::train_batch_fused`]). Same
+    /// one-optimizer-step-per-batch semantics as `Accumulate`;
+    /// **separately blessed numerics**: the fused f32 reduction is
+    /// positional (episode-then-row ascending), so results are
+    /// bit-identical at any thread count / kernel blocking but NOT
+    /// invariant under within-batch episode permutation (and differ
+    /// from `Accumulate`'s sorted-multiset reduction at ~1e-6 rel err,
+    /// coinciding bitwise for single-episode batches).
+    AccumulateFused,
 }
 
 impl UpdateMode {
@@ -91,8 +104,24 @@ impl UpdateMode {
         match s {
             "sequential" => Some(UpdateMode::Sequential),
             "accumulate" => Some(UpdateMode::Accumulate),
+            "accumulate-fused" => Some(UpdateMode::AccumulateFused),
             _ => None,
         }
+    }
+
+    /// The `--update-mode` spelling (inverse of [`UpdateMode::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            UpdateMode::Sequential => "sequential",
+            UpdateMode::Accumulate => "accumulate",
+            UpdateMode::AccumulateFused => "accumulate-fused",
+        }
+    }
+
+    /// Whether Stage II updates are grouped into `episode_batch`-sized
+    /// optimizer steps (either accumulate flavor).
+    pub fn is_batched(&self) -> bool {
+        !matches!(self, UpdateMode::Sequential)
     }
 }
 
@@ -269,6 +298,11 @@ pub struct TrainResult {
     /// Stage III episodes that fell back to the simulator reward after
     /// the real engine stayed unavailable through its retry budget.
     pub engine_fallbacks: usize,
+    /// The update mode that actually drove the optimizer: equal to
+    /// `TrainConfig::update_mode` unless a batched mode degraded to
+    /// `Sequential` on a backend without gradient access (PJRT), in
+    /// which case the degradation also warned on stderr.
+    pub effective_update_mode: UpdateMode,
 }
 
 /// The trainer: owns policy params + optimizer state for one graph
@@ -309,6 +343,11 @@ pub struct Trainer<'a> {
     anomalies: usize,
     /// Stage III simulator fallbacks after engine retry exhaustion.
     engine_fallbacks: usize,
+    /// The update mode actually applied: starts as `cfg.update_mode` and
+    /// degrades (once, with a stderr warning) to `Sequential` when a
+    /// batched mode is requested on a backend without gradient access
+    /// (PJRT). Surfaced in [`TrainResult::effective_update_mode`].
+    effective_update_mode: UpdateMode,
 }
 
 impl<'a> Trainer<'a> {
@@ -325,6 +364,7 @@ impl<'a> Trainer<'a> {
         let opt = OptState::new(params.len());
         let dev_mask = crate::policy::device_mask(nets.manifest().max_devices, cfg.n_devices);
         let rng = Rng::new(cfg.seed ^ 0xD0BB1E);
+        let effective_update_mode = cfg.update_mode;
         Ok(Trainer {
             nets,
             g,
@@ -349,7 +389,27 @@ impl<'a> Trainer<'a> {
             last_ckpt: 0,
             anomalies: 0,
             engine_fallbacks: 0,
+            effective_update_mode,
         })
+    }
+
+    /// Record (once, loudly) that the configured batched update mode
+    /// cannot run on this backend: without a `Sync` view there is no
+    /// gradient access to batch over, so updates degrade to the
+    /// leader-thread sequential loop (DESIGN.md §13). Same one-line
+    /// stderr pattern as the cli.rs `parsed_or` warnings; the effective
+    /// mode is surfaced in [`TrainResult::effective_update_mode`].
+    fn note_backend_fallback(&mut self) {
+        if self.effective_update_mode == UpdateMode::Sequential {
+            return;
+        }
+        eprintln!(
+            "warning: ignoring --update-mode {}: the {} backend has no gradient access; \
+             falling back to the sequential update loop",
+            self.cfg.update_mode.name(),
+            self.nets.kind()
+        );
+        self.effective_update_mode = UpdateMode::Sequential;
     }
 
     /// Start from pretrained parameters (transfer learning, Table 4/11).
@@ -360,11 +420,26 @@ impl<'a> Trainer<'a> {
     }
 
     /// Stage I: imitation of the CRITICAL PATH teacher.
+    ///
+    /// Under a batched update mode (either accumulate flavor) with a
+    /// `Sync` backend, teacher episodes are grouped into
+    /// `episode_batch`-sized single-optimizer-step updates (the ROADMAP
+    /// "Stage I could batch teacher episodes" item). Teacher episodes
+    /// are generated on the leader in the SAME rng order as the
+    /// sequential loop — only the update grouping changes, so the
+    /// teacher curriculum is identical and `opt.t` counts batches
+    /// exactly as in Stage II accumulate mode (DESIGN.md §13).
     pub fn stage1_imitation(&mut self, episodes: usize) -> Result<()> {
         let sel_mode = match self.cfg.method {
             Method::Doppler => teacher::TeacherSel::CriticalPath,
             _ => teacher::TeacherSel::TopoOrder,
         };
+        if self.cfg.update_mode.is_batched() {
+            if self.nets.as_sync().is_some() {
+                return self.stage1_imitation_batched(episodes, sel_mode);
+            }
+            self.note_backend_fallback();
+        }
         for i in self.stage_start(1, episodes)..episodes {
             let (_, traj) = teacher::run_teacher_episode(
                 self.g,
@@ -401,6 +476,92 @@ impl<'a> Trainer<'a> {
                 anomalies: self.anomalies,
             });
             self.advance_cursor(1, i + 1, 1)?;
+        }
+        Ok(())
+    }
+
+    /// Batched Stage I tail: teacher episodes generated sequentially on
+    /// the leader (same rng stream consumption as the sequential loop),
+    /// then updated in `episode_batch` groups with ONE clipped Adam step
+    /// per group — cross-entropy items (advantage 1, entropy weight 0)
+    /// at the imitation lr, through [`PolicyBackend::train_batch`] or
+    /// its fused variant per the configured mode. Checkpoints land on
+    /// batch boundaries, mirroring [`Trainer::stage2_sim`].
+    fn stage1_imitation_batched(
+        &mut self,
+        episodes: usize,
+        sel_mode: teacher::TeacherSel,
+    ) -> Result<()> {
+        let fused = self.cfg.update_mode == UpdateMode::AccumulateFused;
+        let lr = self.cfg.lr.start as f32; // imitation at the initial lr
+        let mut done = self.stage_start(1, episodes);
+        while done < episodes {
+            let bs = self.cfg.episode_batch.min(episodes - done).max(1);
+            let trajs: Vec<_> = (0..bs)
+                .map(|_| {
+                    teacher::run_teacher_episode(
+                        self.g,
+                        &self.topo,
+                        &self.feats,
+                        &self.enc,
+                        self.nets.manifest().max_devices,
+                        self.cfg.n_devices,
+                        sel_mode,
+                        0.25,
+                        &mut self.rng,
+                    )
+                    .1
+                })
+                .collect();
+            let items: Vec<TrainItem> = trajs
+                .iter()
+                .map(|traj| TrainItem { traj, advantage: 1.0 })
+                .collect();
+            let stats = if fused {
+                self.nets.train_batch_fused(
+                    self.cfg.method,
+                    &self.variant,
+                    &self.enc,
+                    &mut self.params,
+                    &mut self.opt,
+                    &items,
+                    &self.dev_mask,
+                    lr,
+                    0.0,
+                    self.cfg.rollout.threads,
+                )?
+            } else {
+                self.nets.train_batch(
+                    self.cfg.method,
+                    &self.variant,
+                    &self.enc,
+                    &mut self.params,
+                    &mut self.opt,
+                    &items,
+                    &self.dev_mask,
+                    lr,
+                    0.0,
+                    self.cfg.rollout.threads,
+                )?
+            };
+            for (loss, ent) in stats {
+                if !loss.is_finite() {
+                    // backend-side quarantine: its gradient row was zeroed
+                    self.anomalies += 1;
+                }
+                self.history.push(LogRow {
+                    episode: self.history.len(),
+                    stage: 1,
+                    exec_time: f64::NAN,
+                    best_time: self.best.as_ref().map_or(f64::NAN, |b| b.1),
+                    loss,
+                    entropy: ent,
+                    encode_calls: 0,
+                    anomalies: self.anomalies,
+                });
+            }
+            done += bs;
+            self.advance_cursor(1, done, bs)?;
         }
         Ok(())
     }
@@ -656,17 +817,17 @@ impl<'a> Trainer<'a> {
     /// order. `episode_batch = 1` (default) is the paper-faithful
     /// sequential loop; the PJRT backend always uses it.
     pub fn stage2_sim(&mut self, episodes: usize) -> Result<()> {
-        let accumulate = self.cfg.update_mode == UpdateMode::Accumulate;
-        if accumulate {
+        let batched = self.cfg.update_mode.is_batched();
+        if batched {
             // the ablated (teacher-forced) episode path is leader-only
-            // and inherently sequential; accumulate mode over it would
-            // silently mean something else
+            // and inherently sequential; a batched update mode over it
+            // would silently mean something else
             anyhow::ensure!(
                 !self.cfg.force_teacher_sel && !self.cfg.force_teacher_plc,
-                "accumulate update mode does not support teacher-forcing ablations"
+                "accumulate update modes do not support teacher-forcing ablations"
             );
         }
-        if (self.cfg.episode_batch > 1 || accumulate)
+        if (self.cfg.episode_batch > 1 || batched)
             && !self.cfg.force_teacher_sel
             && !self.cfg.force_teacher_plc
         {
@@ -685,8 +846,11 @@ impl<'a> Trainer<'a> {
                 return Ok(());
             }
             // no Sync view (PJRT): keep the leader-thread sequential
-            // loop — the documented accumulate-mode fallback for
-            // backends without gradient access (DESIGN.md §13)
+            // loop — the documented fallback for backends without
+            // gradient access (DESIGN.md §13) — but never silently:
+            // a batched update mode that degrades warns once and is
+            // surfaced in `TrainResult::effective_update_mode`
+            self.note_backend_fallback();
         }
         let sim_cfg = self.cfg.sim.clone();
         let g = self.g;
@@ -774,7 +938,9 @@ impl<'a> Trainer<'a> {
                     self.apply_update(start + j, total, 2, ep, rewards[j])?;
                 }
             }
-            UpdateMode::Accumulate => self.apply_batch_update(start, total, &eps, &rewards)?,
+            UpdateMode::Accumulate | UpdateMode::AccumulateFused => {
+                self.apply_batch_update(start, total, &eps, &rewards)?
+            }
         }
         Ok(())
     }
@@ -821,6 +987,19 @@ impl<'a> Trainer<'a> {
             .collect();
         let stats = if items.is_empty() {
             Vec::new()
+        } else if self.cfg.update_mode == UpdateMode::AccumulateFused {
+            self.nets.train_batch_fused(
+                self.cfg.method,
+                &self.variant,
+                &self.enc,
+                &mut self.params,
+                &mut self.opt,
+                &items,
+                &self.dev_mask,
+                lr,
+                self.cfg.entropy_w,
+                self.cfg.rollout.threads,
+            )?
         } else {
             self.nets.train_batch(
                 self.cfg.method,
@@ -945,6 +1124,7 @@ impl<'a> Trainer<'a> {
             history: self.history,
             anomalies: self.anomalies,
             engine_fallbacks: self.engine_fallbacks,
+            effective_update_mode: self.effective_update_mode,
         })
     }
 

@@ -37,6 +37,16 @@
 //! contract is unchanged: batch boundaries follow the same (round,
 //! workload) interleave, so shared params stay bit-identical at any
 //! thread count and under member-list permutation in either mode.
+//!
+//! `AccumulateFused` (DESIGN.md §14, round 2) flows through the same
+//! chunk machinery — each member chunk's encoder backward runs as one
+//! fused cross-episode product batch, and Stage I imitation chunks
+//! batch their teacher episodes too. Fused runs stay bit-identical at
+//! any thread count; within-chunk permutation invariance is replaced by
+//! the canonical episode order (the chunk order is already canonical
+//! here, so the multi-graph contract above is unaffected). Checkpoint
+//! fingerprints include the update mode, so a fused run never resumes
+//! an accumulate blob or vice versa.
 
 use anyhow::{Context, Result};
 

@@ -17,8 +17,21 @@
 //! - **larger batches are intentionally different numerics** — one
 //!   optimizer step per batch, `opt.t` counting batches.
 //!
+//! `--update-mode accumulate-fused` (DESIGN.md §14 "round 2") keeps the
+//! same one-optimizer-step-per-batch semantics but computes encoder
+//! weight gradients as fused cross-episode GEMM products over the
+//! packed episode batch, reducing in canonical episode-then-row
+//! positional order instead of the sorted per-episode multiset. Its
+//! pins are the `fused_*` tests below: per-parameter agreement with
+//! the per-episode reduction within 1e-6 relative error, bit-identity
+//! across 1/2/4/8 rollout threads, bitwise bs = 1 degeneration to a
+//! single sequential step, empty-batch no-op, Stage I teacher-episode
+//! batching (`opt.t` counts batches), and the one-line stderr fallback
+//! to sequential updates on backends without gradient access.
+//!
 //! Runs entirely on the native backend: zero artifacts required. CI
-//! runs this file as a named step in the determinism-pins job.
+//! runs this file as a named step in the determinism-pins job, plus a
+//! `fused_`-filtered step so the fused pins are visible by name.
 
 use doppler::graph::workloads::{chainmm, Scale};
 use doppler::policy::{
@@ -289,4 +302,387 @@ fn accumulate_works_for_all_methods() {
             "{method:?}: non-finite loss"
         );
     }
+}
+
+// ---------------------------------------------------------------------
+// Fused cross-episode backward (`--update-mode accumulate-fused`)
+// ---------------------------------------------------------------------
+
+/// Property pin: the fused batch backward's per-parameter gradients
+/// match the per-episode-row path within 1e-6 relative error, and the
+/// per-item (loss, entropy) stats — produced by the identical head
+/// backward in both paths — are bitwise equal.
+#[test]
+fn fused_gradients_match_accumulate_within_tol() {
+    let (nets, enc, eps, params) = episode_fixture();
+    let dm = device_mask(nets.manifest().max_devices, 4);
+    let advantages = [0.8f32, -0.3, 0.05, -1.1, 0.6];
+    let items: Vec<TrainItem> = eps
+        .iter()
+        .zip(advantages)
+        .map(|(ep, advantage)| TrainItem {
+            traj: &ep.trajectory,
+            advantage,
+        })
+        .collect();
+    let (g_acc, s_acc) = nets
+        .batch_gradients(Method::Doppler, &enc, &params, &items, &dm, 1e-2, 2)
+        .unwrap();
+    let (g_fused, s_fused) = nets
+        .batch_gradients_fused(Method::Doppler, &enc, &params, &items, &dm, 1e-2, 2)
+        .unwrap();
+    assert_eq!(s_fused, s_acc, "head losses must be bitwise identical");
+    assert_eq!(g_fused.len(), g_acc.len());
+    // both are sums of the same per-episode f32 gradients in different
+    // reduction orders: bounded by a relative tolerance against the
+    // batch gradient scale (absolute for near-zero parameters)
+    let scale = g_acc.iter().fold(1.0f32, |m, g| m.max(g.abs()));
+    let mut worst = 0.0f32;
+    for (i, (a, f)) in g_acc.iter().zip(&g_fused).enumerate() {
+        let err = (a - f).abs() / scale;
+        assert!(
+            err <= 1e-6,
+            "param {i}: accumulate {a} vs fused {f} (rel err {err:e})"
+        );
+        worst = worst.max(err);
+    }
+    assert!(worst.is_finite());
+}
+
+/// The fused gradient is a pure function of the batch: bit-identical
+/// at 1/2/4/8 worker threads (the §14 fixed-order reduction contract
+/// extended to packed batch matrices).
+#[test]
+fn fused_gradients_bitwise_deterministic_across_threads() {
+    let (nets, enc, eps, params) = episode_fixture();
+    let dm = device_mask(nets.manifest().max_devices, 4);
+    let items: Vec<TrainItem> = eps
+        .iter()
+        .map(|ep| TrainItem {
+            traj: &ep.trajectory,
+            advantage: 0.7,
+        })
+        .collect();
+    let run = |threads: usize| {
+        nets.batch_gradients_fused(Method::Doppler, &enc, &params, &items, &dm, 1e-2, threads)
+            .unwrap()
+    };
+    let (g1, s1) = run(1);
+    for threads in [2usize, 4, 8] {
+        let (g, s) = run(threads);
+        assert_eq!(s, s1, "threads={threads}: fused stats diverged");
+        assert_eq!(g, g1, "threads={threads}: thread count leaked into fused gradient");
+    }
+}
+
+/// End-to-end Stage II pin: whole accumulate-fused training runs are
+/// bit-identical across rollout thread counts (CI runs this under the
+/// named fused determinism step).
+#[test]
+fn fused_stage2_bit_identical_across_thread_counts() {
+    let (p1, h1) = run_stage2(1, 4, UpdateMode::AccumulateFused);
+    for threads in [2usize, 4, 8] {
+        let (p, h) = run_stage2(threads, 4, UpdateMode::AccumulateFused);
+        assert_eq!(h, h1, "threads={threads}: fused history diverged");
+        assert_eq!(
+            p, p1,
+            "threads={threads}: thread count leaked into fused params"
+        );
+    }
+}
+
+/// bs = 1 degenerate: the packed batch IS the single episode (tiling is
+/// a borrow, the positional reduction is a copy), so a one-item fused
+/// batch reproduces one sequential train step bit for bit.
+#[test]
+fn fused_single_item_matches_sequential_train_bitwise() {
+    let (nets, enc, eps, params) = episode_fixture();
+    let variant = nets.variant_for(&enc).unwrap();
+    let dm = device_mask(nets.manifest().max_devices, 4);
+
+    let mut p_seq = params.clone();
+    let mut o_seq = OptState::new(p_seq.len());
+    let (l_seq, e_seq) = nets
+        .train(
+            Method::Doppler,
+            &variant,
+            &enc,
+            &mut p_seq,
+            &mut o_seq,
+            &eps[0].trajectory,
+            &dm,
+            0.4,
+            1e-3,
+            1e-2,
+        )
+        .unwrap();
+
+    let mut p_fused = params.clone();
+    let mut o_fused = OptState::new(p_fused.len());
+    let items = [TrainItem {
+        traj: &eps[0].trajectory,
+        advantage: 0.4,
+    }];
+    let stats = nets
+        .train_batch_fused(
+            Method::Doppler,
+            &variant,
+            &enc,
+            &mut p_fused,
+            &mut o_fused,
+            &items,
+            &dm,
+            1e-3,
+            1e-2,
+            4,
+        )
+        .unwrap();
+    assert_eq!(stats, vec![(l_seq, e_seq)]);
+    assert_eq!(p_fused, p_seq, "1-item fused batch must equal one sequential step");
+    assert_eq!(o_fused.m, o_seq.m);
+    assert_eq!(o_fused.v, o_seq.v);
+    assert_eq!(o_fused.t, o_seq.t);
+}
+
+#[test]
+fn fused_empty_batch_is_a_no_op() {
+    let (nets, enc, _eps, params) = episode_fixture();
+    let variant = nets.variant_for(&enc).unwrap();
+    let dm = device_mask(nets.manifest().max_devices, 4);
+    let mut p = params.clone();
+    let mut opt = OptState::new(p.len());
+    let stats = nets
+        .train_batch_fused(
+            Method::Doppler,
+            &variant,
+            &enc,
+            &mut p,
+            &mut opt,
+            &[],
+            &dm,
+            1e-3,
+            1e-2,
+            2,
+        )
+        .unwrap();
+    assert!(stats.is_empty());
+    assert_eq!(p, params);
+    assert_eq!(opt.t, 0.0);
+}
+
+/// The fused reduction is re-blessed numerics: positional
+/// episode-ascending f32 sums provably reduce in a different order
+/// than accumulate's sorted multiset, and over a full parameter
+/// vector the two cannot coincide bitwise. A silent coincidence here
+/// would mean the fused path never actually ran.
+#[test]
+fn fused_reduction_differs_from_accumulate() {
+    let (pa, _) = run_stage2(2, 4, UpdateMode::Accumulate);
+    let (pf, _) = run_stage2(2, 4, UpdateMode::AccumulateFused);
+    assert_ne!(pa, pf, "fused mode should exercise its own reduction order");
+}
+
+#[test]
+fn fused_works_for_all_methods() {
+    // GDP / PLACETO fused batches exercise the non-SEL head backwards
+    // feeding the shared fused encoder backward
+    for method in [Method::Gdp, Method::Placeto] {
+        let nets = NativePolicy::builtin();
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let mut cfg = TrainConfig::new(method, topo.clone(), 4);
+        cfg.seed = 5;
+        cfg.episode_batch = 3;
+        cfg.update_mode = UpdateMode::AccumulateFused;
+        cfg.rollout.threads = 2;
+        let mut trainer = doppler::train::Trainer::new(&nets, &g, topo, cfg).unwrap();
+        trainer.stage2_sim(6).unwrap();
+        assert_eq!(trainer.history.len(), 6, "{method:?}");
+        assert!(
+            trainer.history.iter().all(|r| r.loss.is_finite()),
+            "{method:?}: non-finite loss"
+        );
+    }
+}
+
+/// Stage I batching: under either accumulate flavor, teacher episodes
+/// group into `episode_batch`-sized single-optimizer-step updates —
+/// `opt.t` counts batches, history still logs every episode, and the
+/// sequential mode keeps stepping once per episode.
+#[test]
+fn fused_stage1_batches_teacher_episodes() {
+    let run = |mode: UpdateMode| {
+        let nets = NativePolicy::builtin();
+        let g = chainmm(Scale::Tiny);
+        let topo = DeviceTopology::p100x4();
+        let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+        cfg.seed = 11;
+        cfg.episode_batch = 4;
+        cfg.update_mode = mode;
+        cfg.rollout.threads = 2;
+        let mut trainer = doppler::train::Trainer::new(&nets, &g, topo, cfg).unwrap();
+        trainer.stage1_imitation(8).unwrap();
+        assert_eq!(trainer.history.len(), 8, "{mode:?}");
+        assert!(
+            trainer.history.iter().all(|r| r.loss.is_finite()),
+            "{mode:?}: non-finite imitation loss"
+        );
+        trainer.opt.t
+    };
+    assert_eq!(run(UpdateMode::Sequential), 8.0, "one step per episode");
+    assert_eq!(run(UpdateMode::Accumulate), 2.0, "one step per batch");
+    assert_eq!(run(UpdateMode::AccumulateFused), 2.0, "one step per batch");
+}
+
+/// A backend with no `Sync` view (the PJRT shape): delegates every
+/// call to a wrapped native policy but reports `as_sync() == None`,
+/// so batched update modes have no gradient access to batch over.
+struct NoSyncBackend(NativePolicy);
+
+impl PolicyBackend for NoSyncBackend {
+    fn kind(&self) -> &'static str {
+        "no-sync-test"
+    }
+    fn manifest(&self) -> &doppler::runtime::Manifest {
+        PolicyBackend::manifest(&self.0)
+    }
+    fn variant_for(
+        &self,
+        enc: &GraphEncoding,
+    ) -> anyhow::Result<doppler::runtime::manifest::VariantInfo> {
+        PolicyBackend::variant_for(&self.0, enc)
+    }
+    fn variant_for_graph(
+        &self,
+        n_nodes: usize,
+        n_edges: usize,
+    ) -> anyhow::Result<doppler::runtime::manifest::VariantInfo> {
+        PolicyBackend::variant_for_graph(&self.0, n_nodes, n_edges)
+    }
+    fn init_params(&self) -> anyhow::Result<Vec<f32>> {
+        PolicyBackend::init_params(&self.0)
+    }
+    fn encode(
+        &self,
+        variant: &doppler::runtime::manifest::VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        PolicyBackend::encode(&self.0, variant, enc, params)
+    }
+    fn sel_scores(
+        &self,
+        variant: &doppler::runtime::manifest::VariantInfo,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+    ) -> anyhow::Result<Vec<f32>> {
+        PolicyBackend::sel_scores(&self.0, variant, enc, params, hcat)
+    }
+    fn begin_episode(
+        &self,
+        enc: &GraphEncoding,
+        params: &[f32],
+        hcat: &[f32],
+    ) -> anyhow::Result<doppler::policy::EpisodeCache> {
+        PolicyBackend::begin_episode(&self.0, enc, params, hcat)
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn plc_logits_step(
+        &self,
+        variant: &doppler::runtime::manifest::VariantInfo,
+        enc: &GraphEncoding,
+        cache: &doppler::policy::EpisodeCache,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        xd: &[f32],
+        place_norm: &[f32],
+        dev_mask: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        PolicyBackend::plc_logits_step(
+            &self.0, variant, enc, cache, params, hcat, v_onehot, xd, place_norm, dev_mask, out,
+        )
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn gdp_logits_step(
+        &self,
+        variant: &doppler::runtime::manifest::VariantInfo,
+        enc: &GraphEncoding,
+        cache: &doppler::policy::EpisodeCache,
+        params: &[f32],
+        hcat: &[f32],
+        v_onehot: &[f32],
+        dev_mask: &[f32],
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
+        PolicyBackend::gdp_logits_step(
+            &self.0, variant, enc, cache, params, hcat, v_onehot, dev_mask, out,
+        )
+    }
+    #[allow(clippy::too_many_arguments)]
+    fn train(
+        &self,
+        method: Method,
+        variant: &doppler::runtime::manifest::VariantInfo,
+        enc: &GraphEncoding,
+        params: &mut Vec<f32>,
+        opt: &mut OptState,
+        traj: &doppler::policy::Trajectory,
+        dev_mask: &[f32],
+        advantage: f32,
+        lr: f32,
+        entropy_w: f32,
+    ) -> anyhow::Result<(f32, f32)> {
+        PolicyBackend::train(
+            &self.0, method, variant, enc, params, opt, traj, dev_mask, advantage, lr, entropy_w,
+        )
+    }
+    fn as_sync(&self) -> Option<&(dyn PolicyBackend + Sync)> {
+        None
+    }
+}
+
+/// A batched update mode on a backend without gradient access warns
+/// once and degrades to the sequential loop; the degradation is
+/// surfaced in `TrainResult::effective_update_mode`. A `Sync` backend
+/// keeps the requested mode.
+#[test]
+fn fused_mode_on_no_sync_backend_falls_back_to_sequential() {
+    let g = chainmm(Scale::Tiny);
+    let topo = DeviceTopology::p100x4();
+    let stages = doppler::train::Stages {
+        imitation: 2,
+        sim_rl: 4,
+        real_rl: 0,
+    };
+    let engine_cfg = doppler::engine::EngineConfig::new(topo.clone());
+    let mk_cfg = || {
+        let mut cfg = TrainConfig::new(Method::Doppler, topo.clone(), 4);
+        cfg.seed = 7;
+        cfg.episode_batch = 2;
+        cfg.update_mode = UpdateMode::AccumulateFused;
+        cfg.rollout.threads = 2;
+        cfg
+    };
+
+    let no_sync = NoSyncBackend(NativePolicy::builtin());
+    let trainer = doppler::train::Trainer::new(&no_sync, &g, topo.clone(), mk_cfg()).unwrap();
+    let result = trainer.run(stages, &engine_cfg).unwrap();
+    assert_eq!(
+        result.effective_update_mode,
+        UpdateMode::Sequential,
+        "no-sync backend must degrade batched modes to sequential"
+    );
+    assert_eq!(result.history.len(), 6);
+
+    let native = NativePolicy::builtin();
+    let trainer = doppler::train::Trainer::new(&native, &g, topo.clone(), mk_cfg()).unwrap();
+    let result = trainer.run(stages, &engine_cfg).unwrap();
+    assert_eq!(
+        result.effective_update_mode,
+        UpdateMode::AccumulateFused,
+        "a Sync backend keeps the requested update mode"
+    );
 }

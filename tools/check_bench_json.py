@@ -11,12 +11,24 @@ rotting.
 Stdlib-only (no numpy). Usage:
 
     python3 tools/check_bench_json.py BENCH_rollout.json BENCH_sim.json ...
+    python3 tools/check_bench_json.py --compare OLD.json NEW.json
 
 Exit code 0 = every file matches its schema.
+
+`--compare` guards against perf regressions between two snapshots of
+the SAME bench (CI compares the committed snapshot against the
+fresh smoke run): it fails when `updates_per_sec` drops by more than
+20% on any (mode, threads) / (kernel, threads) / fused row present in
+both files, or when `kernel_speedup_blocked_vs_oracle_4t` does. Rows
+present in only one file are ignored (row sets may legitimately
+change shape). The whole comparison is skipped — successfully — when
+the runner reports fewer than 4 CPUs: contended small runners produce
+timings too noisy to gate on.
 """
 
 import json
 import math
+import os
 import sys
 
 # per-bench row schema: key -> "str" | "num" | "pos" (number > 0)
@@ -89,12 +101,25 @@ EXTRA_ROW_LISTS = {
             "threads": "pos",
             "updates_per_sec": "pos",
         },
+        # fused cross-episode backward vs the per-episode accumulate
+        # path (--update-mode accumulate-fused, DESIGN.md §14 round 2)
+        "fused_rows": {
+            "threads": "pos",
+            "updates_per_sec": "pos",
+            "ms_per_update": "pos",
+            "speedup_vs_accumulate": "pos",
+        },
     },
 }
 
 # extra top-level fields required for specific benches: bench -> {key -> kind}
 EXTRA_TOP_KEYS = {
-    "train_scaling": {"kernel_bitwise_identical": "bool"},
+    "train_scaling": {
+        "kernel_bitwise_identical": "bool",
+        # asserted by the harness: fused training is bit-identical at
+        # every measured thread count
+        "fused_thread_bitwise_identical": "bool",
+    },
     # the serve bench asserts both; a snapshot with either flag false
     # (or missing) means the ladder lost availability or determinism
     "serve_load": {"all_admitted_served": "bool", "replay_deterministic": "bool"},
@@ -160,7 +185,82 @@ def check(path):
     return errors
 
 
+def finite_num(v):
+    return isinstance(v, (int, float)) and not isinstance(v, bool) and math.isfinite(v)
+
+
+def compare(old_path, new_path, threshold=0.20):
+    """Fail (exit 1) on a >threshold regression of any throughput metric
+    present in BOTH snapshots; skip entirely on small runners."""
+    cores = os.cpu_count() or 1
+    if cores < 4:
+        print(f"compare: skipped ({cores} cores < 4: timings too noisy to gate on)")
+        return 0
+    try:
+        with open(old_path) as f:
+            old = json.load(f)
+        with open(new_path) as f:
+            new = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"FAIL  compare: unreadable snapshot ({e})")
+        return 1
+    if old.get("bench") != new.get("bench"):
+        print(f"FAIL  compare: bench mismatch ({old.get('bench')!r} vs {new.get('bench')!r})")
+        return 1
+
+    def index(doc, list_key, key_fields):
+        out = {}
+        rows = doc.get(list_key)
+        for row in rows if isinstance(rows, list) else []:
+            if isinstance(row, dict):
+                out[tuple(row.get(k) for k in key_fields)] = row
+        return out
+
+    failures = []
+    compared = 0
+    for list_key, key_fields in [
+        ("rows", ("mode", "threads")),
+        ("kernel_rows", ("kernel", "threads")),
+        ("fused_rows", ("threads",)),
+    ]:
+        new_rows = index(new, list_key, key_fields)
+        for key, orow in index(old, list_key, key_fields).items():
+            nrow = new_rows.get(key)
+            if nrow is None:
+                continue
+            ov, nv = orow.get("updates_per_sec"), nrow.get("updates_per_sec")
+            if not (finite_num(ov) and finite_num(nv)) or ov <= 0:
+                continue
+            compared += 1
+            if nv < ov * (1.0 - threshold):
+                failures.append(
+                    f"{list_key}{list(key)}: updates_per_sec {ov:.3f} -> {nv:.3f} "
+                    f"({(1.0 - nv / ov) * 100:.1f}% regression)"
+                )
+    ov = old.get("kernel_speedup_blocked_vs_oracle_4t")
+    nv = new.get("kernel_speedup_blocked_vs_oracle_4t")
+    if finite_num(ov) and finite_num(nv) and ov > 0:
+        compared += 1
+        if nv < ov * (1.0 - threshold):
+            failures.append(
+                f"kernel_speedup_blocked_vs_oracle_4t: {ov:.3f} -> {nv:.3f} "
+                f"({(1.0 - nv / ov) * 100:.1f}% regression)"
+            )
+    if failures:
+        for f in failures:
+            print(f"FAIL  {f}")
+        return 1
+    print(f"ok    compare {old_path} -> {new_path} "
+          f"({compared} metrics, none regressed >{threshold * 100:.0f}%)")
+    return 0
+
+
 def main(argv):
+    if len(argv) >= 2 and argv[1] == "--compare":
+        if len(argv) != 4:
+            print(__doc__)
+            return 2
+        return compare(argv[2], argv[3])
     if len(argv) < 2:
         print(__doc__)
         return 2

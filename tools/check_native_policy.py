@@ -16,7 +16,13 @@ JAX model (`python/compile/model.py`) for
   4. the accumulated-batch reduction (ISSUE 5): the transliteration of
      native.rs::reduce_gradients must be bitwise permutation-invariant
      and match the (f64) sum of per-episode gradients — and, with JAX,
-     the sum of per-episode `jax.grad` — within the gradient bounds.
+     the sum of per-episode `jax.grad` — within the gradient bounds,
+  5. the fused cross-episode reduction (accumulate-fused mode,
+     DESIGN.md §14 round 2): the blocked A^T·B loop nest over packed
+     episode-batch matrices must reduce bitwise identically under any
+     blocking (the determinism claim behind the re-bless), and the
+     positional episode-ascending f32 sum the fused path uses must
+     match the f64 gradient sum within the same 1e-6 bound.
 
 Run from the repo root:  python3 tools/check_native_policy.py
 Exit code 0 = every check within tolerance.
@@ -537,6 +543,119 @@ def check_batch_oracle(with_jax):
 
 
 # --------------------------------------------------------------------------
+# fused-batch oracle (accumulate-fused mode, DESIGN.md §14 round 2)
+# --------------------------------------------------------------------------
+
+def np_at_b_blocked(a32, d32, rb, ib, jb):
+    """f32 transliteration of the blocked `gemm_at_b_acc` loop nest
+    (rust/src/policy/gemm.rs): out = A^T @ D with r-blocks outermost,
+    r ascending within each block, zero-skip on a[r, i] — so every
+    out[i, j] element reduces in globally ascending-r order under ANY
+    blocking. The fused batch backward feeds this kernel packed
+    [bs*n x d] matrices; this is the order the re-bless pins."""
+    rows, ci = a32.shape
+    cj = d32.shape[1]
+    out = np.zeros((ci, cj), np.float32)
+    for r0 in range(0, rows, rb):
+        for i0 in range(0, ci, ib):
+            for j0 in range(0, cj, jb):
+                for r in range(r0, min(r0 + rb, rows)):
+                    for i in range(i0, min(i0 + ib, ci)):
+                        av = a32[r, i]
+                        if av == 0.0:
+                            continue
+                        out[i, j0:j0 + jb] += av * d32[r, j0:j0 + jb]
+    return out
+
+
+def np_positional_sum(rows32):
+    """The fused reduction order for head gradients: per-episode rows
+    summed in positional episode-ascending order, f32 — replaces
+    accumulate mode's sorted-multiset reduction in fused mode."""
+    red = np.zeros(rows32.shape[1], np.float32)
+    for row in rows32:
+        red = (red + row).astype(np.float32)
+    return red
+
+
+def check_fused_batch_oracle():
+    """Accumulate-fused oracle, two claims (DESIGN.md §14 round 2):
+
+      1. **determinism**: the blocked A^T·B loop nest over a packed
+         episode batch — A episode-tiled (the shared forward
+         activation rows repeated per episode, rust's
+         `gemm::tile_rows`), D the stacked per-episode backward rows —
+         is bitwise identical to the naive ascending-r double loop for
+         every blocking tried. This is why the fused gradient cannot
+         depend on thread count or block size.
+      2. **accuracy of the re-bless**: the positional episode-ascending
+         f32 reduction the fused path uses agrees with the f64 sum of
+         per-episode gradients (and hence with accumulate's sorted
+         reduction, which check_batch_oracle pins against jax.grad) to
+         the same 1e-6 bound — the orders differ bitwise, the values
+         do not differ meaningfully.
+    """
+    # ---- claim 1: blocked fused product, bitwise ----
+    rng = np.random.default_rng(0xF5ED)
+    ok = True
+    bs, n, di, dj = 3, 5, 7, 4
+    a_ep = rng.normal(0, 1, (n, di)).astype(np.float32)
+    a_ep[rng.random((n, di)) < 0.25] = np.float32(0.0)  # exercise the zero-skip
+    a_tiled = np.vstack([a_ep] * bs)                    # gemm::tile_rows layout
+    d_stack = rng.normal(0, 1, (bs * n, dj)).astype(np.float32)
+    naive = np.zeros((di, dj), np.float32)
+    for r in range(bs * n):
+        for i in range(di):
+            av = a_tiled[r, i]
+            if av == 0.0:
+                continue
+            naive[i] += av * d_stack[r]
+    for rb, ib, jb in [(1, 1, 1), (2, 3, 5), (4, 2, 4), (64, 64, 64)]:
+        out = np_at_b_blocked(a_tiled, d_stack, rb, ib, jb)
+        same = bool((out.view(np.uint32) == naive.view(np.uint32)).all())
+        if not same:
+            print(f"fused: blocking ({rb},{ib},{jb}) changed the packed A^T·B bits")
+        ok &= same
+    print("fused: packed-batch A^T·B bitwise blocking-invariant"
+          if ok else "fused: packed-batch A^T·B NOT blocking-invariant")
+
+    # ---- claim 2: positional reduction within the gradient bound ----
+    base = make_case(0)
+    trajs = [make_case(s) for s in (3, 4, 5, 6)]
+    advantages = [0.7, -0.4, 0.15, 1.05]
+    grads64 = []
+    for c, adv in zip(trajs, advantages):
+        _, _, g = np_episode_loss_and_grad(
+            "dual", base["flat"], base["xv"], base["esrc"], base["edst"],
+            base["efeat"], base["node_mask"], base["edge_mask"], base["pb"],
+            base["pt"], c["sel_actions"], c["plc_actions"], c["step_mask"],
+            c["cand_masks"], c["xd_steps"], base["dev_mask"], adv, 1e-2)
+        grads64.append(g)
+    rows32 = np.stack([g.astype(np.float32) for g in grads64])
+    pos = np_positional_sum(rows32)
+    sum64 = np.sum(np.stack(grads64), axis=0)
+    e = rel_err(pos.astype(np.float64), sum64)
+    print(f"fused: positional reduction vs f64-summed grads rel_err {e:.2e}")
+    ok &= bool(e < 1e-6)
+    red = np_reduce_gradients(rows32)
+    e2 = rel_err(pos.astype(np.float64), red.astype(np.float64))
+    print(f"fused: positional vs sorted reduction rel_err {e2:.2e}")
+    ok &= bool(e2 < 1e-6)
+    same_bits = bool((pos.view(np.uint32) == red.view(np.uint32)).all())
+    # informational, not asserted either way: the two reduction orders
+    # provably differ, but individual parameters may still round alike
+    print(f"fused: positional and sorted reductions bitwise "
+          f"{'coincide' if same_bits else 'differ'} on this batch "
+          f"(expected: usually differ — hence the re-bless)")
+
+    # bs = 1 degenerate: tiling is the identity and the positional
+    # reduction is a copy — the fused path must equal the single row
+    one = np_positional_sum(rows32[:1])
+    ok &= bool((one.view(np.uint32) == rows32[0].view(np.uint32)).all())
+    return ok
+
+
+# --------------------------------------------------------------------------
 # numpy-only subset: replay the golden-logits fixture
 # --------------------------------------------------------------------------
 
@@ -680,14 +799,15 @@ def main():
     numpy_only = "--numpy-only" in sys.argv or not HAVE_JAX
     fixture_ok = check_fixture()
     batch_ok = check_batch_oracle(with_jax=not numpy_only)
+    fused_ok = check_fused_batch_oracle()
     order_ok = check_blocked_order()
     if numpy_only:
         why = "requested" if "--numpy-only" in sys.argv else "jax not installed"
         print(f"[numpy-only subset: {why}; jax cross-checks skipped]")
-        good = fixture_ok and batch_ok and order_ok
+        good = fixture_ok and batch_ok and fused_ok and order_ok
         print("OK" if good else "MISMATCH")
         return 0 if good else 1
-    ok = fixture_ok and batch_ok and order_ok
+    ok = fixture_ok and batch_ok and fused_ok and order_ok
     for seed in (0, 1, 2):
         c = make_case(seed)
         d = np_unpack(c["flat"])

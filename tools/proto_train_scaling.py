@@ -11,7 +11,12 @@ f32 *proxy* of one Stage II update on a synthetic-300-sized problem:
 - the per-episode train-step proxy (encoder + heads backward, ~2x the
   forward FLOPs), which stays on the leader in sequential mode but fans
   out — plus a sorted per-parameter reduction and one Adam step per
-  batch — in accumulate mode (this PR's contribution).
+  batch — in accumulate mode, and
+- the fused-mode proxy (accumulate-fused, DESIGN.md §14 round 2):
+  workers run generation + the per-episode *head* backward only; the
+  encoder weight gradients run on the leader as ONE packed
+  `[batch*rows x d] x [d x d]` product per batch instead of per-episode
+  product stacks.
 
 An "update" is one episode's trajectory applied to the optimizer, so
 updates/sec is directly comparable across modes, matching
@@ -119,6 +124,67 @@ def update_unit(seed: int) -> np.ndarray:
     """One accumulate-mode work unit: generate + backward."""
     episode_proxy(seed)
     return grad_proxy(seed)
+
+
+def fused_head_unit(seed: int) -> np.ndarray:
+    """One accumulate-fused work unit: generation + the per-episode
+    HEAD backward only, returning the dHcat block [N x SI] the leader's
+    packed encoder products consume. The encoder backward — the product
+    stack grad_proxy runs per episode — moves to the leader as one
+    fused batch GEMM per layer (see measure_fused)."""
+    episode_proxy(seed)
+    rng = np.random.default_rng(seed)
+    w = _model(rng)
+    xv = rng.normal(0, 0.3, (N, NF)).astype(np.float32)
+    esrc = rng.integers(0, N, E)
+    edst = rng.integers(0, N, E)
+    z = np.maximum(xv @ w["e0"], 0) @ w["e1"]
+    h = z
+    for _ in range(2):
+        msg = np.tanh(h[esrc] @ w["wsrc"] + h[edst] @ w["wdst"])
+        agg = np.zeros_like(h)
+        np.add.at(agg, edst, msg)
+        h = np.tanh(np.concatenate([h, agg], 1) @ w["wphi"])
+    hcat = np.concatenate([h, h, h, z], 1)
+    dhcat = np.zeros_like(hcat)
+    xdy = np.abs(np.random.default_rng(seed + 1).normal(0, 0.3, (M, H))).astype(np.float32)
+    hv = hcat[0]
+    for _ in range(N):
+        feat = np.concatenate([np.tile(hv[None, :], (M, 1)), xdy, xdy], 1)[:, :PIN]
+        x = np.maximum(feat @ w["plc0"], 0)
+        dx = np.where(x > 0, x @ (w["plc1"] @ w["plc1"].T), 0.0)
+        dfeat = dx @ w["plc0"].T
+        dhcat[0] += dfeat[:, :SI].sum(axis=0)
+    return dhcat.astype(np.float32)
+
+
+def measure_fused(procs: int, episodes: int, batch: int) -> float:
+    """Accumulate-fused proxy: head backwards fan out, then the leader
+    runs ONE tiled-A x stacked-D product per layer for the whole batch
+    (gemm::tile_rows + gemm_at_b_acc over [bs*N x d] in the rust path)
+    plus the positional batch reduction and one Adam step."""
+    rng = np.random.default_rng(0)
+    a_shared = rng.normal(0, 0.3, (N, H)).astype(np.float32)  # shared forward activation
+    pool = mp.Pool(procs) if procs > 1 else None
+    t0 = time.time()
+    try:
+        for start in range(0, episodes, batch):
+            seeds = list(range(start, min(start + batch, episodes)))
+            if pool is None:
+                blocks = [fused_head_unit(s) for s in seeds]
+            else:
+                blocks = pool.map(fused_head_unit, seeds)
+            dstack = np.concatenate(blocks, axis=0)            # [bs*N x SI]
+            a_tiled = np.tile(a_shared, (len(seeds), 1))       # [bs*N x H]
+            gw = a_tiled.T @ dstack                            # ONE fused product
+            red = gw[:, :H].ravel()[:PARAMS].astype(np.float32)
+            red = np.pad(red, (0, PARAMS - red.size))
+            red *= np.float32(1.0 / max(1.0, float(np.sqrt((red * red).sum()))))
+    finally:
+        if pool is not None:
+            pool.close()
+            pool.join()
+    return episodes / (time.time() - t0)
 
 
 def measure(mode: str, procs: int, episodes: int, batch: int) -> float:
@@ -234,6 +300,50 @@ def bitwise_kernel_check() -> bool:
     return True
 
 
+def bitwise_fused_check() -> bool:
+    """Pure-python transliteration of the fused A^T·B loop nest
+    (gemm_at_b_acc over a packed episode batch, DESIGN.md §14 round 2):
+    r-blocks outermost, r ascending within each block, zero-skip on
+    a[r][i] — so every out[i][j] reduces in globally ascending-r order,
+    bitwise equal to the naive ascending-r double loop under any
+    blocking. A is episode-tiled exactly as gemm::tile_rows lays it
+    out. Python floats are f64, but the order argument this checks is
+    precision-independent."""
+    import random
+
+    rnd = random.Random(11)
+    for bs, n, di, dj in [(1, 4, 3, 2), (3, 5, 4, 3), (4, 2, 7, 5)]:
+        a_ep = [[0.0 if rnd.random() < 0.25 else rnd.gauss(0, 1) for _ in range(di)]
+                for _ in range(n)]
+        a = [row[:] for _ in range(bs) for row in a_ep]  # tile_rows layout
+        rows = bs * n
+        d = [[rnd.gauss(0, 1) for _ in range(dj)] for _ in range(rows)]
+        naive = [[0.0] * dj for _ in range(di)]
+        for r in range(rows):
+            for i in range(di):
+                av = a[r][i]
+                if av == 0.0:
+                    continue
+                for j in range(dj):
+                    naive[i][j] += av * d[r][j]
+        for rb, ib, jb in [(1, 1, 1), (2, 3, 2), (8, 8, 8)]:
+            out = [[0.0] * dj for _ in range(di)]
+            for r0 in range(0, rows, rb):
+                for i0 in range(0, di, ib):
+                    for j0 in range(0, dj, jb):
+                        for r in range(r0, min(r0 + rb, rows)):
+                            for i in range(i0, min(i0 + ib, di)):
+                                av = a[r][i]
+                                if av == 0.0:
+                                    continue
+                                for j in range(j0, min(j0 + jb, dj)):
+                                    out[i][j] += av * d[r][j]
+            if any(x.hex() != y.hex()
+                   for rx, ry in zip(out, naive) for x, y in zip(rx, ry)):
+                return False
+    return True
+
+
 def main():
     cores = os.cpu_count() or 1
     episodes = int(os.environ.get("EPISODES", "16"))
@@ -241,6 +351,7 @@ def main():
     rows = []
     seq_base = None
     per_4t = {}
+    acc_by_procs = {}
     for mode in ("sequential", "accumulate"):
         for procs in [1, 2, 4, 8]:
             if procs > cores:
@@ -250,6 +361,8 @@ def main():
                 seq_base = ups
             if procs == 4:
                 per_4t[mode] = ups
+            if mode == "accumulate":
+                acc_by_procs[procs] = ups
             rows.append({
                 "mode": mode, "threads": procs, "episodes": episodes,
                 "episode_batch": batch,
@@ -261,6 +374,27 @@ def main():
     speedup_4t = None
     if "sequential" in per_4t and "accumulate" in per_4t:
         speedup_4t = round(per_4t["accumulate"] / per_4t["sequential"], 3)
+
+    # fused cross-episode backward proxy (DESIGN.md §14 round 2)
+    fused_rows = []
+    fused_4t = None
+    for procs in [1, 2, 4, 8]:
+        if procs > cores:
+            break
+        ups = measure_fused(procs, episodes, batch)
+        acc = acc_by_procs.get(procs)
+        speedup = round(ups / acc, 3) if acc else None
+        if procs == 4 and acc:
+            fused_4t = speedup
+        fused_rows.append({
+            "threads": procs,
+            "updates_per_sec": round(ups, 3),
+            "ms_per_update": round(1e3 / ups, 2),
+            "speedup_vs_accumulate": speedup,
+        })
+        print(fused_rows[-1])
+    if not bitwise_fused_check():
+        raise SystemExit("fused A^T*B loop nest is NOT bitwise-identical to the naive loop")
 
     # GEMM-kernel comparison proxy (DESIGN.md §14) + the genuine
     # loop-order bitwise check that backs kernel_bitwise_identical
@@ -290,9 +424,11 @@ def main():
                    f"Prototype host has {cores} visible cores and is CPU-contended, so these "
                    "rows demonstrate the harness + schema, not the scaling; the >= 2x @ 4 "
                    "threads target needs >= 4 uncontended cores."),
-        "config": ("numpy f32 Stage II proxy: episode forward fans out in both modes; "
+        "config": ("numpy f32 Stage II proxy: episode forward fans out in all modes; "
                    "per-episode backward serial (sequential) vs fanned + sorted reduction + "
-                   "one Adam step per batch (accumulate)"),
+                   "one Adam step per batch (accumulate) vs fanned head backwards + one "
+                   "packed [bs*N x d] encoder product per batch on the leader "
+                   "(accumulate-fused)"),
         "workload": f"synthetic{N}-proxy",
         "nodes": N, "edges": E,
         "episodes_per_cell": episodes,
@@ -301,11 +437,15 @@ def main():
         "speedup_accumulate_vs_sequential_4t": speedup_4t,
         "target_speedup_4t": 2.0,
         "rows": rows,
+        "fused_rows": fused_rows,
+        "fused_speedup_vs_accumulate_4t": fused_4t,
         "kernel_rows": kernel_rows,
         "kernel_speedup_blocked_vs_oracle_4t": kernel_speedup_4t,
-        # backed by bitwise_kernel_check() above (the script aborts
-        # before writing if the loop-order argument ever fails)
+        # backed by bitwise_kernel_check() / bitwise_fused_check() above
+        # (the script aborts before writing if either loop-order
+        # argument ever fails)
         "kernel_bitwise_identical": True,
+        "fused_thread_bitwise_identical": True,
     }
     if "--write" in sys.argv:
         with open(OUT, "w") as f:
