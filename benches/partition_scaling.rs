@@ -1,0 +1,203 @@
+//! Placement throughput at 10k–100k-node scale: nodes/sec placed and
+//! end quality (simulated makespan) for hierarchical partition-then-
+//! place vs flat whole-graph placement (ISSUE 10 / DESIGN.md §17).
+//!
+//! Flat placement runs one O(N) sequential decision episode, so it is
+//! benchmarked only up to a size ceiling (default 10k nodes; above it
+//! the flat rows are skipped and `quality_vs_flat` is null). The
+//! hierarchical mode partitions, places the K-node quotient, and
+//! refines shard interiors in parallel — this harness is the first
+//! end-to-end evidence the system handles graphs two orders of
+//! magnitude beyond the paper's.
+//!
+//! The thread-count bit-identity contract is asserted LIVE here (not
+//! just in the pins): the smallest graph is placed at 1/2/4 worker
+//! threads and the assignments must match bitwise before any number is
+//! written.
+//!
+//! Writes BENCH_partition.json at the repo root. Knobs:
+//! DOPPLER_PARTITION_BENCH_NODES (comma-separated sizes, default
+//! 1000,10000,50000), DOPPLER_PARTITION_FLAT_CEILING (default 10000),
+//! DOPPLER_PARTITION_SIM_REPS (quality reps, default 4);
+//! DOPPLER_BENCH_SMOKE / --smoke shrinks sizes and rounds for CI —
+//! smoke still covers 10k nodes (the acceptance floor).
+
+use std::time::Instant;
+
+use doppler::bench_util::{banner, rollout_threads, smoke_mode};
+use doppler::eval::{self, tables::Table};
+use doppler::graph::partition::{
+    flat_place, hierarchical_place, PartitionCfg, PlacementCfg, PlacementMode,
+};
+use doppler::graph::workloads::synthetic_layered;
+use doppler::graph::{Assignment, Graph};
+use doppler::heuristics::check_assignment;
+use doppler::sim::topology::DeviceTopology;
+use doppler::util::env_usize;
+use doppler::util::json::{self, Json};
+
+const OUT_JSON: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_partition.json");
+const GRAPH_SEED: u64 = 7;
+const PLACE_SEED: u64 = 1;
+
+struct Cell {
+    mode: &'static str,
+    nodes: usize,
+    edges: usize,
+    shards: usize,
+    place_ms: f64,
+    nodes_per_sec: f64,
+    sim_time_ms: f64,
+    quality_vs_flat: Option<f64>,
+}
+
+/// Time one placement call and package the cell (quality filled later).
+fn timed_place(
+    g: &Graph,
+    topo: &DeviceTopology,
+    mode: &'static str,
+    shards: usize,
+    place: impl FnOnce() -> Assignment,
+) -> (Cell, Assignment) {
+    let t0 = Instant::now();
+    let a = place();
+    let secs = t0.elapsed().as_secs_f64().max(1e-12);
+    check_assignment(g, &a, topo.n()).expect("invalid assignment");
+    (
+        Cell {
+            mode,
+            nodes: g.n(),
+            edges: g.m(),
+            shards,
+            place_ms: secs * 1e3,
+            nodes_per_sec: g.n() as f64 / secs,
+            sim_time_ms: 0.0,
+            quality_vs_flat: None,
+        },
+        a,
+    )
+}
+
+fn main() {
+    banner(
+        "Partition-then-place scaling — nodes/sec placed + quality vs flat",
+        "ISSUE 10 (systems extension; GDP-style coarsen-then-refine, PAPERS.md)",
+    );
+    let smoke = smoke_mode();
+    let threads = rollout_threads();
+    let sim_reps = env_usize("DOPPLER_PARTITION_SIM_REPS", if smoke { 2 } else { 4 }).max(1);
+    let flat_ceiling = env_usize("DOPPLER_PARTITION_FLAT_CEILING", 10_000);
+    let sizes: Vec<usize> = match std::env::var("DOPPLER_PARTITION_BENCH_NODES") {
+        Ok(v) if !v.is_empty() => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+        // smoke must still prove the >= 10k acceptance floor end to end
+        _ if smoke => vec![1_000, 10_000],
+        _ => vec![1_000, 10_000, 50_000],
+    };
+    let cfg = PlacementCfg {
+        mode: PlacementMode::Hierarchical,
+        part: PartitionCfg::default(), // k = 0 -> auto (n/512)
+        refine_rounds: if smoke { 2 } else { 4 },
+        flat_rounds: if smoke { 3 } else { 8 },
+    };
+    let topo = DeviceTopology::p100x4();
+
+    // Live determinism gate: the smallest size must place bitwise
+    // identically at 1/2/4 worker threads, or no snapshot is written.
+    let smallest = *sizes.iter().min().expect("at least one size");
+    let probe = synthetic_layered(smallest, GRAPH_SEED);
+    let base = hierarchical_place(&probe, &topo, &cfg, 1, PLACE_SEED).expect("place");
+    for t in [2usize, 4] {
+        let a = hierarchical_place(&probe, &topo, &cfg, t, PLACE_SEED).expect("place");
+        assert_eq!(
+            a, base,
+            "hierarchical placement diverged at {t} threads — fix determinism before benching"
+        );
+    }
+    println!("[thread bit-identity: 1/2/4-thread placements identical on n={smallest}]");
+
+    let mut table = Table::new(
+        "placement throughput (nodes/sec; quality = simulated ms, lower is better)",
+        &[
+            "MODE", "NODES", "EDGES", "SHARDS", "PLACE MS", "NODES/S", "SIM MS", "VS FLAT",
+        ],
+    );
+    let mut cells: Vec<Cell> = Vec::new();
+    let mut largest_nodes = 0usize;
+    for &n in &sizes {
+        let g = synthetic_layered(n, GRAPH_SEED);
+        largest_nodes = largest_nodes.max(g.n());
+
+        let flat_cell = if g.n() <= flat_ceiling {
+            let (mut cell, a) =
+                timed_place(&g, &topo, "flat", 1, || flat_place(&g, &topo, PLACE_SEED, cfg.flat_rounds));
+            cell.sim_time_ms =
+                eval::sim_time_ms(&g, &a, &topo, PLACE_SEED, sim_reps).expect("sim");
+            Some(cell)
+        } else {
+            println!("[flat skipped at n={} (> ceiling {flat_ceiling})]", g.n());
+            None
+        };
+
+        let k = cfg.part.resolve_k(g.n());
+        let (mut hier, a) = timed_place(&g, &topo, "hierarchical", k, || {
+            hierarchical_place(&g, &topo, &cfg, threads, PLACE_SEED).expect("place")
+        });
+        hier.sim_time_ms = eval::sim_time_ms(&g, &a, &topo, PLACE_SEED, sim_reps).expect("sim");
+        hier.quality_vs_flat = flat_cell
+            .as_ref()
+            .map(|f| f.sim_time_ms / hier.sim_time_ms.max(1e-12));
+
+        for cell in flat_cell.into_iter().chain(std::iter::once(hier)) {
+            table.row(vec![
+                cell.mode.to_string(),
+                format!("{}", cell.nodes),
+                format!("{}", cell.edges),
+                format!("{}", cell.shards),
+                format!("{:.1}", cell.place_ms),
+                format!("{:.0}", cell.nodes_per_sec),
+                format!("{:.2}", cell.sim_time_ms),
+                cell.quality_vs_flat
+                    .map(|q| format!("{q:.3}x"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+            cells.push(cell);
+        }
+    }
+    table.emit(Some(std::path::Path::new("runs/partition_scaling.csv")));
+
+    let rows: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            json::obj(vec![
+                ("mode", json::s(c.mode)),
+                ("nodes", json::num(c.nodes as f64)),
+                ("edges", json::num(c.edges as f64)),
+                ("shards", json::num(c.shards as f64)),
+                ("place_ms", json::num(c.place_ms)),
+                ("nodes_per_sec", json::num(c.nodes_per_sec)),
+                ("sim_time_ms", json::num(c.sim_time_ms)),
+                (
+                    "quality_vs_flat",
+                    c.quality_vs_flat.map(json::num).unwrap_or(Json::Null),
+                ),
+            ])
+        })
+        .collect();
+    let doc = json::obj(vec![
+        ("bench", json::s("partition_scaling")),
+        ("source", json::s("cargo bench --bench partition_scaling")),
+        (
+            "config",
+            json::s("p100x4, synthetic_layered(seed 7), auto shards (n/512), halo 1"),
+        ),
+        ("smoke", json::num(if smoke { 1.0 } else { 0.0 })),
+        ("threads", json::num(threads as f64)),
+        ("sim_reps", json::num(sim_reps as f64)),
+        ("flat_ceiling", json::num(flat_ceiling as f64)),
+        ("largest_nodes", json::num(largest_nodes as f64)),
+        ("hier_thread_bitwise_identical", Json::Bool(true)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    std::fs::write(OUT_JSON, doc.to_string() + "\n").expect("writing BENCH_partition.json");
+    println!("[perf snapshot written to {OUT_JSON}]");
+}

@@ -94,6 +94,11 @@ pub struct EvalCtx<'a> {
     /// rewards. Engines are bitwise-identical (DESIGN.md §10), so this
     /// is a wall-clock knob like `rollout.threads`.
     pub sim_engine: crate::sim::Engine,
+    /// Placement mode (DESIGN.md §17): flat (default, the paper's
+    /// whole-graph episode) or hierarchical partition-then-place for
+    /// graphs beyond the flat episode's practical size ceiling. Applies
+    /// to the critical-path method and zero-shot policy deployment.
+    pub placement: crate::graph::partition::PlacementCfg,
 }
 
 impl<'a> EvalCtx<'a> {
@@ -116,6 +121,7 @@ impl<'a> EvalCtx<'a> {
             },
             episode_batch: 1,
             sim_engine: crate::sim::Engine::Incremental,
+            placement: crate::graph::partition::PlacementCfg::default(),
         }
     }
 
@@ -150,6 +156,21 @@ pub fn run_method(id: MethodId, g: &Graph, ctx: &EvalCtx) -> Result<MethodResult
         MethodId::SingleDevice => heuristics::single_device(g, 0),
         MethodId::RoundRobin => heuristics::round_robin(g, ctx.n_devices),
         MethodId::Random => heuristics::random_assignment(g, ctx.n_devices, &mut rng),
+        MethodId::CriticalPath
+            if ctx.placement.mode == crate::graph::partition::PlacementMode::Hierarchical =>
+        {
+            // partition → coarse critical-path quotient pass → parallel
+            // pinned-halo refinement (DESIGN.md §17); sim-scored, since
+            // the whole point is graphs too big for 50 engine runs
+            let sub = restrict(&ctx.topo, ctx.n_devices);
+            crate::graph::partition::hierarchical_place(
+                g,
+                &sub,
+                &ctx.placement,
+                ctx.rollout.threads,
+                ctx.seed,
+            )?
+        }
         MethodId::CriticalPath => {
             // best of 50 randomized runs, scored on the engine (§6.1)
             let sub = restrict(&ctx.topo, ctx.n_devices);
@@ -261,15 +282,39 @@ pub fn eval_params_zero_shot(
         .nets
         .ok_or_else(|| anyhow::anyhow!("zero-shot evaluation requires a policy backend"))?;
     let sub = restrict(&ctx.topo, ctx.n_devices);
-    let a = crate::train::multi::zero_shot_assignment(
-        nets,
-        g,
-        &sub,
-        ctx.n_devices,
-        method,
-        params,
-        scratch,
-    )?;
+    let a = if ctx.placement.mode == crate::graph::partition::PlacementMode::Hierarchical {
+        // the "existing policy over the K-node quotient graph" coarse
+        // pass (DESIGN.md §17): zero-shot rollout on the quotient, then
+        // parallel pinned-halo interior refinement
+        crate::graph::partition::hierarchical_place_with(
+            g,
+            &sub,
+            &ctx.placement,
+            ctx.rollout.threads,
+            ctx.seed,
+            |q, _rng| {
+                crate::train::multi::zero_shot_assignment(
+                    nets,
+                    q,
+                    &sub,
+                    ctx.n_devices,
+                    method,
+                    params,
+                    scratch,
+                )
+            },
+        )?
+    } else {
+        crate::train::multi::zero_shot_assignment(
+            nets,
+            g,
+            &sub,
+            ctx.n_devices,
+            method,
+            params,
+            scratch,
+        )?
+    };
     let summary = ctx.evaluate(g, &a);
     Ok((a, summary))
 }

@@ -9,6 +9,7 @@
 //! (`shardOps`/`reduceOps`, Appendix B) which the ENUMERATIVEOPTIMIZER
 //! baseline consumes.
 
+pub mod partition;
 pub mod shard;
 pub mod workloads;
 

@@ -1,0 +1,709 @@
+//! Hierarchical partition-then-place for 10k–100k-node graphs
+//! (DESIGN.md §17; the ROADMAP "Scale to 10k–100k-node graphs" item).
+//!
+//! Flat placement runs one O(N) sequential decision episode over the
+//! whole graph, so it caps out near the paper's synthetic sizes. This
+//! module cuts the graph into K shards with a downset-ordered
+//! BFS/community growth (so the shard quotient is a DAG *by
+//! construction*), places the K-node quotient graph coarsely with the
+//! existing heuristic/policy machinery, then refines each shard's
+//! interior in parallel workers against the deterministic incremental
+//! simulator, with halo nodes pinned to their coarse devices. Interior
+//! node sets are disjoint, refinement fans out over the PR-1 rollout
+//! pool with pre-forked per-shard RNG streams, and results merge in
+//! canonical shard order — the final assignment is bit-identical at any
+//! worker-thread count.
+//!
+//! Invariants (pinned by `rust/tests/partition_place.rs`):
+//! - **cover / no overlap**: shard interiors partition the vertex set;
+//! - **quotient DAG**: `shard_of[u] <= shard_of[v]` for every edge
+//!   `(u, v)` — guaranteed because a node is only assignable once all
+//!   its predecessors are assigned and shards close in index order;
+//! - **halo closure**: with `halo_depth >= 1` every neighbor of an
+//!   interior node is inside the shard's subgraph, so refinement sees
+//!   the full local dependency context;
+//! - **pinning**: halo nodes never move during refinement — they stay
+//!   on the coarse device of the shard that owns them;
+//! - **K = 1 degenerates** bitwise to the flat path (the quotient would
+//!   be the graph itself; there is nothing to coarsen or refine).
+
+use crate::features::AssignState;
+use crate::graph::{Assignment, DeviceId, Graph, Node, NodeId, OpKind};
+use crate::heuristics::place_eft;
+use crate::sim::topology::DeviceTopology;
+use crate::sim::{simulate, Engine, SimConfig};
+use crate::util::rng::Rng;
+
+/// How an assignment for a full graph is produced (`--placement-mode`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementMode {
+    /// One episode over the whole graph (the paper's protocol).
+    Flat,
+    /// Partition → coarse quotient placement → parallel pinned-halo
+    /// interior refinement (this module).
+    Hierarchical,
+}
+
+impl PlacementMode {
+    /// Parse from CLI / env text.
+    pub fn parse(s: &str) -> Option<PlacementMode> {
+        match s {
+            "flat" => Some(PlacementMode::Flat),
+            "hierarchical" | "hier" => Some(PlacementMode::Hierarchical),
+            _ => None,
+        }
+    }
+}
+
+/// Partition shape knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionCfg {
+    /// Number of shards; 0 = auto (`n / 512`, clamped to `[2, 256]`).
+    pub k: usize,
+    /// Undirected halo radius around each shard interior (min 1 — the
+    /// refinement contract needs every interior neighbor present).
+    pub halo_depth: usize,
+}
+
+impl Default for PartitionCfg {
+    fn default() -> PartitionCfg {
+        PartitionCfg { k: 0, halo_depth: 1 }
+    }
+}
+
+impl PartitionCfg {
+    /// Resolve the shard count for an `n`-node graph.
+    pub fn resolve_k(&self, n: usize) -> usize {
+        if self.k == 0 {
+            (n / 512).clamp(2, 256).min(n.max(1))
+        } else {
+            self.k.min(n.max(1))
+        }
+    }
+}
+
+/// Full placement configuration carried by `EvalCtx` and the CLI.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementCfg {
+    pub mode: PlacementMode,
+    pub part: PartitionCfg,
+    /// Randomized pinned passes per shard during refinement (the coarse
+    /// init is always scored as an extra candidate, so refinement never
+    /// loses to it under the local objective).
+    pub refine_rounds: usize,
+    /// Randomized passes for flat placement / coarse quotient placement.
+    pub flat_rounds: usize,
+}
+
+impl Default for PlacementCfg {
+    fn default() -> PlacementCfg {
+        PlacementCfg {
+            mode: PlacementMode::Flat,
+            part: PartitionCfg::default(),
+            refine_rounds: 4,
+            flat_rounds: 8,
+        }
+    }
+}
+
+/// One shard: interior (owned, refined here) + halo (context, pinned).
+/// Both lists are sorted by ascending node id.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub interior: Vec<NodeId>,
+    pub halo: Vec<NodeId>,
+}
+
+/// A K-way cut of a graph.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// Owning shard per node.
+    pub shard_of: Vec<usize>,
+    pub shards: Vec<Shard>,
+    /// Edges crossing shard boundaries (always forward in shard index).
+    pub cut_edges: Vec<(NodeId, NodeId)>,
+}
+
+impl Partition {
+    pub fn k(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// Cut a frozen DAG into `k` balanced shards by downset-ordered
+/// community growth: repeatedly assign, to the currently-filling shard,
+/// the Kahn-ready node with the most predecessors already in that shard
+/// (ties: smallest node id). A node becomes ready only when all its
+/// predecessors are assigned, and shards fill in index order, so shard
+/// index is monotone along every edge — the quotient is a DAG by
+/// construction, never by luck. Shard sizes are `floor(n/k)` with the
+/// first `n mod k` shards one larger (largest-remainder balancing).
+///
+/// Panics if the graph is not frozen or has a cycle.
+pub fn partition(g: &Graph, cfg: &PartitionCfg) -> Partition {
+    let n = g.n();
+    assert!(n > 0, "cannot partition an empty graph");
+    assert_eq!(g.preds.len(), n, "graph must be frozen before partition");
+    let k = cfg.resolve_k(n);
+    let halo_depth = cfg.halo_depth.max(1);
+
+    let base = n / k;
+    let rem = n % k;
+    let size_of = |s: usize| base + usize::from(s < rem);
+
+    let mut shard_of = vec![usize::MAX; n];
+    let mut unassigned_preds: Vec<usize> = g.preds.iter().map(|p| p.len()).collect();
+    let mut ready: Vec<NodeId> = (0..n).filter(|&v| unassigned_preds[v] == 0).collect();
+    // Affinity of a ready node to the *current* shard = predecessors
+    // already inside it. The stamp makes per-shard resets O(1).
+    let mut affinity = vec![0usize; n];
+    let mut affinity_shard = vec![usize::MAX; n];
+
+    let mut shard = 0usize;
+    let mut filled = 0usize;
+    for assigned in 0..n {
+        assert!(
+            !ready.is_empty(),
+            "graph has a cycle: {assigned}/{n} nodes reachable"
+        );
+        // pick argmax (affinity, -id) over the ready frontier
+        let mut best_idx = 0usize;
+        let mut best_aff = usize::MAX; // sentinel: first item always wins
+        for (i, &c) in ready.iter().enumerate() {
+            let aff = if affinity_shard[c] == shard {
+                affinity[c]
+            } else {
+                0
+            };
+            let better = best_aff == usize::MAX
+                || aff > best_aff
+                || (aff == best_aff && c < ready[best_idx]);
+            if better {
+                best_idx = i;
+                best_aff = aff;
+            }
+        }
+        let v = ready.swap_remove(best_idx);
+        shard_of[v] = shard;
+        for &s in &g.succs[v] {
+            unassigned_preds[s] -= 1;
+            if unassigned_preds[s] == 0 {
+                ready.push(s);
+            }
+            if affinity_shard[s] != shard {
+                affinity_shard[s] = shard;
+                affinity[s] = 0;
+            }
+            affinity[s] += 1;
+        }
+        filled += 1;
+        if filled == size_of(shard) && shard + 1 < k {
+            shard += 1;
+            filled = 0;
+        }
+    }
+
+    // interiors (ascending by construction of the 0..n scan)
+    let mut shards: Vec<Shard> = (0..k)
+        .map(|_| Shard {
+            interior: Vec::new(),
+            halo: Vec::new(),
+        })
+        .collect();
+    for v in 0..n {
+        shards[shard_of[v]].interior.push(v);
+    }
+
+    // cut edges — and the quotient-DAG invariant, checked hot because
+    // every downstream guarantee (coarse placement on a DAG, canonical
+    // merge) rests on it
+    let mut cut_edges = Vec::new();
+    for &(u, v) in &g.edges {
+        if shard_of[u] != shard_of[v] {
+            debug_assert!(
+                shard_of[u] < shard_of[v],
+                "edge {u}->{v} goes backward across shards"
+            );
+            cut_edges.push((u, v));
+        }
+    }
+
+    // halo: undirected BFS out to halo_depth from each interior
+    let mut stamp = vec![usize::MAX; n];
+    let mut frontier: Vec<NodeId> = Vec::new();
+    let mut next: Vec<NodeId> = Vec::new();
+    for (si, sh) in shards.iter_mut().enumerate() {
+        frontier.clear();
+        for &v in &sh.interior {
+            stamp[v] = si;
+            frontier.push(v);
+        }
+        for _ in 0..halo_depth {
+            next.clear();
+            for &v in &frontier {
+                for &u in g.preds[v].iter().chain(g.succs[v].iter()) {
+                    if stamp[u] != si {
+                        stamp[u] = si;
+                        sh.halo.push(u);
+                        next.push(u);
+                    }
+                }
+            }
+            std::mem::swap(&mut frontier, &mut next);
+        }
+        sh.halo.sort_unstable();
+    }
+
+    Partition {
+        shard_of,
+        shards,
+        cut_edges,
+    }
+}
+
+/// Collapse a partitioned graph into its shard quotient: one super-node
+/// per shard carrying the summed interior FLOPs, plus one distinct edge
+/// per ordered shard pair with at least one cut edge. Because
+/// `Graph::edge_bytes` derives payloads from the *producer's shape*,
+/// each super-node gets a synthetic 1-D shape sized so its out-bytes
+/// equal the mean cut-out payload per distinct quotient out-edge (total
+/// cut bytes are conserved; the per-edge split is uniform — documented
+/// distortion, DESIGN.md §17). A zero-cost `Input` root (node index K)
+/// feeds every predecessor-less super-node so the coarse episode's
+/// candidate machinery never treats real compute as free entry work.
+pub fn quotient_graph(g: &Graph, p: &Partition) -> Graph {
+    let k = p.k();
+    let mut cut_out_bytes = vec![0.0f64; k];
+    let mut qedges: std::collections::BTreeSet<(usize, usize)> = std::collections::BTreeSet::new();
+    for &(u, v) in &p.cut_edges {
+        qedges.insert((p.shard_of[u], p.shard_of[v]));
+        cut_out_bytes[p.shard_of[u]] += g.edge_bytes(u, v);
+    }
+    let mut out_deg = vec![0usize; k];
+    for &(a, _) in &qedges {
+        out_deg[a] += 1;
+    }
+
+    let mut q = Graph::new(&format!("{}.q{}", g.name, k));
+    for (si, sh) in p.shards.iter().enumerate() {
+        let flops: f64 = sh.interior.iter().map(|&v| g.nodes[v].flops).sum();
+        let elems = if out_deg[si] > 0 {
+            ((cut_out_bytes[si] / 4.0 / out_deg[si] as f64).round() as usize).max(1)
+        } else {
+            0
+        };
+        q.add_node(OpKind::MatMul, vec![elems], flops, format!("shard{si}"));
+    }
+    let root = q.add_node(OpKind::Input, vec![0], 0.0, "root".into());
+    let mut has_pred = vec![false; k];
+    for &(a, b) in &qedges {
+        q.add_edge(a, b);
+        has_pred[b] = true;
+    }
+    for (si, &hp) in has_pred.iter().enumerate() {
+        if !hp {
+            q.add_edge(root, si);
+        }
+    }
+    q.freeze();
+    q
+}
+
+// ---------------------------------------------------------------------------
+// Placement passes (shared by the flat path, the coarse quotient pass,
+// and pinned refinement)
+// ---------------------------------------------------------------------------
+
+/// Pin sentinel for [`assign_pass`]: node places freely.
+const NO_PIN: usize = usize::MAX;
+/// Seed spice for the flat / hierarchical RNG streams.
+const FLAT_SALT: u64 = 0x9A47_17D0_F1A7_0001;
+const HIER_SALT: u64 = 0x9A47_17D0_0C0A_0002;
+/// Fixed stream for scoring simulations (jitter is off; the stream only
+/// exists to satisfy the simulate() signature deterministically).
+const SCORE_SEED: u64 = 0x51C0_DE00;
+
+/// Deterministic-scoring simulator config: zero jitter, incremental
+/// engine (bitwise-equal to the reference engine, DESIGN.md §10).
+fn det_cfg(topo: &DeviceTopology) -> SimConfig {
+    SimConfig::deterministic(topo.clone()).with_engine(Engine::Incremental)
+}
+
+/// Reference-device t-levels — the list-scheduling priority. The full
+/// `static_features` also materializes per-node b/t *paths* (O(N·depth)
+/// memory), which at 50k+ nodes is the difference between fitting and
+/// not; placement only needs the levels.
+fn t_level_vec(g: &Graph, topo: &DeviceTopology) -> Vec<f64> {
+    let nc = |n: &Node| topo.ref_exec_time(n);
+    let ec = |bytes: f64| topo.ref_transfer_time(bytes);
+    g.t_level(&nc, &ec)
+}
+
+fn det_score(g: &Graph, a: &Assignment, cfg: &SimConfig) -> f64 {
+    simulate(g, a, cfg, &mut Rng::new(SCORE_SEED)).makespan
+}
+
+/// One critical-path-style pass: select the ready node with the largest
+/// (noise-perturbed) t-level, place pinned nodes on their pin and free
+/// nodes by earliest finish time. Mirrors
+/// `heuristics::select_critical_path` exactly (strictly-greater compare,
+/// no RNG draw when `tie_noise == 0`) so draw counts — and therefore
+/// determinism — are stable across pinned and unpinned callers.
+fn assign_pass(
+    g: &Graph,
+    topo: &DeviceTopology,
+    t_level: &[f64],
+    pins: &[usize],
+    rng: &mut Rng,
+    tie_noise: f64,
+) -> Assignment {
+    let mut st = AssignState::new(g, topo);
+    while !st.done() {
+        let mut best = st.candidates[0];
+        let mut best_score = f64::NEG_INFINITY;
+        for &c in &st.candidates {
+            let noise = if tie_noise > 0.0 {
+                1.0 + tie_noise * (rng.f64() - 0.5)
+            } else {
+                1.0
+            };
+            let score = t_level[c] * noise;
+            if score > best_score {
+                best_score = score;
+                best = c;
+            }
+        }
+        let d = if pins[best] != NO_PIN {
+            pins[best]
+        } else {
+            place_eft(&st, best, rng)
+        };
+        st.place(best, d);
+    }
+    st.into_assignment()
+}
+
+/// Best-of-`rounds` placement with optional pins: round 0 is the pure
+/// greedy pass, later rounds perturb tie-breaks; every candidate is
+/// scored on the deterministic incremental simulator and the best
+/// (strictly smallest makespan; earlier round wins ties) is kept.
+fn place_rounds(
+    g: &Graph,
+    topo: &DeviceTopology,
+    pins: &[usize],
+    rng: &mut Rng,
+    rounds: usize,
+) -> Assignment {
+    let rounds = rounds.max(1);
+    let t_level = t_level_vec(g, topo);
+    let cfg = det_cfg(topo);
+    let mut best: Option<(Assignment, f64)> = None;
+    for round in 0..rounds {
+        let noise = if round == 0 { 0.0 } else { 0.3 };
+        let a = assign_pass(g, topo, &t_level, pins, rng, noise);
+        let score = det_score(g, &a, &cfg);
+        if best.as_ref().map_or(true, |(_, s)| score < *s) {
+            best = Some((a, score));
+        }
+    }
+    best.unwrap().0
+}
+
+/// Flat placement: best-of-`rounds` critical-path/EFT passes over the
+/// whole graph, scored on the deterministic simulator. This is the
+/// baseline the hierarchical mode must degenerate to at K = 1 and the
+/// quality reference `benches/partition_scaling.rs` reports against.
+pub fn flat_place(g: &Graph, topo: &DeviceTopology, seed: u64, rounds: usize) -> Assignment {
+    let pins = vec![NO_PIN; g.n()];
+    place_rounds(g, topo, &pins, &mut Rng::new(seed ^ FLAT_SALT), rounds)
+}
+
+/// Result of refining one shard. `interior` carries the refined device
+/// per interior node; `halo_pins` echoes the pins the pass ran under so
+/// callers (and the pinning test) can audit that halo context never
+/// moved.
+#[derive(Clone, Debug)]
+pub struct ShardRefinement {
+    pub shard: usize,
+    pub interior: Vec<(NodeId, DeviceId)>,
+    pub halo_pins: Vec<(NodeId, DeviceId)>,
+}
+
+/// Refine one shard against the deterministic incremental simulator:
+/// extract the interior ∪ halo subgraph (frozen, never validated — halo
+/// nodes legitimately lose their out-of-subgraph predecessors and
+/// become "free at t=0" entries), pin every halo node to the coarse
+/// device of its owning shard, and keep the best of {coarse init,
+/// `rounds` randomized pinned passes}. Pure in `(inputs, rng stream)`,
+/// which is what lets `hierarchical_place` fan shards across workers
+/// without losing bit-identity.
+pub fn refine_shard(
+    g: &Graph,
+    part: &Partition,
+    si: usize,
+    coarse: &[DeviceId],
+    topo: &DeviceTopology,
+    rng: &mut Rng,
+    rounds: usize,
+) -> ShardRefinement {
+    let sh = &part.shards[si];
+    // members = interior ∪ halo, ascending (both inputs are sorted)
+    let mut members: Vec<NodeId> = Vec::with_capacity(sh.interior.len() + sh.halo.len());
+    {
+        let (mut i, mut h) = (0, 0);
+        while i < sh.interior.len() || h < sh.halo.len() {
+            let take_interior = h >= sh.halo.len()
+                || (i < sh.interior.len() && sh.interior[i] < sh.halo[h]);
+            if take_interior {
+                members.push(sh.interior[i]);
+                i += 1;
+            } else {
+                members.push(sh.halo[h]);
+                h += 1;
+            }
+        }
+    }
+    let local = |v: NodeId| members.binary_search(&v).expect("member node");
+
+    // induced subgraph; edges pushed directly (preds lists are already
+    // de-duplicated) to skip add_edge's O(m) duplicate scan
+    let mut sub = Graph::new(&format!("{}.s{si}", g.name));
+    for &v in &members {
+        let n = &g.nodes[v];
+        sub.add_node(n.kind, n.shape.clone(), n.flops, n.name.clone());
+    }
+    for (li, &v) in members.iter().enumerate() {
+        for &p in &g.preds[v] {
+            if let Ok(lp) = members.binary_search(&p) {
+                sub.edges.push((lp, li));
+            }
+        }
+    }
+    sub.freeze();
+
+    let mut pins = vec![NO_PIN; members.len()];
+    let mut halo_pins = Vec::with_capacity(sh.halo.len());
+    for &h in &sh.halo {
+        pins[local(h)] = coarse[h];
+        halo_pins.push((h, coarse[h]));
+    }
+
+    // candidate 0: the coarse init itself, so refinement can only help
+    let init: Assignment = members.iter().map(|&v| coarse[v]).collect();
+    let t_level = t_level_vec(&sub, topo);
+    let cfg = det_cfg(topo);
+    let mut best = init;
+    let mut best_score = det_score(&sub, &best, &cfg);
+    for round in 0..rounds {
+        let noise = if round == 0 { 0.0 } else { 0.3 };
+        let a = assign_pass(&sub, topo, &t_level, &pins, rng, noise);
+        let score = det_score(&sub, &a, &cfg);
+        if score < best_score {
+            best = a;
+            best_score = score;
+        }
+    }
+
+    ShardRefinement {
+        shard: si,
+        interior: sh.interior.iter().map(|&v| (v, best[local(v)])).collect(),
+        halo_pins,
+    }
+}
+
+/// Hierarchical placement with a caller-supplied coarse placer (the
+/// policy path hands in a zero-shot quotient rollout; the default
+/// [`hierarchical_place`] uses the critical-path pass). Workers receive
+/// RNG streams forked on the leader *before* any refinement starts and
+/// interiors are disjoint, so the merged assignment is a pure function
+/// of `(graph, cfg, seed)` — `threads` is a wall-clock knob only.
+pub fn hierarchical_place_with<F>(
+    g: &Graph,
+    topo: &DeviceTopology,
+    pcfg: &PlacementCfg,
+    threads: usize,
+    seed: u64,
+    coarse_fn: F,
+) -> anyhow::Result<Assignment>
+where
+    F: FnOnce(&Graph, &mut Rng) -> anyhow::Result<Assignment>,
+{
+    let n = g.n();
+    anyhow::ensure!(n > 0, "cannot place an empty graph");
+    let k = pcfg.part.resolve_k(n);
+    if k <= 1 {
+        // the K=1 quotient is the graph itself: nothing to coarsen,
+        // nothing to refine — degenerate bitwise to the flat path
+        return Ok(flat_place(g, topo, seed, pcfg.flat_rounds));
+    }
+    let part = partition(
+        g,
+        &PartitionCfg {
+            k,
+            halo_depth: pcfg.part.halo_depth,
+        },
+    );
+    let q = quotient_graph(g, &part);
+
+    let mut rng = Rng::new(seed ^ HIER_SALT);
+    let mut coarse_rng = rng.fork(0);
+    let qa = coarse_fn(&q, &mut coarse_rng)?;
+    anyhow::ensure!(
+        qa.len() == q.n(),
+        "coarse placer returned {} devices for a {}-node quotient",
+        qa.len(),
+        q.n()
+    );
+
+    // expand: every node starts on its shard's coarse device
+    let coarse: Assignment = (0..n).map(|v| qa[part.shard_of[v]]).collect();
+
+    // parallel interior refinement, one worker item per shard
+    let mut refine_rng = rng.fork(1);
+    let refined = crate::rollout::parallel_map_rng_site(
+        crate::runtime::resilience::SITE_PARTITION,
+        threads,
+        &mut refine_rng,
+        part.k(),
+        |si, r| refine_shard(g, &part, si, &coarse, topo, r, pcfg.refine_rounds),
+    )?;
+
+    // canonical shard-order merge (interiors are disjoint, so the order
+    // cannot matter — keeping it canonical makes that auditable)
+    let mut assignment = coarse;
+    for r in &refined {
+        for &(v, d) in &r.interior {
+            assignment[v] = d;
+        }
+    }
+    Ok(assignment)
+}
+
+/// Hierarchical placement with the built-in critical-path coarse pass.
+pub fn hierarchical_place(
+    g: &Graph,
+    topo: &DeviceTopology,
+    pcfg: &PlacementCfg,
+    threads: usize,
+    seed: u64,
+) -> anyhow::Result<Assignment> {
+    let flat_rounds = pcfg.flat_rounds;
+    hierarchical_place_with(g, topo, pcfg, threads, seed, |q, rng| {
+        let pins = vec![NO_PIN; q.n()];
+        Ok(place_rounds(q, topo, &pins, rng, flat_rounds))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::workloads::{chainmm, synthetic_layered, Scale};
+    use crate::heuristics::check_assignment;
+
+    fn topo() -> DeviceTopology {
+        DeviceTopology::p100x4()
+    }
+
+    #[test]
+    fn partition_covers_without_overlap() {
+        let g = synthetic_layered(150, 3);
+        let p = partition(&g, &PartitionCfg { k: 5, halo_depth: 1 });
+        let mut seen = vec![false; g.n()];
+        for sh in &p.shards {
+            for &v in &sh.interior {
+                assert!(!seen[v], "node {v} in two interiors");
+                seen[v] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "interiors must cover all nodes");
+        // balanced within one node
+        let sizes: Vec<usize> = p.shards.iter().map(|s| s.interior.len()).collect();
+        let (min, max) = (
+            *sizes.iter().min().unwrap(),
+            *sizes.iter().max().unwrap(),
+        );
+        assert!(max - min <= 1, "unbalanced shard sizes {sizes:?}");
+    }
+
+    #[test]
+    fn quotient_is_a_dag_with_monotone_shards() {
+        let g = synthetic_layered(200, 5);
+        let p = partition(&g, &PartitionCfg { k: 7, halo_depth: 1 });
+        for &(u, v) in &g.edges {
+            assert!(
+                p.shard_of[u] <= p.shard_of[v],
+                "edge {u}->{v} not monotone in shard index"
+            );
+        }
+        let q = quotient_graph(&g, &p);
+        assert_eq!(q.n(), p.k() + 1, "k super-nodes + synthetic root");
+        assert!(q.topo_order().is_some(), "quotient must be a DAG");
+        // summed flops conserved
+        let total: f64 = q.nodes[..p.k()].iter().map(|n| n.flops).sum();
+        assert!((total - g.total_flops()).abs() < 1e-6 * g.total_flops().max(1.0));
+    }
+
+    #[test]
+    fn halo_contains_every_interior_neighbor() {
+        let g = chainmm(Scale::Small);
+        let p = partition(&g, &PartitionCfg { k: 4, halo_depth: 1 });
+        for (si, sh) in p.shards.iter().enumerate() {
+            let inside = |v: NodeId| {
+                sh.interior.binary_search(&v).is_ok() || sh.halo.binary_search(&v).is_ok()
+            };
+            for &v in &sh.interior {
+                for &u in g.preds[v].iter().chain(g.succs[v].iter()) {
+                    assert!(inside(u), "neighbor {u} of interior {v} outside shard {si}");
+                }
+            }
+            for &h in &sh.halo {
+                assert_ne!(p.shard_of[h], si, "halo node {h} owned by its own shard");
+            }
+        }
+    }
+
+    #[test]
+    fn hierarchical_assignment_is_valid_and_deterministic() {
+        let g = synthetic_layered(180, 9);
+        let t = topo();
+        let cfg = PlacementCfg {
+            mode: PlacementMode::Hierarchical,
+            part: PartitionCfg { k: 6, halo_depth: 1 },
+            refine_rounds: 2,
+            flat_rounds: 2,
+        };
+        let a1 = hierarchical_place(&g, &t, &cfg, 1, 42).unwrap();
+        let a2 = hierarchical_place(&g, &t, &cfg, 1, 42).unwrap();
+        assert_eq!(a1, a2, "same seed must reproduce bitwise");
+        check_assignment(&g, &a1, t.n()).unwrap();
+    }
+
+    #[test]
+    fn k1_short_circuits_to_flat() {
+        let g = chainmm(Scale::Tiny);
+        let t = topo();
+        let cfg = PlacementCfg {
+            mode: PlacementMode::Hierarchical,
+            part: PartitionCfg { k: 1, halo_depth: 1 },
+            refine_rounds: 3,
+            flat_rounds: 4,
+        };
+        let hier = hierarchical_place(&g, &t, &cfg, 4, 7).unwrap();
+        let flat = flat_place(&g, &t, 7, cfg.flat_rounds);
+        assert_eq!(hier, flat, "K=1 must degenerate bitwise to flat");
+    }
+
+    #[test]
+    fn placement_mode_parses() {
+        assert_eq!(PlacementMode::parse("flat"), Some(PlacementMode::Flat));
+        assert_eq!(
+            PlacementMode::parse("hierarchical"),
+            Some(PlacementMode::Hierarchical)
+        );
+        assert_eq!(
+            PlacementMode::parse("hier"),
+            Some(PlacementMode::Hierarchical)
+        );
+        assert_eq!(PlacementMode::parse("bogus"), None);
+    }
+}

@@ -11,8 +11,14 @@
 //!              request trace (replayable; DESIGN.md §16)
 //!   info       print workload/graph statistics
 //!
-//! Common flags: --workload {chainmm|ffnn|llama-block|llama-layer}
+//! Common flags: --workload {chainmm|ffnn|llama-block|llama-layer|synthetic}
+//!               --nodes N   (synthetic workload size, default 10000)
 //!               --scale {tiny|small|full}   --devices N
+//!               --placement-mode {flat|hierarchical}  whole-graph
+//!                   episode (default) vs partition-then-place for
+//!                   10k–100k-node graphs (DESIGN.md §17); hierarchical
+//!                   takes --shards K (0 = auto), --halo-depth D,
+//!                   --refine-rounds R, --flat-rounds R
 //!               --topology {p100x4|v100x8|single}
 //!               --episodes N   --seed S   --out PATH
 //!               --policy-backend {native|pjrt}  policy implementation
@@ -153,9 +159,17 @@ fn checkpoint_cfg(args: &Args) -> Result<Option<doppler::runtime::checkpoint::Ch
 const HELP: &str = "doppler — dual-policy device assignment (paper reproduction)
   compare | train | evaluate | visualize | calibrate | simfit | serve | info
   common flags:
-    --workload {chainmm|ffnn|llama-block|llama-layer}
+    --workload {chainmm|ffnn|llama-block|llama-layer|synthetic}
+    --nodes N             synthetic workload size (default 10000)
     --scale {tiny|small|full}  --devices N  --topology {p100x4|v100x8|single}
     --episodes N  --seed S  --out PATH
+    --placement-mode M    {flat|hierarchical} whole-graph episode
+                          (default) vs partition-then-place for
+                          10k–100k-node graphs (DESIGN.md §17)
+    --shards K            hierarchical shard count (0 = auto: n/512)
+    --halo-depth D        pinned halo radius around shard interiors (>=1)
+    --refine-rounds R     randomized pinned passes per shard (default 4)
+    --flat-rounds R       flat / coarse-quotient passes (default 8)
     --policy-backend B    {native|pjrt} policy implementation (default:
                           DOPPLER_POLICY_BACKEND, else native — pure-Rust,
                           no artifacts needed; pjrt loads AOT HLO)
@@ -263,8 +277,35 @@ fn load_policy_opt(args: &Args) -> Option<Box<dyn PolicyBackend>> {
 
 fn load_graph(args: &Args) -> Result<Graph> {
     let name = args.str_or("workload", "chainmm");
+    // `--workload synthetic --nodes N` builds the layered random DAG at
+    // arbitrary size — the input the hierarchical placement mode exists
+    // for (10k–100k nodes, far beyond the named workloads' ceilings).
+    if name == "synthetic" {
+        let n = args.usize_or("nodes", 10_000).max(2);
+        return Ok(workloads::synthetic_layered(n, args.u64_or("seed", 7)));
+    }
     let scale = Scale::parse(&args.str_or("scale", "full")).context("bad --scale")?;
     Ok(workloads::by_name(&name, scale))
+}
+
+/// Parse the `--placement-mode` / `--shards` / `--halo-depth` /
+/// `--refine-rounds` / `--flat-rounds` family (DESIGN.md §17). The flat
+/// default preserves every existing protocol bit for bit.
+fn placement_cfg(args: &Args) -> Result<doppler::graph::partition::PlacementCfg> {
+    use doppler::graph::partition::{PartitionCfg, PlacementCfg, PlacementMode};
+    let s = args.str_or("placement-mode", "flat");
+    let mode = PlacementMode::parse(&s)
+        .with_context(|| format!("unknown --placement-mode '{s}' (expected flat|hierarchical)"))?;
+    let base = PlacementCfg::default();
+    Ok(PlacementCfg {
+        mode,
+        part: PartitionCfg {
+            k: args.usize_or("shards", 0),
+            halo_depth: args.usize_or("halo-depth", 1).max(1),
+        },
+        refine_rounds: args.usize_or("refine-rounds", base.refine_rounds).max(1),
+        flat_rounds: args.usize_or("flat-rounds", base.flat_rounds).max(1),
+    })
 }
 
 fn load_topo(args: &Args) -> Result<DeviceTopology> {
@@ -311,6 +352,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
     ctx.rollout = rollout_cfg(args);
     ctx.episode_batch = args.usize_or("episode-batch", 1).max(1);
     ctx.sim_engine = sim_engine(args)?;
+    ctx.placement = placement_cfg(args)?;
 
     let methods: Vec<MethodId> = match args.get("methods") {
         Some(list) => list
@@ -534,6 +576,7 @@ fn cmd_evaluate(args: &Args) -> Result<()> {
     ctx.rollout = rollout_cfg(args);
     ctx.episode_batch = args.usize_or("episode-batch", 1).max(1);
     ctx.sim_engine = sim_engine(args)?;
+    ctx.placement = placement_cfg(args)?;
     let id = parse_method(&args.str_or("method", "critical-path"))?;
     // `--params blob.bin`: zero-shot deployment of a saved (e.g. shared
     // multi-graph) checkpoint — greedy rollout, no per-graph retraining
@@ -578,6 +621,7 @@ fn cmd_visualize(args: &Args) -> Result<()> {
     ctx.rollout = rollout_cfg(args);
     ctx.episode_batch = args.usize_or("episode-batch", 1).max(1);
     ctx.sim_engine = sim_engine(args)?;
+    ctx.placement = placement_cfg(args)?;
     let id = parse_method(&args.str_or("method", "enum-opt"))?;
     let r = run_method(id, &g, &ctx)?;
 

@@ -63,6 +63,9 @@ pub const SITE_SERVE_POLICY: &str = "serve.policy";
 /// Serving-ladder tier 1: assignment-cache lookups (an injected failure
 /// is a forced miss, never an error — the ladder falls through).
 pub const SITE_SERVE_CACHE: &str = "serve.cache";
+/// Per-shard interior refinement in hierarchical placement
+/// (`graph::partition::hierarchical_place`, DESIGN.md §17).
+pub const SITE_PARTITION: &str = "partition.refine";
 
 /// Default bounded retry budget when no [`FaultPlan`] is active: real
 /// panics still get isolated and retried this many times before the

@@ -1,0 +1,178 @@
+//! Partition-then-place pins (DESIGN.md §17; the CI `partition-pins`
+//! step): the cut invariants every downstream guarantee rests on, the
+//! refinement pinning contract, and the determinism pins — hierarchical
+//! placement bit-identical at 1/2/4/8 worker threads, K=1 degenerating
+//! bitwise to the flat path.
+
+use doppler::graph::partition::{
+    flat_place, hierarchical_place, partition, quotient_graph, refine_shard, PartitionCfg,
+    PlacementCfg, PlacementMode,
+};
+use doppler::graph::workloads::{llama_block, synthetic_layered, Scale};
+use doppler::graph::NodeId;
+use doppler::heuristics::check_assignment;
+use doppler::sim::topology::DeviceTopology;
+use doppler::util::rng::Rng;
+
+fn topo() -> DeviceTopology {
+    DeviceTopology::p100x4()
+}
+
+fn hier_cfg(k: usize) -> PlacementCfg {
+    PlacementCfg {
+        mode: PlacementMode::Hierarchical,
+        part: PartitionCfg { k, halo_depth: 1 },
+        refine_rounds: 2,
+        flat_rounds: 3,
+    }
+}
+
+/// Shard interiors must partition the vertex set: every node in exactly
+/// one interior, across workload families and shard counts.
+#[test]
+fn shard_cover_and_no_overlap() {
+    for (g, k) in [
+        (synthetic_layered(400, 11), 8),
+        (synthetic_layered(257, 2), 5),
+        (llama_block(Scale::Tiny), 3),
+    ] {
+        let p = partition(&g, &PartitionCfg { k, halo_depth: 1 });
+        assert_eq!(p.k(), k, "{}", g.name);
+        let mut owner = vec![usize::MAX; g.n()];
+        for (si, sh) in p.shards.iter().enumerate() {
+            for &v in &sh.interior {
+                assert_eq!(owner[v], usize::MAX, "{}: node {v} in two interiors", g.name);
+                owner[v] = si;
+            }
+        }
+        assert!(
+            owner.iter().all(|&o| o != usize::MAX),
+            "{}: interiors must cover every node",
+            g.name
+        );
+        assert_eq!(owner, p.shard_of, "{}: shard_of must mirror interiors", g.name);
+    }
+}
+
+/// Shard index is monotone along every edge (the downset-growth
+/// guarantee), so the quotient graph is a DAG by construction.
+#[test]
+fn quotient_is_acyclic() {
+    let g = synthetic_layered(500, 23);
+    let p = partition(&g, &PartitionCfg { k: 9, halo_depth: 1 });
+    for &(u, v) in &g.edges {
+        assert!(
+            p.shard_of[u] <= p.shard_of[v],
+            "edge {u}->{v}: shard {} -> {} goes backward",
+            p.shard_of[u],
+            p.shard_of[v]
+        );
+    }
+    for &(u, v) in &p.cut_edges {
+        assert!(p.shard_of[u] < p.shard_of[v], "cut edge {u}->{v} not forward");
+    }
+    let q = quotient_graph(&g, &p);
+    assert!(q.topo_order().is_some(), "quotient has a cycle");
+    assert_eq!(q.n(), p.k() + 1, "k super-nodes + the synthetic root");
+}
+
+/// With halo_depth >= 1 every neighbor of an interior node is inside
+/// the shard subgraph — the refinement pass sees full local context.
+#[test]
+fn halo_closes_interior_neighborhoods() {
+    let g = synthetic_layered(300, 5);
+    for depth in [1usize, 2] {
+        let p = partition(&g, &PartitionCfg { k: 6, halo_depth: depth });
+        for (si, sh) in p.shards.iter().enumerate() {
+            let inside = |v: NodeId| {
+                sh.interior.binary_search(&v).is_ok() || sh.halo.binary_search(&v).is_ok()
+            };
+            for &v in &sh.interior {
+                for &u in g.preds[v].iter().chain(g.succs[v].iter()) {
+                    assert!(
+                        inside(u),
+                        "depth {depth}, shard {si}: neighbor {u} of interior {v} missing"
+                    );
+                }
+            }
+            for &h in &sh.halo {
+                assert_ne!(p.shard_of[h], si, "halo node {h} owned by shard {si} itself");
+            }
+        }
+    }
+}
+
+/// The PR-1 pool contract carried through placement: worker-thread
+/// count is a pure wall-clock knob, the merged assignment is bitwise
+/// identical at 1/2/4/8 threads.
+#[test]
+fn hierarchical_bit_identical_across_thread_counts() {
+    let g = synthetic_layered(600, 17);
+    let t = topo();
+    let cfg = hier_cfg(10);
+    let base = hierarchical_place(&g, &t, &cfg, 1, 99).unwrap();
+    check_assignment(&g, &base, t.n()).unwrap();
+    for threads in [2usize, 4, 8] {
+        let a = hierarchical_place(&g, &t, &cfg, threads, 99).unwrap();
+        assert_eq!(a, base, "thread count {threads} changed the assignment");
+    }
+}
+
+/// K = 1 must short-circuit to the flat path, bit for bit: the quotient
+/// of one shard is the graph itself, so there is nothing to refine.
+#[test]
+fn k1_degenerates_bitwise_to_flat() {
+    let g = synthetic_layered(350, 31);
+    let t = topo();
+    let cfg = hier_cfg(1);
+    for threads in [1usize, 4] {
+        let hier = hierarchical_place(&g, &t, &cfg, threads, 5).unwrap();
+        let flat = flat_place(&g, &t, 5, cfg.flat_rounds);
+        assert_eq!(hier, flat, "K=1 at {threads} threads must equal flat");
+    }
+}
+
+/// Refinement must never move halo context: the pins it reports match
+/// the coarse expansion, and it only ever re-places interior nodes.
+#[test]
+fn refinement_respects_halo_pins() {
+    let g = synthetic_layered(450, 13);
+    let t = topo();
+    let p = partition(&g, &PartitionCfg { k: 8, halo_depth: 1 });
+    // a deliberately non-uniform coarse expansion so pins are distinguishable
+    let coarse: Vec<usize> = (0..g.n()).map(|v| p.shard_of[v] % t.n()).collect();
+    for si in 0..p.k() {
+        let r = refine_shard(&g, &p, si, &coarse, &t, &mut Rng::new(77), 2);
+        assert_eq!(r.shard, si);
+        // pins echo the coarse devices of the halo nodes' owning shards
+        assert_eq!(r.halo_pins.len(), p.shards[si].halo.len());
+        for &(h, d) in &r.halo_pins {
+            assert!(p.shards[si].halo.binary_search(&h).is_ok());
+            assert_eq!(d, coarse[h], "halo node {h} pinned off its coarse device");
+        }
+        // refined set is exactly the interior — never a halo node
+        let refined: Vec<NodeId> = r.interior.iter().map(|&(v, _)| v).collect();
+        assert_eq!(refined, p.shards[si].interior);
+        for &(_, d) in &r.interior {
+            assert!(d < t.n(), "refined device out of range");
+        }
+    }
+}
+
+/// Same seed, same result; auto shard count places a valid assignment
+/// on a graph far beyond the flat episode's comfort zone.
+#[test]
+fn deterministic_and_valid_at_scale() {
+    let g = synthetic_layered(2_000, 7);
+    let t = topo();
+    let cfg = PlacementCfg {
+        mode: PlacementMode::Hierarchical,
+        part: PartitionCfg::default(), // k = 0 -> auto
+        refine_rounds: 2,
+        flat_rounds: 2,
+    };
+    let a1 = hierarchical_place(&g, &t, &cfg, 4, 3).unwrap();
+    let a2 = hierarchical_place(&g, &t, &cfg, 4, 3).unwrap();
+    assert_eq!(a1, a2, "same seed must reproduce bitwise");
+    check_assignment(&g, &a1, t.n()).unwrap();
+}

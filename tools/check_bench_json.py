@@ -1,35 +1,42 @@
 #!/usr/bin/env python3
-"""Schema check for the BENCH_*.json perf snapshots (ISSUE 4).
+"""Schema check for the BENCH_*.json perf snapshots (ISSUE 4, ISSUE 10).
 
 The bench harnesses (benches/rollout_scaling.rs, sim_scaling.rs,
-episode_scaling.rs, table4_transfer.rs, train_scaling.rs) each write a
-JSON snapshot at the repo root. CI *executes* them in smoke mode and then runs this
-check, so a harness that silently stops emitting (or emits garbage —
-NaN throughput, empty row sets, renamed keys) fails loudly instead of
-rotting.
+episode_scaling.rs, table4_transfer.rs, train_scaling.rs, serve_load.rs,
+partition_scaling.rs) each write a JSON snapshot at the repo root. CI
+*executes* them in smoke mode and then runs this check, so a harness
+that silently stops emitting (or emits garbage — NaN throughput, empty
+row sets, renamed keys) fails loudly instead of rotting.
 
 Stdlib-only (no numpy). Usage:
 
     python3 tools/check_bench_json.py BENCH_rollout.json BENCH_sim.json ...
     python3 tools/check_bench_json.py --compare OLD.json NEW.json
+    python3 tools/check_bench_json.py --selftest
 
 Exit code 0 = every file matches its schema.
 
 `--compare` guards against perf regressions between two snapshots of
-the SAME bench (CI compares the committed snapshot against the
-fresh smoke run): it fails when `updates_per_sec` drops by more than
-20% on any (mode, threads) / (kernel, threads) / fused row present in
-both files, or when `kernel_speedup_blocked_vs_oracle_4t` does. Rows
-present in only one file are ignored (row sets may legitimately
-change shape). The whole comparison is skipped — successfully — when
-the runner reports fewer than 4 CPUs: contended small runners produce
-timings too noisy to gate on.
+the SAME bench (CI compares each committed snapshot against its fresh
+smoke run). Each bench names its throughput metric and row identity in
+COMPARE_SPEC below; the comparison fails when that metric drops by more
+than 20% on any row present in both files. Rows present in only one
+file are ignored (row sets may legitimately change shape). The whole
+comparison is skipped — successfully — when the runner reports fewer
+than 4 CPUs: contended small runners produce timings too noisy to gate
+on.
+
+`--selftest` runs the embedded unit cases (missing sections, bad types,
+unknown bench) against in-memory documents — the lint job invokes it so
+a refactor that reintroduces a KeyError on a malformed snapshot is
+caught before any bench runs.
 """
 
 import json
 import math
 import os
 import sys
+import tempfile
 
 # per-bench row schema: key -> "str" | "num" | "pos" (number > 0)
 # | "num?" (number or null)
@@ -88,6 +95,19 @@ ROW_KEYS = {
         # count (1 under the default thread list)
         "speedup_vs_seq_base": "pos",
     },
+    # hierarchical partition-then-place vs flat (DESIGN.md §17):
+    # quality_vs_flat is null on flat rows and wherever flat was
+    # skipped for exceeding its size ceiling
+    "partition_scaling": {
+        "mode": "str",
+        "nodes": "pos",
+        "edges": "pos",
+        "shards": "pos",
+        "place_ms": "pos",
+        "nodes_per_sec": "pos",
+        "sim_time_ms": "pos",
+        "quality_vs_flat": "num?",
+    },
 }
 
 TOP_KEYS = {"bench": "str", "source": "str"}
@@ -123,6 +143,29 @@ EXTRA_TOP_KEYS = {
     # the serve bench asserts both; a snapshot with either flag false
     # (or missing) means the ladder lost availability or determinism
     "serve_load": {"all_admitted_served": "bool", "replay_deterministic": "bool"},
+    # asserted live by the harness before the snapshot is written:
+    # hierarchical placement bitwise identical at 1/2/4 worker threads
+    "partition_scaling": {"hier_thread_bitwise_identical": "bool"},
+}
+
+# --compare identity + throughput metric per bench:
+# bench -> [(list_key, (identity fields...), metric), ...] plus optional
+# top-level metrics gated the same way. Rows are matched by identity;
+# higher metric = better.
+COMPARE_SPEC = {
+    "rollout_scaling": [("rows", ("threads",), "episodes_per_sec")],
+    "sim_scaling": [("rows", ("workload", "nodes", "engine"), "graphs_per_sec")],
+    "episode_scaling": [("rows", ("nodes", "threads"), "episodes_per_sec")],
+    "serve_load": [("rows", ("threads",), "requests_per_sec")],
+    "train_scaling": [
+        ("rows", ("mode", "threads"), "updates_per_sec"),
+        ("kernel_rows", ("kernel", "threads"), "updates_per_sec"),
+        ("fused_rows", ("threads",), "updates_per_sec"),
+    ],
+    "partition_scaling": [("rows", ("mode", "nodes"), "nodes_per_sec")],
+}
+COMPARE_TOP_METRICS = {
+    "train_scaling": ["kernel_speedup_blocked_vs_oracle_4t"],
 }
 
 
@@ -142,15 +185,14 @@ def type_ok(value, kind):
     return value > 0 if kind == "pos" else True
 
 
-def check(path):
+def check_doc(path, doc):
+    """Validate one parsed snapshot. Returns (errors, total_row_count);
+    never raises on malformed input — a missing schema-required section
+    is an error message naming the bench and section, not a KeyError."""
     errors = []
-    try:
-        with open(path) as f:
-            doc = json.load(f)
-    except (OSError, ValueError) as e:
-        return [f"{path}: unreadable ({e})"]
+    rows_seen = 0
     if not isinstance(doc, dict):
-        return [f"{path}: top level is not an object"]
+        return [f"{path}: top level is not an object"], 0
     for key, kind in TOP_KEYS.items():
         if not type_ok(doc.get(key), kind):
             errors.append(f"{path}: bad or missing top-level '{key}'")
@@ -158,16 +200,22 @@ def check(path):
     schema = ROW_KEYS.get(bench)
     if schema is None:
         errors.append(f"{path}: unknown bench '{bench}' (expected {sorted(ROW_KEYS)})")
-        return errors
+        return errors, 0
+
     def check_rows(list_key, row_schema):
+        nonlocal rows_seen
         rows = doc.get(list_key)
         if not isinstance(rows, list) or not rows:
-            errors.append(f"{path}: '{list_key}' must be a non-empty list")
+            errors.append(
+                f"{path}: bench '{bench}' requires section '{list_key}' "
+                f"to be a non-empty list (got {type(rows).__name__})"
+            )
             return
         for i, row in enumerate(rows):
             if not isinstance(row, dict):
                 errors.append(f"{path}: {list_key}[{i}] is not an object")
                 continue
+            rows_seen += 1
             for key, kind in row_schema.items():
                 if key not in row:
                     errors.append(f"{path}: {list_key}[{i}] missing '{key}'")
@@ -181,8 +229,20 @@ def check(path):
         check_rows(list_key, row_schema)
     for key, kind in EXTRA_TOP_KEYS.get(bench, {}).items():
         if not type_ok(doc.get(key), kind):
-            errors.append(f"{path}: bad or missing top-level '{key}'")
-    return errors
+            errors.append(
+                f"{path}: bench '{bench}' requires top-level '{key}' ({kind}), "
+                f"got {doc.get(key)!r}"
+            )
+    return errors, rows_seen
+
+
+def check(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"], 0
+    return check_doc(path, doc)
 
 
 def finite_num(v):
@@ -204,8 +264,17 @@ def compare(old_path, new_path, threshold=0.20):
     except (OSError, ValueError) as e:
         print(f"FAIL  compare: unreadable snapshot ({e})")
         return 1
-    if old.get("bench") != new.get("bench"):
-        print(f"FAIL  compare: bench mismatch ({old.get('bench')!r} vs {new.get('bench')!r})")
+    if not isinstance(old, dict) or not isinstance(new, dict):
+        print("FAIL  compare: snapshot top level is not an object")
+        return 1
+    bench = old.get("bench")
+    if bench != new.get("bench"):
+        print(f"FAIL  compare: bench mismatch ({bench!r} vs {new.get('bench')!r})")
+        return 1
+    spec = COMPARE_SPEC.get(bench)
+    if spec is None:
+        print(f"FAIL  compare: no compare spec for bench {bench!r} "
+              f"(known: {sorted(COMPARE_SPEC)})")
         return 1
 
     def index(doc, list_key, key_fields):
@@ -218,34 +287,30 @@ def compare(old_path, new_path, threshold=0.20):
 
     failures = []
     compared = 0
-    for list_key, key_fields in [
-        ("rows", ("mode", "threads")),
-        ("kernel_rows", ("kernel", "threads")),
-        ("fused_rows", ("threads",)),
-    ]:
+    for list_key, key_fields, metric in spec:
         new_rows = index(new, list_key, key_fields)
         for key, orow in index(old, list_key, key_fields).items():
             nrow = new_rows.get(key)
             if nrow is None:
                 continue
-            ov, nv = orow.get("updates_per_sec"), nrow.get("updates_per_sec")
+            ov, nv = orow.get(metric), nrow.get(metric)
             if not (finite_num(ov) and finite_num(nv)) or ov <= 0:
                 continue
             compared += 1
             if nv < ov * (1.0 - threshold):
                 failures.append(
-                    f"{list_key}{list(key)}: updates_per_sec {ov:.3f} -> {nv:.3f} "
+                    f"{list_key}{list(key)}: {metric} {ov:.3f} -> {nv:.3f} "
                     f"({(1.0 - nv / ov) * 100:.1f}% regression)"
                 )
-    ov = old.get("kernel_speedup_blocked_vs_oracle_4t")
-    nv = new.get("kernel_speedup_blocked_vs_oracle_4t")
-    if finite_num(ov) and finite_num(nv) and ov > 0:
-        compared += 1
-        if nv < ov * (1.0 - threshold):
-            failures.append(
-                f"kernel_speedup_blocked_vs_oracle_4t: {ov:.3f} -> {nv:.3f} "
-                f"({(1.0 - nv / ov) * 100:.1f}% regression)"
-            )
+    for metric in COMPARE_TOP_METRICS.get(bench, []):
+        ov, nv = old.get(metric), new.get(metric)
+        if finite_num(ov) and finite_num(nv) and ov > 0:
+            compared += 1
+            if nv < ov * (1.0 - threshold):
+                failures.append(
+                    f"{metric}: {ov:.3f} -> {nv:.3f} "
+                    f"({(1.0 - nv / ov) * 100:.1f}% regression)"
+                )
     if failures:
         for f in failures:
             print(f"FAIL  {f}")
@@ -255,7 +320,98 @@ def compare(old_path, new_path, threshold=0.20):
     return 0
 
 
+def selftest():
+    """Embedded unit cases: every malformed shape must yield a clear
+    error string (never an exception), and valid docs must pass."""
+    good_partition = {
+        "bench": "partition_scaling",
+        "source": "test",
+        "hier_thread_bitwise_identical": True,
+        "rows": [
+            {"mode": "flat", "nodes": 1000, "edges": 2000, "shards": 1,
+             "place_ms": 5.0, "nodes_per_sec": 2e5, "sim_time_ms": 9.0,
+             "quality_vs_flat": None},
+            {"mode": "hierarchical", "nodes": 1000, "edges": 2000, "shards": 2,
+             "place_ms": 4.0, "nodes_per_sec": 2.5e5, "sim_time_ms": 9.0,
+             "quality_vs_flat": 1.0},
+        ],
+    }
+    cases = [
+        ("valid partition snapshot passes", good_partition, 0),
+        ("missing rows section is a named error",
+         {"bench": "partition_scaling", "source": "t",
+          "hier_thread_bitwise_identical": True}, 1),
+        ("rows of wrong type is a named error",
+         {"bench": "partition_scaling", "source": "t",
+          "hier_thread_bitwise_identical": True, "rows": {"not": "a list"}}, 1),
+        ("missing required extra list is a named error",
+         {"bench": "train_scaling", "source": "t",
+          "kernel_bitwise_identical": True,
+          "fused_thread_bitwise_identical": True,
+          "rows": [{"mode": "m", "threads": 1, "episodes": 1,
+                    "episode_batch": 1, "updates_per_sec": 1.0,
+                    "ms_per_update": 1.0, "speedup_vs_seq_base": 1.0}]}, 1),
+        ("false determinism flag rejected",
+         dict(good_partition, hier_thread_bitwise_identical=False), 1),
+        ("unknown bench rejected",
+         {"bench": "nope", "source": "t", "rows": [{}]}, 1),
+        ("NaN metric rejected",
+         {"bench": "rollout_scaling", "source": "t",
+          "rows": [{"threads": 1, "episodes_per_sec": float("nan"),
+                    "speedup_vs_1t": 1.0}]}, 1),
+        ("non-object top level rejected", ["not", "a", "dict"], 1),
+        ("null in num? slot accepted; zero 'pos' rejected",
+         {"bench": "partition_scaling", "source": "t",
+          "hier_thread_bitwise_identical": True,
+          "rows": [dict(good_partition["rows"][0], place_ms=0)]}, 1),
+    ]
+    failed = 0
+    for name, doc, want_errors in cases:
+        try:
+            errors, _ = check_doc("<selftest>", doc)
+        except Exception as e:  # the whole point: malformed input must not raise
+            print(f"FAIL  selftest '{name}': raised {type(e).__name__}: {e}")
+            failed += 1
+            continue
+        got = 1 if errors else 0
+        if got != want_errors:
+            print(f"FAIL  selftest '{name}': expected "
+                  f"{'errors' if want_errors else 'clean'}, got {errors or 'clean'}")
+            failed += 1
+        else:
+            print(f"ok    selftest: {name}")
+    # compare() must also survive malformed files and unknown benches —
+    # only checkable where compare actually runs (it skips on <4 cores)
+    n_compare_cases = 0
+    if (os.cpu_count() or 1) >= 4:
+        n_compare_cases = 2
+        with tempfile.TemporaryDirectory() as d:
+            bad = os.path.join(d, "bad.json")
+            with open(bad, "w") as f:
+                f.write("{ not json")
+            if compare(bad, bad) != 1:
+                print("FAIL  selftest: compare accepted unreadable snapshot")
+                failed += 1
+            else:
+                print("ok    selftest: compare rejects unreadable snapshot")
+            unk = os.path.join(d, "unk.json")
+            with open(unk, "w") as f:
+                json.dump({"bench": "table4_transfer", "rows": []}, f)
+            if compare(unk, unk) != 1:
+                print("FAIL  selftest: compare accepted bench without a spec")
+                failed += 1
+            else:
+                print("ok    selftest: compare rejects bench without a spec")
+    else:
+        print("ok    selftest: compare cases skipped (<4 cores)")
+    total = len(cases) + n_compare_cases
+    print(f"selftest: {total - failed}/{total} passed")
+    return 1 if failed else 0
+
+
 def main(argv):
+    if len(argv) >= 2 and argv[1] == "--selftest":
+        return selftest()
     if len(argv) >= 2 and argv[1] == "--compare":
         if len(argv) != 4:
             print(__doc__)
@@ -266,15 +422,13 @@ def main(argv):
         return 2
     failed = False
     for path in argv[1:]:
-        errors = check(path)
+        errors, n_rows = check(path)
         if errors:
             failed = True
             for e in errors:
                 print(f"FAIL  {e}")
         else:
-            with open(path) as f:
-                n = len(json.load(f)["rows"])
-            print(f"ok    {path} ({n} rows)")
+            print(f"ok    {path} ({n_rows} rows)")
     return 1 if failed else 0
 
 

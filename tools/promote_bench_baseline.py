@@ -1,0 +1,73 @@
+#!/usr/bin/env python3
+"""Promote a CI bench-smoke artifact to the committed baseline snapshots.
+
+The bench-smoke job uploads every fresh BENCH_*.json as the
+`bench-snapshots-<sha>` artifact. When a run on a healthy runner is
+worth keeping as the new comparison baseline (e.g. after a deliberate
+perf change shifts throughput), download that artifact, then:
+
+    python3 tools/promote_bench_baseline.py <artifact_dir> [--repo-root DIR]
+
+Every BENCH_*.json in <artifact_dir> is schema-validated with
+tools/check_bench_json.py first; only files that pass are copied over
+the committed snapshots at the repo root. Exit codes: 0 = all found
+snapshots valid and promoted, 1 = validation failure or nothing to
+promote. Nothing is copied if ANY found snapshot is invalid — a
+baseline refresh is all-or-nothing so the set stays coherent.
+
+Stdlib-only; review the resulting diff and commit it like any other
+change.
+"""
+
+import glob
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import check_bench_json  # noqa: E402
+
+
+def main(argv):
+    args = [a for a in argv if not a.startswith("--")]
+    repo_root = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+    if "--repo-root" in argv:
+        i = argv.index("--repo-root")
+        if i + 1 >= len(argv):
+            print("FAIL  --repo-root needs a directory argument")
+            return 1
+        repo_root = argv[i + 1]
+        args = [a for a in args if a != repo_root]
+    if len(args) != 1:
+        print(__doc__)
+        return 2
+    artifact_dir = args[0]
+    if not os.path.isdir(artifact_dir):
+        print(f"FAIL  not a directory: {artifact_dir}")
+        return 1
+    snapshots = sorted(glob.glob(os.path.join(artifact_dir, "BENCH_*.json")))
+    if not snapshots:
+        print(f"FAIL  no BENCH_*.json files in {artifact_dir}")
+        return 1
+    failed = False
+    for path in snapshots:
+        errors, n_rows = check_bench_json.check(path)
+        if errors:
+            failed = True
+            for e in errors:
+                print(f"FAIL  {e}")
+        else:
+            print(f"ok    {path} ({n_rows} rows)")
+    if failed:
+        print("FAIL  nothing promoted: fix or drop the invalid snapshots first")
+        return 1
+    for path in snapshots:
+        dest = os.path.join(repo_root, os.path.basename(path))
+        shutil.copyfile(path, dest)
+        print(f"promoted {os.path.basename(path)} -> {dest}")
+    print(f"{len(snapshots)} baseline snapshot(s) refreshed; review the diff and commit")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
